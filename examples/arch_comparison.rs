@@ -1,0 +1,86 @@
+//! Collocation vs disaggregation across operating scenarios — §2.4's two
+//! questions: (1) does 5m beat 3p2d? (2) how sensitive is disaggregation to
+//! the prefill:decode ratio? Neither architecture wins everywhere; this
+//! example shows the crossover on the paper's own scenarios.
+//!
+//! Run: `cargo run --release --example arch_comparison`
+
+use bestserve::config::{Architecture, Platform, Scenario, Slo, Strategy};
+use bestserve::estimator::AnalyticOracle;
+use bestserve::optimizer::{find_goodput, GoodputConfig};
+use bestserve::simulator::SimParams;
+use bestserve::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let slo = Slo::paper_default();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+    let cfg = GoodputConfig { tolerance: 0.05, ..GoodputConfig::default() };
+    let params = SimParams::default();
+
+    // Five 4-card instances arranged every way: 5m vs 1p4d ... 4p1d.
+    let strategies: Vec<Strategy> = vec![
+        Strategy::collocation(5, 4),
+        Strategy::disaggregation(1, 4, 4),
+        Strategy::disaggregation(2, 3, 4),
+        Strategy::disaggregation(3, 2, 4),
+        Strategy::disaggregation(4, 1, 4),
+    ];
+    // OP1's default-SLO panel is degenerate on this platform (prefilling
+    // 8192 tokens alone exceeds the TTFT budget — see EXPERIMENTS.md), so
+    // compare on OP2/3/4.
+    let scenarios = [Scenario::op2(), Scenario::op3(), Scenario::op4()];
+
+    let mut table_header = vec!["strategy".to_string()];
+    table_header.extend(scenarios.iter().map(|s| format!("{} goodput", s.name)));
+    let headers: Vec<&str> = table_header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&headers).numeric_body();
+
+    let mut winners: Vec<(String, String, f64)> = Vec::new();
+    let mut results = vec![vec![0.0f64; scenarios.len()]; strategies.len()];
+    for (j, sc) in scenarios.iter().enumerate() {
+        let mut sc = sc.clone();
+        sc.n_requests = 1500;
+        for (i, st) in strategies.iter().enumerate() {
+            results[i][j] = find_goodput(&oracle, &platform, st, &sc, &slo, params, &cfg)?;
+        }
+        let (bi, best) = results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r[j]))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        winners.push((sc.name.clone(), strategies[bi].to_string(), best));
+    }
+    for (i, st) in strategies.iter().enumerate() {
+        let mut row = vec![st.to_string()];
+        row.extend(results[i].iter().map(|g| format!("{g:.3}")));
+        t.row(&row);
+    }
+    println!("Goodput (req/s) of 20-card deployments (5 instances x tp4):\n");
+    print!("{}", t.render());
+
+    println!("\nWinners:");
+    for (sc, st, g) in &winners {
+        println!("  {sc}: {st} ({g:.3} req/s)");
+    }
+    let colloc_wins = winners.iter().any(|(_, st, _)| {
+        Strategy::parse(st).map(|s| !s.arch.is_disaggregated()).unwrap_or(false)
+    });
+    let disagg_wins = winners
+        .iter()
+        .any(|(_, st, _)| Strategy::parse(st).map(|s| s.arch.is_disaggregated()).unwrap_or(false));
+    println!(
+        "\ncollocation wins somewhere: {colloc_wins} | disaggregation wins somewhere: {disagg_wins}"
+    );
+    println!("(the paper's point: neither architecture dominates; the ratio matters)");
+
+    // PD-ratio sensitivity detail for OP4 (generation-heavy).
+    println!("\nPD-ratio sensitivity — goodput by prefill:decode split:");
+    for (i, st) in strategies.iter().enumerate() {
+        if let Architecture::Disaggregation { p, d } = st.arch {
+            println!("  {p}p{d}d: OP2 {:.3} | OP4 {:.3}", results[i][0], results[i][2]);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Capacity planning: "how many cards do I need to serve X req/s of OP2
+//! traffic within SLO?" — the deployment question BestServe's abstract
+//! promises to answer in minutes on a CPU.
+//!
+//! Sweeps card budgets, runs the Optimizer per budget, and reports the
+//! cheapest deployment whose goodput covers the target rate.
+//!
+//! Run: `cargo run --release --example capacity_planning`
+
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
+use bestserve::simulator::SimParams;
+use bestserve::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let scenario = Scenario::op2();
+    let slo = Slo::paper_default();
+    let target_rates = [1.0, 2.0, 4.0, 8.0];
+    let budgets = [4u32, 8, 12, 16, 24, 32];
+
+    println!(
+        "Capacity plan for {} on {} | scenario {} (s={}, s+={}) | SLO {}ms/{}ms\n",
+        platform.model.name,
+        platform.hardware.name,
+        scenario.name,
+        scenario.mean_input(),
+        scenario.mean_gen(),
+        slo.ttft * 1e3,
+        slo.tpot * 1e3
+    );
+
+    // Optimize once per budget (the optimizer reuses cached oracles).
+    let mut factory = AnalyticFactory::new(platform.clone());
+    let mut per_budget = Vec::new();
+    let t0 = std::time::Instant::now();
+    for &cards in &budgets {
+        let space = StrategySpace {
+            max_cards: cards,
+            tp_choices: vec![2, 4, 8],
+            ..StrategySpace::default()
+        };
+        let rep = optimize(
+            &mut factory,
+            &platform,
+            &space,
+            &scenario,
+            &slo,
+            SimParams::default(),
+            &GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() },
+        )?;
+        let best = rep.best().expect("ranking non-empty").clone();
+        per_budget.push((cards, best));
+    }
+
+    let mut t = Table::new(&["budget (cards)", "best strategy", "goodput (req/s)"])
+        .numeric_body();
+    for (cards, best) in &per_budget {
+        t.row(&[
+            cards.to_string(),
+            best.strategy.to_string(),
+            format!("{:.3}", best.goodput),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\nCheapest deployment per target rate:");
+    for &target in &target_rates {
+        match per_budget.iter().find(|(_, b)| b.goodput >= target) {
+            Some((cards, best)) => println!(
+                "  {target:>5.1} req/s  ->  {cards} cards as {} (goodput {:.2})",
+                best.strategy, best.goodput
+            ),
+            None => println!(
+                "  {target:>5.1} req/s  ->  not reachable within {} cards",
+                budgets.last().unwrap()
+            ),
+        }
+    }
+    println!(
+        "\nplanned {} budgets in {:.1}s on one CPU (the paper's headline speedup \
+         over cluster trial-and-error)",
+        budgets.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! End-to-end driver: ALL layers composed on a real workload.
+//!
+//!   L1/L2 (build time): the Pallas roofline kernel inside the JAX latency
+//!     model, AOT-lowered to `artifacts/latency_grid.hlo.txt`.
+//!   Runtime: this binary loads the HLO text, compiles it on the PJRT CPU
+//!     client, executes it ONCE per tensor-parallel size, and serves every
+//!     subsequent latency query from the in-memory grid — python is never
+//!     on the serving path.
+//!   L3: the Optimizer picks the goodput-optimal strategy for OP2 on an
+//!     8-card budget, then the token-level testbed SERVES a 2 000-request
+//!     Poisson workload at 80% of that goodput, reporting TTFT/TPOT
+//!     percentiles, throughput, and per-engine utilization.
+//!
+//! Requires `make artifacts` first. Run:
+//!   cargo run --release --example e2e_serve
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::optimizer::{optimize, GoodputConfig, GridFactory, ModelFactory};
+use bestserve::runtime::default_artifacts_dir;
+use bestserve::simulator::{generate_workload, SimParams};
+use bestserve::testbed::{Testbed, TestbedConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!(
+            "artifacts not found at {} — run `make artifacts` first",
+            artifacts.display()
+        );
+        std::process::exit(2);
+    }
+    let platform = Platform::paper_testbed();
+    let slo = Slo::paper_default();
+    let mut scenario = Scenario::op2();
+    scenario.n_requests = 1500;
+
+    // --- Stage 1: load + compile the AOT artifact (PJRT) -------------------
+    let t0 = std::time::Instant::now();
+    let mut factory = GridFactory::new(&artifacts, platform.clone())?;
+    println!(
+        "[1] PJRT: compiled latency-grid artifact from {} in {:.2}s",
+        artifacts.display(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- Stage 2: optimize the deployment over the PJRT surface ------------
+    let t1 = std::time::Instant::now();
+    let space = StrategySpace {
+        max_cards: 8,
+        tp_choices: vec![2, 4, 8],
+        ..StrategySpace::default()
+    };
+    let params = SimParams { tau: 1.0, ..SimParams::default() };
+    let rep = optimize(
+        &mut factory,
+        &platform,
+        &space,
+        &scenario,
+        &slo,
+        params,
+        &GoodputConfig::default(),
+    )?;
+    let best = rep.best().expect("ranking non-empty").clone();
+    println!(
+        "[2] Optimizer ({} strategies over the PJRT grid, {:.1}s): best = {} @ {:.3} req/s",
+        rep.ranked.len(),
+        t1.elapsed().as_secs_f64(),
+        best.strategy,
+        best.goodput
+    );
+    anyhow::ensure!(best.goodput > 0.0, "no feasible strategy — unexpected for OP2");
+
+    // --- Stage 3: serve a real workload on the recommendation --------------
+    let serve_rate = 0.8 * best.goodput;
+    let reqs = generate_workload(&scenario, serve_rate, 0xE2E);
+    let model = factory.model_for_tp(best.strategy.tp)?;
+    let tb = Testbed::new(
+        model.as_ref(),
+        &platform,
+        best.strategy.clone(),
+        TestbedConfig::default(),
+    );
+    let t2 = std::time::Instant::now();
+    let out = tb.run(&reqs)?;
+    let wall = t2.elapsed().as_secs_f64();
+    let r = &out.report;
+    let total_tokens: u64 = reqs.iter().map(|q| q.gen_len as u64).sum();
+    println!(
+        "[3] Testbed served {} requests ({} tokens) at λ={:.2} req/s on {}:",
+        r.n,
+        total_tokens,
+        serve_rate,
+        best.strategy
+    );
+    println!(
+        "      TTFT  p50 {:7.1} ms | p90 {:7.1} ms | p99 {:7.1} ms  (SLO {:.0} ms)",
+        r.ttft.p50 * 1e3,
+        r.ttft.p90 * 1e3,
+        r.ttft.p99 * 1e3,
+        slo.ttft * 1e3
+    );
+    println!(
+        "      TPOT  p50 {:7.2} ms | p90 {:7.2} ms | p99 {:7.2} ms  (SLO {:.0} ms)",
+        r.tpot.p50 * 1e3,
+        r.tpot.p90 * 1e3,
+        r.tpot.p99 * 1e3,
+        slo.tpot * 1e3
+    );
+    println!(
+        "      throughput {:.3} req/s | simulated makespan {:.1} s | driver wall {:.2} s",
+        r.throughput, r.makespan, wall
+    );
+    for (i, st) in out.stats.iter().enumerate() {
+        println!(
+            "      engine {i}: {:>6} prefill + {:>7} decode iterations, busy {:>8.1}s, {} preemptions",
+            st.prefill_iterations, st.decode_iterations, st.busy_time, st.preemptions
+        );
+    }
+    let ok = slo.feasible(r.ttft.p90, r.tpot.p90);
+    println!(
+        "\nSLO attainment at 80% of predicted goodput: {}",
+        if ok { "PASS (P90 within relaxed SLO)" } else { "FAIL" }
+    );
+    anyhow::ensure!(ok, "served workload violated SLO at 80% of predicted goodput");
+    Ok(())
+}

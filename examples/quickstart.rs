@@ -1,0 +1,73 @@
+//! Quickstart: the three BestServe layers in ~60 lines.
+//!
+//! 1. Estimator — price one prefill batch and one decode step (Table 3).
+//! 2. Simulator — P90 TTFT/TPOT of a 1p1d deployment at 3.5 req/s (Table 4).
+//! 3. Optimizer — rank every strategy on an 8-card budget for OP2.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
+use bestserve::simulator::{simulate, SimParams};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's evaluation platform: CodeLlama-34b on Ascend 910B3.
+    let platform = Platform::paper_testbed();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+
+    // --- 1. Estimator ------------------------------------------------------
+    let prefill_ms = oracle.prefill_time(1, 2048) * 1e3;
+    let decode_ms = oracle.decode_step_time(1, 2111) * 1e3;
+    println!("Estimator (b=1, tp=4):");
+    println!("  prefill(s=2048)      = {prefill_ms:8.3} ms   (paper Table 3a: 265.123)");
+    println!("  decode step(ctx=2111)= {decode_ms:8.3} ms   (paper Table 3b:  33.573)");
+
+    // --- 2. Simulator ------------------------------------------------------
+    let strategy = Strategy::disaggregation(1, 1, 4);
+    let scenario = Scenario::fixed("table4", 2048, 64, 5000);
+    let report = simulate(
+        &oracle,
+        &platform,
+        &strategy,
+        &scenario,
+        3.5,
+        SimParams::default(),
+    )?;
+    println!("\nSimulator (1p1d-tp4, λ=3.5 req/s, n=5000):");
+    println!(
+        "  P90 TTFT = {:8.1} ms (SLO 1500)   P90 TPOT = {:6.1} ms (SLO 70)",
+        report.ttft.p90 * 1e3,
+        report.tpot.p90 * 1e3
+    );
+
+    // --- 3. Optimizer ------------------------------------------------------
+    let space = StrategySpace {
+        max_cards: 8,
+        tp_choices: vec![2, 4, 8],
+        ..StrategySpace::default()
+    };
+    let scenario = Scenario::op2();
+    let mut factory = AnalyticFactory::new(platform.clone());
+    let rep = optimize(
+        &mut factory,
+        &platform,
+        &space,
+        &scenario,
+        &Slo::paper_default(),
+        SimParams::default(),
+        &GoodputConfig::default(),
+    )?;
+    println!("\nOptimizer (OP2, budget 8 cards) — top 5 of {}:", rep.ranked.len());
+    for r in rep.ranked.iter().take(5) {
+        println!(
+            "  {:10}  goodput {:6.3} req/s   normalized {:6.3}",
+            r.strategy.to_string(),
+            r.goodput,
+            r.normalized
+        );
+    }
+    let best = rep.best().expect("non-empty ranking");
+    println!("\nOptimal strategy: {}", best.strategy);
+    Ok(())
+}

@@ -1,0 +1,146 @@
+"""AOT bridge: lower the L2 latency-surface model to HLO **text** artifacts
+the Rust runtime loads via the `xla` crate's PJRT CPU client.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  latency_grid.hlo.txt  -- latency_grid(params[24], b_grid[NB], s_grid[NS])
+                           -> (prefill[NB,NS], decode_step[NB,NS])
+  tiny_block.hlo.txt    -- a REAL LLaMa block (Pallas GQA attention kernel
+                           inside), weights baked in; x[b,s,h] -> y[b,s,h].
+                           Rust executes it via PJRT and checks the numbers.
+  manifest.json         -- shapes + params layout version + the tiny block's
+                           expected output statistics for the loader.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    N_PARAMS,
+    TINY,
+    latency_grid,
+    tiny_block_forward,
+    tiny_block_input,
+    tiny_block_weights,
+)
+
+# Grid geometry — fixed at lowering time (XLA shapes are static); the grid
+# VALUES are runtime inputs chosen by the Rust loader.
+NB = 64     # batch sizes (Rust feeds 1..64)
+NS = 1089   # sequence lengths (Rust feeds 16, 32, ..., 16*NS = 17424)
+S_STRIDE = 16
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big constants as a literal ``{...}``, which the text parser then
+    silently zero-fills — the baked-in weights of tiny_block would vanish.
+    aot asserts no artifact contains an elision marker.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_latency_grid():
+    spec_params = jax.ShapeDtypeStruct((N_PARAMS,), jnp.float32)
+    spec_b = jax.ShapeDtypeStruct((NB,), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((NS,), jnp.float32)
+
+    def fn(params, b_grid, s_grid):
+        return latency_grid(params, b_grid, s_grid, interpret=True)
+
+    return jax.jit(fn).lower(spec_params, spec_b, spec_s)
+
+
+def lower_tiny_block():
+    """Lower the tiny block with its weights baked in as constants."""
+    weights = {k: jnp.asarray(v) for k, v in tiny_block_weights().items()}
+    spec_x = jax.ShapeDtypeStruct((TINY["b"], TINY["s"], TINY["h"]), jnp.float32)
+
+    def fn(x):
+        return (tiny_block_forward(x, weights, interpret=True),)
+
+    return jax.jit(fn).lower(spec_x)
+
+
+def tiny_block_expectation():
+    """Reference output statistics the Rust loader asserts against (the
+    input is regenerated deterministically on both sides)."""
+    import numpy as np
+
+    x = jnp.asarray(tiny_block_input())
+    weights = {k: jnp.asarray(v) for k, v in tiny_block_weights().items()}
+    y = np.asarray(tiny_block_forward(x, weights, interpret=True))
+    flat = y.reshape(-1)
+    return {
+        "shape": list(y.shape),
+        "mean": float(flat.mean()),
+        "std": float(flat.std()),
+        "norm": float(np.linalg.norm(flat)),
+        "first8": [float(v) for v in flat[:8]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    text = to_hlo_text(lower_latency_grid())
+    grid_path = os.path.join(args.out_dir, "latency_grid.hlo.txt")
+    with open(grid_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {grid_path}")
+
+    block_text = to_hlo_text(lower_tiny_block())
+    block_path = os.path.join(args.out_dir, "tiny_block.hlo.txt")
+    with open(block_path, "w") as f:
+        f.write(block_text)
+    print(f"wrote {len(block_text)} chars to {block_path}")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "latency_grid": {
+            "file": "latency_grid.hlo.txt",
+            "n_params": N_PARAMS,
+            "nb": NB,
+            "ns": NS,
+            "s_stride": S_STRIDE,
+            "outputs": ["prefill[nb,ns]", "decode_step[nb,ns]"],
+        },
+        "tiny_block": {
+            "file": "tiny_block.hlo.txt",
+            "dims": TINY,
+            "expect": tiny_block_expectation(),
+        },
+    }
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""L1 — Pallas masked GQA attention kernel.
+
+Used by the tiny LLaMa block in ``compile.model`` (the estimator's FLOP
+tables are sanity-checked against a REAL transformer block executed through
+the same AOT->PJRT path as the latency surface).
+
+TPU mapping (DESIGN.md #Hardware-Adaptation): one grid step per (batch,
+query-head); Q[sq, dh], K/V[skv, dh] tiles live in VMEM; the two matmuls
+target the MXU and the softmax runs on the VPU. An online-softmax flash
+variant is unnecessary at these tile sizes - skv*dh fits VMEM comfortably,
+so the kernel keeps the whole K/V panel resident (documented tradeoff).
+``interpret=True`` as always: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    """One (batch, query-head) tile: masked softmax(q k^T / sqrt(d)) v."""
+    q = q_ref[0, 0]  # [sq, dh]
+    k = k_ref[0, 0]  # [skv, dh]
+    v = v_ref[0, 0]  # [skv, dh]
+    n_valid = len_ref[0, 0]
+    dh = q.shape[-1]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(dh))  # [sq, skv]
+    kv_pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(kv_pos < n_valid, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gqa_attention(q, k, v, lens, *, interpret=True):
+    """Masked grouped-query attention.
+
+    Args:
+      q: f32[b, hq, sq, dh] queries.
+      k, v: f32[b, hkv, skv, dh] key/value cache (hq % hkv == 0).
+      lens: i32[b] number of valid KV positions per batch row.
+      interpret: Pallas interpret mode (required on CPU).
+
+    Returns:
+      f32[b, hq, sq, dh].
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, "query heads must be a multiple of kv heads"
+    group = hq // hkv
+    lens2d = lens.reshape(b, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b, hq),
+        in_specs=[
+            # Q tile for this (batch, head).
+            pl.BlockSpec((1, 1, sq, dh), lambda i, j: (i, j, 0, 0)),
+            # K/V tile of the GROUP's kv head (GQA head sharing).
+            pl.BlockSpec((1, 1, skv, dh), lambda i, j, g=group: (i, j // g, 0, 0)),
+            pl.BlockSpec((1, 1, skv, dh), lambda i, j, g=group: (i, j // g, 0, 0)),
+            # Valid KV length for this batch row.
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, sq, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lens2d)

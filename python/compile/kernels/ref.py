@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference the
+pytest layer asserts against (``assert_allclose``).  No Pallas, no tiling:
+just the textbook formulas."""
+
+import jax.numpy as jnp
+
+
+def roofline_time_ref(tc, tm):
+    """out[n] = sum_ops max(tc[ops, n], tm[ops, n])."""
+    return jnp.sum(jnp.maximum(tc, tm), axis=0)
+
+
+def alg1_block_time_ref(module_times, dispatch, comm):
+    """Algorithm 1's dispatch/compute interleave, vectorized over the grid.
+
+    Mirrors ``AnalyticOracle::block_time`` in rust/src/estimator/oracle.rs.
+    """
+    n = module_times.shape[1]
+    t_dispatch = jnp.zeros((n,), module_times.dtype)
+    t_compute = jnp.zeros((n,), module_times.dtype)
+    for m in range(module_times.shape[0]):
+        t_dispatch = t_dispatch + dispatch[m]
+        compute = module_times[m]
+        t_compute = jnp.where(
+            t_dispatch > t_compute,
+            t_dispatch + compute,
+            t_compute + compute,
+        )
+        t_compute = t_compute + comm[m]
+    return t_compute
+
+
+def attention_ref(q, k, v, lens):
+    """Masked multi-head attention oracle for the block kernels.
+
+    q: f32[b, hq, sq, dh]; k, v: f32[b, hkv, skv, dh];
+    lens: i32[b] — number of valid KV positions per row.
+    GQA: query heads are grouped onto KV heads by integer division.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    skv = k.shape[2]
+    kv_pos = jnp.arange(skv)[None, None, None, :]
+    mask = kv_pos < lens[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,139 @@
+"""L1 — Pallas kernel for the adapted-roofline latency surface.
+
+The estimator's innermost loop (eq. (3)/(5) of the paper) prices every
+operation of a transformer block as
+
+    T_op = max( W / (e_c * S_c),  Q / (e_m * S_m) )
+
+and sums over the ops of a module.  The L2 model (``compile.model``)
+pre-scales the work/traffic tables into compute-time and memory-time
+matrices ``tc = W/(e_c*S_c)`` and ``tm = Q/(e_m*S_m)`` of shape
+``[OPS, N]`` (N = flattened batch-size x context-length grid) so the
+kernel's arithmetic is exactly the roofline max-reduction:
+
+    out[n] = sum_ops max(tc[ops, n], tm[ops, n])
+
+TPU mapping (DESIGN.md #Hardware-Adaptation): the kernel is bandwidth-
+shaped (intensity ~0.25 FLOP/B << I*), so the tiling targets VMEM
+residency rather than the MXU.  The grid streams ``BLOCK_N``-wide column
+panels of both matrices through VMEM; the max and the OPS-axis reduction
+map onto the VPU.  ``interpret=True`` everywhere: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness (vs ``ref.py``) is
+what the pytest layer checks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-panel width (a multiple of the 128-lane TPU register width). The
+# OPS axis (< 16) stays resident, so a panel of 2 x OPS x 8192 x 4B = 1 MiB
+# sits comfortably in VMEM. Perf note (EXPERIMENTS.md #Perf): widening the
+# panel from 128 to 8192 cut the artifact's CPU execution 24x by slashing
+# grid-loop trips; on a real TPU the same change trades loop overhead
+# against double-buffering headroom - still well inside VMEM.
+BLOCK_N = 8192
+
+
+def _roofline_kernel(tc_ref, tm_ref, out_ref):
+    """out[n] = sum_ops max(tc[ops, n], tm[ops, n]) for one column panel."""
+    tc = tc_ref[...]
+    tm = tm_ref[...]
+    out_ref[...] = jnp.sum(jnp.maximum(tc, tm), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def roofline_time(tc, tm, *, interpret=True):
+    """Sum-of-roofline-max over the ops axis.
+
+    Args:
+      tc: f32[OPS, N] compute-time matrix W/(e_c*S_c).
+      tm: f32[OPS, N] memory-time matrix Q/(e_m*S_m).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      f32[N] per-grid-point module time.
+    """
+    assert tc.shape == tm.shape and tc.ndim == 2
+    ops, n = tc.shape
+    # Pad the grid axis to a whole number of panels.
+    n_pad = (-n) % BLOCK_N
+    if n_pad:
+        tc = jnp.pad(tc, ((0, 0), (0, n_pad)))
+        tm = jnp.pad(tm, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+    grid = (n_total // BLOCK_N,)
+    out = pl.pallas_call(
+        _roofline_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ops, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((ops, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_total,), tc.dtype),
+        interpret=interpret,
+    )(tc, tm)
+    return out[:n]
+
+
+def _alg1_kernel(times_ref, dispatch_ref, comm_ref, out_ref):
+    """Algorithm 1's dispatch/compute interleave for one column panel.
+
+    ``times_ref``    f32[4, BLOCK_N]  per-module compute times (RMSNorm,
+                                      Attention, RMSNorm, MLP).
+    ``dispatch_ref`` f32[4, 1]        per-module dispatch constants.
+    ``comm_ref``     f32[4, BLOCK_N]  per-module TP communication times
+                                      (zero rows for RMSNorm / tp==1).
+    ``out_ref``      f32[BLOCK_N]     one-block latency.
+    """
+    t_dispatch = jnp.zeros_like(out_ref[...])
+    t_compute = jnp.zeros_like(out_ref[...])
+    for m in range(4):
+        t_dispatch = t_dispatch + dispatch_ref[m, 0]
+        compute = times_ref[m, :]
+        t_compute = jnp.where(
+            t_dispatch > t_compute,
+            t_dispatch + compute,
+            t_compute + compute,
+        )
+        t_compute = t_compute + comm_ref[m, :]
+    out_ref[...] = t_compute
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def alg1_block_time(module_times, dispatch, comm, *, interpret=True):
+    """Vectorized Algorithm 1 over a latency grid.
+
+    Args:
+      module_times: f32[4, N] compute time of each module in the block
+        sequence RMSNorm/Attention/RMSNorm/MLP at every grid point.
+      dispatch: f32[4] per-module dispatch constants (seconds).
+      comm: f32[4, N] per-module communication time (zeros where none).
+
+    Returns:
+      f32[N] single-block latency after the dispatch/compute interleave.
+    """
+    assert module_times.shape[0] == 4 and comm.shape == module_times.shape
+    n = module_times.shape[1]
+    n_pad = (-n) % BLOCK_N
+    if n_pad:
+        module_times = jnp.pad(module_times, ((0, 0), (0, n_pad)))
+        comm = jnp.pad(comm, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+    dispatch2d = dispatch.reshape(4, 1).astype(module_times.dtype)
+    out = pl.pallas_call(
+        _alg1_kernel,
+        grid=(n_total // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((4, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((4, 1), lambda i: (0, 0)),
+            pl.BlockSpec((4, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_total,), module_times.dtype),
+        interpret=interpret,
+    )(module_times, dispatch2d, comm)
+    return out[:n]

@@ -1,0 +1,351 @@
+"""L2 — the JAX latency-surface model.
+
+Builds the paper's work/memory-traffic tables (Tables 1, 2, 6-13) as jnp
+expressions over a (batch-size x context-length) grid, prices them through
+the L1 Pallas roofline kernel, applies Algorithm 1's dispatch/compute
+interleave, TP communication (eq. (8) + collective floor) and the layer
+multiplier, producing the full latency surface in one lowered module:
+
+    latency_grid(params, b_grid, s_grid) ->
+        (prefill[NB, NS], decode_step[NB, NS])
+
+All model/hardware/efficiency scalars arrive in a single f32 params vector
+(layout below, shared verbatim with rust/src/runtime/grid.rs) so ONE
+AOT-compiled artifact serves every preset: the Rust runtime feeds the
+platform's numbers at execution time.
+
+This file mirrors rust/src/estimator/workload.rs row for row; the pytest
+suite cross-checks a sample of grid points against that Rust oracle via the
+CLI, and `tests/test_model.py` checks the jnp tables against hand formulas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.roofline import alg1_block_time, roofline_time
+
+# --- params vector layout (keep in sync with rust/src/runtime/grid.rs) -----
+P_H = 0            # hidden size h
+P_H0 = 1           # MLP intermediate h0
+P_HQ = 2           # query heads
+P_HKV = 3          # kv heads
+P_LAYERS = 4       # transformer blocks
+P_T = 5            # tensor parallel size
+P_DTYPE_BYTES = 6  # bytes per element (2 = fp16)
+P_SC = 7           # peak FLOP/s
+P_SM = 8           # peak memory B/s
+P_SPLUS = 9        # interconnect B/s
+P_EC_P = 10        # prefill MFU
+P_EM_P = 11        # prefill MBU
+P_EP_P = 12        # prefill comm efficiency
+P_EC_D = 13        # decode MFU
+P_EM_D = 14        # decode MBU
+P_EP_D = 15        # decode comm efficiency
+P_DISP_RMS = 16    # dispatch seconds: rmsnorm
+P_DISP_ATTN = 17   # dispatch seconds: attention
+P_DISP_MLP = 18    # dispatch seconds: mlp
+P_KAPPA_UPD = 19   # kv-cache update rate B/s
+P_KAPPA_KV = 20    # repeat_kv rate B/s
+P_KAPPA_UP = 21    # upcast rate B/s
+P_COMM_FLOOR = 22  # collective latency floor s
+P_IS_GQA = 23      # 1.0 if hkv < hq
+N_PARAMS = 24
+
+
+def _rmsnorm_rows(n, h):
+    """Table 6 (prefill, n = b*s) / Table 7 (decode, n = b)."""
+    w = [n * h, n * h, n, n, n * h, n * h]
+    q = [4 * n * h, 2 * n * h + 2 * n, 4 * n, 4 * n, 4 * n * h + 2 * n, 4 * n * h + 2 * h]
+    return w, q
+
+
+def _attention_prefill_rows(b, s, h, hq, hkv, t):
+    """Table 10 (t = 1 reduces to Table 8)."""
+    kv = hkv / hq
+    w = [
+        2 * b * s * h * h / t,
+        2 * b * s * h * h * kv / t,
+        2 * b * s * h * h * kv / t,
+        3.5 * b * s * h * (1 + kv),
+        2 * b * s * s * h / t,
+        b * hq * s * s / t,
+        b * hq * s * s / t,
+        3 * b * hq * s * s / t,
+        2 * b * s * s * h / t,
+        2 * b * s * h * h / t,
+    ]
+    q = [
+        2 * (2 * b * s * h + h * h) / t,
+        2 * (b * s * h + h * h * kv / t + b * s * h * kv / t),
+        2 * (b * s * h + h * h * kv / t + b * s * h * kv / t),
+        2 * b * s * h * (8.5 + 8.5 * kv + 2 / hq),
+        2 * (2 * b * s * h + b * hq * s * s) / t,
+        4 * b * hq * s * s / t,
+        2 * (2 * b * hq * s * s / t + b * s * s),
+        4 * b * hq * s * s / t,
+        2 * (b * hq * s * s + 2 * b * s * h) / t,
+        2 * (b * s * h + b * s * h / t + h * h),
+    ]
+    return w, q
+
+
+def _attention_decode_rows(b, s, h, hq, hkv, t):
+    """Table 11 (t = 1 reduces to Table 9); s is the KV context length."""
+    kv = hkv / hq
+    w = [
+        2 * b * h * h / t,
+        2 * b * h * h * kv / t,
+        2 * b * h * h * kv / t,
+        3.5 * b * h * (1 + kv),
+        2 * b * s * h / t,
+        b * hq * s / t,
+        b * hq * s / t,
+        3 * b * hq * s / t,
+        2 * b * s * h / t,
+        2 * b * h * h / t,
+    ]
+    q = [
+        2 * (2 * b * h + h * h) / t,
+        2 * (b * h + h * h * kv / t + b * h * kv / t),
+        2 * (b * h + h * h * kv / t + b * h * kv / t),
+        2 * b * h * (8.5 + 8.5 * kv + 2 / hq),
+        2 * b * (h + h * s + hq * s) / t,
+        4 * b * hq * s / t,
+        2 * (2 * b * hq * s / t + b * s),
+        4 * b * hq * s / t,
+        2 * b * (h + h * s + hq * s) / t,
+        2 * (b * h + h * h / t + b * h / t),
+    ]
+    return w, q
+
+
+def _mlp_rows(n, h, h0, t):
+    """Table 12 (prefill, n = b*s) / Table 13 (decode, n = b)."""
+    w = [
+        2 * n * h * h0 / t,
+        5 * n * h0 / t,
+        2 * n * h * h0 / t,
+        n * h0 / t,
+        2 * n * h * h0 / t,
+        n * h / t,
+    ]
+    q = [
+        2 * (n * (h + h0) + h * h0) / t,
+        4 * n * h0 / t,
+        2 * (n * (h + h0) + h * h0) / t,
+        6 * n * h0 / t,
+        2 * (n * (h + h0) + h * h0) / t,
+        4 * n * h0 / t,
+    ]
+    return w, q
+
+
+def _module_time(w_rows, q_rows, inv_ecsc, inv_emsm, *, interpret=True):
+    """Stack rows to [OPS, N] and price through the L1 roofline kernel.
+
+    Rows whose formula lacks a b- or s-dependence (e.g. decode RoPE) come in
+    with a partially broadcast shape; expand all to the full grid first.
+    """
+    shape = jnp.broadcast_shapes(*[jnp.shape(x) for x in w_rows + q_rows])
+    w = jnp.stack([jnp.ravel(jnp.broadcast_to(x, shape)) for x in w_rows])
+    q = jnp.stack([jnp.ravel(jnp.broadcast_to(x, shape)) for x in q_rows])
+    tc = w * inv_ecsc
+    tm = q * inv_emsm
+    return roofline_time(tc, tm, interpret=interpret)
+
+
+def _kappa_time(b, s, h, hq, hkv, t, p):
+    """Eq. (12)'s non-roofline decode-attention terms (flattened [N])."""
+    kv = hkv / hq
+    upd = 4 * b * s * h * kv / t / p[P_KAPPA_UPD]
+    upc = 4 * b * hq * s / t / p[P_KAPPA_UP]
+    rep = 4 * b * s * h * (1 + kv) / t / p[P_KAPPA_KV] * p[P_IS_GQA]
+    return jnp.ravel(upd + upc + rep)
+
+
+def _comm_time(b, tokens, h, t, eplus, splus, floor):
+    """Eq. (8); the collective launch floor is charged in prefill only
+    (pass floor=0 for decode — see rust comm_time docs / DESIGN.md #6).
+    Zero when t == 1."""
+    bw = b * tokens * h / t / (eplus * splus)
+    return jnp.ravel(jnp.where(t > 1.0, jnp.maximum(bw, floor), 0.0))
+
+
+def latency_grid(params, b_grid, s_grid, *, interpret=True):
+    """The full latency surface (seconds).
+
+    Args:
+      params: f32[N_PARAMS] platform vector (layout above).
+      b_grid: f32[NB] batch sizes to evaluate.
+      s_grid: f32[NS] sequence/context lengths to evaluate.
+
+    Returns:
+      (prefill[NB, NS], decode_step[NB, NS]) — ESTIMATE_TIME for a prefill
+      batch of (b, s), and the single-token decode step at context s.
+    """
+    p = params
+    nb, ns = b_grid.shape[0], s_grid.shape[0]
+    b = b_grid[:, None]
+    s = s_grid[None, :]
+    h, h0, hq, hkv, t = p[P_H], p[P_H0], p[P_HQ], p[P_HKV], p[P_T]
+    dispatch = jnp.stack([p[P_DISP_RMS], p[P_DISP_ATTN], p[P_DISP_RMS], p[P_DISP_MLP]])
+    zeros = jnp.zeros(nb * ns, jnp.float32)
+
+    def phase_surface(phase):
+        if phase == "prefill":
+            inv_ecsc = 1.0 / (p[P_EC_P] * p[P_SC])
+            inv_emsm = 1.0 / (p[P_EM_P] * p[P_SM])
+            eplus = p[P_EP_P]
+            n = b * s
+            tokens = s
+            attn_w, attn_q = _attention_prefill_rows(b, s, h, hq, hkv, t)
+        else:
+            inv_ecsc = 1.0 / (p[P_EC_D] * p[P_SC])
+            inv_emsm = 1.0 / (p[P_EM_D] * p[P_SM])
+            eplus = p[P_EP_D]
+            n = b * jnp.ones_like(s)
+            tokens = jnp.ones_like(s)
+            attn_w, attn_q = _attention_decode_rows(b, s, h, hq, hkv, t)
+
+        rms_w, rms_q = _rmsnorm_rows(n, h)
+        mlp_w, mlp_q = _mlp_rows(n, h, h0, t)
+        t_rms = _module_time(rms_w, rms_q, inv_ecsc, inv_emsm, interpret=interpret)
+        t_attn = _module_time(attn_w, attn_q, inv_ecsc, inv_emsm, interpret=interpret)
+        t_mlp = _module_time(mlp_w, mlp_q, inv_ecsc, inv_emsm, interpret=interpret)
+        if phase == "decode":
+            t_attn = t_attn + _kappa_time(b, s, h, hq, hkv, t, p)
+
+        floor = p[P_COMM_FLOOR] if phase == "prefill" else 0.0
+        comm = _comm_time(b, tokens, h, t, eplus, p[P_SPLUS], floor)
+        comm4 = jnp.stack([zeros, comm, zeros, comm])
+        module_times = jnp.stack([t_rms, t_attn, t_rms, t_mlp])
+        block = alg1_block_time(module_times, dispatch, comm4, interpret=interpret)
+        return (p[P_LAYERS] * block).reshape(nb, ns)
+
+    return phase_surface("prefill"), phase_surface("decode")
+
+
+def platform_params(
+    *,
+    hidden,
+    intermediate,
+    q_heads,
+    kv_heads,
+    layers,
+    tp,
+    dtype_bytes=2,
+    sc_flops,
+    sm_bytes,
+    s_plus_bytes,
+    prefill_eff=(0.65, 0.6, 0.6),
+    decode_eff=(0.65, 0.3, 0.3),
+    dispatch=(24e-6, 190e-6, 41e-6),
+    kappas=(0.48e12, 0.48e12, 0.48e12),
+    comm_floor=100e-6,
+):
+    """Assemble a params vector (mirrors Platform::paper_testbed defaults)."""
+    import numpy as np
+
+    p = np.zeros(N_PARAMS, np.float32)
+    p[P_H], p[P_H0], p[P_HQ], p[P_HKV] = hidden, intermediate, q_heads, kv_heads
+    p[P_LAYERS], p[P_T], p[P_DTYPE_BYTES] = layers, tp, dtype_bytes
+    p[P_SC], p[P_SM], p[P_SPLUS] = sc_flops, sm_bytes, s_plus_bytes
+    p[P_EC_P], p[P_EM_P], p[P_EP_P] = prefill_eff
+    p[P_EC_D], p[P_EM_D], p[P_EP_D] = decode_eff
+    p[P_DISP_RMS], p[P_DISP_ATTN], p[P_DISP_MLP] = dispatch
+    p[P_KAPPA_UPD], p[P_KAPPA_KV], p[P_KAPPA_UP] = kappas
+    p[P_COMM_FLOOR] = comm_floor
+    p[P_IS_GQA] = 1.0 if kv_heads < q_heads else 0.0
+    return p
+
+
+def codellama_34b_params(tp=4):
+    """The paper's evaluation platform: CodeLlama-34b on Ascend 910B3."""
+    return platform_params(
+        hidden=8192,
+        intermediate=22016,
+        q_heads=64,
+        kv_heads=8,
+        layers=48,
+        tp=tp,
+        sc_flops=313e12,
+        sm_bytes=1.6e12,
+        s_plus_bytes=90e9,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tiny LLaMa block — a REAL transformer block, executed through the same
+# AOT -> PJRT path as the latency surface. Used by the e2e test to prove the
+# custom-compute path (Pallas attention kernel included) end to end, and to
+# sanity-check the estimator's FLOP tables against actual compute.
+# ---------------------------------------------------------------------------
+
+TINY = dict(b=4, s=128, h=256, hq=8, hkv=2, h0=688)
+
+
+def _rms_norm(x, gain, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def tiny_block_weights(seed=0):
+    """Deterministic random weights for the tiny block (baked into the HLO
+    artifact as constants at lowering time)."""
+    import numpy as np
+
+    c = TINY
+    rng = np.random.default_rng(seed)
+    dh = c["h"] // c["hq"]
+    scale = 0.02
+    def w(*shape):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    return {
+        "ln1": np.ones(c["h"], np.float32),
+        "ln2": np.ones(c["h"], np.float32),
+        "wq": w(c["h"], c["hq"] * dh),
+        "wk": w(c["h"], c["hkv"] * dh),
+        "wv": w(c["h"], c["hkv"] * dh),
+        "wo": w(c["hq"] * dh, c["h"]),
+        "w_gate": w(c["h"], c["h0"]),
+        "w_up": w(c["h"], c["h0"]),
+        "w_down": w(c["h0"], c["h"]),
+    }
+
+
+def tiny_block_forward(x, weights, *, interpret=True):
+    """One LLaMa block (RMSNorm -> GQA attention via the L1 Pallas kernel ->
+    RMSNorm -> SiLU MLP, residuals) over x: f32[b, s, h]."""
+    from .kernels.attention import gqa_attention
+
+    c = TINY
+    b, s, h = x.shape
+    dh = h // c["hq"]
+    w = weights
+
+    a_in = _rms_norm(x, w["ln1"])
+    q = (a_in @ w["wq"]).reshape(b, s, c["hq"], dh).transpose(0, 2, 1, 3)
+    k = (a_in @ w["wk"]).reshape(b, s, c["hkv"], dh).transpose(0, 2, 1, 3)
+    v = (a_in @ w["wv"]).reshape(b, s, c["hkv"], dh).transpose(0, 2, 1, 3)
+    lens = jnp.full((b,), s, jnp.int32)
+    attn = gqa_attention(q, k, v, lens, interpret=interpret)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h)
+    x = x + attn @ w["wo"]
+
+    m_in = _rms_norm(x, w["ln2"])
+    gated = jax.nn.silu(m_in @ w["w_gate"]) * (m_in @ w["w_up"])
+    return x + gated @ w["w_down"]
+
+
+def tiny_block_input():
+    """The deterministic input both the pytest and the Rust integration test
+    regenerate independently: a sawtooth x[i] = (i % 200) * 0.01f - 1.0f,
+    built from exact f32 ops so both languages produce identical bits."""
+    import numpy as np
+
+    c = TINY
+    n = c["b"] * c["s"] * c["h"]
+    idx = (np.arange(n) % 200).astype(np.float32)
+    x = idx * np.float32(0.01) - np.float32(1.0)
+    return x.reshape(c["b"], c["s"], c["h"])

@@ -1,0 +1,110 @@
+"""L1 attention kernel: Pallas GQA attention vs the pure-jnp oracle,
+including hypothesis sweeps over head/sequence geometry, plus the tiny
+transformer block's lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.attention import gqa_attention
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def run_both(b, hq, hkv, sq, skv, lens, seed=0):
+    dh = 32
+    q = rand((b, hq, sq, dh), seed)
+    k = rand((b, hkv, skv, dh), seed + 1)
+    v = rand((b, hkv, skv, dh), seed + 2)
+    lens = jnp.asarray(lens, jnp.int32)
+    got = gqa_attention(q, k, v, lens)
+    want = attention_ref(q, k, v, lens)
+    return np.asarray(got), np.asarray(want)
+
+
+class TestAttentionKernel:
+    def test_mha_full_lengths(self):
+        got, want = run_both(2, 4, 4, 16, 16, [16, 16])
+        assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_gqa_head_sharing(self):
+        got, want = run_both(2, 8, 2, 8, 32, [32, 32])
+        assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_masking_partial_lengths(self):
+        got, want = run_both(3, 4, 2, 4, 64, [1, 17, 64])
+        assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_single_query_decode_shape(self):
+        # Decode-style: one query against a long cache.
+        got, want = run_both(2, 8, 2, 1, 256, [100, 256])
+        assert got.shape == (2, 8, 1, 32)
+        assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_masked_tail_does_not_leak(self):
+        # Changing K/V beyond the valid length must not change the output.
+        dh = 32
+        q = rand((1, 2, 4, dh), 10)
+        k = rand((1, 2, 16, dh), 11)
+        v = rand((1, 2, 16, dh), 12)
+        lens = jnp.asarray([7], jnp.int32)
+        base = np.asarray(gqa_attention(q, k, v, lens))
+        k2 = k.at[:, :, 7:, :].set(99.0)
+        v2 = v.at[:, :, 7:, :].set(-99.0)
+        poked = np.asarray(gqa_attention(q, k2, v2, lens))
+        assert_allclose(base, poked, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        group=st.integers(1, 4),
+        hkv=st.integers(1, 3),
+        sq=st.sampled_from([1, 4, 16]),
+        skv=st.sampled_from([8, 32, 64]),
+        seed=st.integers(0, 10_000),
+        data=st.data(),
+    )
+    def test_hypothesis_geometry(self, b, group, hkv, sq, skv, seed, data):
+        hq = group * hkv
+        lens = [data.draw(st.integers(1, skv)) for _ in range(b)]
+        got, want = run_both(b, hq, hkv, sq, skv, lens, seed)
+        assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+
+class TestTinyBlock:
+    def test_forward_is_finite_and_residual(self):
+        from compile import model as M
+
+        x = jnp.asarray(M.tiny_block_input())
+        w = {k: jnp.asarray(v) for k, v in M.tiny_block_weights().items()}
+        y = np.asarray(M.tiny_block_forward(x, w))
+        assert y.shape == x.shape
+        assert np.isfinite(y).all()
+        # Small-init weights: the block is a perturbation of the identity.
+        rel = np.linalg.norm(y - np.asarray(x)) / np.linalg.norm(np.asarray(x))
+        assert 0.001 < rel < 0.5, rel
+
+    def test_lowering_and_expectation(self):
+        from compile import aot
+
+        text = aot.to_hlo_text(aot.lower_tiny_block())
+        assert text.startswith("HloModule")
+        exp = aot.tiny_block_expectation()
+        assert exp["shape"] == [4, 128, 256]
+        assert np.isfinite(exp["norm"])
+        # The lowered artifact must agree with eager (Rust repeats this
+        # check through PJRT using the manifest numbers).
+        from compile import model as M
+
+        x = jnp.asarray(M.tiny_block_input())
+        w = {k: jnp.asarray(v) for k, v in M.tiny_block_weights().items()}
+        y = np.asarray(M.tiny_block_forward(x, w))
+        assert abs(float(y.mean()) - exp["mean"]) < 1e-7

@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas roofline/Algorithm-1 kernels vs the pure-jnp
+oracles in kernels/ref.py, including hypothesis sweeps over shapes/values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import alg1_block_time_ref, roofline_time_ref
+from compile.kernels.roofline import BLOCK_N, alg1_block_time, roofline_time
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=0.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+class TestRooflineKernel:
+    def test_matches_ref_basic(self):
+        tc = rand((6, 1000), 0)
+        tm = rand((6, 1000), 1)
+        got = roofline_time(tc, tm)
+        want = roofline_time_ref(tc, tm)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_exact_block_multiple(self):
+        tc = rand((10, 4 * BLOCK_N), 2)
+        tm = rand((10, 4 * BLOCK_N), 3)
+        assert_allclose(
+            np.asarray(roofline_time(tc, tm)),
+            np.asarray(roofline_time_ref(tc, tm)),
+            rtol=1e-6,
+        )
+
+    def test_single_column(self):
+        tc = rand((3, 1), 4)
+        tm = rand((3, 1), 5)
+        assert_allclose(
+            np.asarray(roofline_time(tc, tm)),
+            np.asarray(roofline_time_ref(tc, tm)),
+            rtol=1e-6,
+        )
+
+    def test_compute_dominated(self):
+        tc = rand((4, 300), 6, lo=10.0, hi=20.0)
+        tm = rand((4, 300), 7, lo=0.0, hi=1.0)
+        got = roofline_time(tc, tm)
+        assert_allclose(np.asarray(got), np.asarray(tc.sum(axis=0)), rtol=1e-6)
+
+    def test_memory_dominated(self):
+        tc = rand((4, 300), 8, lo=0.0, hi=1.0)
+        tm = rand((4, 300), 9, lo=10.0, hi=20.0)
+        got = roofline_time(tc, tm)
+        assert_allclose(np.asarray(got), np.asarray(tm.sum(axis=0)), rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        ops=st.integers(min_value=1, max_value=12),
+        n=st.integers(min_value=1, max_value=700),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.floats(min_value=1e-9, max_value=1e3),
+    )
+    def test_hypothesis_shapes_and_scales(self, ops, n, seed, scale):
+        tc = rand((ops, n), seed) * scale
+        tm = rand((ops, n), seed + 1) * scale
+        got = roofline_time(tc, tm)
+        want = roofline_time_ref(tc, tm)
+        assert got.shape == (n,)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_output_at_least_max_of_each(self):
+        tc = rand((5, 256), 10)
+        tm = rand((5, 256), 11)
+        out = np.asarray(roofline_time(tc, tm))
+        assert (out >= np.asarray(tc.sum(axis=0)) - 1e-6).all()
+        assert (out >= np.asarray(tm.sum(axis=0)) - 1e-6).all()
+
+
+class TestAlg1Kernel:
+    def test_matches_ref(self):
+        times = rand((4, 500), 20)
+        disp = rand((4,), 21, lo=0.0, hi=0.5)
+        comm = rand((4, 500), 22, lo=0.0, hi=0.1)
+        got = alg1_block_time(times, disp, comm)
+        want = alg1_block_time_ref(times, disp, comm)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_compute_bound_reduces_to_sum(self):
+        # Dispatch negligible: block time = sum(compute) + sum(comm).
+        times = rand((4, 200), 23, lo=1.0, hi=2.0)
+        disp = jnp.zeros((4,), jnp.float32)
+        comm = rand((4, 200), 24, lo=0.0, hi=0.1)
+        got = np.asarray(alg1_block_time(times, disp, comm))
+        want = np.asarray(times.sum(axis=0) + comm.sum(axis=0))
+        assert_allclose(got, want, rtol=1e-6)
+
+    def test_dispatch_bound_floor(self):
+        # Compute ~0: block time >= total dispatch.
+        times = jnp.zeros((4, 100), jnp.float32)
+        disp = jnp.asarray([0.1, 0.2, 0.1, 0.3], jnp.float32)
+        comm = jnp.zeros((4, 100), jnp.float32)
+        got = np.asarray(alg1_block_time(times, disp, comm))
+        assert_allclose(got, np.full(100, 0.7, np.float32), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=400),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        disp_scale=st.floats(min_value=0.0, max_value=10.0),
+    )
+    def test_hypothesis_interleave(self, n, seed, disp_scale):
+        times = rand((4, n), seed)
+        disp = rand((4,), seed + 1) * disp_scale
+        comm = rand((4, n), seed + 2, hi=0.2)
+        got = alg1_block_time(times, disp, comm)
+        want = alg1_block_time_ref(times, disp, comm)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_monotone_in_dispatch(self):
+        times = rand((4, 64), 30)
+        comm = jnp.zeros((4, 64), jnp.float32)
+        lo = np.asarray(alg1_block_time(times, jnp.zeros(4, jnp.float32), comm))
+        hi = np.asarray(
+            alg1_block_time(times, jnp.full((4,), 5.0, jnp.float32), comm)
+        )
+        assert (hi >= lo - 1e-6).all()

@@ -1,0 +1,147 @@
+"""L2 model correctness: the jnp op tables vs hand formulas, Algorithm-1
+surface sanity (monotonicity, phase relationships), and the paper's Table 3
+operating point."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", True)
+
+
+def surface(tp=4, nb=8, s_vals=(256, 1024, 2048, 2111, 4096, 8192)):
+    params = jnp.asarray(M.codellama_34b_params(tp=tp))
+    b_grid = jnp.arange(1, nb + 1, dtype=jnp.float32)
+    s_grid = jnp.asarray(s_vals, dtype=jnp.float32)
+    pre, dec = M.latency_grid(params, b_grid, s_grid)
+    return np.asarray(pre), np.asarray(dec), list(s_vals)
+
+
+class TestTables:
+    def test_mlp_rows_match_hand_formula(self):
+        n, h, h0, t = 7.0, 8192.0, 22016.0, 4.0
+        w, q = M._mlp_rows(n, h, h0, t)
+        assert w[0] == 2 * n * h * h0 / t  # GATE_PROJ
+        assert q[0] == 2 * (n * (h + h0) + h * h0) / t
+        assert w[1] == 5 * n * h0 / t  # SiLU
+        assert q[3] == 6 * n * h0 / t  # mul
+        assert w[5] == n * h / t  # add
+        assert len(w) == len(q) == 6
+
+    def test_rmsnorm_rows(self):
+        n, h = 3.0, 4096.0
+        w, q = M._rmsnorm_rows(n, h)
+        assert w == [n * h, n * h, n, n, n * h, n * h]
+        assert q[1] == 2 * n * h + 2 * n
+        assert q[5] == 4 * n * h + 2 * h
+
+    def test_attention_prefill_tp_reduction(self):
+        # t=1 must reduce Table 10 to Table 8.
+        b, s, h, hq, hkv = 2.0, 64.0, 8192.0, 64.0, 8.0
+        w1, q1 = M._attention_prefill_rows(b, s, h, hq, hkv, 1.0)
+        kv = hkv / hq
+        assert w1[0] == 2 * b * s * h * h
+        assert q1[0] == 2 * (2 * b * s * h + h * h)
+        assert w1[1] == 2 * b * s * h * h * kv
+        assert q1[9] == 2 * (2 * b * s * h + h * h)
+        # TP shards projections exactly by t.
+        w4, _ = M._attention_prefill_rows(b, s, h, hq, hkv, 4.0)
+        assert w4[0] == w1[0] / 4
+        assert w4[3] == w1[3]  # RoPE not sharded
+
+    def test_attention_decode_rows(self):
+        b, s, h, hq, hkv, t = 4.0, 333.0, 8192.0, 64.0, 8.0, 1.0
+        w, q = M._attention_decode_rows(b, s, h, hq, hkv, t)
+        assert w[4] == 2 * b * s * h  # QK^T
+        assert q[4] == 2 * b * (h + h * s + hq * s)
+        assert q[6] == 2 * (2 * b * hq * s + b * s)  # add
+
+
+class TestSurface:
+    def test_shapes(self):
+        pre, dec, _ = surface()
+        assert pre.shape == (8, 6)
+        assert dec.shape == (8, 6)
+        assert (pre > 0).all() and (dec > 0).all()
+
+    def test_monotone_in_batch(self):
+        pre, dec, _ = surface()
+        assert (np.diff(pre, axis=0) > 0).all()
+        assert (np.diff(dec, axis=0) >= -1e-9).all()
+
+    def test_monotone_in_seq(self):
+        pre, dec, _ = surface()
+        assert (np.diff(pre, axis=1) > 0).all()
+        assert (np.diff(dec, axis=1) >= -1e-9).all()
+
+    def test_prefill_dwarfs_decode_step(self):
+        pre, dec, s_vals = surface()
+        # One full-sequence prefill >> one decode token at the same context
+        # (for sequences long enough that dispatch overhead doesn't mask it).
+        long = [i for i, s in enumerate(s_vals) if s >= 1024]
+        assert (pre[0, long] > 2 * dec[0, long]).all()
+
+    def test_table3_operating_point(self):
+        """Table 3: prefill(1, 2048) ~ 265.123 ms; our reconstruction must
+        land within 10% (matching the Rust oracle's tolerance)."""
+        pre, dec, s_vals = surface()
+        i = s_vals.index(2048)
+        t_ms = pre[0, i] * 1e3
+        assert abs(t_ms - 265.123) / 265.123 < 0.10, t_ms
+        j = s_vals.index(2111)
+        step_ms = dec[0, j] * 1e3
+        assert 20.0 < step_ms < 70.0, step_ms
+
+    def test_tp_speedup(self):
+        pre1, dec1, _ = surface(tp=1)
+        pre4, dec4, _ = surface(tp=4)
+        assert (pre4 < pre1).all()
+
+    def test_mha_model_no_gqa_flag(self):
+        params = M.platform_params(
+            hidden=4096,
+            intermediate=11008,
+            q_heads=32,
+            kv_heads=32,
+            layers=32,
+            tp=1,
+            sc_flops=313e12,
+            sm_bytes=1.6e12,
+            s_plus_bytes=90e9,
+        )
+        assert params[M.P_IS_GQA] == 0.0
+        pre, dec = M.latency_grid(
+            jnp.asarray(params),
+            jnp.asarray([1.0], jnp.float32),
+            jnp.asarray([512.0], jnp.float32),
+        )
+        assert np.asarray(pre).item() > 0
+
+
+class TestAotLowering:
+    def test_lowering_produces_hlo_text(self):
+        from compile import aot
+
+        lowered = aot.lower_latency_grid()
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "f32[64,1089]" in text  # output surface shape
+
+    def test_lowered_numerics_match_eager(self):
+        """The jitted/lowered function must agree with eager evaluation —
+        the same check the Rust integration test performs via PJRT."""
+        from compile import aot
+
+        params = jnp.asarray(M.codellama_34b_params(tp=4))
+        b_grid = jnp.arange(1, aot.NB + 1, dtype=jnp.float32)
+        s_grid = jnp.arange(1, aot.NS + 1, dtype=jnp.float32) * aot.S_STRIDE
+        jitted = jax.jit(lambda p, b, s: M.latency_grid(p, b, s))
+        pre_j, dec_j = jitted(params, b_grid, s_grid)
+        pre_e, dec_e = M.latency_grid(params, b_grid, s_grid)
+        assert_allclose(np.asarray(pre_j), np.asarray(pre_e), rtol=1e-6)
+        assert_allclose(np.asarray(dec_j), np.asarray(dec_e), rtol=1e-6)

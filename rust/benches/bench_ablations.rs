@@ -1,0 +1,107 @@
+//! Ablations over the design choices the paper discusses but does not
+//! sweep: the pseudo-batch scalar τ (eq. 9), the decode-span pricing mode
+//! (request-level heuristic vs token-level exact), the SLO relaxation
+//! factor τ_slo (Algorithm 9 / Figure 10 discussion), and the
+//! disaggregation KV-transfer cost.
+//!
+//! Run: `cargo bench --bench bench_ablations`
+
+use std::time::Instant;
+
+use bestserve::config::{Platform, Scenario, Slo, Strategy};
+use bestserve::estimator::AnalyticOracle;
+use bestserve::optimizer::{find_goodput, GoodputConfig};
+use bestserve::simulator::{simulate, SimParams, SpanMode};
+use bestserve::testbed::{testbed_goodput, GroundTruthConfig};
+use bestserve::util::csv::Csv;
+use bestserve::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+    let slo = Slo::paper_default();
+    let mut scenario = Scenario::op2();
+    scenario.n_requests = 1000;
+    let strategy = Strategy::disaggregation(1, 1, 4);
+    let cfg = GoodputConfig { tolerance: 0.05, ..GoodputConfig::default() };
+    let t_start = Instant::now();
+    let dir = bestserve::report::results_dir();
+
+    // --- A1: pseudo-batch scalar τ ------------------------------------------
+    println!("=== A1: pseudo-batch scalar τ (eq. 9) — 1p1d-tp4, OP2 ===");
+    let truth = testbed_goodput(
+        &oracle,
+        &platform,
+        &strategy,
+        &scenario,
+        &slo,
+        &GroundTruthConfig::default(),
+        7,
+    )?;
+    let mut t = Table::new(&["tau", "predicted goodput", "rel err vs testbed"]).numeric_body();
+    let mut csv = Csv::new(&["tau", "predicted", "truth", "rel_err"]);
+    for tau in [1.0, 1.25, 1.5, 2.0, 2.5, 3.5, 5.0] {
+        let params = SimParams { tau, ..SimParams::default() };
+        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo, params, &cfg)?;
+        let err = (g - truth) / truth;
+        t.row(&[format!("{tau}"), format!("{g:.3}"), format!("{:+.1}%", err * 100.0)]);
+        csv.row_f64(&[tau, g, truth, err]);
+    }
+    print!("{}", t.render());
+    println!("testbed ground truth: {truth:.3} req/s");
+    println!("(larger τ underprices decode interference -> goodput overestimated,");
+    println!(" the §5 'over-simplification in decode phase' failure mode)\n");
+    csv.save(dir.join("ablation_tau.csv"))?;
+
+    // --- A2: decode span pricing --------------------------------------------
+    println!("=== A2: decode-span pricing — request-level heuristic vs exact ===");
+    for mode in [SpanMode::PaperHeuristic, SpanMode::Exact] {
+        let params = SimParams { span_mode: mode, tau: 1.0, ..SimParams::default() };
+        let t0 = Instant::now();
+        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo, params, &cfg)?;
+        println!(
+            "  {:?}: goodput {:.3} req/s  (optimizer wall {:.2}s)",
+            mode,
+            g,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("(the heuristic prices all tokens at the final context — a strict");
+    println!(" upper bound on exact, so its goodput is a slight underestimate)\n");
+
+    // --- A3: SLO relaxation factor τ_slo ------------------------------------
+    println!("=== A3: Algorithm 9 relaxation factor τ_slo ===");
+    let mut t = Table::new(&["tau_slo", "goodput"]).numeric_body();
+    for relax in [0.0, 0.05, 0.1, 0.2] {
+        let slo_r = Slo { relaxation: relax, ..slo };
+        let params = SimParams { tau: 1.0, ..SimParams::default() };
+        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo_r, params, &cfg)?;
+        t.row(&[format!("{relax}"), format!("{g:.3}")]);
+    }
+    print!("{}", t.render());
+    println!("(τ_slo=0 underestimates goodput — the Figure 10 variance argument)\n");
+
+    // --- A4: disaggregation KV-transfer cost --------------------------------
+    println!("=== A4: KV-cache transfer cost (disaggregation hand-off) ===");
+    for (label, kv) in [("with transfer", true), ("without", false)] {
+        let params = SimParams { tau: 1.0, kv_transfer: kv, ..SimParams::default() };
+        let rep = simulate(&oracle, &platform, &strategy, &scenario, 2.0, params)?;
+        // TTFT/TPOT are transfer-invariant by definition (the shift moves
+        // decode start and completion together); the end-to-end request
+        // latency is where the hand-off cost lands.
+        println!(
+            "  {label:16}: P90 TTFT {:7.1} ms | P90 TPOT {:6.2} ms | mean e2e {:8.1} ms",
+            rep.ttft.p90 * 1e3,
+            rep.tpot.p90 * 1e3,
+            rep.e2e.mean * 1e3
+        );
+    }
+    println!("(TTFT/TPOT are invariant to the hand-off by construction; the ~15 ms");
+    println!(" 2048-token KV move on 90 GB/s HCCS appears in end-to-end latency &");
+    println!(" queueing only — matching the paper's 'additional communication");
+    println!(" overhead' framing rather than an SLO-metric effect)");
+
+    println!("\n[bench] ablations in {:.1}s; wrote {}/ablation_tau.csv",
+        t_start.elapsed().as_secs_f64(), dir.display());
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Regenerates **Figure 11** — the headline validation: normalized goodput
+//! of every strategy in the space, BestServe prediction vs ground truth,
+//! across the four operating scenarios, with per-panel average |relative
+//! error|.
+//!
+//! Paper reference errors (vs its real vLLM-Ascend cluster): OP1 11.2%,
+//! OP2 12.1%, OP3 8.6%, OP4 30.1%. Our ground truth is the token-level
+//! testbed (DESIGN.md §Hardware-Adaptation); the pseudo-batch scalar is
+//! calibrated to τ=1.0 against it (the paper's §4.1 tuning protocol; its
+//! 2.5 was tuned against its own cluster). A τ=2.5 ablation panel shows
+//! the paper's qualitative finding — error explodes in generation-heavy
+//! OP4 — survives the substitution.
+//!
+//! OP1 note: our reconstructed prefill(1, 8192) is 1.76 s > the 1.5 s TTFT
+//! SLO, so the default-SLO OP1 panel is degenerate (predictor and testbed
+//! both report zero goodput everywhere — trivial agreement). We report OP1
+//! under a 3 s TTFT / 120 ms TPOT SLO to exercise the ranking, and say so.
+//!
+//! Run: `cargo bench --bench bench_fig11`
+
+use std::time::Instant;
+
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::optimizer::AnalyticFactory;
+use bestserve::report::results_dir;
+use bestserve::simulator::SimParams;
+use bestserve::validation::{validate, ValidationConfig};
+
+fn panel(
+    platform: &Platform,
+    scenario: &Scenario,
+    slo: &Slo,
+    tau: f64,
+    n_requests: usize,
+) -> anyhow::Result<bestserve::validation::ValidationReport> {
+    let mut sc = scenario.clone();
+    sc.n_requests = n_requests;
+    let space = StrategySpace {
+        max_cards: 8,
+        tp_choices: vec![2, 4, 8],
+        ..StrategySpace::default()
+    };
+    let mut cfg = ValidationConfig::default();
+    cfg.sim_params = SimParams { tau, ..SimParams::default() };
+    let mut factory = AnalyticFactory::new(platform.clone());
+    Ok(validate(&mut factory, platform, &space, &sc, slo, &cfg)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let slo = Slo::paper_default();
+    let op1_slo = Slo { ttft: 3.0, tpot: 0.120, ..slo };
+    let dir = results_dir();
+    let t0 = Instant::now();
+
+    let panels: Vec<(Scenario, Slo, usize, &str)> = vec![
+        (Scenario::op1(), op1_slo, 500, "OP1 (SLO relaxed to 3s/120ms — see header)"),
+        (Scenario::op2(), slo, 800, "OP2"),
+        (Scenario::op3(), slo, 800, "OP3"),
+        (Scenario::op4(), slo, 400, "OP4"),
+    ];
+
+    let mut errors = Vec::new();
+    for (sc, panel_slo, n, label) in &panels {
+        let rep = panel(&platform, sc, panel_slo, 1.0, *n)?;
+        println!("=== Figure 11 panel: {label} (tau=1.0 calibrated) ===");
+        print!("{}", rep.to_table().render());
+        let err = rep.mean_abs_rel_error();
+        println!(
+            "average |relative error| = {:.1}%  |  recommendation quality = {:.2}\n",
+            err * 100.0,
+            rep.recommendation_quality()
+        );
+        rep.to_csv().save(dir.join(format!("fig11_{}.csv", sc.name)))?;
+        errors.push((sc.name.clone(), err));
+    }
+
+    println!("=== tau ablation (paper default tau=2.5) ===");
+    let mut tau_rows = Vec::new();
+    for (sc, panel_slo, n, _) in &panels {
+        let rep = panel(&platform, sc, panel_slo, 2.5, (*n).min(500))?;
+        tau_rows.push((sc.name.clone(), rep.mean_abs_rel_error()));
+    }
+    println!("scenario | err(tau=1.0) | err(tau=2.5)   [paper err vs its cluster]");
+    let paper = [("OP1", 11.2), ("OP2", 12.1), ("OP3", 8.6), ("OP4", 30.1)];
+    for (i, (name, e1)) in errors.iter().enumerate() {
+        println!(
+            "  {name}   |   {:5.1}%     |   {:5.1}%        [{:.1}%]",
+            e1 * 100.0,
+            tau_rows[i].1 * 100.0,
+            paper[i].1
+        );
+    }
+    println!(
+        "\nShape checks: (1) with the calibrated tau the mean error is within the \
+         paper's ~10-30% band; (2) with a mis-tuned tau the error grows most in \
+         the generation-heavy scenarios — the paper's OP4 pathology."
+    );
+    println!("wrote {}/fig11_OP*.csv", dir.display());
+    println!("\n[bench] 8 panels in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Regenerates **Figures 7 & 9** — P90 TTFT and P90 TPOT against request
+//! arrival rate, for the Table-4 (1p1d) and Table-5 (2m) setups. The curves
+//! show the knee where queueing blows past the SLO — the object the
+//! Optimizer bisects along.
+//!
+//! Run: `cargo bench --bench bench_fig7_9`
+
+use std::time::Instant;
+
+use bestserve::config::{Platform, Scenario, Strategy};
+use bestserve::estimator::AnalyticOracle;
+use bestserve::report::{rate_sweep, results_dir};
+use bestserve::simulator::SimParams;
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+    let scenario = Scenario::fixed("sweep", 2048, 64, 4_000);
+    let params = SimParams::default();
+    let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
+    let dir = results_dir();
+
+    println!("=== Figure 7: P90 TTFT/TPOT vs arrival rate — 1p1d-tp4 ===");
+    let t0 = Instant::now();
+    let f7 = rate_sweep(
+        &oracle,
+        &platform,
+        &Strategy::disaggregation(1, 1, 4),
+        &scenario,
+        &rates,
+        params,
+    )?;
+    print!("{}", f7.to_table().render());
+    f7.to_csv().save(dir.join("fig7_disagg_sweep.csv"))?;
+
+    println!("\n=== Figure 9: P90 TTFT/TPOT vs arrival rate — 2m-tp4 (bmax 4) ===");
+    let mut colloc = Strategy::collocation(2, 4);
+    colloc.bmax_decode = 4;
+    let f9 = rate_sweep(&oracle, &platform, &colloc, &scenario, &rates, params)?;
+    print!("{}", f9.to_table().render());
+    f9.to_csv().save(dir.join("fig9_colloc_sweep.csv"))?;
+
+    // Knee positions: first rate where each metric crosses its SLO.
+    let knee = |rates: &[f64], ys: &[f64], slo: f64| -> Option<f64> {
+        rates.iter().zip(ys).find(|(_, &y)| y > slo).map(|(r, _)| *r)
+    };
+    println!(
+        "\nSLO crossings — 1p1d: TTFT>{:.1}s at λ≈{:?}, TPOT>70ms at λ≈{:?}",
+        1.5,
+        knee(&f7.rates, &f7.ttft_p90, 1.5),
+        knee(&f7.rates, &f7.tpot_p90, 0.07)
+    );
+    println!(
+        "SLO crossings — 2m:   TTFT>{:.1}s at λ≈{:?}, TPOT>70ms at λ≈{:?}",
+        1.5,
+        knee(&f9.rates, &f9.ttft_p90, 1.5),
+        knee(&f9.rates, &f9.tpot_p90, 0.07)
+    );
+    println!(
+        "(paper shape: the 1p1d curve is TTFT-limited, the 2m curve TPOT-limited)"
+    );
+    println!(
+        "wrote {}/fig7_disagg_sweep.csv, fig9_colloc_sweep.csv",
+        dir.display()
+    );
+    println!("\n[bench] {} rates x 2 setups in {:.2}s", rates.len(), t0.elapsed().as_secs_f64());
+    Ok(())
+}

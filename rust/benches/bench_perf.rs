@@ -1,0 +1,135 @@
+//! Performance benchmarks (EXPERIMENTS.md §Perf) — the whole-stack numbers:
+//! L3 oracle + simulator + testbed + optimizer throughput, and the PJRT
+//! grid's build/query costs. Run after `make artifacts` for the PJRT rows.
+//!
+//! Run: `cargo bench --bench bench_perf`
+
+use std::time::Instant;
+
+use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
+use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
+use bestserve::simulator::{generate_workload, simulate, SimParams};
+use bestserve::testbed::{Testbed, TestbedConfig};
+
+fn time<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+    println!("=== bench_perf — whole-stack hot-path numbers ===\n");
+
+    // --- L3: oracle ---------------------------------------------------------
+    let n = 500_000u32;
+    let dt = time(|| {
+        for i in 0..n {
+            std::hint::black_box(oracle.decode_step_time(1 + (i % 16), 2048));
+        }
+    });
+    println!("oracle cached lookup      : {:>10.0} calls/s", n as f64 / dt);
+    let fresh = AnalyticOracle::new(platform.clone(), 4);
+    let n_cold = 20_000u32;
+    let dt = time(|| {
+        for i in 0..n_cold {
+            std::hint::black_box(fresh.decode_step_time(1 + (i % 64), 16 + i));
+        }
+    });
+    println!("oracle cold evaluation    : {:>10.0} calls/s", n_cold as f64 / dt);
+
+    // --- PJRT grid ----------------------------------------------------------
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let t0 = Instant::now();
+        let grid = GridLatencyModel::from_artifacts(&dir, &platform, 4)?;
+        println!("PJRT grid build (compile+exec+cumsum): {:>6.2} s", t0.elapsed().as_secs_f64());
+        let n = 2_000_000u32;
+        let dt = time(|| {
+            for i in 0..n {
+                std::hint::black_box(grid.decode_step_time(1 + (i % 64), 17 + (i % 16000)));
+            }
+        });
+        println!("PJRT grid lookup          : {:>10.0} calls/s", n as f64 / dt);
+        let dt = time(|| {
+            for i in 0..n {
+                std::hint::black_box(grid.decode_span_exact(1 + (i % 64), 256, 2048));
+            }
+        });
+        println!("PJRT grid exact span O(1) : {:>10.0} calls/s", n as f64 / dt);
+    } else {
+        println!("PJRT grid: artifacts missing (run `make artifacts`) — skipped");
+    }
+
+    // --- Simulator ----------------------------------------------------------
+    let scenario = Scenario::fixed("perf", 2048, 64, 20_000);
+    let st = Strategy::disaggregation(1, 1, 4);
+    let params = SimParams::default();
+    let mut rep_n = 0usize;
+    let dt = time(|| {
+        let r = simulate(&oracle, &platform, &st, &scenario, 3.0, params).unwrap();
+        rep_n = r.n;
+    });
+    println!(
+        "disagg simulator          : {:>10.0} requests/s simulated ({} reqs in {:.3}s)",
+        rep_n as f64 / dt,
+        rep_n,
+        dt
+    );
+    let mut colloc = Strategy::collocation(2, 4);
+    colloc.bmax_decode = 4;
+    let dt = time(|| {
+        let r = simulate(&oracle, &platform, &colloc, &scenario, 3.0, params).unwrap();
+        rep_n = r.n;
+    });
+    println!(
+        "colloc simulator          : {:>10.0} requests/s simulated",
+        rep_n as f64 / dt
+    );
+
+    // --- Testbed -------------------------------------------------------------
+    let tb_scenario = Scenario::fixed("perf", 2048, 64, 3_000);
+    let reqs = generate_workload(&tb_scenario, 2.0, 99);
+    let tokens: u64 = reqs.iter().map(|r| r.gen_len as u64).sum();
+    let tb = Testbed::new(&oracle, &platform, st.clone(), TestbedConfig::default());
+    let dt = time(|| {
+        std::hint::black_box(tb.run(&reqs).unwrap());
+    });
+    println!(
+        "token-level testbed       : {:>10.0} tokens/s simulated ({} tokens in {:.3}s)",
+        tokens as f64 / dt,
+        tokens,
+        dt
+    );
+
+    // --- Optimizer ------------------------------------------------------------
+    let space = StrategySpace {
+        max_cards: 8,
+        tp_choices: vec![1, 2, 4, 8],
+        ..StrategySpace::default()
+    };
+    let mut factory = AnalyticFactory::new(platform.clone());
+    let mut n_strategies = 0usize;
+    let sc = Scenario::fixed("perf", 2048, 64, 2_000);
+    let dt = time(|| {
+        let r = optimize(
+            &mut factory,
+            &platform,
+            &space,
+            &sc,
+            &Slo::paper_default(),
+            params,
+            &GoodputConfig::default(),
+        )
+        .unwrap();
+        n_strategies = r.ranked.len();
+    });
+    println!(
+        "optimizer full space      : {n_strategies} strategies in {dt:.2}s \
+         (paper target: 'minutes on a single standard CPU')"
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Regenerates **Tables 4 & 5** and **Figures 6 & 8** — the disaggregation
+//! (1p1d) and collocation (2m) simulator outputs at λ=3.5 req/s with 10 000
+//! requests of the Table-4 workload (s=2048, s+=64), CodeLlama-34b @ 910B3.
+//!
+//! Paper reference:
+//!   Table 4 (1p1d, bmax 4/16): P90 TTFT 3650.319, P99 6004.805,
+//!                              P90 TPOT 44.849 (SLO 1500/70).
+//!   Table 5 (2m, bmax 4):      P90 TTFT 556.309, P99 1091.503,
+//!                              P90 TPOT 4360.659, P99 4656.043.
+//! Run: `cargo bench --bench bench_tables45`
+
+use std::time::Instant;
+
+use bestserve::config::{Platform, Scenario, Slo, Strategy};
+use bestserve::estimator::AnalyticOracle;
+use bestserve::report::{results_dir, table_slo};
+use bestserve::simulator::SimParams;
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper_testbed();
+    let oracle = AnalyticOracle::new(platform.clone(), 4);
+    let scenario = Scenario::fixed("table4", 2048, 64, 10_000);
+    let slo = Slo::paper_default();
+    let params = SimParams::default();
+    let dir = results_dir();
+
+    println!("=== Table 4: 1p1d-tp4, bmax 4/16, lambda=3.5, n=10000 ===");
+    let st4 = Strategy::disaggregation(1, 1, 4);
+    let t0 = Instant::now();
+    let t4 = table_slo(&oracle, &platform, &st4, &scenario, 3.5, &slo, params)?;
+    let dt4 = t0.elapsed().as_secs_f64();
+    print!("{}", t4.to_table().render());
+    println!("(paper: TTFT P90 3650.3 / P99 6004.8; TPOT P90 44.8 — same SLO verdicts)\n");
+
+    println!("=== Table 5: 2m-tp4, bmax 4, lambda=3.5, n=10000 ===");
+    let mut st5 = Strategy::collocation(2, 4);
+    st5.bmax_decode = 4; // Table 5a: maximum batch size 4
+    let t1 = Instant::now();
+    let t5 = table_slo(&oracle, &platform, &st5, &scenario, 3.5, &slo, params)?;
+    let dt5 = t1.elapsed().as_secs_f64();
+    print!("{}", t5.to_table().render());
+    println!("(paper: TTFT P90 556.3; TPOT P90 4360.7 — same SLO verdicts)\n");
+
+    println!("=== Figure 6: 1p1d service-metric distributions ===");
+    println!("{}", t4.render_histograms(20, 40));
+    println!("=== Figure 8: 2m service-metric distributions ===");
+    println!("{}", t5.render_histograms(20, 40));
+
+    t4.to_csv().save(dir.join("table4_disagg.csv"))?;
+    t5.to_csv().save(dir.join("table5_colloc.csv"))?;
+    t4.histograms_csv(40).save(dir.join("fig6_disagg_hist.csv"))?;
+    t5.histograms_csv(40).save(dir.join("fig8_colloc_hist.csv"))?;
+    println!("wrote {}/table{{4,5}}_*.csv and fig{{6,8}}_*_hist.csv", dir.display());
+    println!("\n[bench] 10k-request simulation wall time: disagg {dt4:.3}s, colloc {dt5:.3}s");
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Minimal CLI argument parsing (the offline registry has no `clap`):
+//! `--key value`, `--key=value` and bare flags, plus typed accessors with
+//! defaults and error messages.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand etc.).
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated u32 list, e.g. `--tp 1,2,4`.
+    pub fn u32_list_or(&self, name: &str, default: &[u32]) -> Result<Vec<u32>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse().map_err(|_| {
+                        Error::config(format!("--{name} expects ints, got '{x}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Rate range "lo:hi:step" or comma list.
+    pub fn rates_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => {
+                if let Some((lo, rest)) = v.split_once(':') {
+                    let (hi, step) = rest
+                        .split_once(':')
+                        .ok_or_else(|| Error::config("rate range is lo:hi:step"))?;
+                    let (lo, hi, step): (f64, f64, f64) = (
+                        lo.parse().map_err(|_| Error::config("bad rate lo"))?,
+                        hi.parse().map_err(|_| Error::config("bad rate hi"))?,
+                        step.parse().map_err(|_| Error::config("bad rate step"))?,
+                    );
+                    if step <= 0.0 || hi < lo {
+                        return Err(Error::config("rate range must have step>0, hi>=lo"));
+                    }
+                    let mut out = Vec::new();
+                    let mut r = lo;
+                    while r <= hi + 1e-12 {
+                        out.push(r);
+                        r += step;
+                    }
+                    Ok(out)
+                } else {
+                    v.split(',')
+                        .map(|x| {
+                            x.trim()
+                                .parse()
+                                .map_err(|_| Error::config(format!("bad rate '{x}'")))
+                        })
+                        .collect()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("simulate --rate 3.5 --strategy=3p2d-tp4 --hist");
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 3.5);
+        assert_eq!(a.str_or("strategy", ""), "3p2d-tp4");
+        assert!(a.flag("hist"));
+        assert!(!a.flag("grid"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--rate abc");
+        assert!(a.f64_or("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn lists_and_ranges() {
+        let a = parse("--tp 1,2,4 --rates 0.5:2:0.5");
+        assert_eq!(a.u32_list_or("tp", &[]).unwrap(), vec![1, 2, 4]);
+        let r = a.rates_or("rates", &[]).unwrap();
+        assert_eq!(r.len(), 4);
+        assert!((r[3] - 2.0).abs() < 1e-12);
+        let b = parse("--rates 1,2.5,7");
+        assert_eq!(b.rates_or("rates", &[]).unwrap(), vec![1.0, 2.5, 7.0]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--x -3" — the "-3" does not start with "--" so it binds as value.
+        let a = parse("--x -3");
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), -3.0);
+    }
+}

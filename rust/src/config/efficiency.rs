@@ -1,0 +1,137 @@
+//! Efficiency parameters of the *adapted* roofline model (§2.5): model FLOP
+//! utilization (MFU, `e_c`), model bandwidth utilization (MBU, `e_m`) and
+//! communication efficiency (`e_+`) — tuned separately for the prefill and
+//! decode phases (§4.1).
+
+use crate::error::Error;
+use crate::util::json::Json;
+
+/// Efficiencies of one phase; each in (0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Efficiency {
+    /// MFU `e_c` — limits the roofline's flat region (eq. (3)).
+    pub ec: f64,
+    /// MBU `e_m` — adjusts the slope of the memory-bound region.
+    pub em: f64,
+    /// Communication efficiency `e_+` of eq. (8).
+    pub eplus: f64,
+}
+
+impl Efficiency {
+    pub fn validate(&self) -> Result<(), Error> {
+        for (label, v) in [("ec", self.ec), ("em", self.em), ("eplus", self.eplus)] {
+            if !(v > 0.0 && v <= 1.0) {
+                return Err(Error::config(format!(
+                    "efficiency '{label}' must be in (0,1], got {v}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The per-phase pair, with the paper's empirically derived defaults (§4.1):
+/// prefill e_c=0.65, e_m=0.6, e_+=0.6; decode e_c=0.65, e_m=0.3, e_+=0.3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EfficiencyParams {
+    pub prefill: Efficiency,
+    pub decode: Efficiency,
+}
+
+impl Default for EfficiencyParams {
+    fn default() -> Self {
+        EfficiencyParams {
+            prefill: Efficiency { ec: 0.65, em: 0.6, eplus: 0.6 },
+            decode: Efficiency { ec: 0.65, em: 0.3, eplus: 0.3 },
+        }
+    }
+}
+
+impl EfficiencyParams {
+    pub fn paper_defaults() -> Self {
+        Self::default()
+    }
+
+    pub fn for_phase(&self, phase: crate::config::Phase) -> Efficiency {
+        match phase {
+            crate::config::Phase::Prefill => self.prefill,
+            crate::config::Phase::Decode => self.decode,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        self.prefill.validate()?;
+        self.decode.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let one = |e: &Efficiency| {
+            Json::obj(vec![
+                ("ec", Json::Num(e.ec)),
+                ("em", Json::Num(e.em)),
+                ("eplus", Json::Num(e.eplus)),
+            ])
+        };
+        Json::obj(vec![
+            ("prefill", one(&self.prefill)),
+            ("decode", one(&self.decode)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EfficiencyParams, Error> {
+        let one = |j: Option<&Json>, d: Efficiency| -> Efficiency {
+            match j {
+                Some(j) => Efficiency {
+                    ec: j.f64_or("ec", d.ec),
+                    em: j.f64_or("em", d.em),
+                    eplus: j.f64_or("eplus", d.eplus),
+                },
+                None => d,
+            }
+        };
+        let dflt = EfficiencyParams::default();
+        let e = EfficiencyParams {
+            prefill: one(j.get("prefill"), dflt.prefill),
+            decode: one(j.get("decode"), dflt.decode),
+        };
+        e.validate()?;
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_4_1() {
+        let e = EfficiencyParams::paper_defaults();
+        assert_eq!(e.prefill.ec, 0.65);
+        assert_eq!(e.prefill.em, 0.6);
+        assert_eq!(e.prefill.eplus, 0.6);
+        assert_eq!(e.decode.ec, 0.65);
+        assert_eq!(e.decode.em, 0.3);
+        assert_eq!(e.decode.eplus, 0.3);
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut e = EfficiencyParams::default();
+        e.prefill.ec = 0.0;
+        assert!(e.validate().is_err());
+        let mut e2 = EfficiencyParams::default();
+        e2.decode.em = 1.5;
+        assert!(e2.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_partial() {
+        let e = EfficiencyParams::default();
+        assert_eq!(EfficiencyParams::from_json(&e.to_json()).unwrap(), e);
+        // Partial JSON falls back to defaults.
+        let j = Json::parse(r#"{"decode": {"em": 0.25}}"#).unwrap();
+        let p = EfficiencyParams::from_json(&j).unwrap();
+        assert_eq!(p.decode.em, 0.25);
+        assert_eq!(p.prefill.em, 0.6);
+    }
+}

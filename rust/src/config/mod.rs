@@ -1,0 +1,139 @@
+//! Configuration system: model dims, hardware specs, efficiency parameters,
+//! operating scenarios, SLOs, and serving strategies — the "fundamental
+//! inputs" of Figure 4 — with presets matching §4.1 and JSON file loading.
+
+pub mod efficiency;
+pub mod hardware;
+pub mod model;
+pub mod scenario;
+pub mod slo;
+pub mod strategy;
+
+pub use efficiency::{Efficiency, EfficiencyParams};
+pub use hardware::{DispatchTimes, HardwareConfig};
+pub use model::ModelConfig;
+pub use scenario::{LengthDist, Scenario};
+pub use slo::Slo;
+pub use strategy::{Architecture, Strategy, StrategySpace};
+
+use crate::error::Error;
+use crate::util::json::Json;
+
+/// The two inference phases (§2.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// Everything the Estimator needs to price an operator: model + hardware +
+/// efficiency. This is the "fundamental inputs" bundle at the bottom of
+/// Figure 4, shared by all three layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    pub model: ModelConfig,
+    pub hardware: HardwareConfig,
+    pub eff: EfficiencyParams,
+}
+
+impl Platform {
+    /// The paper's evaluation platform: CodeLlama-34b on Ascend 910B3 with
+    /// the §4.1 efficiency defaults.
+    pub fn paper_testbed() -> Platform {
+        Platform {
+            model: ModelConfig::codellama_34b(),
+            hardware: HardwareConfig::ascend_910b3(),
+            eff: EfficiencyParams::paper_defaults(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        self.model.validate()?;
+        self.hardware.validate()?;
+        self.eff.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("hardware", self.hardware.to_json()),
+            ("efficiency", self.eff.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Platform, Error> {
+        let model = match j.get("model") {
+            Some(Json::Str(name)) => ModelConfig::preset(name)?,
+            Some(m) => ModelConfig::from_json(m)?,
+            None => ModelConfig::codellama_34b(),
+        };
+        let hardware = match j.get("hardware") {
+            Some(Json::Str(name)) => HardwareConfig::preset(name)?,
+            Some(h) => HardwareConfig::from_json(h)?,
+            None => HardwareConfig::ascend_910b3(),
+        };
+        let eff = match j.get("efficiency") {
+            Some(e) => EfficiencyParams::from_json(e)?,
+            None => EfficiencyParams::paper_defaults(),
+        };
+        let p = Platform { model, hardware, eff };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Load from a JSON file. String values for "model"/"hardware" are
+    /// resolved against the preset registries.
+    pub fn from_file(path: &str) -> Result<Platform, Error> {
+        let body = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("cannot read '{path}': {e}")))?;
+        let j = Json::parse(&body).map_err(|e| Error::config(format!("{path}: {e}")))?;
+        Platform::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_is_valid() {
+        let p = Platform::paper_testbed();
+        p.validate().unwrap();
+        assert_eq!(p.model.layers, 48);
+        assert_eq!(p.hardware.sc_flops, 313e12);
+    }
+
+    #[test]
+    fn from_json_with_preset_names() {
+        let j = Json::parse(r#"{"model": "llama-2-7b", "hardware": "a100"}"#).unwrap();
+        let p = Platform::from_json(&j).unwrap();
+        assert_eq!(p.model.name, "Llama-2-7b");
+        assert_eq!(p.hardware.name, "A100-SXM4-80GB");
+        assert_eq!(p.eff, EfficiencyParams::paper_defaults());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = Platform::paper_testbed();
+        assert_eq!(Platform::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let p = Platform::paper_testbed();
+        let path = std::env::temp_dir().join("bestserve_platform_test.json");
+        std::fs::write(&path, p.to_json().pretty()).unwrap();
+        let loaded = Platform::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, p);
+        std::fs::remove_file(&path).ok();
+    }
+}

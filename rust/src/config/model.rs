@@ -1,0 +1,274 @@
+//! Model dimension parameters for LLaMa-family decoder-only transformers
+//! (§2.1, Appendix A of the paper) plus the preset registry.
+
+use crate::error::Error;
+use crate::util::json::Json;
+
+/// Dimensional parameters of a LLaMa-family model — exactly the symbols the
+/// paper's Appendix A reserves: `h`, `h_0`, `h_q`, `h_kv`, layer count `ℓ`,
+/// and the storage width of a parameter/activation element.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Hidden size `h`.
+    pub hidden: u64,
+    /// MLP intermediate size `h_0`.
+    pub intermediate: u64,
+    /// Number of query heads `h_q`.
+    pub q_heads: u64,
+    /// Number of key/value heads `h_kv` (< `q_heads` for GQA models).
+    pub kv_heads: u64,
+    /// Number of transformer blocks `ℓ`.
+    pub layers: u64,
+    /// Bytes per stored element (2 for FP16/BF16 — the paper assumes FP16).
+    pub dtype_bytes: u64,
+}
+
+impl ModelConfig {
+    /// Is grouped-query attention in play (the `Is_GQA` flag of eq. (12))?
+    pub fn is_gqa(&self) -> bool {
+        self.kv_heads < self.q_heads
+    }
+
+    /// Head dimension `h / h_q`.
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.q_heads
+    }
+
+    /// KV-cache bytes for ONE token across all layers:
+    /// 2 (K and V) · ℓ · h · (h_kv/h_q) · dtype_bytes.
+    /// Used for the disaggregation KV-transfer cost and the testbed's paged
+    /// block accounting.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.layers * self.hidden * self.kv_heads / self.q_heads * self.dtype_bytes
+    }
+
+    /// Approximate parameter count (embedding excluded, matching the
+    /// estimator's scope of transformer blocks only).
+    pub fn block_params(&self) -> u64 {
+        let h = self.hidden;
+        let h0 = self.intermediate;
+        let kvs = h * h * self.kv_heads / self.q_heads;
+        // q, k, v, o projections + 3 MLP mats + 2 RMSNorm gains
+        self.layers * (2 * h * h + 2 * kvs + 3 * h * h0 + 2 * h)
+    }
+
+    /// Model weight bytes (per tensor-parallel rank when divided by `t`).
+    pub fn weight_bytes(&self) -> u64 {
+        self.block_params() * self.dtype_bytes
+    }
+
+    // ---- presets ----------------------------------------------------------
+
+    /// The paper's evaluation model (§4.1): CodeLlama-34b-Instruct-hf.
+    pub fn codellama_34b() -> ModelConfig {
+        ModelConfig {
+            name: "CodeLlama-34b-Instruct-hf".into(),
+            hidden: 8192,
+            intermediate: 22016,
+            q_heads: 64,
+            kv_heads: 8,
+            layers: 48,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama2_7b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama-2-7b".into(),
+            hidden: 4096,
+            intermediate: 11008,
+            q_heads: 32,
+            kv_heads: 32,
+            layers: 32,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama2_13b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama-2-13b".into(),
+            hidden: 5120,
+            intermediate: 13824,
+            q_heads: 40,
+            kv_heads: 40,
+            layers: 40,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama2_70b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama-2-70b".into(),
+            hidden: 8192,
+            intermediate: 28672,
+            q_heads: 64,
+            kv_heads: 8,
+            layers: 80,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama3_8b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama-3-8b".into(),
+            hidden: 4096,
+            intermediate: 14336,
+            q_heads: 32,
+            kv_heads: 8,
+            layers: 32,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The small profiling model the paper suggests for measuring dispatch
+    /// constants (§3.3.3).
+    pub fn llama32_1b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama-3.2-1b".into(),
+            hidden: 2048,
+            intermediate: 8192,
+            q_heads: 32,
+            kv_heads: 8,
+            layers: 16,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn presets() -> Vec<ModelConfig> {
+        vec![
+            Self::codellama_34b(),
+            Self::llama2_7b(),
+            Self::llama2_13b(),
+            Self::llama2_70b(),
+            Self::llama3_8b(),
+            Self::llama32_1b(),
+        ]
+    }
+
+    /// Look a preset up by (case-insensitive, fuzzy) name.
+    pub fn preset(name: &str) -> Result<ModelConfig, Error> {
+        let needle = name.to_lowercase().replace(['-', '_', '.'], "");
+        Self::presets()
+            .into_iter()
+            .find(|m| {
+                m.name
+                    .to_lowercase()
+                    .replace(['-', '_', '.'], "")
+                    .contains(&needle)
+            })
+            .ok_or_else(|| Error::config(format!("unknown model preset '{name}'")))
+    }
+
+    // ---- (de)serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("hidden", Json::Num(self.hidden as f64)),
+            ("intermediate", Json::Num(self.intermediate as f64)),
+            ("q_heads", Json::Num(self.q_heads as f64)),
+            ("kv_heads", Json::Num(self.kv_heads as f64)),
+            ("layers", Json::Num(self.layers as f64)),
+            ("dtype_bytes", Json::Num(self.dtype_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig, Error> {
+        let need = |k: &str| -> Result<u64, Error> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| Error::config(format!("model config missing '{k}'")))
+        };
+        let cfg = ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            hidden: need("hidden")?,
+            intermediate: need("intermediate")?,
+            q_heads: need("q_heads")?,
+            kv_heads: need("kv_heads")?,
+            layers: need("layers")?,
+            dtype_bytes: need("dtype_bytes").unwrap_or(2),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.hidden == 0 || self.intermediate == 0 || self.layers == 0 {
+            return Err(Error::config("model dims must be positive"));
+        }
+        if self.q_heads == 0 || self.kv_heads == 0 {
+            return Err(Error::config("head counts must be positive"));
+        }
+        if self.hidden % self.q_heads != 0 {
+            return Err(Error::config("hidden must be divisible by q_heads"));
+        }
+        if self.q_heads % self.kv_heads != 0 {
+            return Err(Error::config("q_heads must be divisible by kv_heads"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codellama_dims_match_paper() {
+        let m = ModelConfig::codellama_34b();
+        assert_eq!(m.hidden, 8192);
+        assert_eq!(m.layers, 48); // ℓ = 48 in Table 3
+        assert!(m.is_gqa());
+        assert_eq!(m.head_dim(), 128);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_gqa() {
+        let m = ModelConfig::codellama_34b();
+        // 2 * 48 * 8192 * (8/64) * 2 = 196608 bytes
+        assert_eq!(m.kv_bytes_per_token(), 196_608);
+    }
+
+    #[test]
+    fn param_count_orders_of_magnitude() {
+        // CodeLlama-34b has ~34e9 params; blocks-only should be within 15%.
+        let m = ModelConfig::codellama_34b();
+        let p = m.block_params() as f64;
+        assert!(p > 28e9 && p < 36e9, "params {p}");
+        let m7 = ModelConfig::llama2_7b();
+        let p7 = m7.block_params() as f64;
+        assert!(p7 > 5.5e9 && p7 < 7.5e9, "params {p7}");
+    }
+
+    #[test]
+    fn preset_lookup_fuzzy() {
+        assert!(ModelConfig::preset("codellama-34b").is_ok());
+        assert!(ModelConfig::preset("CODELLAMA_34B").is_ok());
+        assert!(ModelConfig::preset("llama-2-70b").is_ok());
+        assert!(ModelConfig::preset("no-such-model").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelConfig::llama3_8b();
+        let j = m.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn validation_rejects_bad_dims() {
+        let mut m = ModelConfig::llama2_7b();
+        m.q_heads = 30; // hidden 4096 not divisible
+        assert!(m.validate().is_err());
+        let mut m2 = ModelConfig::llama3_8b();
+        m2.kv_heads = 7; // 32 % 7 != 0
+        assert!(m2.validate().is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Operating scenarios (§4.1): the request pattern a deployment must serve —
+//! input sequence length `s`, generation length `s_+`, and how many requests
+//! to simulate. The paper evaluates four fixed-length scenarios OP1–OP4; as
+//! an extension we also support stochastic length distributions (the paper
+//! notes BestServe is "designed to handle variable-length requests").
+
+use crate::error::Error;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Distribution of a request length dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    Fixed(u64),
+    /// Uniform over [lo, hi] inclusive.
+    Uniform { lo: u64, hi: u64 },
+    /// Lognormal (mu/sigma of underlying normal), clamped to [1, cap].
+    LogNormal { mu: f64, sigma: f64, cap: u64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            LengthDist::Fixed(v) => v,
+            LengthDist::Uniform { lo, hi } => lo + rng.below(hi - lo + 1),
+            LengthDist::LogNormal { mu, sigma, cap } => {
+                (rng.lognormal(mu, sigma).round() as u64).clamp(1, cap)
+            }
+        }
+    }
+
+    /// Mean of the distribution — used by the optimizer to size the grid and
+    /// the upper bisection bound.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(v) => v as f64,
+            LengthDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            LengthDist::LogNormal { mu, sigma, cap } => {
+                (mu + sigma * sigma / 2.0).exp().min(cap as f64)
+            }
+        }
+    }
+
+    /// An upper bound used for grid sizing.
+    pub fn upper(&self) -> u64 {
+        match *self {
+            LengthDist::Fixed(v) => v,
+            LengthDist::Uniform { hi, .. } => hi,
+            LengthDist::LogNormal { cap, .. } => cap,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            LengthDist::Fixed(v) => Json::obj(vec![
+                ("kind", Json::Str("fixed".into())),
+                ("value", Json::Num(v as f64)),
+            ]),
+            LengthDist::Uniform { lo, hi } => Json::obj(vec![
+                ("kind", Json::Str("uniform".into())),
+                ("lo", Json::Num(lo as f64)),
+                ("hi", Json::Num(hi as f64)),
+            ]),
+            LengthDist::LogNormal { mu, sigma, cap } => Json::obj(vec![
+                ("kind", Json::Str("lognormal".into())),
+                ("mu", Json::Num(mu)),
+                ("sigma", Json::Num(sigma)),
+                ("cap", Json::Num(cap as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<LengthDist, Error> {
+        // A bare number is shorthand for Fixed.
+        if let Some(v) = j.as_f64() {
+            return Ok(LengthDist::Fixed(v as u64));
+        }
+        match j.get("kind").and_then(Json::as_str) {
+            Some("fixed") => Ok(LengthDist::Fixed(j.f64_or("value", 0.0) as u64)),
+            Some("uniform") => Ok(LengthDist::Uniform {
+                lo: j.f64_or("lo", 1.0) as u64,
+                hi: j.f64_or("hi", 1.0) as u64,
+            }),
+            Some("lognormal") => Ok(LengthDist::LogNormal {
+                mu: j.f64_or("mu", 6.0),
+                sigma: j.f64_or("sigma", 0.5),
+                cap: j.f64_or("cap", 16384.0) as u64,
+            }),
+            _ => Err(Error::config("length dist needs kind fixed|uniform|lognormal")),
+        }
+    }
+}
+
+/// An operating scenario: the test ground of §3.5 / §4.1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Input (prompt) length distribution `s`.
+    pub input_len: LengthDist,
+    /// Generation length distribution `s_+`.
+    pub gen_len: LengthDist,
+    /// Number of requests to simulate per feasibility check.
+    pub n_requests: usize,
+}
+
+impl Scenario {
+    pub fn fixed(name: &str, s: u64, s_plus: u64, n_requests: usize) -> Scenario {
+        Scenario {
+            name: name.into(),
+            input_len: LengthDist::Fixed(s),
+            gen_len: LengthDist::Fixed(s_plus),
+            n_requests,
+        }
+    }
+
+    /// OP1 (§4.1): s=8192, s+=512 — long-context summarization-like.
+    pub fn op1() -> Scenario {
+        Scenario::fixed("OP1", 8192, 512, 2000)
+    }
+
+    /// OP2: s=2048, s+=64 — classification/short-answer-like.
+    pub fn op2() -> Scenario {
+        Scenario::fixed("OP2", 2048, 64, 2000)
+    }
+
+    /// OP3: s=1024, s+=64.
+    pub fn op3() -> Scenario {
+        Scenario::fixed("OP3", 1024, 64, 2000)
+    }
+
+    /// OP4: s=256, s+=2048 — generation-heavy; the scenario where the paper's
+    /// pseudo-batch heuristic is least accurate (30.1% error).
+    pub fn op4() -> Scenario {
+        Scenario::fixed("OP4", 256, 2048, 2000)
+    }
+
+    pub fn all_ops() -> Vec<Scenario> {
+        vec![Self::op1(), Self::op2(), Self::op3(), Self::op4()]
+    }
+
+    pub fn preset(name: &str) -> Result<Scenario, Error> {
+        match name.to_uppercase().as_str() {
+            "OP1" => Ok(Self::op1()),
+            "OP2" => Ok(Self::op2()),
+            "OP3" => Ok(Self::op3()),
+            "OP4" => Ok(Self::op4()),
+            _ => Err(Error::config(format!("unknown scenario preset '{name}'"))),
+        }
+    }
+
+    /// Mean lengths, for grid sizing / T_min estimates.
+    pub fn mean_input(&self) -> f64 {
+        self.input_len.mean()
+    }
+
+    pub fn mean_gen(&self) -> f64 {
+        self.gen_len.mean()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("input_len", self.input_len.to_json()),
+            ("gen_len", self.gen_len.to_json()),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario, Error> {
+        let input_len = LengthDist::from_json(
+            j.get("input_len")
+                .ok_or_else(|| Error::config("scenario missing 'input_len'"))?,
+        )?;
+        let gen_len = LengthDist::from_json(
+            j.get("gen_len")
+                .ok_or_else(|| Error::config("scenario missing 'gen_len'"))?,
+        )?;
+        Ok(Scenario {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            input_len,
+            gen_len,
+            n_requests: j.f64_or("n_requests", 2000.0) as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_presets_match_paper() {
+        assert_eq!(Scenario::op1().input_len, LengthDist::Fixed(8192));
+        assert_eq!(Scenario::op1().gen_len, LengthDist::Fixed(512));
+        assert_eq!(Scenario::op2().input_len, LengthDist::Fixed(2048));
+        assert_eq!(Scenario::op2().gen_len, LengthDist::Fixed(64));
+        assert_eq!(Scenario::op3().input_len, LengthDist::Fixed(1024));
+        assert_eq!(Scenario::op4().gen_len, LengthDist::Fixed(2048));
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(Scenario::preset("op2").is_ok());
+        assert!(Scenario::preset("OP4").is_ok());
+        assert!(Scenario::preset("OP9").is_err());
+    }
+
+    #[test]
+    fn sampling_respects_bounds() {
+        let mut rng = Rng::new(5);
+        let u = LengthDist::Uniform { lo: 10, hi: 20 };
+        for _ in 0..1000 {
+            let v = u.sample(&mut rng);
+            assert!((10..=20).contains(&v));
+        }
+        let ln = LengthDist::LogNormal { mu: 5.0, sigma: 1.0, cap: 100 };
+        for _ in 0..1000 {
+            let v = ln.sample(&mut rng);
+            assert!((1..=100).contains(&v));
+        }
+    }
+
+    #[test]
+    fn means() {
+        assert_eq!(LengthDist::Fixed(7).mean(), 7.0);
+        assert_eq!(LengthDist::Uniform { lo: 0, hi: 10 }.mean(), 5.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Scenario {
+            name: "mix".into(),
+            input_len: LengthDist::LogNormal { mu: 6.0, sigma: 0.8, cap: 8192 },
+            gen_len: LengthDist::Uniform { lo: 32, hi: 256 },
+            n_requests: 500,
+        };
+        assert_eq!(Scenario::from_json(&s.to_json()).unwrap(), s);
+        // Bare-number shorthand.
+        let j = Json::parse(r#"{"input_len": 2048, "gen_len": 64}"#).unwrap();
+        let sc = Scenario::from_json(&j).unwrap();
+        assert_eq!(sc.input_len, LengthDist::Fixed(2048));
+    }
+}

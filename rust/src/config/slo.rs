@@ -1,0 +1,118 @@
+//! Service level objectives (§2.3): TTFT/TPOT thresholds, the attainment
+//! percentile, and the feasibility relaxation factor τ of Algorithm 9.
+
+use crate::error::Error;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Time-to-first-token threshold in seconds.
+    pub ttft: f64,
+    /// Time-per-output-token threshold in seconds.
+    pub tpot: f64,
+    /// Attainment percentile (the paper uses P90).
+    pub percentile: f64,
+    /// Relaxation factor τ of Algorithm 9 (paper: 0.1) — absorbs the ±5%
+    /// stochastic oscillation of simulated P90s (Figure 10).
+    pub relaxation: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        // §2.3's typical SLO: TTFT 1500 ms, TPOT 70 ms, P90 attainment.
+        Slo { ttft: 1.5, tpot: 0.070, percentile: 90.0, relaxation: 0.1 }
+    }
+}
+
+impl Slo {
+    pub fn paper_default() -> Slo {
+        Slo::default()
+    }
+
+    /// Is a simulated (ttft_pXX, tpot_pXX) pair feasible under the relaxed
+    /// check of Algorithm 9: pXX ≤ (1+τ)·goal?
+    pub fn feasible(&self, ttft_pxx: f64, tpot_pxx: f64) -> bool {
+        ttft_pxx <= (1.0 + self.relaxation) * self.ttft
+            && tpot_pxx <= (1.0 + self.relaxation) * self.tpot
+    }
+
+    /// Strict check (τ=0) — used by ablations (DESIGN.md notes the paper's
+    /// discussion of why strictness underestimates goodput).
+    pub fn feasible_strict(&self, ttft_pxx: f64, tpot_pxx: f64) -> bool {
+        ttft_pxx <= self.ttft && tpot_pxx <= self.tpot
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        if !(self.ttft > 0.0 && self.tpot > 0.0) {
+            return Err(Error::config("SLO thresholds must be positive"));
+        }
+        if !(0.0 < self.percentile && self.percentile < 100.0) {
+            return Err(Error::config("SLO percentile must be in (0,100)"));
+        }
+        if self.relaxation < 0.0 {
+            return Err(Error::config("SLO relaxation must be >= 0"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", Json::Num(self.ttft)),
+            ("tpot", Json::Num(self.tpot)),
+            ("percentile", Json::Num(self.percentile)),
+            ("relaxation", Json::Num(self.relaxation)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Slo, Error> {
+        let d = Slo::default();
+        let s = Slo {
+            ttft: j.f64_or("ttft", d.ttft),
+            tpot: j.f64_or("tpot", d.tpot),
+            percentile: j.f64_or("percentile", d.percentile),
+            relaxation: j.f64_or("relaxation", d.relaxation),
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let s = Slo::default();
+        assert_eq!(s.ttft, 1.5);
+        assert_eq!(s.tpot, 0.070);
+        assert_eq!(s.percentile, 90.0);
+        assert_eq!(s.relaxation, 0.1);
+    }
+
+    #[test]
+    fn relaxed_vs_strict() {
+        let s = Slo::default();
+        // 1.6 s TTFT: fails strict (1.5) but passes relaxed (1.65).
+        assert!(s.feasible(1.6, 0.05));
+        assert!(!s.feasible_strict(1.6, 0.05));
+        assert!(!s.feasible(1.7, 0.05));
+        assert!(!s.feasible(1.0, 0.08)); // TPOT violation
+    }
+
+    #[test]
+    fn validation() {
+        let mut s = Slo::default();
+        s.percentile = 100.0;
+        assert!(s.validate().is_err());
+        let mut s2 = Slo::default();
+        s2.tpot = -1.0;
+        assert!(s2.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Slo { ttft: 2.0, tpot: 0.05, percentile: 99.0, relaxation: 0.05 };
+        assert_eq!(Slo::from_json(&s.to_json()).unwrap(), s);
+    }
+}

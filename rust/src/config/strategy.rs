@@ -1,0 +1,302 @@
+//! Serving strategies (§2.4): collocation `xm` vs disaggregation `ypzd`
+//! notation, tensor-parallel sizes, batch limits, and the enumeration of the
+//! admissible strategy space the Optimizer searches (§3.5).
+
+use crate::error::Error;
+use crate::util::json::Json;
+use std::fmt;
+
+/// Architecture of a deployment, in the paper's notation:
+/// `Collocation { m }` is "xm"; `Disaggregation { p, d }` is "ypzd".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    Collocation { m: u32 },
+    Disaggregation { p: u32, d: u32 },
+}
+
+impl fmt::Display for Architecture {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Architecture::Collocation { m } => write!(f, "{m}m"),
+            Architecture::Disaggregation { p, d } => write!(f, "{p}p{d}d"),
+        }
+    }
+}
+
+impl Architecture {
+    /// Parse the paper's notation: "5m", "3p2d".
+    pub fn parse(s: &str) -> Result<Architecture, Error> {
+        let s = s.trim().to_lowercase();
+        let bad = || Error::config(format!("cannot parse architecture '{s}' (want e.g. '5m' or '3p2d')"));
+        if let Some(mstr) = s.strip_suffix('m') {
+            let m: u32 = mstr.parse().map_err(|_| bad())?;
+            if m == 0 {
+                return Err(bad());
+            }
+            return Ok(Architecture::Collocation { m });
+        }
+        if let Some(dstr) = s.strip_suffix('d') {
+            let mut parts = dstr.splitn(2, 'p');
+            let p: u32 = parts.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+            let d: u32 = parts.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+            if p == 0 || d == 0 {
+                return Err(bad());
+            }
+            return Ok(Architecture::Disaggregation { p, d });
+        }
+        Err(bad())
+    }
+
+    /// Total instance count.
+    pub fn instances(&self) -> u32 {
+        match *self {
+            Architecture::Collocation { m } => m,
+            Architecture::Disaggregation { p, d } => p + d,
+        }
+    }
+
+    pub fn is_disaggregated(&self) -> bool {
+        matches!(self, Architecture::Disaggregation { .. })
+    }
+}
+
+/// A complete serving strategy: architecture + tensor-parallel size +
+/// maximum batch sizes per phase (the Optimizer input list of §3.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Strategy {
+    pub arch: Architecture,
+    /// Tensor-parallel size `t` (cards per instance). The paper uses the
+    /// same `t` for prefill and decode instances.
+    pub tp: u32,
+    /// Maximum prefill batch size (Table 4a uses 4).
+    pub bmax_prefill: u32,
+    /// Maximum decode batch size / number of "boxes" (Table 4a uses 16).
+    pub bmax_decode: u32,
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}-tp{}", self.arch, self.tp)
+    }
+}
+
+impl Strategy {
+    pub fn collocation(m: u32, tp: u32) -> Strategy {
+        Strategy {
+            arch: Architecture::Collocation { m },
+            tp,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+        }
+    }
+
+    pub fn disaggregation(p: u32, d: u32, tp: u32) -> Strategy {
+        Strategy {
+            arch: Architecture::Disaggregation { p, d },
+            tp,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+        }
+    }
+
+    /// Parse "3p2d-tp4" / "5m-tp2" / bare "3p2d" (tp defaults to 1).
+    pub fn parse(s: &str) -> Result<Strategy, Error> {
+        let s = s.trim().to_lowercase();
+        let (arch_str, tp) = match s.split_once("-tp") {
+            Some((a, t)) => (
+                a.to_string(),
+                t.parse::<u32>()
+                    .map_err(|_| Error::config(format!("bad tp in '{s}'")))?,
+            ),
+            None => (s.clone(), 1),
+        };
+        let arch = Architecture::parse(&arch_str)?;
+        if tp == 0 {
+            return Err(Error::config("tp must be >= 1"));
+        }
+        Ok(Strategy {
+            arch,
+            tp,
+            ..Strategy::collocation(1, 1)
+        })
+    }
+
+    /// Total accelerator cards used — the denominator of normalized goodput
+    /// (§4.1 Metric).
+    pub fn total_cards(&self) -> u32 {
+        self.arch.instances() * self.tp
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.tp == 0 {
+            return Err(Error::config("tp must be >= 1"));
+        }
+        if self.bmax_prefill == 0 || self.bmax_decode == 0 {
+            return Err(Error::config("max batch sizes must be >= 1"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.to_string())),
+            ("tp", Json::Num(self.tp as f64)),
+            ("bmax_prefill", Json::Num(self.bmax_prefill as f64)),
+            ("bmax_decode", Json::Num(self.bmax_decode as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Strategy, Error> {
+        let arch = Architecture::parse(
+            j.get("arch")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::config("strategy missing 'arch'"))?,
+        )?;
+        let s = Strategy {
+            arch,
+            tp: j.f64_or("tp", 1.0) as u32,
+            bmax_prefill: j.f64_or("bmax_prefill", 4.0) as u32,
+            bmax_decode: j.f64_or("bmax_decode", 16.0) as u32,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+/// The search space the Optimizer enumerates (§3.5 inputs 3–5): a GPU/NPU
+/// budget, admissible tensor-parallel sizes, and fixed batch maxima.
+#[derive(Debug, Clone)]
+pub struct StrategySpace {
+    /// Maximum number of cards available in total.
+    pub max_cards: u32,
+    /// Admissible tensor-parallel sizes.
+    pub tp_choices: Vec<u32>,
+    pub bmax_prefill: u32,
+    pub bmax_decode: u32,
+    /// Whether to include collocation / disaggregation families.
+    pub include_collocation: bool,
+    pub include_disaggregation: bool,
+}
+
+impl Default for StrategySpace {
+    fn default() -> Self {
+        StrategySpace {
+            max_cards: 8,
+            tp_choices: vec![1, 2, 4, 8],
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            include_collocation: true,
+            include_disaggregation: true,
+        }
+    }
+}
+
+impl StrategySpace {
+    /// Enumerate every admissible strategy: all `m`·`tp` ≤ budget collocation
+    /// deployments and all `(p+d)`·`tp` ≤ budget disaggregation splits with
+    /// p, d ≥ 1 (§2.4's two comparison axes).
+    pub fn enumerate(&self) -> Vec<Strategy> {
+        let mut out = Vec::new();
+        for &tp in &self.tp_choices {
+            if tp == 0 || tp > self.max_cards {
+                continue;
+            }
+            let max_instances = self.max_cards / tp;
+            if self.include_collocation {
+                for m in 1..=max_instances {
+                    out.push(Strategy {
+                        arch: Architecture::Collocation { m },
+                        tp,
+                        bmax_prefill: self.bmax_prefill,
+                        bmax_decode: self.bmax_decode,
+                    });
+                }
+            }
+            if self.include_disaggregation {
+                for total in 2..=max_instances {
+                    for p in 1..total {
+                        let d = total - p;
+                        out.push(Strategy {
+                            arch: Architecture::Disaggregation { p, d },
+                            tp,
+                            bmax_prefill: self.bmax_prefill,
+                            bmax_decode: self.bmax_decode,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_notation() {
+        assert_eq!(
+            Architecture::parse("5m").unwrap(),
+            Architecture::Collocation { m: 5 }
+        );
+        assert_eq!(
+            Architecture::parse("3p2d").unwrap(),
+            Architecture::Disaggregation { p: 3, d: 2 }
+        );
+        assert_eq!(Architecture::parse("3p2d").unwrap().to_string(), "3p2d");
+        assert_eq!(Architecture::parse("1M").unwrap().to_string(), "1m");
+        for bad in ["", "m", "pd", "0m", "0p1d", "3p0d", "3x2y", "p2d"] {
+            assert!(Architecture::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_with_tp() {
+        let s = Strategy::parse("3p2d-tp4").unwrap();
+        assert_eq!(s.arch, Architecture::Disaggregation { p: 3, d: 2 });
+        assert_eq!(s.tp, 4);
+        assert_eq!(s.total_cards(), 20);
+        let c = Strategy::parse("2m").unwrap();
+        assert_eq!(c.tp, 1);
+        assert_eq!(c.total_cards(), 2);
+        assert!(Strategy::parse("2m-tp0").is_err());
+    }
+
+    #[test]
+    fn enumeration_respects_budget() {
+        let space = StrategySpace {
+            max_cards: 8,
+            tp_choices: vec![1, 2, 4, 8],
+            ..StrategySpace::default()
+        };
+        let all = space.enumerate();
+        assert!(!all.is_empty());
+        for s in &all {
+            assert!(s.total_cards() <= 8, "{s} uses {} cards", s.total_cards());
+            s.validate().unwrap();
+        }
+        // tp=8 admits exactly one deployment: 1m (no disagg possible at 8 cards).
+        let tp8: Vec<&Strategy> = all.iter().filter(|s| s.tp == 8).collect();
+        assert_eq!(tp8.len(), 1);
+        assert_eq!(tp8[0].arch, Architecture::Collocation { m: 1 });
+        // For tp=4, budget 8: colloc {1m, 2m} + disagg {1p1d} = 3.
+        let tp4 = all.iter().filter(|s| s.tp == 4).count();
+        assert_eq!(tp4, 3);
+    }
+
+    #[test]
+    fn enumeration_family_filters() {
+        let space = StrategySpace {
+            include_collocation: false,
+            ..StrategySpace::default()
+        };
+        assert!(space.enumerate().iter().all(|s| s.arch.is_disaggregated()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Strategy::disaggregation(2, 3, 4);
+        assert_eq!(Strategy::from_json(&s.to_json()).unwrap(), s);
+    }
+}

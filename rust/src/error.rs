@@ -1,0 +1,49 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid or inconsistent configuration.
+    Config(String),
+    /// PJRT / XLA runtime failures (artifact missing, compile error, ...).
+    Runtime(String),
+    /// Simulation-level failures (e.g. workload that can never be served).
+    Simulation(String),
+    Io(std::io::Error),
+}
+
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Error {
+        Error::Config(msg.into())
+    }
+
+    pub fn runtime(msg: impl Into<String>) -> Error {
+        Error::Runtime(msg.into())
+    }
+
+    pub fn simulation(msg: impl Into<String>) -> Error {
+        Error::Simulation(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Simulation(m) => write!(f, "simulation error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,14 @@
+//! The **Estimator** (§3.3) — bottommost layer of BestServe: operator-level
+//! latency prediction from an adapted roofline model (eqs. (3)–(5)), the
+//! LLaMa work/memory-traffic tables (Appendices A–B), CPU→accelerator
+//! dispatch dynamics (§3.3.3), TP communication (eq. (8)), and Algorithm 1
+//! with its functional-argument cache (§3.3.4).
+
+pub mod modules;
+pub mod oracle;
+pub mod roofline;
+pub mod workload;
+
+pub use modules::{block_breakdown, Module, ModuleBreakdown, BLOCK_SEQUENCE};
+pub use oracle::{AnalyticOracle, CacheStats, LatencyModel};
+pub use roofline::{achieved_performance, critical_intensity, op_time, ops_time, OpCost};

@@ -1,0 +1,237 @@
+//! Per-module latency composition: RMSNorm / Attention / MLP compute time,
+//! dispatch time, and tensor-parallel communication — the per-module columns
+//! of Table 3, feeding Algorithm 1's interleaving in [`super::oracle`].
+
+use crate::config::{Phase, Platform};
+
+use super::roofline::{ops_time, OpCost};
+use super::workload;
+
+/// The module sequence of one transformer block (Algorithm 1 line 5):
+/// RMSNorm → Attention → RMSNorm → MLP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Module {
+    RmsNorm,
+    Attention,
+    Mlp,
+}
+
+pub const BLOCK_SEQUENCE: [Module; 4] =
+    [Module::RmsNorm, Module::Attention, Module::RmsNorm, Module::Mlp];
+
+impl Module {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Module::RmsNorm => "RMSNorm",
+            Module::Attention => "Attention",
+            Module::Mlp => "MLP",
+        }
+    }
+
+    /// CPU→accelerator dispatch constant (§3.3.3), seconds.
+    pub fn dispatch_time(&self, platform: &Platform) -> f64 {
+        let d = &platform.hardware.dispatch;
+        match self {
+            Module::RmsNorm => d.rmsnorm,
+            Module::Attention => d.attention,
+            Module::Mlp => d.mlp,
+        }
+    }
+
+    /// Does this module end with a TP all-reduce (§3.3.2: "after each
+    /// attention and MLP module")?
+    pub fn requires_communication(&self) -> bool {
+        matches!(self, Module::Attention | Module::Mlp)
+    }
+
+    /// The module's op table. For decode, `s` is the context length.
+    pub fn ops(&self, platform: &Platform, phase: Phase, b: u32, s: u32, t: u32) -> Vec<OpCost> {
+        let m = &platform.model;
+        match (self, phase) {
+            (Module::RmsNorm, p) => workload::rmsnorm_ops(p, m, b, s),
+            (Module::Attention, Phase::Prefill) => workload::attention_prefill_ops(m, b, s, t),
+            (Module::Attention, Phase::Decode) => workload::attention_decode_ops(m, b, s, t),
+            (Module::Mlp, p) => workload::mlp_ops(p, m, b, s, t),
+        }
+    }
+
+    /// Roofline compute time of the module, plus the kappa-rated
+    /// non-compute contributions for decode attention (eq. (12)).
+    pub fn compute_time(&self, platform: &Platform, phase: Phase, b: u32, s: u32, t: u32) -> f64 {
+        let eff = platform.eff.for_phase(phase);
+        let mut time = ops_time(&self.ops(platform, phase, b, s, t), &platform.hardware, &eff);
+        if *self == Module::Attention && phase == Phase::Decode {
+            time += workload::attention_decode_kappa_time(
+                &platform.model,
+                &platform.hardware,
+                b,
+                s,
+                t,
+            );
+        }
+        time
+    }
+
+    /// TP synchronization time after this module (0 when it has none).
+    /// `tokens` is `s` in prefill and 1 in decode.
+    pub fn communication_time(
+        &self,
+        platform: &Platform,
+        phase: Phase,
+        b: u32,
+        tokens: u32,
+        t: u32,
+    ) -> f64 {
+        if !self.requires_communication() || t <= 1 {
+            return 0.0;
+        }
+        let eff = platform.eff.for_phase(phase);
+        workload::comm_time(
+            &platform.hardware,
+            eff.eplus,
+            b,
+            tokens,
+            platform.model.hidden,
+            t,
+            phase == Phase::Prefill,
+        )
+    }
+}
+
+/// One row of Table 3: a module's dispatch/compute/communicate triple, ms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleBreakdown {
+    pub module: &'static str,
+    pub dispatch_ms: f64,
+    pub compute_ms: f64,
+    pub communicate_ms: f64,
+}
+
+/// Produce the full Table-3-style per-module breakdown for one block.
+pub fn block_breakdown(
+    platform: &Platform,
+    phase: Phase,
+    b: u32,
+    s: u32,
+    t: u32,
+) -> Vec<ModuleBreakdown> {
+    let tokens = match phase {
+        Phase::Prefill => s,
+        Phase::Decode => 1,
+    };
+    BLOCK_SEQUENCE
+        .iter()
+        .map(|m| ModuleBreakdown {
+            module: m.name(),
+            dispatch_ms: m.dispatch_time(platform) * 1e3,
+            compute_ms: m.compute_time(platform, phase, b, s, t) * 1e3,
+            communicate_ms: m.communication_time(platform, phase, b, tokens, t) * 1e3,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    /// Table 3a: prefill per-module times for CodeLlama-34b on Ascend 910B3
+    /// at b=1, s=2048, t=4. The paper's exact tuned constants are not
+    /// published; we assert agreement within 15% of its printed values.
+    #[test]
+    fn table3a_prefill_breakdown() {
+        let p = platform();
+        let rows = block_breakdown(&p, Phase::Prefill, 1, 2048, 4);
+        let expect = [
+            ("RMSNorm", 0.024, 0.223, 0.000),
+            ("Attention", 0.190, 2.122, 0.100),
+            ("RMSNorm", 0.024, 0.223, 0.000),
+            ("MLP", 0.041, 2.809, 0.100),
+        ];
+        for (row, (name, disp, comp, comm)) in rows.iter().zip(expect.iter()) {
+            assert_eq!(row.module, *name);
+            assert!(
+                (row.dispatch_ms - disp).abs() < 1e-9,
+                "{name} dispatch {} vs {disp}",
+                row.dispatch_ms
+            );
+            assert!(
+                (row.compute_ms - comp).abs() / comp < 0.15,
+                "{name} compute {} vs {comp}",
+                row.compute_ms
+            );
+            if *comm > 0.0 {
+                assert!(
+                    (row.communicate_ms - comm).abs() / comm < 0.01,
+                    "{name} comm {} vs {comm}",
+                    row.communicate_ms
+                );
+            } else {
+                assert_eq!(row.communicate_ms, 0.0);
+            }
+        }
+    }
+
+    /// Table 3b: decode per-module times at context 2111 (= 2048 + 63).
+    #[test]
+    fn table3b_decode_breakdown() {
+        let p = platform();
+        let rows = block_breakdown(&p, Phase::Decode, 1, 2111, 4);
+        // RMSNorm compute rounds to 0.000 ms in the paper.
+        assert!(rows[0].compute_ms < 0.005, "{}", rows[0].compute_ms);
+        // Attention ≈ 0.176 ms ± 40% (kappa constants are tuned; see
+        // DESIGN.md §6 — the bulk is the Q/O projection weight reads).
+        assert!(
+            (rows[1].compute_ms - 0.176).abs() / 0.176 < 0.4,
+            "attention {}",
+            rows[1].compute_ms
+        );
+        // MLP ≈ 0.530 ms ± 15%.
+        assert!(
+            (rows[3].compute_ms - 0.530).abs() / 0.530 < 0.15,
+            "mlp {}",
+            rows[3].compute_ms
+        );
+        // Decode comm: bare bandwidth term, no floor (see comm_time docs).
+        assert!(rows[1].communicate_ms > 0.0 && rows[1].communicate_ms < 0.01);
+        assert!(rows[3].communicate_ms > 0.0 && rows[3].communicate_ms < 0.01);
+    }
+
+    #[test]
+    fn no_communication_without_tp() {
+        let p = platform();
+        for m in BLOCK_SEQUENCE {
+            assert_eq!(m.communication_time(&p, Phase::Prefill, 4, 2048, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn prefill_compute_scales_superlinearly_in_s() {
+        // Attention has an s^2 term: doubling s should more than double time.
+        let p = platform();
+        let t1 = Module::Attention.compute_time(&p, Phase::Prefill, 1, 2048, 1);
+        let t2 = Module::Attention.compute_time(&p, Phase::Prefill, 1, 4096, 1);
+        assert!(t2 > 2.0 * t1);
+    }
+
+    #[test]
+    fn decode_compute_grows_with_context() {
+        let p = platform();
+        let t1 = Module::Attention.compute_time(&p, Phase::Decode, 1, 1024, 1);
+        let t2 = Module::Attention.compute_time(&p, Phase::Decode, 1, 4096, 1);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn tp_reduces_compute_time() {
+        let p = platform();
+        for m in [Module::Attention, Module::Mlp] {
+            let t1 = m.compute_time(&p, Phase::Prefill, 2, 2048, 1);
+            let t4 = m.compute_time(&p, Phase::Prefill, 2, 2048, 4);
+            assert!(t4 < t1, "{}", m.name());
+        }
+    }
+}

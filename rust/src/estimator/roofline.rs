@@ -1,0 +1,141 @@
+//! The adapted roofline model (§2.5, eqs. (1)–(5)).
+//!
+//! Original roofline:  P̄ = min{S_c, I·S_m},  I = W/Q.
+//! Adapted roofline:   P  = min{e_c·S_c, I·e_m·S_m}
+//!                        = min{I, I*}·e_m·S_m,   I* = (e_c/e_m)·(S_c/S_m).
+//!
+//! Time for an operation is then W / P, which simplifies to the numerically
+//! friendlier max{W/(e_c·S_c), Q/(e_m·S_m)} — the compute-time vs
+//! memory-time max. Both forms are provided; they agree to rounding and the
+//! property test in `rust/tests/` exercises the identity.
+
+use crate::config::{Efficiency, HardwareConfig};
+
+/// An atomic operation's workload: FLOPs `W` and memory traffic bytes `Q`
+/// (the rows of Tables 1, 2, 6–13).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    pub name: &'static str,
+    /// Work in FLOPs. Zero for non-compute ops (cache update, repeat_kv,
+    /// upcast) whose time comes from a kappa byte-rate instead.
+    pub w: f64,
+    /// Memory traffic in bytes.
+    pub q: f64,
+}
+
+impl OpCost {
+    pub fn new(name: &'static str, w: f64, q: f64) -> OpCost {
+        OpCost { name, w, q }
+    }
+
+    /// Arithmetic intensity I = W/Q (eq. (1)).
+    pub fn intensity(&self) -> f64 {
+        self.w / self.q
+    }
+}
+
+/// Adapted critical intensity I* = (e_c/e_m)·(S_c/S_m) (eq. (4)).
+pub fn critical_intensity(hw: &HardwareConfig, eff: &Efficiency) -> f64 {
+    (eff.ec / eff.em) * (hw.sc_flops / hw.sm_bytes)
+}
+
+/// Achieved performance P = min{I, I*}·e_m·S_m (eq. (5)), FLOP/s.
+pub fn achieved_performance(op: &OpCost, hw: &HardwareConfig, eff: &Efficiency) -> f64 {
+    let i = op.intensity();
+    let i_star = critical_intensity(hw, eff);
+    i.min(i_star) * eff.em * hw.sm_bytes
+}
+
+/// Execution time of one op: W/P, computed in the max form
+/// max{W/(e_c·S_c), Q/(e_m·S_m)} (seconds). Handles W=0 (pure-traffic ops)
+/// gracefully: their time is Q over effective bandwidth.
+#[inline]
+pub fn op_time(op: &OpCost, hw: &HardwareConfig, eff: &Efficiency) -> f64 {
+    let t_compute = op.w / (eff.ec * hw.sc_flops);
+    let t_memory = op.q / (eff.em * hw.sm_bytes);
+    t_compute.max(t_memory)
+}
+
+/// Is this op compute-bound under the adapted roofline (I ≥ I*)?
+pub fn is_compute_bound(op: &OpCost, hw: &HardwareConfig, eff: &Efficiency) -> bool {
+    op.intensity() >= critical_intensity(hw, eff)
+}
+
+/// Total time of a sequence of ops — eq. (7)/(10)/(11): Σ W_i / P_i.
+pub fn ops_time(ops: &[OpCost], hw: &HardwareConfig, eff: &Efficiency) -> f64 {
+    ops.iter().map(|op| op_time(op, hw, eff)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EfficiencyParams;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::ascend_910b3()
+    }
+
+    fn eff() -> Efficiency {
+        EfficiencyParams::paper_defaults().prefill
+    }
+
+    #[test]
+    fn max_form_equals_roofline_form() {
+        // W/P with P = min{I,I*} e_m S_m must equal max{W/(ec Sc), Q/(em Sm)}.
+        let cases = [
+            OpCost::new("mem_bound", 1e9, 1e9),    // I = 1, way below I*
+            OpCost::new("comp_bound", 1e15, 1e9),  // I = 1e6, way above I*
+            OpCost::new("balanced", 2.11e11, 1e9), // near I*
+        ];
+        for op in cases {
+            let p = achieved_performance(&op, &hw(), &eff());
+            let t_roofline = op.w / p;
+            let t_max = op_time(&op, &hw(), &eff());
+            assert!(
+                ((t_roofline - t_max) / t_max).abs() < 1e-12,
+                "{}: {t_roofline} vs {t_max}",
+                op.name
+            );
+        }
+    }
+
+    #[test]
+    fn critical_intensity_formula() {
+        // I* = (0.65/0.6) * (313e12/1.6e12) ≈ 211.94 FLOP/B
+        let i_star = critical_intensity(&hw(), &eff());
+        assert!((i_star - (0.65 / 0.6) * (313.0 / 1.6)).abs() < 1e-9, "{i_star}");
+    }
+
+    #[test]
+    fn boundedness_classification() {
+        let low = OpCost::new("low", 1.0, 1.0); // I=1 << I*
+        let high = OpCost::new("high", 1e6, 1.0); // I=1e6 >> I*
+        assert!(!is_compute_bound(&low, &hw(), &eff()));
+        assert!(is_compute_bound(&high, &hw(), &eff()));
+    }
+
+    #[test]
+    fn zero_work_op_costs_bandwidth_time() {
+        let op = OpCost::new("update", 0.0, 0.96e12);
+        // Q/(em·Sm) = 0.96e12 / (0.6*1.6e12) = 1 s
+        assert!((op_time(&op, &hw(), &eff()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_scales_time() {
+        let op = OpCost::new("mem", 1e9, 1e12);
+        let fast = Efficiency { ec: 0.65, em: 0.6, eplus: 0.6 };
+        let slow = Efficiency { ec: 0.65, em: 0.3, eplus: 0.3 };
+        let t_fast = op_time(&op, &hw(), &fast);
+        let t_slow = op_time(&op, &hw(), &slow);
+        assert!((t_slow / t_fast - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ops_time_is_sum() {
+        let ops = [OpCost::new("a", 1e9, 1e9), OpCost::new("b", 2e9, 4e9)];
+        let total = ops_time(&ops, &hw(), &eff());
+        let sum: f64 = ops.iter().map(|o| op_time(o, &hw(), &eff())).sum();
+        assert_eq!(total, sum);
+    }
+}

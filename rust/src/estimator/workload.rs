@@ -1,0 +1,415 @@
+//! Work (FLOPs) and memory-traffic (bytes) tables for the modules of a
+//! LLaMa-family transformer block — Appendix A (Tables 1, 2, 6–9) and their
+//! tensor-parallel adjustments, Appendix B (Tables 10–13).
+//!
+//! Conventions (paper Appendix A symbol table):
+//!   b: batch size, s: sequence length (prefill) / context length (decode),
+//!   h: hidden size, h0: MLP intermediate size, hq: query heads,
+//!   hkv: key-value heads, t: tensor-parallel size.
+//!
+//! We implement the TP tables; t = 1 reduces them to the plain tables (the
+//! unit tests check this reduction symbolically for every row). Three rows
+//! in the paper carry visible typos, resolved as follows (DESIGN.md §6):
+//!   * Table 11 rows 2/10 omit `/t` present in every sibling row — we keep
+//!     the `/t` (the workload is sharded like its Table 10 counterparts).
+//!   * Table 11 rows 5/* halve Table 9's update/repeat_kv traffic; we take
+//!     Table 9's coefficients divided by `t` (base table is authoritative).
+//!   * Table 2 row 4 writes `6bsh0` for a decode op with no `s` dimension —
+//!     read as `6bh0` (decode MLP activations are [b, h0]).
+
+use crate::config::{HardwareConfig, ModelConfig, Phase};
+
+use super::roofline::OpCost;
+
+/// All model/shape scalars as f64, pre-divided where convenient.
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    b: f64,
+    s: f64,
+    h: f64,
+    h0: f64,
+    hq: f64,
+    hkv: f64,
+    t: f64,
+}
+
+fn dims(model: &ModelConfig, b: u32, s: u32, t: u32) -> Dims {
+    Dims {
+        b: b as f64,
+        s: s as f64,
+        h: model.hidden as f64,
+        h0: model.intermediate as f64,
+        hq: model.q_heads as f64,
+        hkv: model.kv_heads as f64,
+        t: t as f64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm (Tables 6 & 7; TP leaves them unchanged, Appendix B.1)
+// ---------------------------------------------------------------------------
+
+/// Prefill-phase RMSNorm ops (Table 6). `n = b·s` rows of width `h`;
+/// in decode (Table 7) `n = b`.
+fn rmsnorm_ops_n(n: f64, h: f64) -> Vec<OpCost> {
+    vec![
+        OpCost::new("POW", n * h, 4.0 * n * h),
+        OpCost::new("MEAN", n * h, 2.0 * n * h + 2.0 * n),
+        OpCost::new("ADD", n, 4.0 * n),
+        OpCost::new("RSQRT", n, 4.0 * n),
+        OpCost::new("MUL", n * h, 4.0 * n * h + 2.0 * n),
+        OpCost::new("MUL2", n * h, 4.0 * n * h + 2.0 * h),
+    ]
+}
+
+/// RMSNorm op table for either phase. TP does not shard normalization
+/// (Appendix B.1: same tables with or without TP).
+pub fn rmsnorm_ops(phase: Phase, model: &ModelConfig, b: u32, s: u32) -> Vec<OpCost> {
+    let d = dims(model, b, s, 1);
+    match phase {
+        Phase::Prefill => rmsnorm_ops_n(d.b * d.s, d.h),
+        Phase::Decode => rmsnorm_ops_n(d.b, d.h),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention — prefill (Table 10; t=1 gives Table 8)
+// ---------------------------------------------------------------------------
+
+/// Prefill-phase attention ops with TP (Table 10). `s` is the sequence
+/// length of the batch being prefetched.
+pub fn attention_prefill_ops(model: &ModelConfig, b: u32, s: u32, t: u32) -> Vec<OpCost> {
+    let Dims { b, s, h, hq, hkv, t, .. } = dims(model, b, s, t);
+    let kv = hkv / hq;
+    vec![
+        OpCost::new("Q_PROJ", 2.0 * b * s * h * h / t, 2.0 * (2.0 * b * s * h + h * h) / t),
+        OpCost::new(
+            "K_PROJ",
+            2.0 * b * s * h * h * kv / t,
+            2.0 * (b * s * h + h * h * kv / t + b * s * h * kv / t),
+        ),
+        OpCost::new(
+            "V_PROJ",
+            2.0 * b * s * h * h * kv / t,
+            2.0 * (b * s * h + h * h * kv / t + b * s * h * kv / t),
+        ),
+        // RoPE is replicated per-rank in the reference implementation the
+        // paper profiles (Tables 8 and 10 agree: no /t on W).
+        OpCost::new(
+            "RoPE",
+            3.5 * b * s * h * (1.0 + kv),
+            2.0 * b * s * h * (8.5 + 8.5 * kv + 2.0 / hq),
+        ),
+        OpCost::new(
+            "QK^T",
+            2.0 * b * s * s * h / t,
+            2.0 * (2.0 * b * s * h + b * hq * s * s) / t,
+        ),
+        OpCost::new("div", b * hq * s * s / t, 4.0 * b * hq * s * s / t),
+        OpCost::new(
+            "add",
+            b * hq * s * s / t,
+            2.0 * (2.0 * b * hq * s * s / t + b * s * s),
+        ),
+        OpCost::new("softmax", 3.0 * b * hq * s * s / t, 4.0 * b * hq * s * s / t),
+        OpCost::new(
+            "@V",
+            2.0 * b * s * s * h / t,
+            2.0 * (b * hq * s * s + 2.0 * b * s * h) / t,
+        ),
+        OpCost::new(
+            "O_PROJ",
+            2.0 * b * s * h * h / t,
+            2.0 * (b * s * h + b * s * h / t + h * h),
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Attention — decode (Table 11; t=1 gives Table 9)
+// ---------------------------------------------------------------------------
+
+/// Roofline-priced decode attention ops (Table 11). `ctx` is the KV context
+/// length (the paper's decode-phase `s`, e.g. 2048+63=2111 in Table 3b).
+pub fn attention_decode_ops(model: &ModelConfig, b: u32, ctx: u32, t: u32) -> Vec<OpCost> {
+    let Dims { b, s, h, hq, hkv, t, .. } = dims(model, b, ctx, t);
+    let kv = hkv / hq;
+    vec![
+        OpCost::new("Q_PROJ", 2.0 * b * h * h / t, 2.0 * (2.0 * b * h + h * h) / t),
+        OpCost::new(
+            "K_PROJ",
+            2.0 * b * h * h * kv / t,
+            2.0 * (b * h + h * h * kv / t + b * h * kv / t),
+        ),
+        OpCost::new(
+            "V_PROJ",
+            2.0 * b * h * h * kv / t,
+            2.0 * (b * h + h * h * kv / t + b * h * kv / t),
+        ),
+        OpCost::new(
+            "RoPE",
+            3.5 * b * h * (1.0 + kv),
+            2.0 * b * h * (8.5 + 8.5 * kv + 2.0 / hq),
+        ),
+        OpCost::new("QK^T", 2.0 * b * s * h / t, 2.0 * b * (h + h * s + hq * s) / t),
+        OpCost::new("div", b * hq * s / t, 4.0 * b * hq * s / t),
+        OpCost::new("add", b * hq * s / t, 2.0 * (2.0 * b * hq * s / t + b * s)),
+        OpCost::new("softmax", 3.0 * b * hq * s / t, 4.0 * b * hq * s / t),
+        OpCost::new("@V", 2.0 * b * s * h / t, 2.0 * b * (h + h * s + hq * s) / t),
+        OpCost::new("O_PROJ", 2.0 * b * h * h / t, 2.0 * (b * h + h * h / t + b * h / t)),
+    ]
+}
+
+/// The three non-compute decode-attention contributions priced by kappa
+/// rates instead of the roofline (eq. (12)): KV-cache update, repeat_kv
+/// (GQA only), FP32 upcast. Returns seconds.
+pub fn attention_decode_kappa_time(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    b: u32,
+    ctx: u32,
+    t: u32,
+) -> f64 {
+    let Dims { b, s, h, hq, hkv, t, .. } = dims(model, b, ctx, t);
+    let kv = hkv / hq;
+    // Table 9 traffic, sharded by t (see module docs on the Table 11 typo).
+    let q_update = 4.0 * b * s * h * kv / t;
+    let q_repeat = 4.0 * b * s * h * (1.0 + kv) / t;
+    let q_upcast = 4.0 * b * hq * s / t;
+    let mut time = q_update / hw.kappa_update + q_upcast / hw.kappa_upcast;
+    if model.is_gqa() {
+        time += q_repeat / hw.kappa_kv;
+    }
+    time
+}
+
+// ---------------------------------------------------------------------------
+// MLP (Tables 12 & 13; t=1 gives Tables 1 & 2)
+// ---------------------------------------------------------------------------
+
+/// MLP ops with TP for either phase. In decode the token dimension is 1
+/// (Table 13); in prefill it is `s` (Table 12).
+pub fn mlp_ops(phase: Phase, model: &ModelConfig, b: u32, s: u32, t: u32) -> Vec<OpCost> {
+    let d = dims(model, b, s, t);
+    let n = match phase {
+        Phase::Prefill => d.b * d.s,
+        Phase::Decode => d.b,
+    };
+    let Dims { h, h0, t, .. } = d;
+    vec![
+        OpCost::new(
+            "GATE_PROJ",
+            2.0 * n * h * h0 / t,
+            2.0 * (n * (h + h0) + h * h0) / t,
+        ),
+        OpCost::new("SiLU", 5.0 * n * h0 / t, 4.0 * n * h0 / t),
+        OpCost::new(
+            "UP_PROJ",
+            2.0 * n * h * h0 / t,
+            2.0 * (n * (h + h0) + h * h0) / t,
+        ),
+        OpCost::new("mul", n * h0 / t, 6.0 * n * h0 / t),
+        OpCost::new(
+            "DOWN_PROJ",
+            2.0 * n * h * h0 / t,
+            2.0 * (n * (h + h0) + h * h0) / t,
+        ),
+        OpCost::new("add", n * h / t, 4.0 * n * h0 / t),
+    ]
+}
+
+/// Tensor-parallel synchronization cost after attention / MLP — eq. (8):
+/// `T_+ = (b·s·h/t) / (e_+·S_+)`. In decode the token dimension is 1. Note
+/// eq. (8) counts *elements*, not bytes — we follow the paper verbatim.
+///
+/// `apply_floor` charges the collective launch latency
+/// (`HardwareConfig::comm_latency_floor`) — Table 3a's prefill 0.100 ms
+/// entries pin it. It is charged in PREFILL only: the paper prints 0.100
+/// for decode too, but its own decode total (33.573 ms = ℓ·Σcompute)
+/// excludes it, and Table 4's feasible TPOT (44.8 ms < 70 ms SLO) is only
+/// reachable without it — decode collectives overlap the dispatch gaps the
+/// phase is bound by (DESIGN.md §6).
+pub fn comm_time(
+    hw: &HardwareConfig,
+    eplus: f64,
+    b: u32,
+    tokens: u32,
+    h: u64,
+    t: u32,
+    apply_floor: bool,
+) -> f64 {
+    let volume = b as f64 * tokens as f64 * h as f64 / t as f64;
+    let bw = volume / (eplus * hw.s_plus_bytes);
+    if apply_floor {
+        bw.max(hw.comm_latency_floor)
+    } else {
+        bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelConfig {
+        ModelConfig::codellama_34b()
+    }
+
+    /// Evaluate a table row by name.
+    fn op(ops: &[OpCost], name: &str) -> OpCost {
+        *ops.iter().find(|o| o.name == name).unwrap()
+    }
+
+    #[test]
+    fn table1_mlp_prefill_formulas_at_t1() {
+        // Table 1 with b=2, s=128, h=8192, h0=22016.
+        let m = model();
+        let (b, s) = (2u32, 128u32);
+        let ops = mlp_ops(Phase::Prefill, &m, b, s, 1);
+        let (bf, sf, h, h0) = (b as f64, s as f64, 8192.0, 22016.0);
+        assert_eq!(op(&ops, "GATE_PROJ").w, 2.0 * bf * sf * h * h0);
+        assert_eq!(op(&ops, "GATE_PROJ").q, 2.0 * (bf * sf * (h + h0) + h * h0));
+        assert_eq!(op(&ops, "SiLU").w, 5.0 * bf * sf * h0);
+        assert_eq!(op(&ops, "mul").q, 6.0 * bf * sf * h0);
+        assert_eq!(op(&ops, "add").w, bf * sf * h);
+        assert_eq!(op(&ops, "add").q, 4.0 * bf * sf * h0);
+        assert_eq!(ops.len(), 6);
+    }
+
+    #[test]
+    fn table2_mlp_decode_is_prefill_with_s1() {
+        let m = model();
+        let dec = mlp_ops(Phase::Decode, &m, 3, 999, 4);
+        let pre = mlp_ops(Phase::Prefill, &m, 3, 1, 4);
+        for (a, b) in dec.iter().zip(pre.iter()) {
+            assert_eq!(a.w, b.w, "{}", a.name);
+            assert_eq!(a.q, b.q, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn table8_attention_prefill_t1_reduction() {
+        // Table 10 at t=1 must equal Table 8 row-for-row.
+        let m = model();
+        let (b, s) = (2u32, 64u32);
+        let ops = attention_prefill_ops(&m, b, s, 1);
+        let (bf, sf, h, hq) = (b as f64, s as f64, 8192.0, 64.0);
+        let kv = 8.0 / 64.0;
+        assert_eq!(op(&ops, "Q_PROJ").w, 2.0 * bf * sf * h * h);
+        assert_eq!(op(&ops, "Q_PROJ").q, 2.0 * (2.0 * bf * sf * h + h * h));
+        assert_eq!(op(&ops, "K_PROJ").w, 2.0 * bf * sf * h * h * kv);
+        assert_eq!(
+            op(&ops, "K_PROJ").q,
+            2.0 * (bf * sf * h + h * h * kv + bf * sf * h * kv)
+        );
+        assert_eq!(op(&ops, "QK^T").w, 2.0 * bf * sf * sf * h);
+        assert_eq!(op(&ops, "QK^T").q, 2.0 * (2.0 * bf * sf * h + bf * hq * sf * sf));
+        assert_eq!(op(&ops, "softmax").w, 3.0 * bf * hq * sf * sf);
+        assert_eq!(op(&ops, "O_PROJ").q, 2.0 * (2.0 * bf * sf * h + h * h));
+        assert_eq!(ops.len(), 10);
+    }
+
+    #[test]
+    fn table9_attention_decode_t1_reduction() {
+        let m = model();
+        let (b, ctx) = (4u32, 333u32);
+        let ops = attention_decode_ops(&m, b, ctx, 1);
+        let (bf, sf, h, hq) = (b as f64, ctx as f64, 8192.0, 64.0);
+        assert_eq!(op(&ops, "QK^T").w, 2.0 * bf * sf * h);
+        assert_eq!(op(&ops, "QK^T").q, 2.0 * bf * (h + h * sf + hq * sf));
+        assert_eq!(op(&ops, "add").q, 2.0 * (2.0 * bf * hq * sf + bf * sf));
+        assert_eq!(op(&ops, "O_PROJ").q, 2.0 * (2.0 * bf * h + h * h));
+    }
+
+    #[test]
+    fn tp_shards_projection_work_exactly() {
+        let m = model();
+        for t in [2u32, 4, 8] {
+            let base = attention_prefill_ops(&m, 1, 256, 1);
+            let tp = attention_prefill_ops(&m, 1, 256, t);
+            assert_eq!(op(&base, "Q_PROJ").w / t as f64, op(&tp, "Q_PROJ").w);
+            assert_eq!(op(&base, "QK^T").w / t as f64, op(&tp, "QK^T").w);
+            // RoPE is NOT sharded (Tables 8/10 agree).
+            assert_eq!(op(&base, "RoPE").w, op(&tp, "RoPE").w);
+            let mb = mlp_ops(Phase::Prefill, &m, 1, 256, 1);
+            let mt = mlp_ops(Phase::Prefill, &m, 1, 256, t);
+            assert_eq!(op(&mb, "GATE_PROJ").w / t as f64, op(&mt, "GATE_PROJ").w);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_decode_equals_prefill_s1() {
+        let m = model();
+        let a = rmsnorm_ops(Phase::Decode, &m, 5, 777);
+        let b = rmsnorm_ops(Phase::Prefill, &m, 5, 1);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.w, y.w);
+            assert_eq!(x.q, y.q);
+        }
+    }
+
+    #[test]
+    fn kappa_time_gqa_vs_mha() {
+        let hw = HardwareConfig::ascend_910b3();
+        let gqa = model(); // hkv < hq
+        let mut mha = model();
+        mha.kv_heads = mha.q_heads;
+        let t_gqa = attention_decode_kappa_time(&gqa, &hw, 1, 2048, 1);
+        let t_mha = attention_decode_kappa_time(&mha, &hw, 1, 2048, 1);
+        assert!(t_gqa > 0.0 && t_mha > 0.0);
+        // GQA pays repeat_kv (4bsh(1+1/8) dominates) while MHA pays only the
+        // 8x-larger update: 5.03·bsh vs 4.0·bsh of kappa traffic here.
+        let bsh = 2048.0 * 8192.0;
+        let exp_gqa = (4.0 * bsh / 8.0 + 4.0 * bsh * 1.125 + 4.0 * 64.0 * 2048.0) / 1.6e12;
+        assert!((t_gqa - exp_gqa).abs() / exp_gqa < 1e-9, "{t_gqa} vs {exp_gqa}");
+        assert!(t_gqa > t_mha);
+    }
+
+    #[test]
+    fn kappa_time_scales_inverse_t() {
+        let hw = HardwareConfig::ascend_910b3();
+        let m = model();
+        let t1 = attention_decode_kappa_time(&m, &hw, 2, 1024, 1);
+        let t4 = attention_decode_kappa_time(&m, &hw, 2, 1024, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_floor_and_bandwidth_regimes() {
+        let hw = HardwareConfig::ascend_910b3();
+        // Decode (no floor): bare bandwidth term, far below 0.1 ms.
+        let t_dec = comm_time(&hw, 0.3, 1, 1, 8192, 4, false);
+        assert!(t_dec < 1e-6, "{t_dec}");
+        // Prefill single request s=2048: below the floor on 910B3 -> 0.100 ms
+        // (Table 3a prints exactly this).
+        let t_pre = comm_time(&hw, 0.6, 1, 2048, 8192, 4, true);
+        assert_eq!(t_pre, 100e-6);
+        // Large batch: bandwidth term dominates and scales linearly in b·s.
+        let t_big = comm_time(&hw, 0.6, 4, 8192, 8192, 4, true);
+        assert!(t_big > 100e-6);
+        let t_bigger = comm_time(&hw, 0.6, 8, 8192, 8192, 4, true);
+        assert!((t_bigger / t_big - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_tables_nonnegative_and_finite() {
+        let m = model();
+        let hw = HardwareConfig::ascend_910b3();
+        for t in [1u32, 2, 4, 8] {
+            for (b, s) in [(1u32, 1u32), (1, 8192), (64, 2048), (256, 16)] {
+                let mut all = Vec::new();
+                all.extend(rmsnorm_ops(Phase::Prefill, &m, b, s));
+                all.extend(rmsnorm_ops(Phase::Decode, &m, b, s));
+                all.extend(attention_prefill_ops(&m, b, s, t));
+                all.extend(attention_decode_ops(&m, b, s, t));
+                all.extend(mlp_ops(Phase::Prefill, &m, b, s, t));
+                all.extend(mlp_ops(Phase::Decode, &m, b, s, t));
+                for opc in all {
+                    assert!(opc.w.is_finite() && opc.w >= 0.0, "{}", opc.name);
+                    assert!(opc.q.is_finite() && opc.q > 0.0, "{}", opc.name);
+                }
+                assert!(attention_decode_kappa_time(&m, &hw, b, s, t) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # BestServe (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *BestServe: Serving Strategies with
+//! Optimal Goodput in Collocation and Disaggregation Architectures*.
+//!
+//! Three hierarchical components (Figure 4 of the paper):
+//!
+//! * [`estimator`] — operator-level latency oracle built on an adapted
+//!   roofline model (Algorithm 1, Tables 1–13).
+//! * [`simulator`] — discrete-event simulation of request arrival, batching,
+//!   and departure for collocation and disaggregation architectures
+//!   (Algorithms 2–7).
+//! * [`optimizer`] — goodput search by bisection over arrival rate under
+//!   P90-SLO feasibility (Algorithms 8–9), enumerating the strategy space.
+//!
+//! Plus the substrates a production deployment of the idea needs:
+//!
+//! * [`config`] — model / hardware / efficiency / scenario / SLO / strategy
+//!   presets and JSON loading.
+//! * [`runtime`] — PJRT client loading the AOT-compiled latency-surface
+//!   artifact produced by the python/JAX/Pallas layer (build-time only;
+//!   python never runs on the request path).
+//! * [`testbed`] — a token-level, vLLM-like serving testbed (iteration-level
+//!   continuous batching, paged KV accounting, prefill prioritization,
+//!   disaggregated KV transfer) used as the ground-truth reference the paper
+//!   obtained by manual benchmarking.
+//! * [`validation`] — the Figure 11 experiment: BestServe vs ground truth
+//!   across strategies and operating scenarios.
+//! * [`util`] — RNG, stats, JSON, tables, property-testing harness.
+pub mod cli;
+pub mod config;
+pub mod estimator;
+pub mod runtime;
+pub mod optimizer;
+pub mod report;
+pub mod simulator;
+pub mod testbed;
+pub mod validation;
+pub mod error;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,420 @@
+//! `bestserve` — the launcher CLI.
+//!
+//! Subcommands (see `bestserve help`):
+//!   presets    list model/hardware/scenario presets
+//!   estimate   Algorithm 1 per-module breakdown (Table 3)
+//!   simulate   one strategy at one rate (Tables 4/5, Figures 6/8)
+//!   sweep      P90s vs arrival rate (Figures 7/9)
+//!   optimize   rank all strategies by goodput (the Optimizer, §3.5)
+//!   testbed    token-level ground-truth serving run
+//!   validate   BestServe vs ground truth across a strategy space (Fig. 11)
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context};
+
+use bestserve::cli::Args;
+use bestserve::config::{
+    HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy, StrategySpace,
+};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::optimizer::{optimize_with_memory, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory};
+use bestserve::report;
+use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
+use bestserve::simulator::{generate_workload, SimParams, SpanMode};
+use bestserve::testbed::{Testbed, TestbedConfig};
+use bestserve::util::table::{rate as fr, Table};
+use bestserve::validation::{validate, ValidationConfig};
+
+const HELP: &str = "\
+bestserve — serving-strategy planner (BestServe reproduction)
+
+USAGE: bestserve <command> [options]
+
+COMMANDS
+  presets                         list model/hardware/scenario presets
+  estimate  [--model M] [--hardware H] [--tp T] [--b B] [--s S] [--phase prefill|decode]
+            [--grid]              Table-3 style per-module breakdown
+  simulate  --strategy 3p2d-tp4 --scenario op2 --rate 3.5 [--n N] [--hist]
+            [--grid] [--tau X] [--seed K] [--exact-span]
+            [--save-trace F] (write the generated workload as a CSV trace)
+  sweep     --strategy S --scenario OP --rates lo:hi:step [--grid] [--out DIR]
+  optimize  --scenario OP [--max-cards 8] [--tp 1,2,4,8] [--grid]
+            [--bmax-prefill 4] [--bmax-decode 16] [--repeats 1]
+            [--check-memory] (reject strategies whose weights+KV overflow HBM)
+  testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
+            [--trace F]     (replay a CSV trace instead of Poisson traffic)
+  validate  --scenario OP [--max-cards 8] [--tp 2,4,8] [--n N] [--out DIR]
+
+COMMON OPTIONS
+  --model    model preset (default codellama-34b)
+  --hardware hardware preset (default ascend-910b3)
+  --config   platform JSON file (overrides the two above)
+  --grid     use the AOT/PJRT latency artifact instead of the native oracle
+  --slo-ttft ms (default 1500)    --slo-tpot ms (default 70)
+";
+
+fn platform_from(args: &Args) -> anyhow::Result<Platform> {
+    if let Some(path) = args.get("config") {
+        return Ok(Platform::from_file(path)?);
+    }
+    let model = ModelConfig::preset(&args.str_or("model", "codellama-34b"))?;
+    let hardware = HardwareConfig::preset(&args.str_or("hardware", "ascend-910b3"))?;
+    Ok(Platform {
+        model,
+        hardware,
+        eff: bestserve::config::EfficiencyParams::paper_defaults(),
+    })
+}
+
+fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
+    let name = args.str_or("scenario", "op2");
+    let mut sc = Scenario::preset(&name)?;
+    if let Some(n) = args.get("n") {
+        sc.n_requests = n.parse().context("--n expects an integer")?;
+    }
+    Ok(sc)
+}
+
+fn slo_from(args: &Args) -> anyhow::Result<Slo> {
+    let mut slo = Slo::paper_default();
+    slo.ttft = args.f64_or("slo-ttft", slo.ttft * 1e3)? / 1e3;
+    slo.tpot = args.f64_or("slo-tpot", slo.tpot * 1e3)? / 1e3;
+    slo.relaxation = args.f64_or("slo-relax", slo.relaxation)?;
+    slo.validate()?;
+    Ok(slo)
+}
+
+fn sim_params_from(args: &Args) -> anyhow::Result<SimParams> {
+    Ok(SimParams {
+        tau: args.f64_or("tau", 2.5)?,
+        seed: args.u64_or("seed", 0xBE57_5E7F)?,
+        kv_transfer: !args.flag("no-kv-transfer"),
+        span_mode: if args.flag("exact-span") {
+            SpanMode::Exact
+        } else {
+            SpanMode::PaperHeuristic
+        },
+    })
+}
+
+fn model_for(args: &Args, platform: &Platform, tp: u32) -> anyhow::Result<Arc<dyn LatencyModel>> {
+    if args.flag("grid") {
+        let dir = default_artifacts_dir();
+        let g = GridLatencyModel::from_artifacts(&dir, platform, tp)?;
+        eprintln!("[grid] latency surface loaded from {} via PJRT", dir.display());
+        Ok(Arc::new(g))
+    } else {
+        Ok(Arc::new(AnalyticOracle::new(platform.clone(), tp)))
+    }
+}
+
+fn factory_for(args: &Args, platform: &Platform) -> anyhow::Result<Box<dyn ModelFactory>> {
+    if args.flag("grid") {
+        Ok(Box::new(GridFactory::new(&default_artifacts_dir(), platform.clone())?))
+    } else {
+        Ok(Box::new(AnalyticFactory::new(platform.clone())))
+    }
+}
+
+fn strategy_from(args: &Args) -> anyhow::Result<Strategy> {
+    let mut st = Strategy::parse(&args.str_or("strategy", "1p1d-tp4"))?;
+    st.bmax_prefill = args.u32_or("bmax-prefill", st.bmax_prefill)?;
+    st.bmax_decode = args.u32_or("bmax-decode", st.bmax_decode)?;
+    st.validate()?;
+    Ok(st)
+}
+
+fn cmd_presets() {
+    let mut t = Table::new(&["kind", "name", "details"]);
+    for m in ModelConfig::presets() {
+        t.row(&[
+            "model".into(),
+            m.name.clone(),
+            format!(
+                "h={} h0={} hq={} hkv={} layers={}",
+                m.hidden, m.intermediate, m.q_heads, m.kv_heads, m.layers
+            ),
+        ]);
+    }
+    for h in HardwareConfig::presets() {
+        t.row(&[
+            "hardware".into(),
+            h.name.clone(),
+            format!(
+                "Sc={:.0}T Sm={:.2}T S+={:.0}G",
+                h.sc_flops / 1e12,
+                h.sm_bytes / 1e12,
+                h.s_plus_bytes / 1e9
+            ),
+        ]);
+    }
+    for s in Scenario::all_ops() {
+        t.row(&[
+            "scenario".into(),
+            s.name.clone(),
+            format!("s={} s+={}", s.mean_input(), s.mean_gen()),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let tp = args.u32_or("tp", 4)?;
+    let b = args.u32_or("b", 1)?;
+    let s = args.u32_or("s", 2048)?;
+    let phase = match args.str_or("phase", "prefill").as_str() {
+        "prefill" => Phase::Prefill,
+        "decode" => Phase::Decode,
+        p => return Err(anyhow!("--phase must be prefill|decode, got {p}")),
+    };
+    let model = model_for(args, &platform, tp)?;
+    let t3 = report::table3(model.as_ref(), &platform, phase, b, s, tp);
+    println!(
+        "{} | {} | {} phase | b={b} s={s} tp={tp} layers={}",
+        platform.model.name,
+        platform.hardware.name,
+        phase.name(),
+        platform.model.layers
+    );
+    print!("{}", t3.to_table().render());
+    println!("total: {:.3} ms", t3.total_ms);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let strategy = strategy_from(args)?;
+    let scenario = scenario_from(args)?;
+    let slo = slo_from(args)?;
+    let rate = args.f64_or("rate", 3.5)?;
+    let params = sim_params_from(args)?;
+    let model = model_for(args, &platform, strategy.tp)?;
+    let t =
+        report::table_slo(model.as_ref(), &platform, &strategy, &scenario, rate, &slo, params)?;
+    println!(
+        "{} | scenario {} | rate {} req/s | n={}",
+        strategy,
+        scenario.name,
+        fr(rate),
+        scenario.n_requests
+    );
+    print!("{}", t.to_table().render());
+    println!(
+        "throughput {:.3} req/s | makespan {:.1} s",
+        t.report.throughput, t.report.makespan
+    );
+    if args.flag("hist") {
+        println!("\n{}", t.render_histograms(24, 48));
+    }
+    if let Some(path) = args.get("save-trace") {
+        let reqs = generate_workload(&scenario, rate, params.seed);
+        bestserve::simulator::save_trace(&reqs, path)?;
+        println!("wrote trace to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let strategy = strategy_from(args)?;
+    let scenario = scenario_from(args)?;
+    let rates =
+        args.rates_or("rates", &[0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.0])?;
+    let params = sim_params_from(args)?;
+    let model = model_for(args, &platform, strategy.tp)?;
+    let sw =
+        report::rate_sweep(model.as_ref(), &platform, &strategy, &scenario, &rates, params)?;
+    println!("{} | scenario {}", strategy, scenario.name);
+    print!("{}", sw.to_table().render());
+    if let Some(out) = args.get("out") {
+        let path =
+            std::path::Path::new(out).join(format!("sweep_{}_{}.csv", strategy, scenario.name));
+        sw.to_csv().save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let scenario = scenario_from(args)?;
+    let slo = slo_from(args)?;
+    let space = StrategySpace {
+        max_cards: args.u32_or("max-cards", 8)?,
+        tp_choices: args.u32_list_or("tp", &[1, 2, 4, 8])?,
+        bmax_prefill: args.u32_or("bmax-prefill", 4)?,
+        bmax_decode: args.u32_or("bmax-decode", 16)?,
+        include_collocation: !args.flag("no-colloc"),
+        include_disaggregation: !args.flag("no-disagg"),
+    };
+    let params = sim_params_from(args)?;
+    let cfg = GoodputConfig {
+        tolerance: args.f64_or("tolerance", 0.05)?,
+        repeats: args.usize_or("repeats", 1)?,
+        ..GoodputConfig::default()
+    };
+    let mut factory = factory_for(args, &platform)?;
+    let t0 = std::time::Instant::now();
+    let rep = optimize_with_memory(
+        factory.as_mut(),
+        &platform,
+        &space,
+        &scenario,
+        &slo,
+        params,
+        &cfg,
+        args.flag("check-memory"),
+    )?;
+    let dt = t0.elapsed();
+    let mut t = Table::new(&["#", "strategy", "cards", "goodput", "normalized"]).numeric_body();
+    for (i, r) in rep.ranked.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            r.strategy.to_string(),
+            r.strategy.total_cards().to_string(),
+            if r.memory_rejected { "OOM".into() } else { fr(r.goodput) },
+            fr(r.normalized),
+        ]);
+    }
+    println!(
+        "scenario {} | {} strategies | optimized in {:.1}s",
+        rep.scenario,
+        rep.ranked.len(),
+        dt.as_secs_f64()
+    );
+    print!("{}", t.render());
+    if let Some(best) = rep.best() {
+        println!(
+            "OPTIMAL: {} — goodput {} req/s ({} per card)",
+            best.strategy,
+            fr(best.goodput),
+            fr(best.normalized)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_testbed(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let strategy = strategy_from(args)?;
+    let scenario = scenario_from(args)?;
+    let slo = slo_from(args)?;
+    let rate = args.f64_or("rate", 3.5)?;
+    let model = model_for(args, &platform, strategy.tp)?;
+    let mut config = TestbedConfig::default();
+    if let Some(b) = args.get("kv-blocks") {
+        config.kv_capacity =
+            bestserve::testbed::KvCapacity::Blocks(b.parse().context("--kv-blocks int")?);
+    }
+    let reqs = match args.get("trace") {
+        Some(path) => {
+            let t = bestserve::simulator::load_trace(path)?;
+            eprintln!("[trace] replaying {} requests from {path}", t.len());
+            t
+        }
+        None => generate_workload(&scenario, rate, args.u64_or("seed", 0xBE57)?),
+    };
+    let tb = Testbed::new(model.as_ref(), &platform, strategy.clone(), config);
+    let t0 = std::time::Instant::now();
+    let out = tb.run(&reqs)?;
+    let dt = t0.elapsed();
+    println!(
+        "[testbed] {} | scenario {} | rate {} | n={} | wall {:.2}s",
+        strategy,
+        scenario.name,
+        fr(rate),
+        reqs.len(),
+        dt.as_secs_f64()
+    );
+    let rep = &out.report;
+    let mut t = Table::new(&["metric", "P90", "P99", "SLO"]).numeric_body();
+    t.row(&[
+        "TTFT (ms)".into(),
+        format!("{:.3}", rep.ttft.p90 * 1e3),
+        format!("{:.3}", rep.ttft.p99 * 1e3),
+        format!("{:.3}", slo.ttft * 1e3),
+    ]);
+    t.row(&[
+        "TPOT (ms)".into(),
+        format!("{:.3}", rep.tpot.p90 * 1e3),
+        format!("{:.3}", rep.tpot.p99 * 1e3),
+        format!("{:.3}", slo.tpot * 1e3),
+    ]);
+    print!("{}", t.render());
+    println!("throughput {:.3} req/s", rep.throughput);
+    for (i, st) in out.stats.iter().enumerate() {
+        println!(
+            "  engine {i}: {} prefill iters, {} decode iters, {} preemptions, busy {:.1}s",
+            st.prefill_iterations, st.decode_iterations, st.preemptions, st.busy_time
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let platform = platform_from(args)?;
+    let scenario = scenario_from(args)?;
+    let slo = slo_from(args)?;
+    let space = StrategySpace {
+        max_cards: args.u32_or("max-cards", 8)?,
+        tp_choices: args.u32_list_or("tp", &[2, 4, 8])?,
+        bmax_prefill: args.u32_or("bmax-prefill", 4)?,
+        bmax_decode: args.u32_or("bmax-decode", 16)?,
+        include_collocation: true,
+        include_disaggregation: true,
+    };
+    let mut cfg = ValidationConfig {
+        sim_params: sim_params_from(args)?,
+        ..ValidationConfig::default()
+    };
+    cfg.goodput.tolerance = args.f64_or("tolerance", 0.1)?;
+    cfg.ground_truth.tolerance = args.f64_or("tolerance", 0.1)?;
+    let mut factory = factory_for(args, &platform)?;
+    let t0 = std::time::Instant::now();
+    let rep = validate(factory.as_mut(), &platform, &space, &scenario, &slo, &cfg)?;
+    println!(
+        "Figure-11 panel for {} ({} strategies, {:.1}s):",
+        rep.scenario,
+        rep.rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", rep.to_table().render());
+    println!(
+        "average |relative error| = {:.1}%  |  recommendation quality = {:.2}",
+        rep.mean_abs_rel_error() * 100.0,
+        rep.recommendation_quality()
+    );
+    if let Some(out) = args.get("out") {
+        let path = std::path::Path::new(out).join(format!("fig11_{}.csv", rep.scenario));
+        rep.to_csv().save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "presets" => {
+            cmd_presets();
+            Ok(())
+        }
+        "estimate" => cmd_estimate(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "optimize" => cmd_optimize(&args),
+        "testbed" => cmd_testbed(&args),
+        "validate" => cmd_validate(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprint!("{HELP}");
+            Err(anyhow!("unknown command '{other}'"))
+        }
+    }
+}

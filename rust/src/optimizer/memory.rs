@@ -1,0 +1,123 @@
+//! Memory-aware feasibility — the paper's §5 "memory insensitivity"
+//! limitation, addressed as an optional pre-filter: a strategy whose
+//! weights + expected peak KV footprint exceed device memory is rejected
+//! before any simulation ("certain serving strategies may be deemed
+//! feasible by BestServe but could fail in practice due to insufficient
+//! memory capacity").
+
+use crate::config::{Architecture, Platform, Scenario, Strategy};
+
+/// Expected KV footprint of one fully-loaded instance (bytes per CARD),
+/// for the given scenario: every batch slot holding a sequence at its
+/// final context (the steady-state peak the deployment must sustain).
+fn peak_kv_bytes_per_card(
+    platform: &Platform,
+    scenario: &Scenario,
+    slots: u32,
+    tokens_per_slot: f64,
+    tp: u32,
+) -> f64 {
+    let per_token = platform.model.kv_bytes_per_token() as f64 / tp as f64;
+    slots as f64 * tokens_per_slot * per_token
+}
+
+/// Breakdown of the memory check, for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryCheck {
+    /// Weight bytes per card (model sharded over tp).
+    pub weights: f64,
+    /// Peak KV bytes per card on the most loaded instance kind.
+    pub peak_kv: f64,
+    /// Device capacity per card.
+    pub capacity: f64,
+}
+
+impl MemoryCheck {
+    pub fn fits(&self) -> bool {
+        self.weights + self.peak_kv <= self.capacity
+    }
+
+    /// Utilization fraction (>1 means over capacity).
+    pub fn utilization(&self) -> f64 {
+        (self.weights + self.peak_kv) / self.capacity
+    }
+}
+
+/// Check whether `strategy` fits device memory for `scenario`.
+///
+/// Collocated instances hold prefill and decode sequences: `bmax_decode`
+/// slots at the full context `s + s_+` plus a prefill batch in flight.
+/// Disaggregated prefill instances hold only `bmax_prefill · s`; decode
+/// instances hold `bmax_decode · (s + s_+)`.
+pub fn check_memory(platform: &Platform, strategy: &Strategy, scenario: &Scenario) -> MemoryCheck {
+    let tp = strategy.tp;
+    let weights = platform.model.weight_bytes() as f64 / tp as f64;
+    let s = scenario.mean_input();
+    let full = scenario.mean_input() + scenario.mean_gen();
+    let peak_kv = match strategy.arch {
+        Architecture::Collocation { .. } => {
+            peak_kv_bytes_per_card(platform, scenario, strategy.bmax_decode, full, tp)
+                + peak_kv_bytes_per_card(platform, scenario, strategy.bmax_prefill, s, tp)
+        }
+        Architecture::Disaggregation { .. } => {
+            // The binding instance kind is whichever holds more KV.
+            let prefill = peak_kv_bytes_per_card(platform, scenario, strategy.bmax_prefill, s, tp);
+            let decode =
+                peak_kv_bytes_per_card(platform, scenario, strategy.bmax_decode, full, tp);
+            prefill.max(decode)
+        }
+    };
+    MemoryCheck {
+        weights,
+        peak_kv,
+        capacity: platform.hardware.hbm_bytes as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_fits_table4_config() {
+        // CodeLlama-34b at tp=4 on 64 GB cards: ~17 GB weights/card,
+        // 16 slots x 2112 tokens x 48 KB/token = ~1.7 GB KV — fits easily.
+        let p = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let sc = Scenario::fixed("t", 2048, 64, 100);
+        let m = check_memory(&p, &st, &sc);
+        assert!(m.fits(), "{m:?}");
+        assert!(m.weights > 15e9 && m.weights < 20e9, "{}", m.weights);
+        assert!(m.utilization() < 0.5, "{}", m.utilization());
+    }
+
+    #[test]
+    fn tp1_34b_does_not_fit() {
+        // 34B params x 2 bytes = 68 GB > 64 GB on a single card.
+        let p = Platform::paper_testbed();
+        let st = Strategy::collocation(1, 1);
+        let sc = Scenario::fixed("t", 2048, 64, 100);
+        assert!(!check_memory(&p, &st, &sc).fits());
+    }
+
+    #[test]
+    fn huge_batch_long_context_overflows() {
+        let p = Platform::paper_testbed();
+        let mut st = Strategy::disaggregation(1, 1, 4);
+        st.bmax_decode = 4096;
+        let sc = Scenario::fixed("t", 8192, 2048, 100);
+        // 4096 slots x 10240 tokens x 49 KB = ~2 TB >> 64 GB.
+        let m = check_memory(&p, &st, &sc);
+        assert!(!m.fits());
+        assert!(m.utilization() > 10.0);
+    }
+
+    #[test]
+    fn colloc_charges_both_phases() {
+        let p = Platform::paper_testbed();
+        let sc = Scenario::fixed("t", 2048, 64, 100);
+        let colloc = check_memory(&p, &Strategy::collocation(1, 4), &sc);
+        let disagg = check_memory(&p, &Strategy::disaggregation(1, 1, 4), &sc);
+        assert!(colloc.peak_kv > disagg.peak_kv);
+    }
+}

@@ -1,0 +1,245 @@
+//! The **Optimizer** (§3.5) — topmost layer of BestServe: enumerate every
+//! permissible serving strategy, find each one's goodput by bisection over
+//! the arrival rate (Algorithm 8) under P90-SLO feasibility with the
+//! relaxation factor τ (Algorithm 9), and rank by normalized goodput
+//! (goodput per card, the §4.1 metric).
+
+pub mod goodput;
+pub mod memory;
+
+pub use goodput::{find_goodput, GoodputConfig};
+pub use memory::{check_memory, MemoryCheck};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use crate::error::Result;
+use crate::estimator::{AnalyticOracle, LatencyModel};
+use crate::simulator::SimParams;
+
+/// Builds (and caches) a latency model per tensor-parallel size — the
+/// Optimizer sweeps tp, and both the analytic oracle and the PJRT grid are
+/// constructed per (platform, tp).
+pub trait ModelFactory {
+    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>>;
+}
+
+/// Native Algorithm-1 oracle factory.
+pub struct AnalyticFactory {
+    platform: Platform,
+    cache: HashMap<u32, Arc<dyn LatencyModel>>,
+}
+
+impl AnalyticFactory {
+    pub fn new(platform: Platform) -> AnalyticFactory {
+        AnalyticFactory { platform, cache: HashMap::new() }
+    }
+}
+
+impl ModelFactory for AnalyticFactory {
+    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
+        Ok(self
+            .cache
+            .entry(tp)
+            .or_insert_with(|| Arc::new(AnalyticOracle::new(self.platform.clone(), tp)))
+            .clone())
+    }
+}
+
+/// PJRT-grid factory: compiles the AOT artifact once, re-executes it per tp.
+pub struct GridFactory {
+    platform: Platform,
+    exe: crate::runtime::PjrtExecutable,
+    manifest: crate::runtime::GridManifest,
+    cache: HashMap<u32, Arc<dyn LatencyModel>>,
+}
+
+impl GridFactory {
+    pub fn new(artifacts_dir: &std::path::Path, platform: Platform) -> Result<GridFactory> {
+        let manifest = crate::runtime::GridManifest::load(artifacts_dir)?;
+        let exe = crate::runtime::PjrtExecutable::load(artifacts_dir.join(&manifest.file))?;
+        Ok(GridFactory { platform, exe, manifest, cache: HashMap::new() })
+    }
+}
+
+impl ModelFactory for GridFactory {
+    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
+        if let Some(m) = self.cache.get(&tp) {
+            return Ok(m.clone());
+        }
+        let grid = crate::runtime::GridLatencyModel::from_executable(
+            &self.exe,
+            &self.manifest,
+            &self.platform,
+            tp,
+        )?;
+        let arc: Arc<dyn LatencyModel> = Arc::new(grid);
+        self.cache.insert(tp, arc.clone());
+        Ok(arc)
+    }
+}
+
+/// One ranked row of the Figure-11-style output.
+#[derive(Debug, Clone)]
+pub struct RankedStrategy {
+    pub strategy: Strategy,
+    /// Goodput in requests/second (0 if even λ=0.1 is infeasible).
+    pub goodput: f64,
+    /// Goodput per card — the paper's normalized goodput metric.
+    pub normalized: f64,
+    /// Set when the memory pre-filter rejected the strategy (goodput 0
+    /// without simulating) — see [`memory::check_memory`].
+    pub memory_rejected: bool,
+}
+
+/// Full optimizer output.
+#[derive(Debug, Clone)]
+pub struct OptimizerReport {
+    pub scenario: String,
+    pub ranked: Vec<RankedStrategy>,
+}
+
+impl OptimizerReport {
+    pub fn best(&self) -> Option<&RankedStrategy> {
+        self.ranked.first()
+    }
+}
+
+/// Enumerate the strategy space and rank by normalized goodput (§3.5).
+///
+/// `check_memory` enables the memory-aware pre-filter (our extension for
+/// the paper's §5 memory-insensitivity limitation): strategies that cannot
+/// hold their weights + peak KV are scored 0 without simulating. It is off
+/// by default to match the paper's behaviour.
+pub fn optimize(
+    factory: &mut dyn ModelFactory,
+    platform: &Platform,
+    space: &StrategySpace,
+    scenario: &Scenario,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+) -> Result<OptimizerReport> {
+    optimize_with_memory(factory, platform, space, scenario, slo, sim_params, cfg, false)
+}
+
+/// [`optimize`] with the memory pre-filter toggle exposed.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_with_memory(
+    factory: &mut dyn ModelFactory,
+    platform: &Platform,
+    space: &StrategySpace,
+    scenario: &Scenario,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+    check_mem: bool,
+) -> Result<OptimizerReport> {
+    let mut ranked = Vec::new();
+    for strategy in space.enumerate() {
+        if check_mem && !memory::check_memory(platform, &strategy, scenario).fits() {
+            ranked.push(RankedStrategy {
+                strategy,
+                goodput: 0.0,
+                normalized: 0.0,
+                memory_rejected: true,
+            });
+            continue;
+        }
+        let model = factory.model_for_tp(strategy.tp)?;
+        let g = find_goodput(
+            model.as_ref(),
+            platform,
+            &strategy,
+            scenario,
+            slo,
+            sim_params,
+            cfg,
+        )?;
+        let cards = strategy.total_cards() as f64;
+        ranked.push(RankedStrategy {
+            strategy,
+            goodput: g,
+            normalized: g / cards,
+            memory_rejected: false,
+        });
+    }
+    ranked.sort_by(|a, b| b.normalized.partial_cmp(&a.normalized).unwrap());
+    Ok(OptimizerReport { scenario: scenario.name.clone(), ranked })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Architecture;
+
+    /// A fast fake factory for optimizer-level tests: constant-time model.
+    struct FakeFactory;
+    impl ModelFactory for FakeFactory {
+        fn model_for_tp(&mut self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
+            struct M;
+            impl LatencyModel for M {
+                fn prefill_time(&self, b: u32, _s: u32) -> f64 {
+                    0.05 + 0.01 * b as f64
+                }
+                fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+                    0.001
+                }
+            }
+            Ok(Arc::new(M))
+        }
+    }
+
+    #[test]
+    fn optimize_ranks_by_normalized_goodput() {
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 4,
+            tp_choices: vec![1, 2],
+            ..StrategySpace::default()
+        };
+        let scenario = Scenario::fixed("t", 256, 16, 300);
+        let slo = Slo::paper_default();
+        let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
+        let report = optimize(
+            &mut FakeFactory,
+            &platform,
+            &space,
+            &scenario,
+            &slo,
+            SimParams::default(),
+            &cfg,
+        )
+        .unwrap();
+        assert!(!report.ranked.is_empty());
+        // Sorted descending by normalized goodput.
+        assert!(report
+            .ranked
+            .windows(2)
+            .all(|w| w[0].normalized >= w[1].normalized));
+        // Every strategy in the space appears exactly once.
+        assert_eq!(report.ranked.len(), space.enumerate().len());
+        // The fake model is fast: at least one strategy achieves nonzero
+        // goodput.
+        assert!(report.best().unwrap().goodput > 0.0);
+    }
+
+    #[test]
+    fn factories_cache_per_tp() {
+        let mut f = AnalyticFactory::new(Platform::paper_testbed());
+        let a = f.model_for_tp(4).unwrap();
+        let b = f.model_for_tp(4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = f.model_for_tp(2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn collocation_and_disagg_both_present() {
+        let space = StrategySpace { max_cards: 8, tp_choices: vec![4], ..StrategySpace::default() };
+        let all = space.enumerate();
+        assert!(all.iter().any(|s| matches!(s.arch, Architecture::Collocation { .. })));
+        assert!(all.iter().any(|s| matches!(s.arch, Architecture::Disaggregation { .. })));
+    }
+}

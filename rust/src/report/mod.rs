@@ -1,0 +1,410 @@
+//! Report generation: every table and figure of the paper's evaluation as a
+//! reusable function producing both an ASCII rendering (stdout) and a CSV
+//! (results/). Shared by the CLI (`bestserve <cmd>`) and the bench harness
+//! (`cargo bench`), so the artifacts are regenerated identically everywhere.
+
+use crate::config::{Phase, Platform, Scenario, Slo, Strategy};
+use crate::error::Result;
+use crate::estimator::{block_breakdown, LatencyModel};
+use crate::simulator::{simulate, SimParams, SimReport};
+use crate::util::csv::Csv;
+use crate::util::stats::percentile;
+use crate::util::table::{ms, rate, Table};
+
+/// Table 3 — per-module estimate breakdown for one operating point.
+pub struct Table3 {
+    pub phase: Phase,
+    pub rows: Vec<crate::estimator::ModuleBreakdown>,
+    pub total_ms: f64,
+}
+
+pub fn table3(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    phase: Phase,
+    b: u32,
+    s: u32,
+    tp: u32,
+) -> Table3 {
+    let rows = block_breakdown(platform, phase, b, s, tp);
+    let total = match phase {
+        Phase::Prefill => model.prefill_time(b, s),
+        Phase::Decode => model.decode_step_time(b, s),
+    };
+    Table3 { phase, rows, total_ms: total * 1e3 }
+}
+
+impl Table3 {
+    pub fn to_table(&self) -> Table {
+        let mut t =
+            Table::new(&["module (x layers)", "Dispatch", "Compute", "Communicate"])
+                .numeric_body();
+        for r in &self.rows {
+            t.row(&[
+                r.module.to_string(),
+                ms(r.dispatch_ms),
+                ms(r.compute_ms),
+                ms(r.communicate_ms),
+            ]);
+        }
+        t.row(&["TOTAL".into(), String::new(), ms(self.total_ms), String::new()]);
+        t
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&["module", "dispatch_ms", "compute_ms", "communicate_ms"]);
+        for r in &self.rows {
+            c.row(&[
+                r.module.to_string(),
+                format!("{}", r.dispatch_ms),
+                format!("{}", r.compute_ms),
+                format!("{}", r.communicate_ms),
+            ]);
+        }
+        c
+    }
+}
+
+/// Tables 4/5 — one simulated operating point with P90/P99 vs SLO.
+pub struct TableSlo {
+    pub strategy: String,
+    pub rate: f64,
+    pub report: SimReport,
+    pub slo: Slo,
+}
+
+pub fn table_slo(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    rate: f64,
+    slo: &Slo,
+    params: SimParams,
+) -> Result<TableSlo> {
+    let report = simulate(model, platform, strategy, scenario, rate, params)?;
+    Ok(TableSlo {
+        strategy: strategy.to_string(),
+        rate,
+        report,
+        slo: *slo,
+    })
+}
+
+impl TableSlo {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "P90", "P99", "SLO"]).numeric_body();
+        t.row(&[
+            "TTFT (ms)".into(),
+            ms(self.report.ttft.p90 * 1e3),
+            ms(self.report.ttft.p99 * 1e3),
+            ms(self.slo.ttft * 1e3),
+        ]);
+        t.row(&[
+            "TPOT (ms)".into(),
+            ms(self.report.tpot.p90 * 1e3),
+            ms(self.report.tpot.p99 * 1e3),
+            ms(self.slo.tpot * 1e3),
+        ]);
+        t
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "strategy", "rate", "ttft_p90_ms", "ttft_p99_ms", "tpot_p90_ms", "tpot_p99_ms",
+        ]);
+        c.row(&[
+            self.strategy.clone(),
+            format!("{}", self.rate),
+            format!("{}", self.report.ttft.p90 * 1e3),
+            format!("{}", self.report.ttft.p99 * 1e3),
+            format!("{}", self.report.tpot.p90 * 1e3),
+            format!("{}", self.report.tpot.p99 * 1e3),
+        ]);
+        c
+    }
+
+    /// Figures 6/8 — the TTFT/TPOT histograms with P90/P99/SLO markers.
+    pub fn render_histograms(&self, bins: usize, width: usize) -> String {
+        let (h_ttft, h_tpot) = self.report.histograms(bins);
+        let mut s = String::new();
+        s.push_str(&format!("TTFT distribution (ms), n={}\n", self.report.n));
+        s.push_str(&h_ttft.render(
+            width,
+            &[
+                ("P90", self.report.ttft.p90 * 1e3),
+                ("P99", self.report.ttft.p99 * 1e3),
+                ("SLO", self.slo.ttft * 1e3),
+            ],
+        ));
+        s.push_str(&format!("\nTPOT distribution (ms), n={}\n", self.report.n));
+        s.push_str(&h_tpot.render(
+            width,
+            &[
+                ("P90", self.report.tpot.p90 * 1e3),
+                ("P99", self.report.tpot.p99 * 1e3),
+                ("SLO", self.slo.tpot * 1e3),
+            ],
+        ));
+        s
+    }
+
+    pub fn histograms_csv(&self, bins: usize) -> Csv {
+        let (h_ttft, h_tpot) = self.report.histograms(bins);
+        let mut c = Csv::new(&["metric", "bin_lo_ms", "bin_hi_ms", "count"]);
+        for (name, h) in [("ttft", &h_ttft), ("tpot", &h_tpot)] {
+            let edges = h.bin_edges();
+            for (i, &cnt) in h.counts.iter().enumerate() {
+                c.row(&[
+                    name.to_string(),
+                    format!("{}", edges[i]),
+                    format!("{}", edges[i + 1]),
+                    format!("{cnt}"),
+                ]);
+            }
+        }
+        c
+    }
+}
+
+/// Figures 7/9 — P90 TTFT & TPOT against request arrival rates.
+pub struct RateSweep {
+    pub strategy: String,
+    pub rates: Vec<f64>,
+    pub ttft_p90: Vec<f64>,
+    pub tpot_p90: Vec<f64>,
+}
+
+pub fn rate_sweep(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    rates: &[f64],
+    params: SimParams,
+) -> Result<RateSweep> {
+    let mut ttft = Vec::with_capacity(rates.len());
+    let mut tpot = Vec::with_capacity(rates.len());
+    for &r in rates {
+        let rep = simulate(model, platform, strategy, scenario, r, params)?;
+        ttft.push(rep.ttft.p90);
+        tpot.push(rep.tpot.p90);
+    }
+    Ok(RateSweep {
+        strategy: strategy.to_string(),
+        rates: rates.to_vec(),
+        ttft_p90: ttft,
+        tpot_p90: tpot,
+    })
+}
+
+impl RateSweep {
+    pub fn to_table(&self) -> Table {
+        let mut t =
+            Table::new(&["rate (req/s)", "P90 TTFT (ms)", "P90 TPOT (ms)"]).numeric_body();
+        for i in 0..self.rates.len() {
+            t.row(&[
+                rate(self.rates[i]),
+                ms(self.ttft_p90[i] * 1e3),
+                ms(self.tpot_p90[i] * 1e3),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&["strategy", "rate", "ttft_p90_ms", "tpot_p90_ms"]);
+        for i in 0..self.rates.len() {
+            c.row(&[
+                self.strategy.clone(),
+                format!("{}", self.rates[i]),
+                format!("{}", self.ttft_p90[i] * 1e3),
+                format!("{}", self.tpot_p90[i] * 1e3),
+            ]);
+        }
+        c
+    }
+}
+
+/// Figure 10 — P90 TTFT variance vs number of simulated requests, one-shot
+/// and 3-run-averaged.
+pub struct VarianceStudy {
+    pub n_requests: Vec<usize>,
+    /// [n_idx][seed_idx] one-shot P90 TTFTs.
+    pub oneshot: Vec<Vec<f64>>,
+    /// [n_idx][seed_idx] 3-run-averaged P90 TTFTs.
+    pub averaged: Vec<Vec<f64>>,
+}
+
+pub fn variance_study(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario_proto: &Scenario,
+    rate: f64,
+    n_requests: &[usize],
+    seeds: usize,
+    params: SimParams,
+) -> Result<VarianceStudy> {
+    let mut oneshot = Vec::new();
+    let mut averaged = Vec::new();
+    for &n in n_requests {
+        let mut sc = scenario_proto.clone();
+        sc.n_requests = n;
+        let mut one = Vec::new();
+        let mut avg = Vec::new();
+        for k in 0..seeds {
+            let p1 = SimParams {
+                seed: params.seed.wrapping_add(k as u64 * 1299709),
+                ..params
+            };
+            one.push(simulate(model, platform, strategy, &sc, rate, p1)?.ttft.p90);
+            let (a, _) = crate::simulator::simulate_averaged(
+                model, platform, strategy, &sc, rate, p1, 3,
+            )?;
+            avg.push(a);
+        }
+        oneshot.push(one);
+        averaged.push(avg);
+    }
+    Ok(VarianceStudy { n_requests: n_requests.to_vec(), oneshot, averaged })
+}
+
+impl VarianceStudy {
+    /// Relative spread (max-min)/median per request count.
+    pub fn spreads(&self, averaged: bool) -> Vec<f64> {
+        let data = if averaged { &self.averaged } else { &self.oneshot };
+        data.iter()
+            .map(|xs| {
+                let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let med = percentile(xs, 50.0);
+                (hi - lo) / med
+            })
+            .collect()
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&["n_requests", "mode", "seed_idx", "ttft_p90_ms"]);
+        for (i, &n) in self.n_requests.iter().enumerate() {
+            for (k, &v) in self.oneshot[i].iter().enumerate() {
+                c.row(&[n.to_string(), "oneshot".into(), k.to_string(), format!("{}", v * 1e3)]);
+            }
+            for (k, &v) in self.averaged[i].iter().enumerate() {
+                c.row(&[n.to_string(), "avg3".into(), k.to_string(), format!("{}", v * 1e3)]);
+            }
+        }
+        c
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "n_requests",
+            "one-shot spread",
+            "avg-of-3 spread",
+        ])
+        .numeric_body();
+        let s1 = self.spreads(false);
+        let s3 = self.spreads(true);
+        for (i, &n) in self.n_requests.iter().enumerate() {
+            t.row(&[
+                n.to_string(),
+                format!("{:.1}%", s1[i] * 100.0),
+                format!("{:.1}%", s3[i] * 100.0),
+            ]);
+        }
+        t
+    }
+}
+
+/// Where result CSVs land (`$BESTSERVE_RESULTS` or ./results).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("BESTSERVE_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::testutil::ConstModel;
+
+    #[test]
+    fn table3_renders() {
+        let platform = Platform::paper_testbed();
+        let oracle = crate::estimator::AnalyticOracle::new(platform.clone(), 4);
+        let t3 = table3(&oracle, &platform, Phase::Prefill, 1, 2048, 4);
+        let s = t3.to_table().render();
+        assert!(s.contains("Attention"));
+        assert!(s.contains("TOTAL"));
+        assert!(t3.total_ms > 200.0 && t3.total_ms < 350.0);
+        assert_eq!(t3.to_csv().len(), 4);
+    }
+
+    #[test]
+    fn rate_sweep_monotone_ttft() {
+        let m = ConstModel { prefill: 0.3, step: 0.001 };
+        let platform = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let sc = Scenario::fixed("t", 256, 16, 400);
+        let sw = rate_sweep(
+            &m,
+            &platform,
+            &st,
+            &sc,
+            &[0.5, 2.0, 6.0, 12.0],
+            SimParams::default(),
+        )
+        .unwrap();
+        // TTFT P90 grows with rate (queueing).
+        assert!(sw.ttft_p90.windows(2).all(|w| w[1] >= w[0] * 0.95), "{:?}", sw.ttft_p90);
+        assert!(sw.to_csv().len() == 4);
+        assert!(sw.to_table().render().contains("P90 TTFT"));
+    }
+
+    #[test]
+    fn variance_study_shapes() {
+        let m = ConstModel { prefill: 0.2, step: 0.001 };
+        let platform = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let sc = Scenario::fixed("t", 256, 16, 100);
+        let vs = variance_study(
+            &m,
+            &platform,
+            &st,
+            &sc,
+            3.0,
+            &[100, 400],
+            3,
+            SimParams::default(),
+        )
+        .unwrap();
+        assert_eq!(vs.oneshot.len(), 2);
+        assert_eq!(vs.oneshot[0].len(), 3);
+        assert_eq!(vs.to_csv().len(), 12);
+        assert!(vs.spreads(false).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn table_slo_histograms() {
+        let m = ConstModel { prefill: 0.2, step: 0.002 };
+        let platform = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let sc = Scenario::fixed("t", 256, 16, 300);
+        let t = table_slo(
+            &m,
+            &platform,
+            &st,
+            &sc,
+            2.0,
+            &Slo::paper_default(),
+            SimParams::default(),
+        )
+        .unwrap();
+        let hist = t.render_histograms(10, 40);
+        assert!(hist.contains("TTFT distribution"));
+        assert!(hist.contains("SLO"));
+        assert_eq!(t.histograms_csv(10).len(), 20);
+        assert!(t.to_table().render().contains("TPOT (ms)"));
+    }
+}

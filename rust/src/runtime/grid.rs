@@ -1,0 +1,329 @@
+//! The PJRT-backed latency surface: executes the AOT artifact once per
+//! (platform, tp) at startup, then serves every simulator query from the
+//! in-memory grid — O(1) lookups with linear interpolation along the
+//! sequence axis and a dense per-token cumulative sum for exact decode
+//! spans (the optimization the artifact's cumulative structure enables).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Platform;
+use crate::error::{Error, Result};
+use crate::estimator::LatencyModel;
+use crate::util::json::Json;
+
+use super::pjrt::PjrtExecutable;
+
+/// Params-vector layout — MUST mirror python/compile/model.py.
+const N_PARAMS: usize = 24;
+
+/// Artifact geometry, read from `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridManifest {
+    pub file: String,
+    pub n_params: usize,
+    pub nb: usize,
+    pub ns: usize,
+    pub s_stride: u32,
+}
+
+impl GridManifest {
+    pub fn load(dir: &Path) -> Result<GridManifest> {
+        let path = dir.join("manifest.json");
+        let body = std::fs::read_to_string(&path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read '{}' — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&body).map_err(|e| Error::runtime(format!("manifest: {e}")))?;
+        let g = j
+            .get("latency_grid")
+            .ok_or_else(|| Error::runtime("manifest missing 'latency_grid'"))?;
+        let need = |k: &str| -> Result<f64> {
+            g.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::runtime(format!("manifest missing '{k}'")))
+        };
+        Ok(GridManifest {
+            file: g
+                .get("file")
+                .and_then(Json::as_str)
+                .unwrap_or("latency_grid.hlo.txt")
+                .to_string(),
+            n_params: need("n_params")? as usize,
+            nb: need("nb")? as usize,
+            ns: need("ns")? as usize,
+            s_stride: need("s_stride")? as u32,
+        })
+    }
+}
+
+/// Assemble the params vector for a platform + tp (python layout).
+fn params_vector(platform: &Platform, tp: u32) -> [f32; N_PARAMS] {
+    let m = &platform.model;
+    let hw = &platform.hardware;
+    let e = &platform.eff;
+    let mut p = [0f32; N_PARAMS];
+    p[0] = m.hidden as f32;
+    p[1] = m.intermediate as f32;
+    p[2] = m.q_heads as f32;
+    p[3] = m.kv_heads as f32;
+    p[4] = m.layers as f32;
+    p[5] = tp as f32;
+    p[6] = m.dtype_bytes as f32;
+    p[7] = hw.sc_flops as f32;
+    p[8] = hw.sm_bytes as f32;
+    p[9] = hw.s_plus_bytes as f32;
+    p[10] = e.prefill.ec as f32;
+    p[11] = e.prefill.em as f32;
+    p[12] = e.prefill.eplus as f32;
+    p[13] = e.decode.ec as f32;
+    p[14] = e.decode.em as f32;
+    p[15] = e.decode.eplus as f32;
+    p[16] = hw.dispatch.rmsnorm as f32;
+    p[17] = hw.dispatch.attention as f32;
+    p[18] = hw.dispatch.mlp as f32;
+    p[19] = hw.kappa_update as f32;
+    p[20] = hw.kappa_kv as f32;
+    p[21] = hw.kappa_upcast as f32;
+    p[22] = hw.comm_latency_floor as f32;
+    p[23] = if m.is_gqa() { 1.0 } else { 0.0 };
+    p
+}
+
+/// In-memory latency surface produced by one PJRT execution of the AOT
+/// artifact. Implements [`LatencyModel`], interchangeable with
+/// [`crate::estimator::AnalyticOracle`].
+pub struct GridLatencyModel {
+    nb: usize,
+    ns: usize,
+    s_stride: u32,
+    /// prefill[b-1][si] — row-major [nb, ns].
+    prefill: Vec<f64>,
+    /// decode_step[b-1][si] — row-major [nb, ns].
+    decode_step: Vec<f64>,
+    /// Dense per-token decode cumulative sum: cum[b-1][ctx] =
+    /// Σ_{c=1..ctx} step(b, c), for ctx in 0..=s_max. O(1) exact spans.
+    decode_cum: Vec<Vec<f64>>,
+    /// Max context representable before clamping.
+    s_max: u32,
+}
+
+impl GridLatencyModel {
+    /// Execute the artifact for `platform`/`tp` and build the surface.
+    pub fn from_artifacts(dir: &Path, platform: &Platform, tp: u32) -> Result<GridLatencyModel> {
+        let manifest = GridManifest::load(dir)?;
+        if manifest.n_params != N_PARAMS {
+            return Err(Error::runtime(format!(
+                "artifact params layout v{} != runtime v{N_PARAMS} — rebuild artifacts",
+                manifest.n_params
+            )));
+        }
+        let exe = PjrtExecutable::load(dir.join(&manifest.file))?;
+        Self::from_executable(&exe, &manifest, platform, tp)
+    }
+
+    /// Build from an already-compiled executable (amortizes compilation
+    /// across multiple (platform, tp) evaluations — the optimizer sweeps tp).
+    pub fn from_executable(
+        exe: &PjrtExecutable,
+        manifest: &GridManifest,
+        platform: &Platform,
+        tp: u32,
+    ) -> Result<GridLatencyModel> {
+        let params = params_vector(platform, tp);
+        let b_grid: Vec<f32> = (1..=manifest.nb as u32).map(|b| b as f32).collect();
+        let s_grid: Vec<f32> = (1..=manifest.ns as u32)
+            .map(|i| (i * manifest.s_stride) as f32)
+            .collect();
+        let outs = exe.run_f32(&[
+            (&params, &[N_PARAMS as i64]),
+            (&b_grid, &[manifest.nb as i64]),
+            (&s_grid, &[manifest.ns as i64]),
+        ])?;
+        if outs.len() != 2 {
+            return Err(Error::runtime(format!(
+                "artifact returned {} outputs, expected 2",
+                outs.len()
+            )));
+        }
+        let to_f64 = |v: &Vec<f32>| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        let mut g = GridLatencyModel {
+            nb: manifest.nb,
+            ns: manifest.ns,
+            s_stride: manifest.s_stride,
+            prefill: to_f64(&outs[0]),
+            decode_step: to_f64(&outs[1]),
+            decode_cum: Vec::new(),
+            s_max: manifest.ns as u32 * manifest.s_stride,
+        };
+        if g.prefill.len() != g.nb * g.ns || g.decode_step.len() != g.nb * g.ns {
+            return Err(Error::runtime("artifact output shape mismatch"));
+        }
+        g.build_decode_cum();
+        Ok(g)
+    }
+
+    /// Build from raw surfaces (used by tests and by the native-oracle
+    /// fallback that mirrors the artifact geometry without PJRT).
+    pub fn from_surfaces(
+        nb: usize,
+        ns: usize,
+        s_stride: u32,
+        prefill: Vec<f64>,
+        decode_step: Vec<f64>,
+    ) -> GridLatencyModel {
+        assert_eq!(prefill.len(), nb * ns);
+        assert_eq!(decode_step.len(), nb * ns);
+        let mut g = GridLatencyModel {
+            nb,
+            ns,
+            s_stride,
+            prefill,
+            decode_step,
+            decode_cum: Vec::new(),
+            s_max: ns as u32 * s_stride,
+        };
+        g.build_decode_cum();
+        g
+    }
+
+    fn build_decode_cum(&mut self) {
+        let s_max = self.s_max as usize;
+        let mut cum = Vec::with_capacity(self.nb);
+        for b in 1..=self.nb as u32 {
+            let mut row = Vec::with_capacity(s_max + 1);
+            row.push(0.0);
+            let mut acc = 0.0;
+            for ctx in 1..=s_max as u32 {
+                acc += self.interp_row(&self.decode_step, b, ctx);
+                row.push(acc);
+            }
+            cum.push(row);
+        }
+        self.decode_cum = cum;
+    }
+
+    #[inline]
+    fn clamp_b(&self, b: u32) -> usize {
+        (b.max(1) as usize).min(self.nb) - 1
+    }
+
+    /// Linear interpolation along the sequence axis of a row-major surface.
+    #[inline]
+    fn interp_row(&self, surface: &[f64], b: u32, s: u32) -> f64 {
+        let bi = self.clamp_b(b);
+        let row = &surface[bi * self.ns..(bi + 1) * self.ns];
+        let stride = self.s_stride as f64;
+        let pos = s as f64 / stride; // grid point i holds s = (i+1)*stride
+        if pos <= 1.0 {
+            // Below the first grid point: scale down linearly (time ~ s for
+            // small s; avoids overcharging tiny contexts).
+            return row[0] * (s as f64 / stride).max(1.0 / stride);
+        }
+        let idx = pos - 1.0;
+        let lo = idx.floor() as usize;
+        if lo + 1 >= self.ns {
+            return row[self.ns - 1];
+        }
+        let frac = idx - lo as f64;
+        row[lo] * (1.0 - frac) + row[lo + 1] * frac
+    }
+
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    pub fn s_max(&self) -> u32 {
+        self.s_max
+    }
+}
+
+impl LatencyModel for GridLatencyModel {
+    fn prefill_time(&self, b: u32, s: u32) -> f64 {
+        self.interp_row(&self.prefill, b, s.min(self.s_max))
+    }
+
+    fn decode_step_time(&self, b: u32, ctx: u32) -> f64 {
+        self.interp_row(&self.decode_step, b, ctx.min(self.s_max))
+    }
+
+    fn decode_span_exact(&self, b: u32, s: u32, s_plus: u32) -> f64 {
+        let bi = self.clamp_b(b);
+        let cum = &self.decode_cum[bi];
+        let end = ((s + s_plus) as usize).min(cum.len() - 1);
+        let start = (s as usize).min(cum.len() - 1);
+        cum[end] - cum[start]
+    }
+}
+
+/// Resolve the artifacts directory: `$BESTSERVE_ARTIFACTS` or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("BESTSERVE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny synthetic surface: prefill(b,s) = b·s, step(b,ctx) = b + ctx.
+    fn toy() -> GridLatencyModel {
+        let (nb, ns, stride) = (4usize, 8usize, 4u32);
+        let mut prefill = Vec::new();
+        let mut step = Vec::new();
+        for b in 1..=nb as u32 {
+            for i in 1..=ns as u32 {
+                let s = (i * stride) as f64;
+                prefill.push(b as f64 * s);
+                step.push(b as f64 + s);
+            }
+        }
+        GridLatencyModel::from_surfaces(nb, ns, stride, prefill, step)
+    }
+
+    #[test]
+    fn exact_grid_points() {
+        let g = toy();
+        assert_eq!(g.prefill_time(2, 8), 16.0);
+        assert_eq!(g.decode_step_time(3, 16), 19.0);
+    }
+
+    #[test]
+    fn interpolation_between_points() {
+        let g = toy();
+        // s=10 between grid s=8 (8) and s=12 (12) for b=1: expect 10.
+        assert!((g.prefill_time(1, 10) - 10.0).abs() < 1e-9);
+        assert!((g.decode_step_time(1, 10) - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamping_beyond_edges() {
+        let g = toy();
+        // b beyond nb clamps to nb=4.
+        assert_eq!(g.prefill_time(100, 8), g.prefill_time(4, 8));
+        // s beyond s_max clamps to last grid point.
+        assert_eq!(g.prefill_time(1, 10_000), g.prefill_time(1, 32));
+    }
+
+    #[test]
+    fn decode_cum_matches_naive_sum() {
+        let g = toy();
+        for (b, s, s_plus) in [(1u32, 4u32, 8u32), (2, 8, 12), (4, 1, 20)] {
+            let fast = g.decode_span_exact(b, s, s_plus);
+            let slow: f64 = (1..=s_plus).map(|k| g.decode_step_time(b, s + k)).sum();
+            assert!(
+                (fast - slow).abs() / slow < 1e-9,
+                "b={b} s={s} s+={s_plus}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_s_scales_down() {
+        let g = toy();
+        // Below the first grid point (stride 4), time shrinks linearly.
+        assert!(g.prefill_time(1, 1) < g.prefill_time(1, 4));
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime bridge to the AOT-compiled python/JAX/Pallas artifacts: a PJRT
+//! CPU client (via the `xla` crate) that loads HLO text, compiles it once,
+//! and serves the latency surface to the simulators. See DESIGN.md §2.
+
+pub mod grid;
+pub mod pjrt;
+
+pub use grid::{default_artifacts_dir, GridLatencyModel, GridManifest};
+pub use pjrt::PjrtExecutable;

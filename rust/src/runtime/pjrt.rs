@@ -1,0 +1,74 @@
+//! PJRT execution of AOT-compiled artifacts (L3 ↔ L1/L2 bridge).
+//!
+//! The python/JAX/Pallas layer lowers the latency-surface model ONCE at
+//! build time to HLO *text* (`artifacts/latency_grid.hlo.txt`; text rather
+//! than a serialized proto because jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects — the text parser reassigns them).
+//! This module loads the text, compiles it on the PJRT CPU client, and
+//! executes it with runtime inputs. Python never runs on the request path.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A compiled PJRT executable with f32 I/O, wrapping the `xla` crate.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    platform: String,
+}
+
+impl PjrtExecutable {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PjrtExecutable> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::runtime(format!(
+                "artifact '{}' not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT CPU client: {e}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::runtime(format!("parse '{}': {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile '{}': {e}", path.display())))?;
+        Ok(PjrtExecutable { exe, platform: client.platform_name() })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Execute with f32 vector inputs (each given as flat data + dims) and
+    /// return every output as a flat f32 vector. The artifact is lowered
+    /// with `return_tuple=True`, so the single result literal is a tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| Error::runtime(format!("reshape input: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| Error::runtime(format!("read output: {e}")))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,403 @@
+//! §3.4.4 — the collocation simulator, mimicking vLLM's scheduler semantics
+//! (Algorithms 4–7): (a) prefills are prioritized, (b) prefill and decode
+//! are never batched together. Each instance carries a status flag
+//! (prefill/decode), decode *boxes* (continuous-batching slots), and a
+//! pending-resume time; incoming prefills suspend ongoing decodes, shifting
+//! their completion times, and consecutive prefills delay the resumption
+//! further (the paper's resume-queue `S` with re-sorting — realized here as
+//! a per-instance `resume_at`, applied with prefill-first priority).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{Platform, Strategy};
+use crate::error::{Error, Result};
+use crate::estimator::LatencyModel;
+use crate::util::rng::Rng;
+
+use super::metrics::{RequestOutcome, SimReport};
+use super::params::{SimParams, SpanMode};
+use super::request::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Prefill,
+    Decode,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BoxState {
+    /// Time the box frees; <= t means free.
+    until: f64,
+    /// Request occupying the box (for completion shifts on suspension).
+    req: usize,
+}
+
+struct Instance {
+    status: Status,
+    prefill_until: f64,
+    resume_at: f64,
+    boxes: Vec<BoxState>,
+}
+
+impl Instance {
+    fn new(bmax_decode: u32) -> Instance {
+        Instance {
+            status: Status::Decode,
+            prefill_until: 0.0,
+            resume_at: f64::INFINITY,
+            boxes: vec![BoxState { until: 0.0, req: usize::MAX }; bmax_decode as usize],
+        }
+    }
+
+    /// Algorithm 5 — availability of this instance for an incoming event.
+    fn idle_for_prefill(&self, t: f64) -> bool {
+        match self.status {
+            // Prefill prioritization: a decoding instance always accepts.
+            Status::Decode => true,
+            Status::Prefill => self.prefill_until <= t,
+        }
+    }
+
+    fn idle_for_decode(&self, t: f64) -> bool {
+        let box_free = self.boxes.iter().any(|b| b.until <= t);
+        match self.status {
+            Status::Decode => box_free,
+            Status::Prefill => self.prefill_until <= t && box_free,
+        }
+    }
+
+    fn busy_boxes(&self, t: f64) -> u32 {
+        self.boxes.iter().filter(|b| b.until > t).count() as u32
+    }
+}
+
+/// An ordered float for the decode-ready heap.
+#[derive(PartialEq, PartialOrd)]
+struct F64Ord(f64);
+impl Eq for F64Ord {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+pub struct CollocSimulator<'a> {
+    pub model: &'a dyn LatencyModel,
+    pub platform: &'a Platform,
+    pub n_instances: usize,
+    pub bmax_prefill: u32,
+    pub bmax_decode: u32,
+    pub params: SimParams,
+}
+
+impl<'a> CollocSimulator<'a> {
+    pub fn from_strategy(
+        model: &'a dyn LatencyModel,
+        platform: &'a Platform,
+        strategy: &Strategy,
+        params: SimParams,
+    ) -> Result<CollocSimulator<'a>> {
+        match strategy.arch {
+            crate::config::Architecture::Collocation { m } => Ok(CollocSimulator {
+                model,
+                platform,
+                n_instances: m as usize,
+                bmax_prefill: strategy.bmax_prefill,
+                bmax_decode: strategy.bmax_decode,
+                params,
+            }),
+            _ => Err(Error::config("strategy is not collocated")),
+        }
+    }
+
+    fn span(&self, b_eff: u32, s: u32, s_plus: u32) -> f64 {
+        match self.params.span_mode {
+            SpanMode::PaperHeuristic => self.model.decode_span(b_eff, s, s_plus),
+            SpanMode::Exact => self.model.decode_span_exact(b_eff, s, s_plus),
+        }
+    }
+
+    /// Run Algorithms 4–7 over a workload sorted by arrival.
+    pub fn run(&self, reqs: &[Request]) -> SimReport {
+        assert!(!reqs.is_empty());
+        assert!(self.n_instances > 0);
+        let n = reqs.len();
+        let mut rng = Rng::new(self.params.seed);
+        let mut instances: Vec<Instance> =
+            (0..self.n_instances).map(|_| Instance::new(self.bmax_decode)).collect();
+        let mut order: Vec<usize> = (0..self.n_instances).collect();
+
+        let mut d1 = vec![f64::INFINITY; n]; // prefill departures
+        let mut completion = vec![f64::INFINITY; n];
+        // Decode queue keyed by readiness (= prefill departure).
+        let mut decode_q: BinaryHeap<Reverse<(F64Ord, usize)>> = BinaryHeap::new();
+        let mut next_p = 0usize; // head of the un-prefilled FIFO
+        let mut inserted = 0usize; // decodes placed into boxes
+        let mut t = 0.0f64;
+
+        while next_p < n || inserted < n {
+            // --- Algorithm 6: prefill processing (highest priority) -------
+            if next_p < n && reqs[next_p].arrival <= t {
+                rng.shuffle(&mut order);
+                if let Some(&i) = order.iter().find(|&&i| instances[i].idle_for_prefill(t)) {
+                    // BATCH(P, A, bmax, t)
+                    let start = next_p;
+                    let mut s_max = 0u32;
+                    while next_p < n
+                        && (next_p - start) < self.bmax_prefill as usize
+                        && reqs[next_p].arrival <= t
+                    {
+                        s_max = s_max.max(reqs[next_p].input_len);
+                        next_p += 1;
+                    }
+                    let b = (next_p - start) as u32;
+                    let t_b = self.model.prefill_time(b, s_max);
+                    for r in start..next_p {
+                        d1[r] = t + t_b;
+                        decode_q.push(Reverse((F64Ord(t + t_b), r)));
+                    }
+                    let inst = &mut instances[i];
+                    // Suspend (status decode) or further delay (status
+                    // prefill) the ongoing decodes — Alg. 6 lines 13–18.
+                    for bx in inst.boxes.iter_mut().filter(|b| b.until > t) {
+                        bx.until += t_b;
+                        if bx.req != usize::MAX {
+                            completion[bx.req] += t_b;
+                        }
+                    }
+                    match inst.status {
+                        Status::Decode => {
+                            inst.status = Status::Prefill;
+                            inst.resume_at = t + t_b;
+                        }
+                        Status::Prefill => {
+                            if inst.resume_at.is_finite() {
+                                inst.resume_at = t + t_b;
+                            }
+                        }
+                    }
+                    inst.prefill_until = t + t_b;
+                    continue; // re-evaluate from the top (process once, exit)
+                }
+            }
+
+            // --- Algorithm 4 lines 13–16: due resumptions -----------------
+            let mut resumed = false;
+            for inst in instances.iter_mut() {
+                if inst.resume_at <= t {
+                    inst.status = Status::Decode;
+                    inst.resume_at = f64::INFINITY;
+                    resumed = true;
+                }
+            }
+            if resumed {
+                continue;
+            }
+
+            // --- Algorithm 7: decode processing ---------------------------
+            if let Some(&Reverse((F64Ord(ready), r))) = decode_q.peek() {
+                if ready <= t {
+                    rng.shuffle(&mut order);
+                    if let Some(&i) =
+                        order.iter().find(|&&i| instances[i].idle_for_decode(t))
+                    {
+                        decode_q.pop();
+                        let inst = &mut instances[i];
+                        let busy = inst.busy_boxes(t);
+                        let b_eff = self.params.pseudo_batch(busy);
+                        let req = &reqs[r];
+                        let span = self.span(b_eff, req.input_len, req.gen_len);
+                        let j = inst.boxes.iter().position(|b| b.until <= t).unwrap();
+                        inst.boxes[j] = BoxState { until: t + span, req: r };
+                        if inst.status == Status::Prefill {
+                            // Prefill finished, no pending resume: flip.
+                            inst.status = Status::Decode;
+                        }
+                        completion[r] = t + span;
+                        inserted += 1;
+                        continue;
+                    }
+                }
+            }
+
+            // --- Advance to the next event --------------------------------
+            let mut t_next = f64::INFINITY;
+            if next_p < n && reqs[next_p].arrival > t {
+                t_next = t_next.min(reqs[next_p].arrival);
+            }
+            if let Some(&Reverse((F64Ord(ready), _))) = decode_q.peek() {
+                if ready > t {
+                    t_next = t_next.min(ready);
+                }
+            }
+            for inst in &instances {
+                if inst.prefill_until > t {
+                    t_next = t_next.min(inst.prefill_until);
+                }
+                if inst.resume_at > t && inst.resume_at.is_finite() {
+                    t_next = t_next.min(inst.resume_at);
+                }
+                for bx in &inst.boxes {
+                    if bx.until > t {
+                        t_next = t_next.min(bx.until);
+                    }
+                }
+            }
+            assert!(
+                t_next.is_finite() && t_next > t,
+                "collocation simulator stalled at t={t} (next_p={next_p}/{n}, inserted={inserted})"
+            );
+            t = t_next;
+        }
+
+        let outcomes: Vec<RequestOutcome> = reqs
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| RequestOutcome {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: d1[idx],
+                decode_start: d1[idx],
+                completion: completion[idx],
+                gen_len: r.gen_len,
+            })
+            .collect();
+        SimReport::from_outcomes(&outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::simulator::request::generate_workload;
+    use crate::simulator::testutil::ConstModel;
+
+    fn platform() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    fn sim<'a>(m: &'a dyn LatencyModel, p: &'a Platform, inst: usize) -> CollocSimulator<'a> {
+        CollocSimulator {
+            model: m,
+            platform: p,
+            n_instances: inst,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            params: SimParams::default(),
+        }
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 1);
+        let reqs = vec![Request { id: 0, arrival: 1.0, input_len: 128, gen_len: 10 }];
+        let rep = s.run(&reqs);
+        // TTFT = 0.5; decode span = 10 * 0.01 = 0.1 -> TPOT 0.01.
+        assert!((rep.ttft.p50 - 0.5).abs() < 1e-9, "{}", rep.ttft.p50);
+        assert!((rep.tpot.p50 - 0.01).abs() < 1e-9, "{}", rep.tpot.p50);
+    }
+
+    #[test]
+    fn prefill_interrupts_decode() {
+        let m = ConstModel { prefill: 1.0, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 1);
+        // Request 0 decodes for 1 s (100 tokens); request 1 arrives mid-way
+        // and suspends it, adding its prefill time to request 0's completion.
+        let reqs = vec![
+            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100 },
+            Request { id: 1, arrival: 1.5, input_len: 64, gen_len: 1 },
+        ];
+        let rep = s.run(&reqs);
+        // Req 0: prefill [0,1], decode [1, 2] without interference; req 1's
+        // prefill at 1.5 suspends it for 1 s -> completion 3.0, TPOT 0.02.
+        assert!((rep.tpots[0] - 0.02).abs() < 1e-9, "{}", rep.tpots[0]);
+        // Req 1 TTFT: 1.0 (no queueing — suspension makes room immediately).
+        assert!((rep.ttfts[1] - 1.0).abs() < 1e-9, "{}", rep.ttfts[1]);
+    }
+
+    #[test]
+    fn consecutive_prefills_delay_resumption_repeatedly() {
+        let m = ConstModel { prefill: 1.0, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 1);
+        let mut reqs = vec![Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100 }];
+        // Two more prefills arrive back-to-back during the decode.
+        reqs.push(Request { id: 1, arrival: 1.2, input_len: 64, gen_len: 1 });
+        reqs.push(Request { id: 2, arrival: 2.4, input_len: 64, gen_len: 1 });
+        let rep = s.run(&reqs);
+        // Request 0's decode is pushed by both prefills: span 1 + 2 = 3 s.
+        assert!((rep.tpots[0] - 0.03).abs() < 1e-9, "{}", rep.tpots[0]);
+    }
+
+    #[test]
+    fn no_mixed_batches_decode_waits_for_prefill() {
+        let m = ConstModel { prefill: 1.0, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 1);
+        // Both arrive together: prefill batch [0,1] -> both decode after 1 s.
+        let reqs = vec![
+            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 10 },
+            Request { id: 1, arrival: 0.0, input_len: 64, gen_len: 10 },
+        ];
+        let rep = s.run(&reqs);
+        assert!((rep.ttfts[0] - 1.0).abs() < 1e-9);
+        assert!((rep.ttfts[1] - 1.0).abs() < 1e-9);
+        // Decodes start only at t=1 and run concurrently in boxes.
+        assert!((rep.tpots[0] - 0.01).abs() < 1e-9, "{}", rep.tpots[0]);
+    }
+
+    #[test]
+    fn conservation_under_load() {
+        let m = ConstModel { prefill: 0.05, step: 0.0005 };
+        let p = platform();
+        let s = sim(&m, &p, 2);
+        let sc = Scenario::fixed("t", 256, 32, 800);
+        let rep = s.run(&generate_workload(&sc, 8.0, 6));
+        assert_eq!(rep.n, 800);
+        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+
+    #[test]
+    fn colloc_tpot_degrades_vs_disagg_under_prefill_pressure() {
+        // The paper's Table 4 vs Table 5 contrast: at the same request rate
+        // and GPU count, collocation's prefill prioritization wrecks TPOT
+        // while disaggregation holds it low.
+        use crate::simulator::disagg::DisaggSimulator;
+        let m = ConstModel { prefill: 0.4, step: 0.002 };
+        let p = platform();
+        let sc = Scenario::fixed("t", 2048, 64, 500);
+        let reqs = generate_workload(&sc, 3.5, 7);
+        let colloc = sim(&m, &p, 2).run(&reqs);
+        let disagg = DisaggSimulator {
+            model: &m,
+            platform: &p,
+            p_instances: 1,
+            d_instances: 1,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            params: SimParams { kv_transfer: false, ..SimParams::default() },
+        }
+        .run(&reqs);
+        assert!(
+            colloc.tpot.p90 > 2.0 * disagg.tpot.p90,
+            "colloc {} vs disagg {}",
+            colloc.tpot.p90,
+            disagg.tpot.p90
+        );
+    }
+
+    #[test]
+    fn from_strategy_rejects_disagg() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        let st = Strategy::disaggregation(1, 1, 4);
+        assert!(CollocSimulator::from_strategy(&m, &p, &st, SimParams::default()).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving metrics (§2.3): TTFT / TPOT samples, their percentile summaries
+//! (the panels of Tables 4b/5b), and the histogram data behind Figures 6/8.
+
+use crate::util::stats::{Histogram, Summary};
+
+/// Per-request outcome of a simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub arrival: f64,
+    /// Prefill departure (first token) time.
+    pub first_token: f64,
+    /// Decode-stage arrival (= first_token + KV transfer in disagg).
+    pub decode_start: f64,
+    /// Final token time.
+    pub completion: f64,
+    pub gen_len: u32,
+}
+
+impl RequestOutcome {
+    /// Time to first token: arrival → first token (§2.3).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// End-to-end request latency: arrival → final token. Unlike TTFT/TPOT
+    /// this sees the disaggregation KV hand-off cost.
+    pub fn e2e(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Time per output token: the average latency between subsequent token
+    /// generations — (completion − decode start) / s_+, queueing included.
+    pub fn tpot(&self) -> f64 {
+        (self.completion - self.decode_start) / self.gen_len.max(1) as f64
+    }
+}
+
+/// Aggregated simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n: usize,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    /// End-to-end (arrival -> completion) latency summary.
+    pub e2e: Summary,
+    /// Completed requests per second over the makespan.
+    pub throughput: f64,
+    /// Last completion time.
+    pub makespan: f64,
+    pub ttfts: Vec<f64>,
+    pub tpots: Vec<f64>,
+}
+
+impl SimReport {
+    pub fn from_outcomes(outcomes: &[RequestOutcome]) -> SimReport {
+        assert!(!outcomes.is_empty(), "no outcomes to report");
+        let ttfts: Vec<f64> = outcomes.iter().map(RequestOutcome::ttft).collect();
+        let tpots: Vec<f64> = outcomes.iter().map(RequestOutcome::tpot).collect();
+        let e2es: Vec<f64> = outcomes.iter().map(RequestOutcome::e2e).collect();
+        let makespan = outcomes
+            .iter()
+            .map(|o| o.completion)
+            .fold(f64::NEG_INFINITY, f64::max);
+        SimReport {
+            n: outcomes.len(),
+            ttft: Summary::from(&ttfts),
+            tpot: Summary::from(&tpots),
+            e2e: Summary::from(&e2es),
+            throughput: outcomes.len() as f64 / makespan,
+            makespan,
+            ttfts,
+            tpots,
+        }
+    }
+
+    /// Percentile of the TTFT sample (q in [0, 100]).
+    pub fn ttft_pct(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.ttfts, q)
+    }
+
+    pub fn tpot_pct(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.tpots, q)
+    }
+
+    /// The Figure 6/8 histograms (TTFT and TPOT, milliseconds).
+    pub fn histograms(&self, bins: usize) -> (Histogram, Histogram) {
+        let ms = |v: &[f64]| v.iter().map(|x| x * 1e3).collect::<Vec<_>>();
+        (
+            Histogram::from(&ms(&self.ttfts), bins),
+            Histogram::from(&ms(&self.tpots), bins),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: usize, arrival: f64, ft: f64, ds: f64, done: f64, g: u32) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            arrival,
+            first_token: ft,
+            decode_start: ds,
+            completion: done,
+            gen_len: g,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_definitions() {
+        let o = outcome(0, 1.0, 1.5, 1.6, 4.8, 64);
+        assert!((o.ttft() - 0.5).abs() < 1e-12);
+        assert!((o.tpot() - 3.2 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let outs: Vec<RequestOutcome> = (0..100)
+            .map(|i| {
+                let t = i as f64;
+                outcome(i, t, t + 0.2, t + 0.25, t + 2.25, 10)
+            })
+            .collect();
+        let r = SimReport::from_outcomes(&outs);
+        assert_eq!(r.n, 100);
+        assert!((r.ttft.p90 - 0.2).abs() < 1e-9);
+        assert!((r.tpot.p90 - 0.2).abs() < 1e-9);
+        assert!((r.e2e.p50 - 2.25).abs() < 1e-9);
+        assert!((r.makespan - 101.25).abs() < 1e-9);
+        assert!((r.throughput - 100.0 / 101.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_gen_len_guard() {
+        let o = outcome(0, 0.0, 0.1, 0.1, 0.2, 0);
+        assert!(o.tpot().is_finite());
+    }
+
+    #[test]
+    fn histograms_in_ms() {
+        let outs = vec![outcome(0, 0.0, 0.5, 0.5, 1.5, 10); 10];
+        let r = SimReport::from_outcomes(&outs);
+        let (h_ttft, _h_tpot) = r.histograms(5);
+        assert_eq!(h_ttft.counts.iter().sum::<u64>(), 10);
+        // 0.5 s = 500 ms falls inside the range.
+        assert!(h_ttft.lo <= 500.0 && 500.0 <= h_ttft.hi);
+    }
+}

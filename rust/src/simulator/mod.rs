@@ -1,0 +1,156 @@
+//! The **Simulator** (§3.4) — middle layer of BestServe: discrete-event
+//! simulation of request arrival, batching and departure under the two
+//! architectures. Prefill stage (Algorithm 2), decode stage with boxes and
+//! the pseudo-batch heuristic (Algorithm 3), the disaggregation tandem
+//! (§3.4.3) and the vLLM-mimicking collocation simulator (Algorithms 4–7).
+
+pub mod colloc;
+pub mod decode;
+pub mod disagg;
+pub mod metrics;
+pub mod params;
+pub mod prefill;
+pub mod request;
+pub mod trace;
+#[cfg(test)]
+pub mod testutil;
+
+pub use colloc::CollocSimulator;
+pub use decode::{DecodeItem, DecodeOutcome, DecodeStage};
+pub use disagg::DisaggSimulator;
+pub use metrics::{RequestOutcome, SimReport};
+pub use params::{SimParams, SpanMode};
+pub use prefill::PrefillStage;
+pub use request::{generate_workload, Request};
+pub use trace::{load_trace, save_trace};
+
+use crate::config::{Architecture, Platform, Scenario, Strategy};
+use crate::error::Result;
+use crate::estimator::LatencyModel;
+
+/// Simulate one strategy at one arrival rate — the `SIMULATE(λ)` call of
+/// Algorithm 9. Dispatches on the architecture; the latency model must have
+/// been built for `strategy.tp`.
+pub fn simulate(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    rate: f64,
+    params: SimParams,
+) -> Result<SimReport> {
+    let reqs = generate_workload(scenario, rate, params.seed);
+    match strategy.arch {
+        Architecture::Collocation { .. } => {
+            Ok(CollocSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+        }
+        Architecture::Disaggregation { .. } => {
+            Ok(DisaggSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+        }
+    }
+}
+
+/// Repeat `simulate` with different seeds and average the P90s — the
+/// variance-reduction protocol of Figure 10b.
+pub fn simulate_averaged(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    rate: f64,
+    params: SimParams,
+    repeats: usize,
+) -> Result<(f64, f64)> {
+    assert!(repeats > 0);
+    let mut ttft_sum = 0.0;
+    let mut tpot_sum = 0.0;
+    for k in 0..repeats {
+        let p = SimParams {
+            seed: params.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            ..params
+        };
+        let rep = simulate(model, platform, strategy, scenario, rate, p)?;
+        ttft_sum += rep.ttft.p90;
+        tpot_sum += rep.tpot.p90;
+    }
+    Ok((ttft_sum / repeats as f64, tpot_sum / repeats as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::testutil::ConstModel;
+
+    #[test]
+    fn simulate_dispatches_on_architecture() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let sc = Scenario::fixed("t", 256, 16, 100);
+        let colloc = simulate(
+            &m,
+            &p,
+            &Strategy::collocation(2, 4),
+            &sc,
+            1.0,
+            SimParams::default(),
+        )
+        .unwrap();
+        let disagg = simulate(
+            &m,
+            &p,
+            &Strategy::disaggregation(1, 1, 4),
+            &sc,
+            1.0,
+            SimParams::default(),
+        )
+        .unwrap();
+        assert_eq!(colloc.n, 100);
+        assert_eq!(disagg.n, 100);
+    }
+
+    #[test]
+    fn averaged_reduces_variance() {
+        let m = ConstModel { prefill: 0.2, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let sc = Scenario::fixed("t", 256, 16, 200);
+        let st = Strategy::disaggregation(1, 1, 4);
+        // Collect one-shot P90 TTFTs across seeds vs 3-run averages.
+        let singles: Vec<f64> = (0..8)
+            .map(|k| {
+                simulate(
+                    &m,
+                    &p,
+                    &st,
+                    &sc,
+                    3.0,
+                    SimParams { seed: 1000 + k, ..SimParams::default() },
+                )
+                .unwrap()
+                .ttft
+                .p90
+            })
+            .collect();
+        let averaged: Vec<f64> = (0..8)
+            .map(|k| {
+                simulate_averaged(
+                    &m,
+                    &p,
+                    &st,
+                    &sc,
+                    3.0,
+                    SimParams { seed: 2000 + k, ..SimParams::default() },
+                    3,
+                )
+                .unwrap()
+                .0
+            })
+            .collect();
+        let var = |xs: &[f64]| crate::util::stats::variance(xs);
+        assert!(
+            var(&averaged) < var(&singles) * 1.05,
+            "averaged {} vs single {}",
+            var(&averaged),
+            var(&singles)
+        );
+    }
+}

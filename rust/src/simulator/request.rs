@@ -1,0 +1,78 @@
+//! Requests and workload generation: Poisson arrivals (§4.1 "arrival times
+//! sampled from a Poisson process") with per-request input/generation
+//! lengths drawn from the scenario's distributions.
+
+use crate::config::Scenario;
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time, seconds from simulation start.
+    pub arrival: f64,
+    /// Input (prompt) length `s`.
+    pub input_len: u32,
+    /// Generation length `s_+`.
+    pub gen_len: u32,
+}
+
+/// Generate `scenario.n_requests` requests with Poisson-process arrivals at
+/// `rate` requests/second. Deterministic in `seed`.
+pub fn generate_workload(scenario: &Scenario, rate: f64, seed: u64) -> Vec<Request> {
+    assert!(rate > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let arrivals = rng.poisson_arrivals(rate, scenario.n_requests);
+    arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(id, arrival)| Request {
+            id,
+            arrival,
+            input_len: scenario.input_len.sample(&mut rng).max(1) as u32,
+            gen_len: scenario.gen_len.sample(&mut rng).max(1) as u32,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LengthDist;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let sc = Scenario::op2();
+        let a = generate_workload(&sc, 3.5, 42);
+        let b = generate_workload(&sc, 3.5, 42);
+        assert_eq!(a, b);
+        let c = generate_workload(&sc, 3.5, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_sorted_rate_ok() {
+        let sc = Scenario::fixed("x", 128, 16, 20_000);
+        let w = generate_workload(&sc, 5.0, 7);
+        assert_eq!(w.len(), 20_000);
+        assert!(w.windows(2).all(|p| p[0].arrival <= p[1].arrival));
+        let rate = w.len() as f64 / w.last().unwrap().arrival;
+        assert!((rate - 5.0).abs() < 0.2, "rate {rate}");
+        assert!(w.iter().all(|r| r.input_len == 128 && r.gen_len == 16));
+    }
+
+    #[test]
+    fn variable_lengths_sampled() {
+        let sc = Scenario {
+            name: "var".into(),
+            input_len: LengthDist::Uniform { lo: 100, hi: 200 },
+            gen_len: LengthDist::Uniform { lo: 10, hi: 20 },
+            n_requests: 1000,
+        };
+        let w = generate_workload(&sc, 1.0, 3);
+        assert!(w.iter().all(|r| (100..=200).contains(&r.input_len)));
+        assert!(w.iter().all(|r| (10..=20).contains(&r.gen_len)));
+        // Not all identical.
+        assert!(w.iter().any(|r| r.input_len != w[0].input_len));
+    }
+}

@@ -1,0 +1,39 @@
+//! Tiny latency models for simulator unit tests.
+
+use crate::estimator::LatencyModel;
+
+/// Constant-time model: batch-size- and length-insensitive.
+pub struct ConstModel {
+    /// prefill_time(b, s) for any arguments.
+    pub prefill: f64,
+    /// decode_step_time(b, ctx) for any arguments.
+    pub step: f64,
+}
+
+impl LatencyModel for ConstModel {
+    fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+        self.prefill
+    }
+
+    fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+        self.step
+    }
+}
+
+/// Affine model: prefill = a·b·s, step = c·b + d·ctx. Exercises batch- and
+/// context-sensitivity without the full roofline machinery.
+pub struct AffineModel {
+    pub prefill_per_token: f64,
+    pub step_per_batch: f64,
+    pub step_per_ctx: f64,
+}
+
+impl LatencyModel for AffineModel {
+    fn prefill_time(&self, b: u32, s: u32) -> f64 {
+        self.prefill_per_token * b as f64 * s as f64
+    }
+
+    fn decode_step_time(&self, b: u32, ctx: u32) -> f64 {
+        self.step_per_batch * b as f64 + self.step_per_ctx * ctx as f64
+    }
+}

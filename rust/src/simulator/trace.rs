@@ -1,0 +1,154 @@
+//! Workload trace I/O: persist generated workloads and replay external
+//! traces (CSV: `id,arrival_s,input_len,gen_len`). This is how real request
+//! logs (e.g. production arrival timestamps, the paper's "patterns of
+//! requests") are fed to the Simulator/Testbed instead of synthetic Poisson
+//! traffic.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::csv::Csv;
+
+use super::request::Request;
+
+/// Save a workload as a replayable CSV trace.
+pub fn save_trace<P: AsRef<Path>>(reqs: &[Request], path: P) -> Result<()> {
+    let mut c = Csv::new(&["id", "arrival_s", "input_len", "gen_len"]);
+    for r in reqs {
+        c.row(&[
+            r.id.to_string(),
+            format!("{}", r.arrival),
+            r.input_len.to_string(),
+            r.gen_len.to_string(),
+        ]);
+    }
+    c.save(path)?;
+    Ok(())
+}
+
+/// Load a workload trace. Requests are re-sorted by arrival (simulators
+/// require FIFO order) and re-numbered densely.
+pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<Request>> {
+    let path = path.as_ref();
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| Error::config(format!("cannot read trace '{}': {e}", path.display())))?;
+    let mut lines = body.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::config("empty trace file"))?;
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    let col = |name: &str| -> Result<usize> {
+        cols.iter()
+            .position(|c| *c == name)
+            .ok_or_else(|| Error::config(format!("trace missing column '{name}'")))
+    };
+    let (ci_arr, ci_in, ci_gen) = (col("arrival_s")?, col("input_len")?, col("gen_len")?);
+    let mut reqs = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let need = ci_arr.max(ci_in).max(ci_gen);
+        if fields.len() <= need {
+            return Err(Error::config(format!(
+                "trace line {}: expected {} columns, got {}",
+                lineno + 2,
+                need + 1,
+                fields.len()
+            )));
+        }
+        let parse_f = |s: &str, what: &str| -> Result<f64> {
+            s.parse()
+                .map_err(|_| Error::config(format!("trace line {}: bad {what} '{s}'", lineno + 2)))
+        };
+        let arrival = parse_f(fields[ci_arr], "arrival_s")?;
+        let input_len = parse_f(fields[ci_in], "input_len")? as u32;
+        let gen_len = parse_f(fields[ci_gen], "gen_len")? as u32;
+        if arrival < 0.0 || input_len == 0 || gen_len == 0 {
+            return Err(Error::config(format!(
+                "trace line {}: arrival must be >= 0 and lengths >= 1",
+                lineno + 2
+            )));
+        }
+        reqs.push(Request { id: 0, arrival, input_len, gen_len });
+    }
+    if reqs.is_empty() {
+        return Err(Error::config("trace contains no requests"));
+    }
+    reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i;
+    }
+    Ok(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::simulator::request::generate_workload;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bestserve_trace_{name}.csv"))
+    }
+
+    #[test]
+    fn roundtrip_preserves_workload() {
+        let reqs = generate_workload(&Scenario::fixed("t", 512, 32, 200), 3.0, 17);
+        let p = tmp("roundtrip");
+        save_trace(&reqs, &p).unwrap();
+        let back = load_trace(&p).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.gen_len, b.gen_len);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unsorted_trace_gets_sorted() {
+        let p = tmp("unsorted");
+        std::fs::write(
+            &p,
+            "id,arrival_s,input_len,gen_len\n0,5.0,100,10\n1,1.0,200,20\n2,3.0,300,30\n",
+        )
+        .unwrap();
+        let reqs = load_trace(&p).unwrap();
+        assert_eq!(reqs[0].arrival, 1.0);
+        assert_eq!(reqs[0].input_len, 200);
+        assert_eq!(reqs[2].arrival, 5.0);
+        assert!(reqs.windows(2).all(|w| w[0].id + 1 == w[1].id));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn column_order_is_flexible() {
+        let p = tmp("cols");
+        std::fs::write(&p, "gen_len,arrival_s,input_len\n8,0.5,64\n").unwrap();
+        let reqs = load_trace(&p).unwrap();
+        assert_eq!(reqs[0].input_len, 64);
+        assert_eq!(reqs[0].gen_len, 8);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn malformed_traces_rejected() {
+        let cases = [
+            ("empty", ""),
+            ("no_data", "id,arrival_s,input_len,gen_len\n"),
+            ("bad_col", "id,arrival,input_len,gen_len\n0,1,2,3\n"),
+            ("bad_num", "id,arrival_s,input_len,gen_len\n0,xyz,2,3\n"),
+            ("neg", "id,arrival_s,input_len,gen_len\n0,-1,2,3\n"),
+            ("short", "id,arrival_s,input_len,gen_len\n0,1.0\n"),
+        ];
+        for (name, body) in cases {
+            let p = tmp(name);
+            std::fs::write(&p, body).unwrap();
+            assert!(load_trace(&p).is_err(), "{name}");
+            std::fs::remove_file(&p).ok();
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Cluster-level testbed: a round-robin router over per-instance engines,
+//! for both architectures. Collocated instances own a request end-to-end;
+//! disaggregated prefill instances hand their KV over a bandwidth-limited
+//! link to round-robin-selected decode instances. This is the "manual
+//! benchmarking on the HPC cluster" substitute (DESIGN.md §Hardware-
+//! Adaptation): same role as the paper's vLLM-Ascend ground truth, driven
+//! by the same latency surface as the simulator but at token granularity.
+
+use crate::config::{Architecture, Platform, Strategy};
+use crate::error::{Error, Result};
+use crate::estimator::LatencyModel;
+use crate::simulator::{Request, RequestOutcome, SimReport};
+
+use super::engine::{Engine, EngineStats, SeqInput};
+use super::kv::BlockManager;
+
+/// KV capacity configuration for the testbed instances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvCapacity {
+    /// Memory never binds (default: matches BestServe's memory-insensitive
+    /// modelling, isolating scheduling effects).
+    Unbounded,
+    /// Fixed number of KV blocks per instance (ablation mode).
+    Blocks(u64),
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TestbedConfig {
+    /// Tokens per KV block (vLLM default 16).
+    pub block_size: u32,
+    pub kv_capacity: KvCapacity,
+    /// Charge the prefill→decode KV transfer in disaggregation.
+    pub kv_transfer: bool,
+}
+
+impl Default for TestbedConfig {
+    fn default() -> Self {
+        TestbedConfig {
+            block_size: 16,
+            kv_capacity: KvCapacity::Unbounded,
+            kv_transfer: true,
+        }
+    }
+}
+
+/// Aggregated testbed run: the same report shape as the simulator plus
+/// engine statistics (for utilization analysis).
+pub struct TestbedReport {
+    pub report: SimReport,
+    pub stats: Vec<EngineStats>,
+}
+
+pub struct Testbed<'a> {
+    pub model: &'a dyn LatencyModel,
+    pub platform: &'a Platform,
+    pub strategy: Strategy,
+    pub config: TestbedConfig,
+}
+
+impl<'a> Testbed<'a> {
+    pub fn new(
+        model: &'a dyn LatencyModel,
+        platform: &'a Platform,
+        strategy: Strategy,
+        config: TestbedConfig,
+    ) -> Testbed<'a> {
+        Testbed { model, platform, strategy, config }
+    }
+
+    fn kv_manager(&self) -> BlockManager {
+        match self.config.kv_capacity {
+            KvCapacity::Unbounded => BlockManager::unbounded(self.config.block_size),
+            KvCapacity::Blocks(n) => BlockManager::new(self.config.block_size, n),
+        }
+    }
+
+    /// KV transfer latency for a prompt of `s` tokens (disagg hand-off).
+    pub fn kv_transfer_time(&self, s: u32) -> f64 {
+        if !self.config.kv_transfer {
+            return 0.0;
+        }
+        let bytes = self.platform.model.kv_bytes_per_token() as f64 * s as f64;
+        bytes / (self.platform.eff.decode.eplus * self.platform.hardware.s_plus_bytes)
+    }
+
+    /// Serve the workload; returns per-request outcomes + engine stats.
+    pub fn run(&self, reqs: &[Request]) -> Result<TestbedReport> {
+        if reqs.is_empty() {
+            return Err(Error::simulation("empty workload"));
+        }
+        match self.strategy.arch {
+            Architecture::Collocation { m } => self.run_colloc(reqs, m as usize),
+            Architecture::Disaggregation { p, d } => {
+                self.run_disagg(reqs, p as usize, d as usize)
+            }
+        }
+    }
+
+    fn run_colloc(&self, reqs: &[Request], m: usize) -> Result<TestbedReport> {
+        // Round-robin assignment at arrival.
+        let mut per_instance: Vec<Vec<SeqInput>> = vec![Vec::new(); m];
+        for (idx, r) in reqs.iter().enumerate() {
+            per_instance[idx % m].push(SeqInput {
+                req: idx,
+                ready: r.arrival,
+                input_len: r.input_len,
+                gen_len: r.gen_len,
+                needs_prefill: true,
+            });
+        }
+        let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
+        let mut stats = Vec::with_capacity(m);
+        for inputs in &per_instance {
+            let mut engine = Engine {
+                model: self.model,
+                bmax_prefill: self.strategy.bmax_prefill,
+                bmax_decode: self.strategy.bmax_decode,
+                kv: self.kv_manager(),
+            };
+            let (outs, st) = engine.run(inputs);
+            stats.push(st);
+            for o in outs {
+                let r = &reqs[o.req];
+                outcomes[o.req] = Some(RequestOutcome {
+                    id: r.id,
+                    arrival: r.arrival,
+                    first_token: o.first_token,
+                    decode_start: o.first_token,
+                    completion: o.completion,
+                    gen_len: r.gen_len,
+                });
+            }
+        }
+        let outcomes: Vec<RequestOutcome> =
+            outcomes.into_iter().map(|o| o.expect("request lost")).collect();
+        Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats })
+    }
+
+    fn run_disagg(&self, reqs: &[Request], p: usize, d: usize) -> Result<TestbedReport> {
+        // Stage 1: prefill instances (gen_len 0 — they only prefill).
+        let mut per_prefill: Vec<Vec<SeqInput>> = vec![Vec::new(); p];
+        for (idx, r) in reqs.iter().enumerate() {
+            per_prefill[idx % p].push(SeqInput {
+                req: idx,
+                ready: r.arrival,
+                input_len: r.input_len,
+                gen_len: 0, // prefill-only: the prefill emits the first token
+                needs_prefill: true,
+            });
+        }
+        let mut first_token = vec![f64::NAN; reqs.len()];
+        let mut stats = Vec::with_capacity(p + d);
+        for inputs in &per_prefill {
+            let mut engine = Engine {
+                model: self.model,
+                bmax_prefill: self.strategy.bmax_prefill,
+                // A prefill instance runs prompts through in batch; its
+                // "decode" capacity is irrelevant (gen_len 1 sequences leave
+                // after the prefill token). Give it the prefill batch size.
+                bmax_decode: self.strategy.bmax_prefill.max(1),
+                kv: self.kv_manager(),
+            };
+            let (outs, st) = engine.run(inputs);
+            stats.push(st);
+            for o in outs {
+                // The single generated token IS the first token; its decode
+                // step is an artifact of modelling gen_len=1 — use the
+                // prefill completion as TTFT.
+                first_token[o.req] = o.first_token;
+            }
+        }
+
+        // Stage 2: KV transfer, then decode instances.
+        let mut handoffs: Vec<(usize, f64)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| (idx, first_token[idx] + self.kv_transfer_time(r.input_len)))
+            .collect();
+        handoffs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut per_decode: Vec<Vec<SeqInput>> = vec![Vec::new(); d];
+        let mut decode_ready = vec![0.0f64; reqs.len()];
+        for (k, &(idx, ready)) in handoffs.iter().enumerate() {
+            let r = &reqs[idx];
+            decode_ready[idx] = ready;
+            per_decode[k % d].push(SeqInput {
+                req: idx,
+                ready,
+                input_len: r.input_len,
+                gen_len: r.gen_len,
+                needs_prefill: false,
+            });
+        }
+        let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
+        for inputs in &per_decode {
+            let mut engine = Engine {
+                model: self.model,
+                bmax_prefill: self.strategy.bmax_decode, // admission width
+                bmax_decode: self.strategy.bmax_decode,
+                kv: self.kv_manager(),
+            };
+            let (outs, st) = engine.run(inputs);
+            stats.push(st);
+            for o in outs {
+                let r = &reqs[o.req];
+                outcomes[o.req] = Some(RequestOutcome {
+                    id: r.id,
+                    arrival: r.arrival,
+                    first_token: first_token[o.req],
+                    decode_start: decode_ready[o.req],
+                    completion: o.completion,
+                    gen_len: r.gen_len,
+                });
+            }
+        }
+        let outcomes: Vec<RequestOutcome> =
+            outcomes.into_iter().map(|o| o.expect("request lost")).collect();
+        Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::simulator::generate_workload;
+    use crate::simulator::testutil::ConstModel;
+
+    fn platform() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    #[test]
+    fn colloc_preserves_all_requests() {
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::collocation(3, 1),
+            TestbedConfig::default(),
+        );
+        let reqs = generate_workload(&Scenario::fixed("t", 256, 16, 500), 8.0, 11);
+        let rep = tb.run(&reqs).unwrap().report;
+        assert_eq!(rep.n, 500);
+        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+
+    #[test]
+    fn disagg_preserves_all_requests_and_orders_stages() {
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::disaggregation(2, 2, 1),
+            TestbedConfig::default(),
+        );
+        let reqs = generate_workload(&Scenario::fixed("t", 256, 16, 400), 8.0, 12);
+        let out = tb.run(&reqs).unwrap();
+        assert_eq!(out.report.n, 400);
+        // Prefill + decode engines all report stats.
+        assert_eq!(out.stats.len(), 4);
+        // TTFT strictly positive, TPOT finite.
+        assert!(out.report.ttft.min > 0.0);
+        assert!(out.report.tpot.max.is_finite());
+    }
+
+    #[test]
+    fn low_load_testbed_matches_service_times() {
+        let m = ConstModel { prefill: 0.2, step: 0.002 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::collocation(1, 1),
+            TestbedConfig::default(),
+        );
+        let reqs = generate_workload(&Scenario::fixed("t", 128, 10, 40), 0.05, 13);
+        let rep = tb.run(&reqs).unwrap().report;
+        // No contention: TTFT == prefill time, TPOT == step time.
+        assert!((rep.ttft.p50 - 0.2).abs() < 1e-6, "{}", rep.ttft.p50);
+        assert!((rep.tpot.p50 - 0.002).abs() < 1e-6, "{}", rep.tpot.p50);
+    }
+
+    #[test]
+    fn kv_transfer_included_when_enabled() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        let on = Testbed::new(
+            &m,
+            &p,
+            Strategy::disaggregation(1, 1, 4),
+            TestbedConfig::default(),
+        );
+        assert!(on.kv_transfer_time(2048) > 0.005);
+        let off = Testbed::new(
+            &m,
+            &p,
+            Strategy::disaggregation(1, 1, 4),
+            TestbedConfig { kv_transfer: false, ..TestbedConfig::default() },
+        );
+        assert_eq!(off.kv_transfer_time(2048), 0.0);
+    }
+
+    #[test]
+    fn bounded_kv_still_completes() {
+        let m = ConstModel { prefill: 0.02, step: 0.0005 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::collocation(1, 1),
+            TestbedConfig {
+                kv_capacity: KvCapacity::Blocks(64), // 1024 tokens
+                ..TestbedConfig::default()
+            },
+        );
+        let reqs = generate_workload(&Scenario::fixed("t", 200, 100, 60), 2.0, 14);
+        let out = tb.run(&reqs).unwrap();
+        assert_eq!(out.report.n, 60);
+    }
+}

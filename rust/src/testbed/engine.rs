@@ -1,0 +1,407 @@
+//! Token-level serving engine for ONE instance — the iteration-granular
+//! continuous-batching loop the BestServe simulator approximates with its
+//! pseudo-batch heuristic. Semantics mirror vLLM's scheduler (§3.4.4):
+//! prefills are prioritized, prefill and decode never share a batch, decode
+//! advances all running sequences by one token per iteration, and paged KV
+//! blocks gate admission (with recompute-preemption when growth fails).
+
+use std::collections::VecDeque;
+
+use crate::estimator::LatencyModel;
+
+use super::kv::BlockManager;
+
+/// A sequence entering this instance.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqInput {
+    /// Caller-side request index.
+    pub req: usize,
+    /// Time the sequence becomes available to this instance.
+    pub ready: f64,
+    pub input_len: u32,
+    pub gen_len: u32,
+    /// True if this instance must run the prefill; false when the sequence
+    /// arrives pre-filled (disaggregated decode instances).
+    pub needs_prefill: bool,
+}
+
+/// Completion record.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqOutcome {
+    pub req: usize,
+    /// Prefill completion on this instance (NaN when `needs_prefill` was
+    /// false — the prefill happened elsewhere).
+    pub first_token: f64,
+    /// When the sequence started decoding here (insertion into the running
+    /// batch).
+    pub decode_start: f64,
+    /// Final-token time.
+    pub completion: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Running {
+    req: usize,
+    ctx: u32,
+    remaining: u32,
+    decode_start: f64,
+    first_token: f64,
+}
+
+/// Engine statistics, for the perf section and scheduler diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub prefill_iterations: u64,
+    pub decode_iterations: u64,
+    pub preemptions: u64,
+    pub busy_time: f64,
+}
+
+pub struct Engine<'a> {
+    pub model: &'a dyn LatencyModel,
+    pub bmax_prefill: u32,
+    /// Maximum running (decode) sequences — vLLM's max_num_seqs.
+    pub bmax_decode: u32,
+    pub kv: BlockManager,
+}
+
+impl<'a> Engine<'a> {
+    /// Run the instance over its assigned sequences (sorted by `ready`).
+    /// Returns outcomes in completion order plus engine statistics.
+    pub fn run(&mut self, inputs: &[SeqInput]) -> (Vec<SeqOutcome>, EngineStats) {
+        debug_assert!(inputs.windows(2).all(|w| w[0].ready <= w[1].ready));
+        let mut stats = EngineStats::default();
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut next = 0usize; // head of the not-yet-arrived inputs
+        // Arrived-but-not-admitted, FIFO: (input index, prompt length
+        // including any recomputed tokens, remaining tokens to generate).
+        let mut waiting: VecDeque<(usize, u32, u32)> = VecDeque::new();
+        let mut running: Vec<Running> = Vec::new();
+        let mut t = 0.0f64;
+
+        loop {
+            // Pull arrivals into the waiting queue.
+            while next < inputs.len() && inputs[next].ready <= t {
+                waiting.push_back((next, inputs[next].input_len, inputs[next].gen_len));
+                next += 1;
+            }
+            let work_left = next < inputs.len() || !waiting.is_empty() || !running.is_empty();
+            if !work_left {
+                break;
+            }
+
+            // --- schedule one iteration (vLLM: prefill first) -------------
+            // Admit up to bmax_prefill waiting sequences whose KV fits and
+            // that respect the running-slot cap.
+            let mut batch: Vec<(usize, u32, u32)> = Vec::new();
+            let mut slots = (self.bmax_decode as usize).saturating_sub(running.len());
+            while batch.len() < self.bmax_prefill as usize && slots > 0 {
+                let Some(&(idx, prompt, remaining)) = waiting.front() else { break };
+                // Admission watermark (vLLM's reserved-blocks rule): beyond
+                // the prompt itself, keep one growth block per runner-to-be
+                // free, or preempted sequences thrash in an admit/evict
+                // livelock and decode never progresses.
+                let headroom = (running.len() + batch.len() + 1) as u64;
+                if self.kv.blocks_for(prompt) + headroom > self.kv.free_blocks() {
+                    break; // head-of-line blocking on memory, like vLLM
+                }
+                self.kv.allocate(prompt);
+                waiting.pop_front();
+                batch.push((idx, prompt, remaining));
+                slots -= 1;
+            }
+
+            if !batch.is_empty() && inputs[batch[0].0].needs_prefill {
+                // Prefill iteration over the batch. (An instance serves
+                // either colloc sequences or pre-filled ones, never both.)
+                debug_assert!(batch.iter().all(|&(idx, _, _)| inputs[idx].needs_prefill));
+                let b = batch.len() as u32;
+                let s_max = batch.iter().map(|&(_, p, _)| p).max().unwrap();
+                let dt = self.model.prefill_time(b, s_max);
+                t += dt;
+                stats.busy_time += dt;
+                stats.prefill_iterations += 1;
+                for (idx, prompt, remaining) in batch {
+                    if remaining == 0 {
+                        // Prefill-only sequence (disagg stage 1): the first
+                        // token is produced by the prefill itself.
+                        self.kv.release(prompt);
+                        out.push(SeqOutcome {
+                            req: inputs[idx].req,
+                            first_token: t,
+                            decode_start: t,
+                            completion: t,
+                        });
+                        continue;
+                    }
+                    running.push(Running {
+                        req: inputs[idx].req,
+                        ctx: prompt,
+                        remaining,
+                        decode_start: t,
+                        first_token: t,
+                    });
+                }
+                continue;
+            } else if !batch.is_empty() {
+                // Pre-filled sequences (disagg decode instance): admission
+                // is immediate, no prefill pass.
+                for (idx, prompt, remaining) in batch {
+                    running.push(Running {
+                        req: inputs[idx].req,
+                        ctx: prompt,
+                        remaining,
+                        decode_start: t,
+                        first_token: f64::NAN,
+                    });
+                }
+                continue;
+            }
+
+            if !running.is_empty() {
+                // Decode iteration: every running sequence emits one token.
+                // Two-phase KV growth: first ensure the WHOLE batch's extra
+                // blocks fit, preempting the youngest runners (vLLM
+                // recompute preemption) until it does; then grow everyone.
+                let extra_blocks = |rs: &[Running], kv: &BlockManager| -> u64 {
+                    rs.iter()
+                        .map(|r| kv.blocks_for(r.ctx + 1) - kv.blocks_for(r.ctx))
+                        .sum()
+                };
+                let mut preempted = false;
+                while extra_blocks(&running, &self.kv) > self.kv.free_blocks()
+                    && running.len() > 1
+                {
+                    // Evict the youngest (last-admitted) runner.
+                    let victim = running.pop().unwrap();
+                    self.kv.release(victim.ctx);
+                    let idx = inputs
+                        .iter()
+                        .position(|s| s.req == victim.req)
+                        .expect("victim must exist");
+                    // Recompute: it re-enters waiting with its full context
+                    // as the new prompt and only the unfinished tail left
+                    // to generate.
+                    waiting.push_front((idx, victim.ctx, victim.remaining));
+                    stats.preemptions += 1;
+                    preempted = true;
+                }
+                if preempted {
+                    continue;
+                }
+                assert!(
+                    extra_blocks(&running, &self.kv) <= self.kv.free_blocks(),
+                    "KV capacity too small for even a single sequence"
+                );
+                for r in running.iter_mut() {
+                    let ok = self.kv.grow(r.ctx, r.ctx + 1);
+                    debug_assert!(ok);
+                    r.ctx += 1;
+                }
+                let b = running.len() as u32;
+                // Batch cost at the mean context (PagedAttention reads each
+                // sequence's true KV length; mean captures the aggregate).
+                let ctx_mean = (running.iter().map(|r| r.ctx as u64).sum::<u64>()
+                    / b as u64) as u32;
+                let dt = self.model.decode_step_time(b, ctx_mean);
+                t += dt;
+                stats.busy_time += dt;
+                stats.decode_iterations += 1;
+                let mut i = 0;
+                while i < running.len() {
+                    running[i].remaining -= 1;
+                    if running[i].remaining == 0 {
+                        let r = running.swap_remove(i);
+                        self.kv.release(r.ctx);
+                        out.push(SeqOutcome {
+                            req: r.req,
+                            first_token: r.first_token,
+                            decode_start: r.decode_start,
+                            completion: t,
+                        });
+                    } else {
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+
+            // Idle: advance to the next arrival.
+            if next < inputs.len() {
+                t = t.max(inputs[next].ready);
+            } else if waiting.is_empty() {
+                break;
+            } else {
+                // Waiting sequences blocked on memory with nothing running:
+                // unrecoverable only if even an empty cache cannot fit them.
+                let (idx, prompt, _) = *waiting.front().unwrap();
+                let _ = idx;
+                assert!(
+                    self.kv.blocks_for(prompt + 1) <= self.kv.total_blocks,
+                    "sequence of {prompt} tokens can never fit in KV capacity"
+                );
+                unreachable!("waiting sequences with free engine should have been admitted");
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::testutil::ConstModel;
+
+    fn seqs(readys: &[f64], s: u32, g: u32, needs_prefill: bool) -> Vec<SeqInput> {
+        readys
+            .iter()
+            .enumerate()
+            .map(|(req, &ready)| SeqInput {
+                req,
+                ready,
+                input_len: s,
+                gen_len: g,
+                needs_prefill,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_sequence_token_accounting() {
+        let m = ConstModel { prefill: 1.0, step: 0.01 };
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            kv: BlockManager::unbounded(16),
+        };
+        let (out, stats) = e.run(&seqs(&[0.0], 128, 10, true));
+        assert_eq!(out.len(), 1);
+        assert!((out[0].first_token - 1.0).abs() < 1e-12);
+        assert!((out[0].completion - 1.1).abs() < 1e-12);
+        assert_eq!(stats.prefill_iterations, 1);
+        assert_eq!(stats.decode_iterations, 10);
+    }
+
+    #[test]
+    fn continuous_batching_joins_mid_decode() {
+        // Second sequence arrives during first's decode; it prefills
+        // (stalling decode — vLLM priority) then both decode together.
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            kv: BlockManager::unbounded(16),
+        };
+        let (out, stats) = e.run(&seqs(&[0.0, 0.7], 64, 100, true));
+        assert_eq!(out.len(), 2);
+        // First's completion pushed past 0.5 + 1.0 decode by the second's
+        // 0.5 s prefill.
+        let first = out.iter().find(|o| o.req == 0).unwrap();
+        assert!(
+            first.completion > 1.9 && first.completion < 2.1,
+            "{}",
+            first.completion
+        );
+        assert_eq!(stats.prefill_iterations, 2);
+        // Decode iterations shared: total 100 + 100 tokens but batched.
+        assert!(stats.decode_iterations < 200, "{}", stats.decode_iterations);
+    }
+
+    #[test]
+    fn no_mixed_batches() {
+        // While a prefill-pending sequence waits, decode does not advance in
+        // the same iteration — verified by iteration counts: with arrivals
+        // saturating prefill, decode iterations only happen between them.
+        let m = ConstModel { prefill: 1.0, step: 0.1 };
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 1,
+            bmax_decode: 4,
+            kv: BlockManager::unbounded(16),
+        };
+        let (out, stats) = e.run(&seqs(&[0.0, 0.0, 0.0], 64, 2, true));
+        assert_eq!(out.len(), 3);
+        assert_eq!(stats.prefill_iterations, 3);
+        assert!(stats.decode_iterations >= 2);
+    }
+
+    #[test]
+    fn decode_only_mode_skips_prefill() {
+        let m = ConstModel { prefill: 99.0, step: 0.01 };
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            kv: BlockManager::unbounded(16),
+        };
+        let (out, stats) = e.run(&seqs(&[0.0], 128, 5, false));
+        assert_eq!(stats.prefill_iterations, 0);
+        assert!(out[0].first_token.is_nan());
+        assert!((out[0].completion - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bmax_decode_caps_admission() {
+        let m = ConstModel { prefill: 0.1, step: 0.01 };
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 8,
+            bmax_decode: 2,
+            kv: BlockManager::unbounded(16),
+        };
+        // 4 sequences, 2 slots: the last two wait for completions.
+        let (out, _) = e.run(&seqs(&[0.0, 0.0, 0.0, 0.0], 64, 50, true));
+        assert_eq!(out.len(), 4);
+        let mut starts: Vec<f64> = out.iter().map(|o| o.decode_start).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(starts[2] > starts[0], "{starts:?}");
+    }
+
+    #[test]
+    fn kv_pressure_triggers_preemption() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        // Tiny cache: 8 blocks * 16 = 128 tokens total.
+        let mut e = Engine {
+            model: &m,
+            bmax_prefill: 4,
+            bmax_decode: 8,
+            kv: BlockManager::new(16, 8),
+        };
+        // Two sequences of 48 prompt + 64 gen: peak demand 2*112 = 224 > 128.
+        let (out, stats) = e.run(&seqs(&[0.0, 0.0], 48, 64, true));
+        assert_eq!(out.len(), 2, "both must eventually complete");
+        assert!(stats.preemptions > 0, "expected preemption under KV pressure");
+    }
+
+    #[test]
+    fn throughput_benefits_from_batching() {
+        // Batched decode with weight-dominated steps (constant cost plus a
+        // small per-sequence term): 8x requests take far less than 8x time.
+        struct WeightDominated;
+        impl crate::estimator::LatencyModel for WeightDominated {
+            fn prefill_time(&self, b: u32, s: u32) -> f64 {
+                1e-5 * b as f64 * s as f64
+            }
+            fn decode_step_time(&self, b: u32, _ctx: u32) -> f64 {
+                0.001 + 1e-4 * b as f64
+            }
+        }
+        let m = WeightDominated;
+        let run = |n: usize| {
+            let mut e = Engine {
+                model: &m,
+                bmax_prefill: 8,
+                bmax_decode: 64,
+                kv: BlockManager::unbounded(16),
+            };
+            let readys = vec![0.0; n];
+            let (out, _) = e.run(&seqs(&readys, 64, 200, true));
+            out.iter().map(|o| o.completion).fold(0.0, f64::max)
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        assert!(t8 < 3.0 * t1, "batching should amortize: {t1} vs {t8}");
+    }
+}

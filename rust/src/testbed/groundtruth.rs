@@ -1,0 +1,139 @@
+//! Ground-truth goodput: the "manual benchmarking" procedure of §4.1,
+//! executed on the token-level testbed — sweep/bisect request rates, check
+//! the P90 SLOs, report the highest feasible rate. This is what Figure 11's
+//! gray "ground truth" bars are in the paper.
+
+use crate::config::{Platform, Scenario, Slo, Strategy};
+use crate::error::Result;
+use crate::estimator::LatencyModel;
+use crate::simulator::generate_workload;
+
+use super::cluster::{Testbed, TestbedConfig};
+
+#[derive(Debug, Clone, Copy)]
+pub struct GroundTruthConfig {
+    /// Bisection tolerance in requests/second. The paper's manual procedure
+    /// tests "a limited number of request rates"; we default coarser than
+    /// the Optimizer's ε to mirror that (and to bound testbed runtime).
+    pub tolerance: f64,
+    pub lambda_min: f64,
+    pub upper_factor: f64,
+    pub testbed: TestbedConfig,
+}
+
+impl Default for GroundTruthConfig {
+    fn default() -> Self {
+        GroundTruthConfig {
+            tolerance: 0.1,
+            lambda_min: 0.1,
+            upper_factor: 1.2,
+            testbed: TestbedConfig::default(),
+        }
+    }
+}
+
+/// Is `rate` feasible on the token-level testbed?
+pub fn testbed_feasible(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    slo: &Slo,
+    cfg: &GroundTruthConfig,
+    rate: f64,
+    seed: u64,
+) -> Result<bool> {
+    let reqs = generate_workload(scenario, rate, seed);
+    let tb = Testbed::new(model, platform, strategy.clone(), cfg.testbed);
+    let rep = tb.run(&reqs)?.report;
+    Ok(slo.feasible(rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile)))
+}
+
+/// Maximum feasible rate on the testbed (same bisection scheme as
+/// Algorithm 8, driven by token-level simulation instead of the
+/// request-level Simulator).
+pub fn testbed_goodput(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    scenario: &Scenario,
+    slo: &Slo,
+    cfg: &GroundTruthConfig,
+    seed: u64,
+) -> Result<f64> {
+    let s = scenario.mean_input().round() as u32;
+    let s_plus = scenario.mean_gen().round().max(1.0) as u32;
+    let t_min = model.prefill_time(1, s) + model.decode_span_exact(1, s, s_plus);
+    let capacity = match strategy.arch {
+        crate::config::Architecture::Collocation { m } => {
+            m as f64 * strategy.bmax_decode.max(strategy.bmax_prefill) as f64
+        }
+        crate::config::Architecture::Disaggregation { p, d } => (p as f64
+            * strategy.bmax_prefill as f64)
+            .max(d as f64 * strategy.bmax_decode as f64),
+    };
+    let mut lo = cfg.lambda_min;
+    let mut hi = cfg.upper_factor * capacity / t_min;
+    if !testbed_feasible(model, platform, strategy, scenario, slo, cfg, lo, seed)? {
+        return Ok(0.0);
+    }
+    if testbed_feasible(model, platform, strategy, scenario, slo, cfg, hi, seed)? {
+        return Ok(hi);
+    }
+    while hi - lo > cfg.tolerance {
+        let mid = 0.5 * (lo + hi);
+        if testbed_feasible(model, platform, strategy, scenario, slo, cfg, mid, seed)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::testutil::ConstModel;
+
+    #[test]
+    fn toy_goodput_near_service_rate() {
+        // prefill 100 ms, bmax_prefill 1, 1p1d: service rate 10 req/s;
+        // decode trivial. Goodput must land in (4, 10.8].
+        let m = ConstModel { prefill: 0.1, step: 1e-5 };
+        let platform = Platform::paper_testbed();
+        let mut st = Strategy::disaggregation(1, 1, 1);
+        st.bmax_prefill = 1;
+        let sc = Scenario::fixed("t", 256, 8, 1500);
+        let g = testbed_goodput(
+            &m,
+            &platform,
+            &st,
+            &sc,
+            &Slo::paper_default(),
+            &GroundTruthConfig::default(),
+            21,
+        )
+        .unwrap();
+        assert!(g > 4.0 && g < 10.9, "goodput {g}");
+    }
+
+    #[test]
+    fn infeasible_returns_zero() {
+        let m = ConstModel { prefill: 0.01, step: 0.5 }; // TPOT hopeless
+        let platform = Platform::paper_testbed();
+        let st = Strategy::collocation(1, 1);
+        let sc = Scenario::fixed("t", 64, 8, 200);
+        let g = testbed_goodput(
+            &m,
+            &platform,
+            &st,
+            &sc,
+            &Slo::paper_default(),
+            &GroundTruthConfig::default(),
+            22,
+        )
+        .unwrap();
+        assert_eq!(g, 0.0);
+    }
+}

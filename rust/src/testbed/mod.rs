@@ -1,0 +1,22 @@
+//! Token-level serving **testbed** — the ground-truth reference.
+//!
+//! The paper validates BestServe against manual benchmarking of vLLM-Ascend
+//! on an NPU cluster. We have no cluster, so this module provides the
+//! closest synthetic equivalent (DESIGN.md §Hardware-Adaptation): a
+//! token-granular, iteration-level continuous-batching serving system with
+//! vLLM's scheduler semantics (prefill priority, unmixed batches, paged KV
+//! with recompute preemption, round-robin routing, disaggregated KV
+//! hand-off), driven by the same latency surface as the Simulator. The gap
+//! between BestServe's request-level heuristics and this token-level
+//! reference is exactly the error source the paper analyzes (§5), so the
+//! Figure 11 comparison preserves the relevant behaviour.
+
+pub mod cluster;
+pub mod engine;
+pub mod groundtruth;
+pub mod kv;
+
+pub use cluster::{KvCapacity, Testbed, TestbedConfig, TestbedReport};
+pub use engine::{Engine, EngineStats, SeqInput, SeqOutcome};
+pub use groundtruth::{testbed_feasible, testbed_goodput, GroundTruthConfig};
+pub use kv::BlockManager;

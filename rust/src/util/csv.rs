@@ -1,0 +1,104 @@
+//! CSV writing for bench/figure outputs (`results/*.csv`). Each figure the
+//! bench harness regenerates is dumped both as ASCII (stdout) and CSV so the
+//! series can be re-plotted.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Csv {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> &mut Csv {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn quote(s: &str) -> String {
+        if s.contains(',') || s.contains('"') || s.contains('\n') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|c| Self::quote(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| Self::quote(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_quoting() {
+        let mut c = Csv::new(&["name", "value"]);
+        c.row(&["plain".into(), "1".into()]);
+        c.row(&["with,comma".into(), "2".into()]);
+        c.row(&["with\"quote".into(), "3".into()]);
+        let s = c.render();
+        assert!(s.contains("\"with,comma\""));
+        assert!(s.contains("\"with\"\"quote\""));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let mut c = Csv::new(&["x", "y"]);
+        c.row_f64(&[1.0, 2.5]);
+        let p = std::env::temp_dir().join("bestserve_csv_test/out.csv");
+        c.save(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.starts_with("x,y\n1,2.5"));
+        std::fs::remove_dir_all(p.parent().unwrap()).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrates: RNG + distributions, statistics, JSON,
+//! table/CSV rendering, and a mini property-testing harness. The offline
+//! build environment has no `rand`/`serde`/`proptest`, so these are built
+//! in-repo (see DESIGN.md §6).
+
+pub mod csv;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,144 @@
+//! A miniature property-based-testing harness (the offline registry has no
+//! `proptest`/`quickcheck`). Usage mirrors the common pattern:
+//!
+//! ```no_run
+//! use bestserve::util::quickcheck::check;
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.f64_in(0.0, 1e6);
+//!     let b = g.f64_in(0.0, 1e6);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("a={a} b={b}")) }
+//! });
+//! ```
+//!
+//! Failures report the case seed so the exact input can be replayed by
+//! setting `BESTSERVE_QC_SEED`. There is no shrinking — generators here are
+//! small enough that the raw failing case is readable.
+
+use super::rng::Rng;
+
+/// Generator handed to property bodies; thin veneer over [`Rng`] with
+/// ergonomic draws for the domains used in this repo.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+
+    /// Power-of-two-ish sizes: favors boundary-shaped values.
+    pub fn size(&mut self, max: usize) -> usize {
+        let base = [0usize, 1, 2, 3, 4, 7, 8, 15, 16, 17, 31, 32, 63, 64, 100];
+        let pick = *self.choose(&base);
+        if pick <= max && self.bool() {
+            pick
+        } else {
+            self.usize_in(0, max)
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `iters` random cases of `prop`; panic with the seed + message of the
+/// first failure. Honors `BESTSERVE_QC_SEED` to replay a single case.
+pub fn check<F>(name: &str, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("BESTSERVE_QC_SEED") {
+        let seed: u64 = s.parse().expect("BESTSERVE_QC_SEED must be u64");
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (replayed seed {seed}): {msg}");
+        }
+        return;
+    }
+    // Deterministic base seed per property name so CI runs are stable, while
+    // different properties explore different streams.
+    let base = fnv1a(name.as_bytes());
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed}, replay with \
+                 BESTSERVE_QC_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", 50, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", 100, |g| {
+            let u = g.usize_in(3, 9);
+            if !(3..=9).contains(&u) {
+                return Err(format!("usize_in out of range: {u}"));
+            }
+            let f = g.f64_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f64_in out of range: {f}"));
+            }
+            let s = g.size(64);
+            if s > 64 {
+                return Err(format!("size out of range: {s}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,288 @@
+//! Descriptive statistics used throughout the simulators and reports:
+//! percentiles (P50/P90/P99), histograms for Figures 6/8, simple linear
+//! regression (used to fit the communication efficiency `e_+`, §4.1), and
+//! running mean/variance.
+
+/// Percentile with linear interpolation between order statistics
+/// (the "linear" / type-7 definition, matching numpy's default).
+/// `q` in [0, 100]. Returns NaN on empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice. Prefer this in hot paths where
+/// several percentiles are taken from the same data.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    if v.len() == 1 {
+        return v[0];
+    }
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Summary of a latency sample: the panel of numbers Tables 4/5 report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Summary {
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: stddev(&v),
+            min: v.first().copied().unwrap_or(f64::NAN),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v.last().copied().unwrap_or(f64::NAN),
+        }
+    }
+}
+
+/// Equal-width histogram over [min, max] — the data behind Figures 6/8.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn from(xs: &[f64], bins: usize) -> Histogram {
+        assert!(bins > 0);
+        let (lo, hi) = if xs.is_empty() {
+            (0.0, 1.0)
+        } else {
+            let lo = min(xs);
+            let hi = max(xs);
+            if (hi - lo).abs() < f64::EPSILON {
+                (lo, lo + 1.0)
+            } else {
+                (lo, hi)
+            }
+        };
+        let mut counts = vec![0u64; bins];
+        for &x in xs {
+            let mut idx = ((x - lo) / (hi - lo) * bins as f64) as usize;
+            if idx >= bins {
+                idx = bins - 1;
+            }
+            counts[idx] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+
+    pub fn bin_edges(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..=self.counts.len())
+            .map(|i| self.lo + i as f64 * w)
+            .collect()
+    }
+
+    /// Render as ASCII bars, annotating vertical marker lines (e.g. P90,
+    /// P99, SLO) the way Figures 6/8 draw dashed lines.
+    pub fn render(&self, width: usize, markers: &[(&str, f64)]) -> String {
+        let peak = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let edges = self.bin_edges();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = (c as f64 / peak as f64 * width as f64).round() as usize;
+            let mut tags = String::new();
+            for (name, v) in markers {
+                if *v >= edges[i] && *v < edges[i + 1] {
+                    tags.push_str(&format!(" <-- {name}={v:.1}"));
+                }
+            }
+            out.push_str(&format!(
+                "[{:>10.1}, {:>10.1}) |{:<width$}| {:>7}{}\n",
+                edges[i],
+                edges[i + 1],
+                "#".repeat(bar),
+                c,
+                tags,
+                width = width
+            ));
+        }
+        // Markers outside the data range are still worth showing (e.g. an
+        // SLO threshold far above every observed latency).
+        for (name, v) in markers {
+            if *v < self.lo || *v >= self.hi {
+                out.push_str(&format!("  (off-scale) {name}={v:.1}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Ordinary least squares y = a + b x. Returns (intercept, slope, r2).
+/// Used to fit communication efficiency from transmission-time samples
+/// against b*s*h (the linear relationship of eq. (8), §4.1).
+pub fn linear_regression(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    let _ = n;
+    (intercept, slope, r2)
+}
+
+/// Linear interpolation of y(xq) on a sorted grid — used to read the
+/// crossing points off Figure 7/9-style rate sweeps.
+pub fn interp1(xs: &[f64], ys: &[f64], xq: f64) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    if xq <= xs[0] {
+        return ys[0];
+    }
+    if xq >= xs[xs.len() - 1] {
+        return ys[ys.len() - 1];
+    }
+    // xs sorted ascending.
+    let mut i = 1;
+    while xs[i] < xq {
+        i += 1;
+    }
+    let t = (xq - xs[i - 1]) / (xs[i] - xs[i - 1]);
+    ys[i - 1] * (1.0 - t) + ys[i] * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 90.0) - 90.1).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        assert_eq!(percentile(&[3.0], 90.0), 3.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let s = Summary::from(&xs);
+        assert_eq!(s.n, 10);
+        assert!((s.mean - 5.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert!(s.p90 > s.p50);
+        assert!(s.p99 >= s.p90);
+    }
+
+    #[test]
+    fn histogram_counts_sum() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i % 97) as f64).collect();
+        let h = Histogram::from(&xs, 20);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1000);
+        assert_eq!(h.bin_edges().len(), 21);
+    }
+
+    #[test]
+    fn histogram_degenerate() {
+        let h = Histogram::from(&[5.0, 5.0, 5.0], 4);
+        assert_eq!(h.counts.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn regression_exact_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 2.0 + 3.0 * v).collect();
+        let (a, b, r2) = linear_regression(&x, &y);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interp_endpoints_and_middle() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [0.0, 10.0, 40.0];
+        assert_eq!(interp1(&xs, &ys, -1.0), 0.0);
+        assert_eq!(interp1(&xs, &ys, 3.0), 40.0);
+        assert!((interp1(&xs, &ys, 0.5) - 5.0).abs() < 1e-9);
+        assert!((interp1(&xs, &ys, 1.5) - 25.0).abs() < 1e-9);
+    }
+}

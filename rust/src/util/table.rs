@@ -1,0 +1,133 @@
+//! ASCII table rendering for CLI output — the paper presents its results as
+//! tables (Tables 3–5) and we print them in the same layout.
+
+/// A simple column-aligned text table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Column indices that should be right-aligned (numeric columns).
+    right: Vec<bool>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            right: vec![false; header.len()],
+        }
+    }
+
+    /// Mark all columns after the first as right-aligned (common case:
+    /// label column + numeric columns).
+    pub fn numeric_body(mut self) -> Table {
+        for r in self.right.iter_mut().skip(1) {
+            *r = true;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String], right: &[bool]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                if right[i] {
+                    s.push_str(&format!(" {}{} |", " ".repeat(pad), cells[i]));
+                } else {
+                    s.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad)));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push_str(&fmt_row(&self.header, &vec![false; ncols]));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.right));
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format milliseconds with 3 decimals, the paper's table style.
+pub fn ms(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a rate / goodput with 3 decimals.
+pub fn rate(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a percentage with 1 decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["module", "dispatch", "compute"]).numeric_body();
+        t.row_strs(&["RMSNorm", "0.024", "0.223"]);
+        t.row_strs(&["Attention", "0.190", "2.122"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        // header sep + header + sep + 2 rows + sep
+        assert_eq!(lines.len(), 6);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+        assert!(s.contains("RMSNorm"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ms(265.1234), "265.123");
+        assert_eq!(pct(0.112), "11.2%");
+        assert_eq!(rate(3.5), "3.500");
+    }
+}

@@ -1,0 +1,247 @@
+//! §4.3 / Figure 11 — validation of BestServe against the ground truth:
+//! for every strategy in the space, compare the Optimizer's goodput
+//! estimate with the token-level testbed's measured maximum feasible rate,
+//! reporting normalized goodputs and relative errors.
+
+use crate::config::{Platform, Scenario, Slo, StrategySpace};
+use crate::error::Result;
+use crate::optimizer::{find_goodput, GoodputConfig, ModelFactory};
+use crate::simulator::SimParams;
+use crate::testbed::{testbed_goodput, GroundTruthConfig};
+use crate::util::csv::Csv;
+use crate::util::table::{pct, rate, Table};
+
+/// One bar-pair of a Figure 11 panel.
+#[derive(Debug, Clone)]
+pub struct ValidationRow {
+    pub strategy: String,
+    pub cards: u32,
+    /// BestServe's goodput estimate (req/s).
+    pub predicted: f64,
+    /// Testbed-measured goodput (req/s).
+    pub measured: f64,
+    /// Normalized (per-card) goodputs — the paper's y-axis.
+    pub predicted_norm: f64,
+    pub measured_norm: f64,
+}
+
+impl ValidationRow {
+    /// Relative error of the prediction, None when the ground truth is 0
+    /// and the prediction is not (undefined ratio).
+    pub fn rel_error(&self) -> Option<f64> {
+        if self.measured > 1e-9 {
+            Some((self.predicted - self.measured) / self.measured)
+        } else if self.predicted <= 1e-9 {
+            Some(0.0)
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub scenario: String,
+    /// Sorted descending by predicted normalized goodput (the paper sorts
+    /// its histograms by the BestServe prediction).
+    pub rows: Vec<ValidationRow>,
+}
+
+impl ValidationReport {
+    /// Average absolute relative error — the per-panel headline number
+    /// (paper: 11.2% / 12.1% / 8.6% / 30.1% for OP1–4).
+    pub fn mean_abs_rel_error(&self) -> f64 {
+        let errs: Vec<f64> = self
+            .rows
+            .iter()
+            .filter_map(|r| r.rel_error())
+            .map(f64::abs)
+            .collect();
+        if errs.is_empty() {
+            f64::NAN
+        } else {
+            errs.iter().sum::<f64>() / errs.len() as f64
+        }
+    }
+
+    /// Does the predicted ranking pick a near-optimal strategy? Returns the
+    /// measured goodput of the predicted-best strategy divided by the best
+    /// measured goodput ("regret ratio" — 1.0 means the recommendation is
+    /// truly optimal; the paper's practical claim is that rankings, not
+    /// absolute numbers, drive deployment decisions).
+    pub fn recommendation_quality(&self) -> f64 {
+        let best_measured = self
+            .rows
+            .iter()
+            .map(|r| r.measured_norm)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if best_measured <= 0.0 {
+            return 1.0;
+        }
+        let predicted_best = &self.rows[0]; // rows sorted by prediction
+        predicted_best.measured_norm / best_measured
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "strategy",
+            "cards",
+            "pred goodput",
+            "truth goodput",
+            "pred norm",
+            "truth norm",
+            "rel err",
+        ])
+        .numeric_body();
+        for r in &self.rows {
+            t.row(&[
+                r.strategy.clone(),
+                r.cards.to_string(),
+                rate(r.predicted),
+                rate(r.measured),
+                rate(r.predicted_norm),
+                rate(r.measured_norm),
+                r.rel_error().map(pct).unwrap_or_else(|| "n/a".into()),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "scenario",
+            "strategy",
+            "cards",
+            "predicted",
+            "measured",
+            "predicted_norm",
+            "measured_norm",
+            "rel_error",
+        ]);
+        for r in &self.rows {
+            c.row(&[
+                self.scenario.clone(),
+                r.strategy.clone(),
+                r.cards.to_string(),
+                format!("{}", r.predicted),
+                format!("{}", r.measured),
+                format!("{}", r.predicted_norm),
+                format!("{}", r.measured_norm),
+                r.rel_error().map(|e| format!("{e}")).unwrap_or_default(),
+            ]);
+        }
+        c
+    }
+}
+
+/// Configuration for a validation run.
+#[derive(Debug, Clone, Copy)]
+pub struct ValidationConfig {
+    pub goodput: GoodputConfig,
+    pub ground_truth: GroundTruthConfig,
+    pub sim_params: SimParams,
+    pub seed: u64,
+}
+
+impl Default for ValidationConfig {
+    fn default() -> Self {
+        ValidationConfig {
+            goodput: GoodputConfig::default(),
+            ground_truth: GroundTruthConfig::default(),
+            sim_params: SimParams::default(),
+            seed: 0xF16_11,
+        }
+    }
+}
+
+/// Run the Figure 11 experiment for one scenario.
+pub fn validate(
+    factory: &mut dyn ModelFactory,
+    platform: &Platform,
+    space: &StrategySpace,
+    scenario: &Scenario,
+    slo: &Slo,
+    cfg: &ValidationConfig,
+) -> Result<ValidationReport> {
+    let mut rows = Vec::new();
+    for strategy in space.enumerate() {
+        let model = factory.model_for_tp(strategy.tp)?;
+        let predicted = find_goodput(
+            model.as_ref(),
+            platform,
+            &strategy,
+            scenario,
+            slo,
+            cfg.sim_params,
+            &cfg.goodput,
+        )?;
+        let measured = testbed_goodput(
+            model.as_ref(),
+            platform,
+            &strategy,
+            scenario,
+            slo,
+            &cfg.ground_truth,
+            cfg.seed,
+        )?;
+        let cards = strategy.total_cards();
+        rows.push(ValidationRow {
+            strategy: strategy.to_string(),
+            cards,
+            predicted,
+            measured,
+            predicted_norm: predicted / cards as f64,
+            measured_norm: measured / cards as f64,
+        });
+    }
+    rows.sort_by(|a, b| b.predicted_norm.partial_cmp(&a.predicted_norm).unwrap());
+    Ok(ValidationReport { scenario: scenario.name.clone(), rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(st: &str, pred: f64, meas: f64) -> ValidationRow {
+        ValidationRow {
+            strategy: st.into(),
+            cards: 4,
+            predicted: pred,
+            measured: meas,
+            predicted_norm: pred / 4.0,
+            measured_norm: meas / 4.0,
+        }
+    }
+
+    #[test]
+    fn rel_error_definitions() {
+        assert!((row("a", 1.1, 1.0).rel_error().unwrap() - 0.1).abs() < 1e-12);
+        assert!((row("a", 0.9, 1.0).rel_error().unwrap() + 0.1).abs() < 1e-12);
+        assert_eq!(row("a", 0.0, 0.0).rel_error(), Some(0.0));
+        assert_eq!(row("a", 1.0, 0.0).rel_error(), None);
+    }
+
+    #[test]
+    fn mean_abs_rel_error_and_quality() {
+        let rep = ValidationReport {
+            scenario: "t".into(),
+            rows: vec![row("x", 1.2, 1.0), row("y", 0.8, 1.0)],
+        };
+        assert!((rep.mean_abs_rel_error() - 0.2).abs() < 1e-12);
+        // Both measured 1.0 -> recommendation quality 1.0.
+        assert!((rep.recommendation_quality() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let rep = ValidationReport {
+            scenario: "OP2".into(),
+            rows: vec![row("3p2d-tp4", 2.0, 1.8)],
+        };
+        let t = rep.to_table().render();
+        assert!(t.contains("3p2d-tp4"));
+        let c = rep.to_csv().render();
+        assert!(c.starts_with("scenario,"));
+        assert!(c.contains("OP2"));
+    }
+}

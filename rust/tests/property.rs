@@ -1,0 +1,246 @@
+//! Property-based tests over the whole stack, using the in-repo
+//! mini-quickcheck harness (`util::quickcheck`). Each property runs against
+//! randomized model dims / hardware specs / workloads, so these cover the
+//! estimator and simulators far beyond the paper's single platform.
+
+use std::sync::Arc;
+
+use bestserve::config::{
+    Architecture, EfficiencyParams, HardwareConfig, ModelConfig, Phase, Platform, Scenario,
+    Slo, Strategy,
+};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::optimizer::{find_goodput, GoodputConfig};
+use bestserve::simulator::{generate_workload, simulate, SimParams};
+use bestserve::testbed::{Testbed, TestbedConfig};
+use bestserve::util::quickcheck::{check, Gen};
+
+/// A random but valid LLaMa-shaped model.
+fn gen_model(g: &mut Gen) -> ModelConfig {
+    let hq = *g.choose(&[8u64, 16, 32, 64]);
+    let group = *g.choose(&[1u64, 2, 4, 8]);
+    let hkv = (hq / group).max(1);
+    let head = *g.choose(&[64u64, 128]);
+    let h = hq * head;
+    ModelConfig {
+        name: "random".into(),
+        hidden: h,
+        intermediate: h * g.usize_in(2, 4) as u64,
+        q_heads: hq,
+        kv_heads: hkv,
+        layers: g.usize_in(4, 80) as u64,
+        dtype_bytes: 2,
+    }
+}
+
+fn gen_platform(g: &mut Gen) -> Platform {
+    let mut hw = HardwareConfig::ascend_910b3();
+    hw.sc_flops = g.f64_in(50e12, 1000e12);
+    hw.sm_bytes = g.f64_in(0.5e12, 4e12);
+    hw.s_plus_bytes = g.f64_in(25e9, 900e9);
+    Platform {
+        model: gen_model(g),
+        hardware: hw,
+        eff: EfficiencyParams::paper_defaults(),
+    }
+}
+
+#[test]
+fn prop_estimator_monotone_in_batch_and_length() {
+    check("estimator monotone", 60, |g| {
+        let p = gen_platform(g);
+        p.validate().map_err(|e| e.to_string())?;
+        let tp = *g.choose(&[1u32, 2, 4, 8]);
+        let o = AnalyticOracle::new(p, tp);
+        let b = g.usize_in(1, 32) as u32;
+        let s = g.usize_in(16, 8192) as u32;
+        let pf = o.prefill_time(b, s);
+        if !(pf > 0.0 && pf.is_finite()) {
+            return Err(format!("prefill({b},{s}) = {pf}"));
+        }
+        if o.prefill_time(b + 1, s) < pf {
+            return Err(format!("prefill not monotone in b at ({b},{s})"));
+        }
+        if o.prefill_time(b, s + 64) < pf {
+            return Err(format!("prefill not monotone in s at ({b},{s})"));
+        }
+        let d = o.decode_step_time(b, s);
+        if o.decode_step_time(b + 1, s) + 1e-15 < d {
+            return Err(format!("decode not monotone in b at ({b},{s})"));
+        }
+        if o.decode_step_time(b, s + 64) + 1e-15 < d {
+            return Err(format!("decode not monotone in ctx at ({b},{s})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tp_never_slows_the_block_down_much() {
+    // Sharding divides compute but adds comm; a higher tp must never make
+    // PREFILL slower by more than the communication it introduces (for
+    // small models the comm floor CAN dominate — a real TP overhead the
+    // model is supposed to expose, so it is allowed for explicitly).
+    check("tp prefill speedup", 40, |g| {
+        let p = gen_platform(g);
+        let b = g.usize_in(1, 8) as u32;
+        let s = g.usize_in(256, 4096) as u32;
+        let t1 = AnalyticOracle::new(p.clone(), 1).prefill_time(b, s);
+        let comm_budget = {
+            let eff = p.eff.prefill;
+            let bw = b as f64 * s as f64 * p.model.hidden as f64 / 4.0
+                / (eff.eplus * p.hardware.s_plus_bytes);
+            p.model.layers as f64 * 2.0 * bw.max(p.hardware.comm_latency_floor)
+        };
+        let t4 = AnalyticOracle::new(p, 4).prefill_time(b, s);
+        if t4 > t1 + comm_budget + 1e-9 {
+            return Err(format!(
+                "tp4 prefill {t4} vs tp1 {t1} + comm {comm_budget} at b={b} s={s}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_span_heuristic_upper_bounds_exact() {
+    // The paper heuristic prices every token at the FINAL context, so it
+    // must upper-bound the exact growing-context sum.
+    check("span heuristic bound", 40, |g| {
+        let p = gen_platform(g);
+        let o = AnalyticOracle::new(p, *g.choose(&[1u32, 2, 4]));
+        let b = g.usize_in(1, 16) as u32;
+        let s = g.usize_in(16, 4096) as u32;
+        let s_plus = g.usize_in(1, 512) as u32;
+        let h = o.decode_span(b, s, s_plus);
+        let e = o.decode_span_exact(b, s, s_plus);
+        if h + 1e-12 < e {
+            return Err(format!("heuristic {h} < exact {e} at b={b} s={s} s+={s_plus}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulators_conserve_requests_and_order_time() {
+    check("simulator conservation", 25, |g| {
+        let p = Platform::paper_testbed();
+        let o = Arc::new(AnalyticOracle::new(p.clone(), 4));
+        let n = g.usize_in(50, 400);
+        let sc = Scenario::fixed("prop", g.usize_in(64, 2048) as u64, g.usize_in(4, 64) as u64, n);
+        let rate = g.f64_in(0.2, 6.0);
+        let strategy = if g.bool() {
+            Strategy::collocation(g.usize_in(1, 3) as u32, 4)
+        } else {
+            Strategy::disaggregation(g.usize_in(1, 2) as u32, g.usize_in(1, 2) as u32, 4)
+        };
+        let params = SimParams { seed: g.u64_below(1 << 40), ..SimParams::default() };
+        let rep = simulate(o.as_ref(), &p, &strategy, &sc, rate, params)
+            .map_err(|e| e.to_string())?;
+        if rep.n != n {
+            return Err(format!("lost requests: {} != {n}", rep.n));
+        }
+        if !rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0) {
+            return Err("non-finite or non-positive TTFT".into());
+        }
+        if !rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0) {
+            return Err("non-finite or non-positive TPOT".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_testbed_conserves_and_respects_service_floor() {
+    check("testbed conservation", 15, |g| {
+        let p = Platform::paper_testbed();
+        let o = AnalyticOracle::new(p.clone(), 4);
+        let n = g.usize_in(40, 150);
+        let s = g.usize_in(64, 1024) as u64;
+        let s_plus = g.usize_in(4, 32) as u64;
+        let sc = Scenario::fixed("prop", s, s_plus, n);
+        let strategy = if g.bool() {
+            Strategy::collocation(g.usize_in(1, 2) as u32, 4)
+        } else {
+            Strategy::disaggregation(1, g.usize_in(1, 2) as u32, 4)
+        };
+        let reqs = generate_workload(&sc, g.f64_in(0.2, 3.0), g.u64_below(1 << 40));
+        let tb = Testbed::new(&o, &p, strategy, TestbedConfig::default());
+        let rep = tb.run(&reqs).map_err(|e| e.to_string())?.report;
+        if rep.n != n {
+            return Err(format!("lost requests: {} != {n}", rep.n));
+        }
+        // TTFT can never beat a single-request prefill.
+        let floor = o.prefill_time(1, s as u32);
+        if rep.ttft.min + 1e-9 < floor {
+            return Err(format!("TTFT {} beats service floor {floor}", rep.ttft.min));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_goodput_monotone_in_slo_relaxation() {
+    // Loosening both SLO budgets can never reduce goodput.
+    check("goodput slo monotone", 8, |g| {
+        let p = Platform::paper_testbed();
+        let o = AnalyticOracle::new(p.clone(), 4);
+        let sc = Scenario::fixed("prop", 1024, 32, 400);
+        let strategy = if g.bool() {
+            Strategy::collocation(2, 4)
+        } else {
+            Strategy::disaggregation(1, 1, 4)
+        };
+        let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
+        let params = SimParams::default();
+        let tight = Slo { ttft: 1.0, tpot: 0.05, ..Slo::paper_default() };
+        let loose = Slo { ttft: 4.0, tpot: 0.2, ..Slo::paper_default() };
+        let gt = find_goodput(&o, &p, &strategy, &sc, &tight, params, &cfg)
+            .map_err(|e| e.to_string())?;
+        let gl = find_goodput(&o, &p, &strategy, &sc, &loose, params, &cfg)
+            .map_err(|e| e.to_string())?;
+        if gl + 0.25 < gt {
+            return Err(format!("loose SLO goodput {gl} < tight {gt} for {strategy}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_architecture_parse_display_roundtrip() {
+    check("arch roundtrip", 200, |g| {
+        let arch = if g.bool() {
+            Architecture::Collocation { m: g.usize_in(1, 99) as u32 }
+        } else {
+            Architecture::Disaggregation {
+                p: g.usize_in(1, 99) as u32,
+                d: g.usize_in(1, 99) as u32,
+            }
+        };
+        let s = arch.to_string();
+        let back = Architecture::parse(&s).map_err(|e| e.to_string())?;
+        if back != arch {
+            return Err(format!("{arch:?} -> {s} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_tables_positive_for_random_dims() {
+    check("tables positive", 80, |g| {
+        let p = gen_platform(g);
+        let b = g.usize_in(1, 64) as u32;
+        let s = g.usize_in(1, 16384) as u32;
+        let tp = *g.choose(&[1u32, 2, 4, 8]);
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for m in bestserve::estimator::BLOCK_SEQUENCE {
+                let t = m.compute_time(&p, phase, b, s, tp);
+                if !(t > 0.0 && t.is_finite()) {
+                    return Err(format!("{} {:?} = {t}", m.name(), phase));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,193 @@
+//! Failure-injection and edge-case coverage: malformed configs, missing
+//! artifacts, degenerate workloads, extreme parameters — the paths a
+//! downstream user hits first.
+
+use bestserve::config::{
+    HardwareConfig, ModelConfig, Platform, Scenario, Slo, Strategy, StrategySpace,
+};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::runtime::{GridLatencyModel, GridManifest, PjrtExecutable};
+use bestserve::simulator::{generate_workload, simulate, SimParams};
+use bestserve::testbed::{KvCapacity, Testbed, TestbedConfig};
+use bestserve::util::json::Json;
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Err(err) = PjrtExecutable::load("/nonexistent/path/model.hlo.txt") else {
+        panic!("expected error");
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "actionable message, got: {msg}");
+}
+
+#[test]
+fn missing_manifest_is_a_clean_error() {
+    let err = GridManifest::load(std::path::Path::new("/nonexistent")).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("bestserve_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(GridManifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"latency_grid": {}}"#).unwrap();
+    assert!(GridManifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn artifact_layout_version_mismatch_rejected() {
+    let dir = std::env::temp_dir().join("bestserve_layout_mismatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"latency_grid": {"file": "x.hlo.txt", "n_params": 7, "nb": 4, "ns": 4, "s_stride": 16}}"#,
+    )
+    .unwrap();
+    let Err(e) = GridLatencyModel::from_artifacts(&dir, &Platform::paper_testbed(), 1)
+    else {
+        panic!("expected error");
+    };
+    let err = e.to_string();
+    assert!(err.contains("rebuild artifacts"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn invalid_configs_rejected_with_messages() {
+    // Model with incompatible heads.
+    let j = Json::parse(
+        r#"{"name":"bad","hidden":100,"intermediate":400,"q_heads":7,"kv_heads":3,"layers":2}"#,
+    )
+    .unwrap();
+    assert!(ModelConfig::from_json(&j).is_err());
+    // Hardware with zero bandwidth.
+    let mut hw = HardwareConfig::a100_80g();
+    hw.s_plus_bytes = -1.0;
+    assert!(hw.validate().is_err());
+    // SLO percentile out of range.
+    let slo = Slo { percentile: 0.0, ..Slo::paper_default() };
+    assert!(slo.validate().is_err());
+    // Strategy notation garbage.
+    for bad in ["", "3p", "pd4", "2m-tpx", "0p0d"] {
+        assert!(Strategy::parse(bad).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn single_request_workload() {
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let sc = Scenario::fixed("one", 512, 8, 1);
+    for st in [Strategy::collocation(1, 4), Strategy::disaggregation(1, 1, 4)] {
+        let rep = simulate(&o, &p, &st, &sc, 0.5, SimParams::default()).unwrap();
+        assert_eq!(rep.n, 1);
+        assert!(rep.ttft.p90 > 0.0);
+    }
+}
+
+#[test]
+fn gen_len_one_requests() {
+    // s+ = 1: decode span is a single token; nothing divides by zero.
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let sc = Scenario::fixed("g1", 512, 1, 50);
+    let rep = simulate(
+        &o,
+        &p,
+        &Strategy::disaggregation(1, 1, 4),
+        &sc,
+        1.0,
+        SimParams::default(),
+    )
+    .unwrap();
+    assert!(rep.tpots.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn extreme_overload_terminates() {
+    // 100x beyond capacity must still terminate with finite numbers.
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let sc = Scenario::fixed("flood", 2048, 32, 500);
+    let rep = simulate(
+        &o,
+        &p,
+        &Strategy::disaggregation(1, 1, 4),
+        &sc,
+        500.0,
+        SimParams::default(),
+    )
+    .unwrap();
+    assert_eq!(rep.n, 500);
+    assert!(rep.ttft.max.is_finite());
+}
+
+#[test]
+fn tiny_kv_capacity_still_serves() {
+    // KV capacity barely above one sequence: heavy preemption, but every
+    // request completes.
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let sc = Scenario::fixed("tinykv", 100, 50, 30);
+    let reqs = generate_workload(&sc, 1.0, 3);
+    let tb = Testbed::new(
+        &o,
+        &p,
+        Strategy::collocation(1, 4),
+        TestbedConfig {
+            kv_capacity: KvCapacity::Blocks(20), // 320 tokens
+            ..TestbedConfig::default()
+        },
+    );
+    let out = tb.run(&reqs).unwrap();
+    assert_eq!(out.report.n, 30);
+}
+
+#[test]
+fn variable_length_scenario_end_to_end() {
+    // The paper claims variable-length support; exercise it through both
+    // simulator and testbed.
+    use bestserve::config::LengthDist;
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let sc = Scenario {
+        name: "mixed".into(),
+        input_len: LengthDist::LogNormal { mu: 6.5, sigma: 0.6, cap: 4096 },
+        gen_len: LengthDist::Uniform { lo: 8, hi: 128 },
+        n_requests: 300,
+    };
+    let st = Strategy::disaggregation(1, 1, 4);
+    let rep = simulate(&o, &p, &st, &sc, 1.0, SimParams::default()).unwrap();
+    assert_eq!(rep.n, 300);
+    let reqs = generate_workload(&sc, 1.0, 9);
+    let tb = Testbed::new(&o, &p, st, TestbedConfig::default());
+    assert_eq!(tb.run(&reqs).unwrap().report.n, 300);
+}
+
+#[test]
+fn empty_strategy_space_yields_empty_report() {
+    let space = StrategySpace {
+        max_cards: 1,
+        tp_choices: vec![8], // tp > budget: nothing admissible
+        ..StrategySpace::default()
+    };
+    assert!(space.enumerate().is_empty());
+}
+
+#[test]
+fn grid_model_clamps_out_of_range_queries() {
+    // Queries beyond the surface must clamp, not panic.
+    let g = GridLatencyModel::from_surfaces(
+        2,
+        4,
+        16,
+        vec![1.0; 8],
+        vec![0.5; 8],
+    );
+    assert!(g.prefill_time(1000, 1_000_000) > 0.0);
+    assert!(g.decode_step_time(0, 0) > 0.0);
+    assert!(g.decode_span_exact(5, 100_000, 100_000) >= 0.0);
+}

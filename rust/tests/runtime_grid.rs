@@ -1,0 +1,108 @@
+//! Integration: PJRT-executed latency surface vs the native Rust oracle.
+//!
+//! This is the end-to-end proof that the three layers agree: the Pallas
+//! kernel (L1) inside the JAX model (L2), AOT-lowered to HLO and executed
+//! by the Rust PJRT runtime, reproduces the same numbers as the Rust
+//! reimplementation of Algorithm 1 (L3). The python tables and the Rust
+//! tables were written independently from the paper's appendices, so this
+//! is a genuine cross-check, not a tautology.
+//!
+//! Skips (with a loud message) when `artifacts/` has not been built.
+
+use bestserve::config::Platform;
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
+
+fn grid_or_skip(tp: u32) -> Option<(GridLatencyModel, AnalyticOracle)> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    let platform = Platform::paper_testbed();
+    let grid = GridLatencyModel::from_artifacts(&dir, &platform, tp)
+        .expect("artifact should load and execute");
+    let oracle = AnalyticOracle::new(platform, tp);
+    Some((grid, oracle))
+}
+
+/// f32 artifact vs f64 native: the op-table terms span ~12 orders of
+/// magnitude, so allow 1% (float32 accumulation) on grid points.
+const RTOL: f64 = 0.01;
+
+#[test]
+fn prefill_surface_matches_native_oracle() {
+    let Some((grid, oracle)) = grid_or_skip(4) else { return };
+    for b in [1u32, 2, 4, 8, 16, 32, 64] {
+        for s in [16u32, 256, 1024, 2048, 8192, 16384] {
+            let g = grid.prefill_time(b, s);
+            let n = oracle.prefill_time(b, s);
+            assert!(
+                (g - n).abs() / n < RTOL,
+                "prefill b={b} s={s}: grid {g} native {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_surface_matches_native_oracle() {
+    let Some((grid, oracle)) = grid_or_skip(4) else { return };
+    for b in [1u32, 4, 16, 64] {
+        for ctx in [16u32, 512, 2048, 2112, 8192, 17424] {
+            let g = grid.decode_step_time(b, ctx);
+            let n = oracle.decode_step_time(b, ctx);
+            assert!(
+                (g - n).abs() / n < RTOL,
+                "decode b={b} ctx={ctx}: grid {g} native {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn interpolated_points_stay_close() {
+    // Off-grid s values go through linear interpolation; the surface is
+    // smooth (piecewise ~quadratic in s), so 2% is ample at stride 16.
+    let Some((grid, oracle)) = grid_or_skip(4) else { return };
+    for s in [100u32, 999, 2047, 2111, 5000] {
+        let g = grid.prefill_time(1, s);
+        let n = oracle.prefill_time(1, s);
+        assert!((g - n).abs() / n < 0.02, "prefill s={s}: grid {g} native {n}");
+        let gd = grid.decode_step_time(1, s);
+        let nd = oracle.decode_step_time(1, s);
+        assert!((gd - nd).abs() / nd < 0.02, "decode s={s}: grid {gd} native {nd}");
+    }
+}
+
+#[test]
+fn decode_span_exact_agrees() {
+    let Some((grid, oracle)) = grid_or_skip(4) else { return };
+    let g = grid.decode_span_exact(1, 2048, 64);
+    let n = oracle.decode_span_exact(1, 2048, 64);
+    assert!((g - n).abs() / n < 0.02, "span grid {g} native {n}");
+}
+
+#[test]
+fn tp1_surface_also_matches() {
+    let Some((grid, oracle)) = grid_or_skip(1) else { return };
+    for (b, s) in [(1u32, 2048u32), (8, 1024), (32, 4096)] {
+        let g = grid.prefill_time(b, s);
+        let n = oracle.prefill_time(b, s);
+        assert!((g - n).abs() / n < RTOL, "tp1 b={b} s={s}: {g} vs {n}");
+    }
+}
+
+#[test]
+fn table3_operating_point_via_pjrt() {
+    // The PJRT path must reproduce Table 3a's 265.123 ms within 10%.
+    let Some((grid, _)) = grid_or_skip(4) else { return };
+    let t_ms = grid.prefill_time(1, 2048) * 1e3;
+    assert!(
+        (t_ms - 265.123).abs() / 265.123 < 0.10,
+        "prefill(1,2048) via PJRT: {t_ms} ms"
+    );
+}
