@@ -11,7 +11,7 @@ use bestserve::optimizer::{find_goodput, GoodputConfig};
 use bestserve::simulator::SimParams;
 use bestserve::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let slo = Slo::paper_default();
     let oracle = AnalyticOracle::new(platform.clone(), 4);

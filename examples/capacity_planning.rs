@@ -12,7 +12,7 @@ use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::SimParams;
 use bestserve::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let scenario = Scenario::op2();
     let slo = Slo::paper_default();
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Optimize once per budget (the optimizer reuses cached oracles).
-    let mut factory = AnalyticFactory::new(platform.clone());
+    let factory = AnalyticFactory::new(platform.clone());
     let mut per_budget = Vec::new();
     let t0 = std::time::Instant::now();
     for &cards in &budgets {
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             ..StrategySpace::default()
         };
         let rep = optimize(
-            &mut factory,
+            &factory,
             &platform,
             &space,
             &scenario,

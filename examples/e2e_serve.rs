@@ -22,7 +22,7 @@ use bestserve::runtime::default_artifacts_dir;
 use bestserve::simulator::{generate_workload, SimParams};
 use bestserve::testbed::{Testbed, TestbedConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let artifacts = default_artifacts_dir();
     if !artifacts.join("manifest.json").exists() {
         eprintln!(
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- Stage 1: load + compile the AOT artifact (PJRT) -------------------
     let t0 = std::time::Instant::now();
-    let mut factory = GridFactory::new(&artifacts, platform.clone())?;
+    let factory = GridFactory::new(&artifacts, platform.clone())?;
     println!(
         "[1] PJRT: compiled latency-grid artifact from {} in {:.2}s",
         artifacts.display(),
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     };
     let params = SimParams { tau: 1.0, ..SimParams::default() };
     let rep = optimize(
-        &mut factory,
+        &factory,
         &platform,
         &space,
         &scenario,
@@ -70,7 +70,9 @@ fn main() -> anyhow::Result<()> {
         best.strategy,
         best.goodput
     );
-    anyhow::ensure!(best.goodput > 0.0, "no feasible strategy — unexpected for OP2");
+    if best.goodput <= 0.0 {
+        return Err(bestserve::Error::simulation("no feasible strategy — unexpected for OP2"));
+    }
 
     // --- Stage 3: serve a real workload on the recommendation --------------
     let serve_rate = 0.8 * best.goodput;
@@ -123,6 +125,10 @@ fn main() -> anyhow::Result<()> {
         "\nSLO attainment at 80% of predicted goodput: {}",
         if ok { "PASS (P90 within relaxed SLO)" } else { "FAIL" }
     );
-    anyhow::ensure!(ok, "served workload violated SLO at 80% of predicted goodput");
+    if !ok {
+        return Err(bestserve::Error::simulation(
+            "served workload violated SLO at 80% of predicted goodput",
+        ));
+    }
     Ok(())
 }

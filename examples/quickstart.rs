@@ -11,7 +11,7 @@ use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::{simulate, SimParams};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     // The paper's evaluation platform: CodeLlama-34b on Ascend 910B3.
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
@@ -48,9 +48,9 @@ fn main() -> anyhow::Result<()> {
         ..StrategySpace::default()
     };
     let scenario = Scenario::op2();
-    let mut factory = AnalyticFactory::new(platform.clone());
+    let factory = AnalyticFactory::new(platform.clone());
     let rep = optimize(
-        &mut factory,
+        &factory,
         &platform,
         &space,
         &scenario,

@@ -9,7 +9,7 @@ use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::SimParams;
 use bestserve::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let mut scenario = Scenario::op2();
     scenario.n_requests = 1500;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         "Optimal strategy + goodput on 8 cards, {} — SLO grid\n",
         scenario.name
     );
-    let mut factory = AnalyticFactory::new(platform.clone());
+    let factory = AnalyticFactory::new(platform.clone());
     for &ttft in &ttfts {
         let mut row = vec![format!("{ttft}ms")];
         for &tpot in &tpots {
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
                 ..Slo::paper_default()
             };
             let rep = optimize(
-                &mut factory,
+                &factory,
                 &platform,
                 &space,
                 &scenario,

@@ -16,7 +16,7 @@ use bestserve::testbed::{testbed_goodput, GroundTruthConfig};
 use bestserve::util::csv::Csv;
 use bestserve::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let slo = Slo::paper_default();

@@ -12,7 +12,7 @@ use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{results_dir, variance_study};
 use bestserve::simulator::SimParams;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let strategy = Strategy::disaggregation(1, 1, 4);

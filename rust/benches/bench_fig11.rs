@@ -32,7 +32,7 @@ fn panel(
     slo: &Slo,
     tau: f64,
     n_requests: usize,
-) -> anyhow::Result<bestserve::validation::ValidationReport> {
+) -> bestserve::Result<bestserve::validation::ValidationReport> {
     let mut sc = scenario.clone();
     sc.n_requests = n_requests;
     let space = StrategySpace {
@@ -42,11 +42,11 @@ fn panel(
     };
     let mut cfg = ValidationConfig::default();
     cfg.sim_params = SimParams { tau, ..SimParams::default() };
-    let mut factory = AnalyticFactory::new(platform.clone());
-    Ok(validate(&mut factory, platform, &space, &sc, slo, &cfg)?)
+    let factory = AnalyticFactory::new(platform.clone());
+    validate(&factory, platform, &space, &sc, slo, &cfg)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let slo = Slo::paper_default();
     let op1_slo = Slo { ttft: 3.0, tpot: 0.120, ..slo };

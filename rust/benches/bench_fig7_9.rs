@@ -12,7 +12,7 @@ use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{rate_sweep, results_dir};
 use bestserve::simulator::SimParams;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let scenario = Scenario::fixed("sweep", 2048, 64, 4_000);

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
-use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
+use bestserve::optimizer::{optimize, optimize_parallel, AnalyticFactory, GoodputConfig};
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, simulate, SimParams};
 use bestserve::testbed::{Testbed, TestbedConfig};
@@ -19,7 +19,7 @@ fn time<F: FnMut()>(mut f: F) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     println!("=== bench_perf — whole-stack hot-path numbers ===\n");
@@ -111,12 +111,12 @@ fn main() -> anyhow::Result<()> {
         tp_choices: vec![1, 2, 4, 8],
         ..StrategySpace::default()
     };
-    let mut factory = AnalyticFactory::new(platform.clone());
+    let factory = AnalyticFactory::new(platform.clone());
     let mut n_strategies = 0usize;
     let sc = Scenario::fixed("perf", 2048, 64, 2_000);
     let dt = time(|| {
         let r = optimize(
-            &mut factory,
+            &factory,
             &platform,
             &space,
             &sc,
@@ -131,5 +131,46 @@ fn main() -> anyhow::Result<()> {
         "optimizer full space      : {n_strategies} strategies in {dt:.2}s \
          (paper target: 'minutes on a single standard CPU')"
     );
+
+    // --- Parallel strategy sweep --------------------------------------------
+    // Serial vs multi-threaded `optimize` over the same space. The oracle
+    // caches are warm from the run above, so the comparison isolates the
+    // sweep itself (simulation work), not model construction.
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let sweep = |n_threads: usize| {
+        optimize_parallel(
+            &factory,
+            &platform,
+            &space,
+            &sc,
+            &Slo::paper_default(),
+            params,
+            &GoodputConfig::default(),
+            false,
+            n_threads,
+        )
+        .unwrap()
+    };
+    let mut serial_rep = None;
+    let t_serial = time(|| serial_rep = Some(sweep(1)));
+    let mut par_rep = None;
+    let t_par = time(|| par_rep = Some(sweep(threads)));
+    let speedup = t_serial / t_par;
+    println!(
+        "parallel sweep            : {threads} threads {t_par:.2}s vs serial {t_serial:.2}s \
+         — speedup {speedup:.2}x"
+    );
+    assert_eq!(
+        serial_rep.unwrap().ranked,
+        par_rep.unwrap().ranked,
+        "parallel sweep must be deterministic"
+    );
+    if threads >= 2 {
+        assert!(
+            speedup > 1.0,
+            "expected >1x speedup on {threads} cores, got {speedup:.2}x \
+             ({t_serial:.2}s serial vs {t_par:.2}s parallel)"
+        );
+    }
     Ok(())
 }

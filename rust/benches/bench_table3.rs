@@ -10,7 +10,7 @@ use bestserve::config::{Phase, Platform};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::report::{results_dir, table3};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
 

@@ -16,7 +16,7 @@ use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{results_dir, table_slo};
 use bestserve::simulator::SimParams;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let scenario = Scenario::fixed("table4", 2048, 64, 10_000);

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use crate::config::{Phase, Platform};
 
@@ -69,10 +69,13 @@ impl CacheStats {
 /// the per-block dispatch/compute interleaving runs once per distinct
 /// argument tuple and is served from the cache afterwards — the Simulator
 /// invokes it millions of times with a small set of distinct batch sizes.
+/// The cache is an `RwLock` (read-mostly after warm-up) so the optimizer's
+/// parallel strategy sweep can share one oracle across worker threads
+/// without serializing on every lookup.
 pub struct AnalyticOracle {
     platform: Platform,
     tp: u32,
-    cache: Mutex<HashMap<(u8, u32, u32), f64>>,
+    cache: RwLock<HashMap<(u8, u32, u32), f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -83,7 +86,7 @@ impl AnalyticOracle {
         AnalyticOracle {
             platform,
             tp,
-            cache: Mutex::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -142,13 +145,13 @@ impl AnalyticOracle {
     /// `ESTIMATE_TIME` (Algorithm 1): ℓ blocks, cached on (phase, b, s).
     pub fn estimate(&self, phase: Phase, b: u32, s: u32) -> f64 {
         let key = (phase as u8, b, s);
-        if let Some(&t) = self.cache.lock().unwrap().get(&key) {
+        if let Some(&t) = self.cache.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let t = self.platform.model.layers as f64 * self.block_time(phase, b, s);
-        self.cache.lock().unwrap().insert(key, t);
+        self.cache.write().unwrap().insert(key, t);
         t
     }
 

@@ -6,12 +6,18 @@
 //! Three hierarchical components (Figure 4 of the paper):
 //!
 //! * [`estimator`] — operator-level latency oracle built on an adapted
-//!   roofline model (Algorithm 1, Tables 1–13).
+//!   roofline model (Algorithm 1, Tables 1–13), with a read-mostly cache
+//!   safe to share across sweep threads.
 //! * [`simulator`] — discrete-event simulation of request arrival, batching,
-//!   and departure for collocation and disaggregation architectures
-//!   (Algorithms 2–7).
+//!   and departure (Algorithms 2–7), built as architecture *policies*
+//!   (prefill, decode, collocation, disaggregation tandem) plugged into one
+//!   shared event core ([`simulator::core`]: clock, event loop, slot pools,
+//!   FIFO batching, round-robin order, ready heap). New architectures are
+//!   new policy files, not new engines.
 //! * [`optimizer`] — goodput search by bisection over arrival rate under
-//!   P90-SLO feasibility (Algorithms 8–9), enumerating the strategy space.
+//!   P90-SLO feasibility (Algorithms 8–9), enumerating the strategy space
+//!   and fanning the per-strategy bisections out across scoped worker
+//!   threads with deterministic, thread-count-independent rankings.
 //!
 //! Plus the substrates a production deployment of the idea needs:
 //!

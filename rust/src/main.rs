@@ -5,20 +5,22 @@
 //!   estimate   Algorithm 1 per-module breakdown (Table 3)
 //!   simulate   one strategy at one rate (Tables 4/5, Figures 6/8)
 //!   sweep      P90s vs arrival rate (Figures 7/9)
-//!   optimize   rank all strategies by goodput (the Optimizer, §3.5)
+//!   optimize   rank all strategies by goodput (the Optimizer, §3.5),
+//!              fanned out across worker threads (--threads)
 //!   testbed    token-level ground-truth serving run
 //!   validate   BestServe vs ground truth across a strategy space (Fig. 11)
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context};
-
 use bestserve::cli::Args;
 use bestserve::config::{
     HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy, StrategySpace,
 };
+use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
-use bestserve::optimizer::{optimize_with_memory, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory};
+use bestserve::optimizer::{
+    optimize_parallel, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
+};
 use bestserve::report;
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, SimParams, SpanMode};
@@ -41,6 +43,8 @@ COMMANDS
   sweep     --strategy S --scenario OP --rates lo:hi:step [--grid] [--out DIR]
   optimize  --scenario OP [--max-cards 8] [--tp 1,2,4,8] [--grid]
             [--bmax-prefill 4] [--bmax-decode 16] [--repeats 1]
+            [--threads N]   (parallel strategy sweep; default: all cores.
+                             Output is identical for any thread count)
             [--check-memory] (reject strategies whose weights+KV overflow HBM)
   testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
             [--trace F]     (replay a CSV trace instead of Poisson traffic)
@@ -54,9 +58,9 @@ COMMON OPTIONS
   --slo-ttft ms (default 1500)    --slo-tpot ms (default 70)
 ";
 
-fn platform_from(args: &Args) -> anyhow::Result<Platform> {
+fn platform_from(args: &Args) -> Result<Platform> {
     if let Some(path) = args.get("config") {
-        return Ok(Platform::from_file(path)?);
+        return Platform::from_file(path);
     }
     let model = ModelConfig::preset(&args.str_or("model", "codellama-34b"))?;
     let hardware = HardwareConfig::preset(&args.str_or("hardware", "ascend-910b3"))?;
@@ -67,16 +71,18 @@ fn platform_from(args: &Args) -> anyhow::Result<Platform> {
     })
 }
 
-fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
+fn scenario_from(args: &Args) -> Result<Scenario> {
     let name = args.str_or("scenario", "op2");
     let mut sc = Scenario::preset(&name)?;
     if let Some(n) = args.get("n") {
-        sc.n_requests = n.parse().context("--n expects an integer")?;
+        sc.n_requests = n
+            .parse()
+            .map_err(|_| Error::config(format!("--n expects an integer, got '{n}'")))?;
     }
     Ok(sc)
 }
 
-fn slo_from(args: &Args) -> anyhow::Result<Slo> {
+fn slo_from(args: &Args) -> Result<Slo> {
     let mut slo = Slo::paper_default();
     slo.ttft = args.f64_or("slo-ttft", slo.ttft * 1e3)? / 1e3;
     slo.tpot = args.f64_or("slo-tpot", slo.tpot * 1e3)? / 1e3;
@@ -85,7 +91,7 @@ fn slo_from(args: &Args) -> anyhow::Result<Slo> {
     Ok(slo)
 }
 
-fn sim_params_from(args: &Args) -> anyhow::Result<SimParams> {
+fn sim_params_from(args: &Args) -> Result<SimParams> {
     Ok(SimParams {
         tau: args.f64_or("tau", 2.5)?,
         seed: args.u64_or("seed", 0xBE57_5E7F)?,
@@ -98,7 +104,11 @@ fn sim_params_from(args: &Args) -> anyhow::Result<SimParams> {
     })
 }
 
-fn model_for(args: &Args, platform: &Platform, tp: u32) -> anyhow::Result<Arc<dyn LatencyModel>> {
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn model_for(args: &Args, platform: &Platform, tp: u32) -> Result<Arc<dyn LatencyModel>> {
     if args.flag("grid") {
         let dir = default_artifacts_dir();
         let g = GridLatencyModel::from_artifacts(&dir, platform, tp)?;
@@ -109,7 +119,7 @@ fn model_for(args: &Args, platform: &Platform, tp: u32) -> anyhow::Result<Arc<dy
     }
 }
 
-fn factory_for(args: &Args, platform: &Platform) -> anyhow::Result<Box<dyn ModelFactory>> {
+fn factory_for(args: &Args, platform: &Platform) -> Result<Box<dyn ModelFactory>> {
     if args.flag("grid") {
         Ok(Box::new(GridFactory::new(&default_artifacts_dir(), platform.clone())?))
     } else {
@@ -117,7 +127,7 @@ fn factory_for(args: &Args, platform: &Platform) -> anyhow::Result<Box<dyn Model
     }
 }
 
-fn strategy_from(args: &Args) -> anyhow::Result<Strategy> {
+fn strategy_from(args: &Args) -> Result<Strategy> {
     let mut st = Strategy::parse(&args.str_or("strategy", "1p1d-tp4"))?;
     st.bmax_prefill = args.u32_or("bmax-prefill", st.bmax_prefill)?;
     st.bmax_decode = args.u32_or("bmax-decode", st.bmax_decode)?;
@@ -159,7 +169,7 @@ fn cmd_presets() {
     print!("{}", t.render());
 }
 
-fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+fn cmd_estimate(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let tp = args.u32_or("tp", 4)?;
     let b = args.u32_or("b", 1)?;
@@ -167,7 +177,7 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
     let phase = match args.str_or("phase", "prefill").as_str() {
         "prefill" => Phase::Prefill,
         "decode" => Phase::Decode,
-        p => return Err(anyhow!("--phase must be prefill|decode, got {p}")),
+        p => return Err(Error::config(format!("--phase must be prefill|decode, got {p}"))),
     };
     let model = model_for(args, &platform, tp)?;
     let t3 = report::table3(model.as_ref(), &platform, phase, b, s, tp);
@@ -183,7 +193,7 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
     let scenario = scenario_from(args)?;
@@ -216,7 +226,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+fn cmd_sweep(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
     let scenario = scenario_from(args)?;
@@ -237,7 +247,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+fn cmd_optimize(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let scenario = scenario_from(args)?;
     let slo = slo_from(args)?;
@@ -255,10 +265,11 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         repeats: args.usize_or("repeats", 1)?,
         ..GoodputConfig::default()
     };
-    let mut factory = factory_for(args, &platform)?;
+    let threads = args.usize_or("threads", default_threads())?.max(1);
+    let factory = factory_for(args, &platform)?;
     let t0 = std::time::Instant::now();
-    let rep = optimize_with_memory(
-        factory.as_mut(),
+    let rep = optimize_parallel(
+        factory.as_ref(),
         &platform,
         &space,
         &scenario,
@@ -266,6 +277,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         params,
         &cfg,
         args.flag("check-memory"),
+        threads,
     )?;
     let dt = t0.elapsed();
     let mut t = Table::new(&["#", "strategy", "cards", "goodput", "normalized"]).numeric_body();
@@ -279,10 +291,11 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     println!(
-        "scenario {} | {} strategies | optimized in {:.1}s",
+        "scenario {} | {} strategies | optimized in {:.1}s on {} thread(s)",
         rep.scenario,
         rep.ranked.len(),
-        dt.as_secs_f64()
+        dt.as_secs_f64(),
+        threads
     );
     print!("{}", t.render());
     if let Some(best) = rep.best() {
@@ -296,7 +309,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_testbed(args: &Args) -> anyhow::Result<()> {
+fn cmd_testbed(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
     let scenario = scenario_from(args)?;
@@ -305,8 +318,10 @@ fn cmd_testbed(args: &Args) -> anyhow::Result<()> {
     let model = model_for(args, &platform, strategy.tp)?;
     let mut config = TestbedConfig::default();
     if let Some(b) = args.get("kv-blocks") {
-        config.kv_capacity =
-            bestserve::testbed::KvCapacity::Blocks(b.parse().context("--kv-blocks int")?);
+        let blocks = b
+            .parse()
+            .map_err(|_| Error::config(format!("--kv-blocks expects an integer, got '{b}'")))?;
+        config.kv_capacity = bestserve::testbed::KvCapacity::Blocks(blocks);
     }
     let reqs = match args.get("trace") {
         Some(path) => {
@@ -353,7 +368,7 @@ fn cmd_testbed(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+fn cmd_validate(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let scenario = scenario_from(args)?;
     let slo = slo_from(args)?;
@@ -371,9 +386,9 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     };
     cfg.goodput.tolerance = args.f64_or("tolerance", 0.1)?;
     cfg.ground_truth.tolerance = args.f64_or("tolerance", 0.1)?;
-    let mut factory = factory_for(args, &platform)?;
+    let factory = factory_for(args, &platform)?;
     let t0 = std::time::Instant::now();
-    let rep = validate(factory.as_mut(), &platform, &space, &scenario, &slo, &cfg)?;
+    let rep = validate(factory.as_ref(), &platform, &space, &scenario, &slo, &cfg)?;
     println!(
         "Figure-11 panel for {} ({} strategies, {:.1}s):",
         rep.scenario,
@@ -394,7 +409,7 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -414,7 +429,14 @@ fn main() -> anyhow::Result<()> {
         }
         other => {
             eprint!("{HELP}");
-            Err(anyhow!("unknown command '{other}'"))
+            Err(Error::config(format!("unknown command '{other}'")))
         }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
 }

@@ -3,6 +3,15 @@
 //! the arrival rate (Algorithm 8) under P90-SLO feasibility with the
 //! relaxation factor τ (Algorithm 9), and rank by normalized goodput
 //! (goodput per card, the §4.1 metric).
+//!
+//! The sweep over the strategy space is embarrassingly parallel — each
+//! strategy's bisection is independent and deterministic in the simulation
+//! seed — so [`optimize_parallel`] fans the per-strategy [`find_goodput`]
+//! calls out across `std::thread::scope` workers. The per-tp latency models
+//! are pre-built serially through the (now `&self`, interior-mutability)
+//! [`ModelFactory`], results are scattered back by enumeration index, and
+//! the final ranking uses a stable NaN-last sort — so the output is
+//! byte-identical for any thread count.
 
 pub mod goodput;
 pub mod memory;
@@ -11,36 +20,38 @@ pub use goodput::{find_goodput, GoodputConfig};
 pub use memory::{check_memory, MemoryCheck};
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
 use crate::error::Result;
 use crate::estimator::{AnalyticOracle, LatencyModel};
 use crate::simulator::SimParams;
+use crate::util::stats::rank_desc;
 
 /// Builds (and caches) a latency model per tensor-parallel size — the
 /// Optimizer sweeps tp, and both the analytic oracle and the PJRT grid are
-/// constructed per (platform, tp).
+/// constructed per (platform, tp). Takes `&self` (caches use interior
+/// mutability) so a factory can be shared while the sweep runs.
 pub trait ModelFactory {
-    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>>;
+    fn model_for_tp(&self, tp: u32) -> Result<Arc<dyn LatencyModel>>;
 }
 
 /// Native Algorithm-1 oracle factory.
 pub struct AnalyticFactory {
     platform: Platform,
-    cache: HashMap<u32, Arc<dyn LatencyModel>>,
+    cache: Mutex<HashMap<u32, Arc<dyn LatencyModel>>>,
 }
 
 impl AnalyticFactory {
     pub fn new(platform: Platform) -> AnalyticFactory {
-        AnalyticFactory { platform, cache: HashMap::new() }
+        AnalyticFactory { platform, cache: Mutex::new(HashMap::new()) }
     }
 }
 
 impl ModelFactory for AnalyticFactory {
-    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
-        Ok(self
-            .cache
+    fn model_for_tp(&self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache
             .entry(tp)
             .or_insert_with(|| Arc::new(AnalyticOracle::new(self.platform.clone(), tp)))
             .clone())
@@ -52,20 +63,21 @@ pub struct GridFactory {
     platform: Platform,
     exe: crate::runtime::PjrtExecutable,
     manifest: crate::runtime::GridManifest,
-    cache: HashMap<u32, Arc<dyn LatencyModel>>,
+    cache: Mutex<HashMap<u32, Arc<dyn LatencyModel>>>,
 }
 
 impl GridFactory {
     pub fn new(artifacts_dir: &std::path::Path, platform: Platform) -> Result<GridFactory> {
         let manifest = crate::runtime::GridManifest::load(artifacts_dir)?;
         let exe = crate::runtime::PjrtExecutable::load(artifacts_dir.join(&manifest.file))?;
-        Ok(GridFactory { platform, exe, manifest, cache: HashMap::new() })
+        Ok(GridFactory { platform, exe, manifest, cache: Mutex::new(HashMap::new()) })
     }
 }
 
 impl ModelFactory for GridFactory {
-    fn model_for_tp(&mut self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
-        if let Some(m) = self.cache.get(&tp) {
+    fn model_for_tp(&self, tp: u32) -> Result<Arc<dyn LatencyModel>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(m) = cache.get(&tp) {
             return Ok(m.clone());
         }
         let grid = crate::runtime::GridLatencyModel::from_executable(
@@ -75,13 +87,13 @@ impl ModelFactory for GridFactory {
             tp,
         )?;
         let arc: Arc<dyn LatencyModel> = Arc::new(grid);
-        self.cache.insert(tp, arc.clone());
+        cache.insert(tp, arc.clone());
         Ok(arc)
     }
 }
 
 /// One ranked row of the Figure-11-style output.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RankedStrategy {
     pub strategy: Strategy,
     /// Goodput in requests/second (0 if even λ=0.1 is infeasible).
@@ -94,7 +106,7 @@ pub struct RankedStrategy {
 }
 
 /// Full optimizer output.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerReport {
     pub scenario: String,
     pub ranked: Vec<RankedStrategy>,
@@ -106,14 +118,17 @@ impl OptimizerReport {
     }
 }
 
+/// Rank in place: descending normalized goodput, NaN (a degenerate
+/// simulation) strictly last, ties keeping enumeration order (stable sort)
+/// — so the ranking is independent of the sweep's thread count.
+pub(crate) fn rank(ranked: &mut [RankedStrategy]) {
+    ranked.sort_by(|a, b| rank_desc(a.normalized, b.normalized));
+}
+
 /// Enumerate the strategy space and rank by normalized goodput (§3.5).
-///
-/// `check_memory` enables the memory-aware pre-filter (our extension for
-/// the paper's §5 memory-insensitivity limitation): strategies that cannot
-/// hold their weights + peak KV are scored 0 without simulating. It is off
-/// by default to match the paper's behaviour.
+/// Single-threaded; see [`optimize_parallel`] for the fan-out variant.
 pub fn optimize(
-    factory: &mut dyn ModelFactory,
+    factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
     scenario: &Scenario,
@@ -121,13 +136,18 @@ pub fn optimize(
     sim_params: SimParams,
     cfg: &GoodputConfig,
 ) -> Result<OptimizerReport> {
-    optimize_with_memory(factory, platform, space, scenario, slo, sim_params, cfg, false)
+    optimize_parallel(factory, platform, space, scenario, slo, sim_params, cfg, false, 1)
 }
 
 /// [`optimize`] with the memory pre-filter toggle exposed.
+///
+/// `check_mem` enables the memory-aware pre-filter (our extension for the
+/// paper's §5 memory-insensitivity limitation): strategies that cannot hold
+/// their weights + peak KV are scored 0 without simulating. It is off by
+/// default to match the paper's behaviour.
 #[allow(clippy::too_many_arguments)]
 pub fn optimize_with_memory(
-    factory: &mut dyn ModelFactory,
+    factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
     scenario: &Scenario,
@@ -136,36 +156,112 @@ pub fn optimize_with_memory(
     cfg: &GoodputConfig,
     check_mem: bool,
 ) -> Result<OptimizerReport> {
-    let mut ranked = Vec::new();
-    for strategy in space.enumerate() {
-        if check_mem && !memory::check_memory(platform, &strategy, scenario).fits() {
-            ranked.push(RankedStrategy {
-                strategy,
+    optimize_parallel(factory, platform, space, scenario, slo, sim_params, cfg, check_mem, 1)
+}
+
+/// The full optimizer: enumerate, pre-build the per-tp models, fan the
+/// per-strategy bisections out over `threads` scoped workers, scatter the
+/// results back by enumeration index, and rank.
+///
+/// Deterministic by construction: each bisection depends only on its
+/// strategy and the fixed simulation seed, results are written to their
+/// enumeration slot, and the stable NaN-last ranking breaks ties by
+/// enumeration order — `threads = 1` and `threads = N` produce identical
+/// reports.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_parallel(
+    factory: &dyn ModelFactory,
+    platform: &Platform,
+    space: &StrategySpace,
+    scenario: &Scenario,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+    check_mem: bool,
+    threads: usize,
+) -> Result<OptimizerReport> {
+    let strategies = space.enumerate();
+
+    // Pre-build every latency model the sweep will touch, serially: the
+    // workers then only share `Arc<dyn LatencyModel>` (Send + Sync by the
+    // trait bound) — the factory itself never crosses a thread boundary.
+    // Strategies the memory pre-filter rejects are scored without a model,
+    // so their tp values don't force a build (a GridFactory build executes
+    // the PJRT artifact — not free).
+    let mut models: HashMap<u32, Arc<dyn LatencyModel>> = HashMap::new();
+    for strategy in &strategies {
+        if check_mem && !memory::check_memory(platform, strategy, scenario).fits() {
+            continue;
+        }
+        if !models.contains_key(&strategy.tp) {
+            models.insert(strategy.tp, factory.model_for_tp(strategy.tp)?);
+        }
+    }
+
+    let eval = |strategy: &Strategy| -> Result<RankedStrategy> {
+        if check_mem && !memory::check_memory(platform, strategy, scenario).fits() {
+            return Ok(RankedStrategy {
+                strategy: strategy.clone(),
                 goodput: 0.0,
                 normalized: 0.0,
                 memory_rejected: true,
             });
-            continue;
         }
-        let model = factory.model_for_tp(strategy.tp)?;
+        let model = &models[&strategy.tp];
         let g = find_goodput(
             model.as_ref(),
             platform,
-            &strategy,
+            strategy,
             scenario,
             slo,
             sim_params,
             cfg,
         )?;
         let cards = strategy.total_cards() as f64;
-        ranked.push(RankedStrategy {
-            strategy,
+        Ok(RankedStrategy {
+            strategy: strategy.clone(),
             goodput: g,
             normalized: g / cards,
             memory_rejected: false,
+        })
+    };
+
+    let threads = threads.max(1).min(strategies.len().max(1));
+    let mut ranked: Vec<RankedStrategy> = Vec::with_capacity(strategies.len());
+    if threads == 1 {
+        for strategy in &strategies {
+            ranked.push(eval(strategy)?);
+        }
+    } else {
+        let mut results: Vec<Option<Result<RankedStrategy>>> =
+            (0..strategies.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for worker in 0..threads {
+                let eval = &eval;
+                let strategies = &strategies;
+                handles.push(scope.spawn(move || {
+                    strategies
+                        .iter()
+                        .enumerate()
+                        .skip(worker)
+                        .step_by(threads)
+                        .map(|(i, s)| (i, eval(s)))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for handle in handles {
+                for (i, r) in handle.join().expect("optimizer worker panicked") {
+                    results[i] = Some(r);
+                }
+            }
         });
+        for r in results {
+            ranked.push(r.expect("every strategy slot is filled")?);
+        }
     }
-    ranked.sort_by(|a, b| b.normalized.partial_cmp(&a.normalized).unwrap());
+
+    rank(&mut ranked);
     Ok(OptimizerReport { scenario: scenario.name.clone(), ranked })
 }
 
@@ -177,7 +273,7 @@ mod tests {
     /// A fast fake factory for optimizer-level tests: constant-time model.
     struct FakeFactory;
     impl ModelFactory for FakeFactory {
-        fn model_for_tp(&mut self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
+        fn model_for_tp(&self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
             struct M;
             impl LatencyModel for M {
                 fn prefill_time(&self, b: u32, _s: u32) -> f64 {
@@ -203,7 +299,7 @@ mod tests {
         let slo = Slo::paper_default();
         let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
         let report = optimize(
-            &mut FakeFactory,
+            &FakeFactory,
             &platform,
             &space,
             &scenario,
@@ -227,7 +323,7 @@ mod tests {
 
     #[test]
     fn factories_cache_per_tp() {
-        let mut f = AnalyticFactory::new(Platform::paper_testbed());
+        let f = AnalyticFactory::new(Platform::paper_testbed());
         let a = f.model_for_tp(4).unwrap();
         let b = f.model_for_tp(4).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
@@ -241,5 +337,105 @@ mod tests {
         let all = space.enumerate();
         assert!(all.iter().any(|s| matches!(s.arch, Architecture::Collocation { .. })));
         assert!(all.iter().any(|s| matches!(s.arch, Architecture::Disaggregation { .. })));
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_bit_for_bit() {
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 6,
+            tp_choices: vec![1, 2],
+            ..StrategySpace::default()
+        };
+        let scenario = Scenario::fixed("t", 256, 16, 200);
+        let slo = Slo::paper_default();
+        let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
+        let run = |threads: usize| {
+            optimize_parallel(
+                &FakeFactory,
+                &platform,
+                &space,
+                &scenario,
+                &slo,
+                SimParams::default(),
+                &cfg,
+                false,
+                threads,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        for threads in [2, 4, 8] {
+            let par = run(threads);
+            assert_eq!(serial.ranked, par.ranked, "threads={threads}");
+            // PartialEq on f64 is value equality; pin the bits too so the
+            // "byte-identical" claim is literal.
+            for (a, b) in serial.ranked.iter().zip(par.ranked.iter()) {
+                assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+                assert_eq!(a.normalized.to_bits(), b.normalized.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_zero_goodput_rank_last_without_panic() {
+        // Seed regression: the ranking sort used partial_cmp().unwrap(),
+        // which panics the moment any strategy produces a NaN goodput.
+        let mk = |norm: f64, tp: u32| RankedStrategy {
+            strategy: Strategy::collocation(1, tp),
+            goodput: norm,
+            normalized: norm,
+            memory_rejected: false,
+        };
+        let mut ranked = vec![mk(f64::NAN, 1), mk(0.0, 2), mk(2.5, 4), mk(f64::NAN, 8)];
+        rank(&mut ranked);
+        assert_eq!(ranked[0].strategy.tp, 4);
+        assert_eq!(ranked[1].strategy.tp, 2);
+        // NaNs sort last, keeping their relative (enumeration) order.
+        assert!(ranked[2].normalized.is_nan() && ranked[2].strategy.tp == 1);
+        assert!(ranked[3].normalized.is_nan() && ranked[3].strategy.tp == 8);
+    }
+
+    #[test]
+    fn zero_goodput_strategies_rank_without_panic() {
+        // Every strategy infeasible even at λ_min (decode step far beyond
+        // the TPOT SLO): the sweep must rank them all at zero goodput, not
+        // crash in the ranking sort.
+        struct SlowFactory;
+        impl ModelFactory for SlowFactory {
+            fn model_for_tp(&self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
+                struct M;
+                impl LatencyModel for M {
+                    fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+                        0.01
+                    }
+                    fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+                        0.2 // 200 ms/token >> the 70 ms TPOT SLO
+                    }
+                }
+                Ok(Arc::new(M))
+            }
+        }
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 2,
+            tp_choices: vec![1],
+            ..StrategySpace::default()
+        };
+        let scenario = Scenario::fixed("t", 64, 4, 50);
+        let slo = Slo::paper_default();
+        let cfg = GoodputConfig { tolerance: 0.5, ..GoodputConfig::default() };
+        let report = optimize(
+            &SlowFactory,
+            &platform,
+            &space,
+            &scenario,
+            &slo,
+            SimParams::default(),
+            &cfg,
+        )
+        .unwrap();
+        assert!(!report.ranked.is_empty());
+        assert!(report.ranked.iter().all(|r| r.goodput == 0.0), "{report:?}");
     }
 }

@@ -6,69 +6,124 @@
 //! that xla_extension 0.5.1 rejects — the text parser reassigns them).
 //! This module loads the text, compiles it on the PJRT CPU client, and
 //! executes it with runtime inputs. Python never runs on the request path.
+//!
+//! The `xla` crate is not in the offline registry, so the executor is gated
+//! behind the `xla-runtime` cargo feature: the default zero-dependency
+//! build compiles a stub whose `load` fails with an actionable error, and
+//! the analytic-oracle path (no `--grid`) stays fully functional.
 
 use std::path::Path;
 
 use crate::error::{Error, Result};
 
-/// A compiled PJRT executable with f32 I/O, wrapping the `xla` crate.
-pub struct PjrtExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    platform: String,
+#[cfg(feature = "xla-runtime")]
+mod imp {
+    use super::*;
+
+    /// A compiled PJRT executable with f32 I/O, wrapping the `xla` crate.
+    pub struct PjrtExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        platform: String,
+    }
+
+    impl PjrtExecutable {
+        /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+        pub fn load<P: AsRef<Path>>(path: P) -> Result<PjrtExecutable> {
+            let path = path.as_ref();
+            if !path.exists() {
+                return Err(Error::runtime(format!(
+                    "artifact '{}' not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::runtime(format!("PJRT CPU client: {e}")))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| Error::runtime(format!("parse '{}': {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile '{}': {e}", path.display())))?;
+            Ok(PjrtExecutable { exe, platform: client.platform_name() })
+        }
+
+        pub fn platform(&self) -> &str {
+            &self.platform
+        }
+
+        /// Execute with f32 vector inputs (each given as flat data + dims)
+        /// and return every output as a flat f32 vector. The artifact is
+        /// lowered with `return_tuple=True`, so the single result literal is
+        /// a tuple.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| Error::runtime(format!("reshape input: {e}")))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    lit.to_vec::<f32>()
+                        .map_err(|e| Error::runtime(format!("read output: {e}")))
+                })
+                .collect()
+        }
+    }
 }
 
-impl PjrtExecutable {
-    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
-    pub fn load<P: AsRef<Path>>(path: P) -> Result<PjrtExecutable> {
-        let path = path.as_ref();
-        if !path.exists() {
-            return Err(Error::runtime(format!(
-                "artifact '{}' not found — run `make artifacts` first",
+#[cfg(not(feature = "xla-runtime"))]
+mod imp {
+    use super::*;
+
+    /// Stub compiled when the `xla-runtime` feature (and with it the `xla`
+    /// crate) is absent: artifact loading fails with an actionable error
+    /// while the rest of the system — oracle, simulators, optimizer —
+    /// remains fully usable.
+    pub struct PjrtExecutable {
+        platform: String,
+    }
+
+    impl PjrtExecutable {
+        pub fn load<P: AsRef<Path>>(path: P) -> Result<PjrtExecutable> {
+            let path = path.as_ref();
+            if !path.exists() {
+                return Err(Error::runtime(format!(
+                    "artifact '{}' not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            Err(Error::runtime(format!(
+                "artifact '{}' exists but this binary was built without the \
+                 `xla-runtime` feature (offline zero-dependency build); rebuild \
+                 with `--features xla-runtime` and a vendored `xla` crate to \
+                 execute it, or drop `--grid` to use the native oracle",
                 path.display()
-            )));
+            )))
         }
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::runtime(format!("PJRT CPU client: {e}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| Error::runtime(format!("parse '{}': {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| Error::runtime(format!("compile '{}': {e}", path.display())))?;
-        Ok(PjrtExecutable { exe, platform: client.platform_name() })
-    }
 
-    pub fn platform(&self) -> &str {
-        &self.platform
-    }
-
-    /// Execute with f32 vector inputs (each given as flat data + dims) and
-    /// return every output as a flat f32 vector. The artifact is lowered
-    /// with `return_tuple=True`, so the single result literal is a tuple.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| Error::runtime(format!("reshape input: {e}")))?;
-            literals.push(lit);
+        pub fn platform(&self) -> &str {
+            &self.platform
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::runtime(format!("execute: {e}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                lit.to_vec::<f32>()
-                    .map_err(|e| Error::runtime(format!("read output: {e}")))
-            })
-            .collect()
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            Err(Error::runtime(
+                "PJRT runtime unavailable: built without the `xla-runtime` feature",
+            ))
+        }
     }
 }
+
+pub use imp::PjrtExecutable;

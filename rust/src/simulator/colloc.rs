@@ -1,22 +1,26 @@
-//! §3.4.4 — the collocation simulator, mimicking vLLM's scheduler semantics
-//! (Algorithms 4–7): (a) prefills are prioritized, (b) prefill and decode
-//! are never batched together. Each instance carries a status flag
-//! (prefill/decode), decode *boxes* (continuous-batching slots), and a
-//! pending-resume time; incoming prefills suspend ongoing decodes, shifting
-//! their completion times, and consecutive prefills delay the resumption
-//! further (the paper's resume-queue `S` with re-sorting — realized here as
-//! a per-instance `resume_at`, applied with prefill-first priority).
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//! §3.4.4 — the collocation engine, mimicking vLLM's scheduler semantics
+//! (Algorithms 4–7), expressed as a scheduling policy on the shared event
+//! core: (a) prefills are prioritized, (b) prefill and decode are never
+//! batched together. Each instance carries a status flag (prefill/decode),
+//! a decode [`SlotPool`] (continuous-batching slots), and a pending-resume
+//! time; incoming prefills suspend ongoing decodes, shifting their
+//! completion times, and consecutive prefills delay the resumption further
+//! (the paper's resume-queue `S` with re-sorting — realized here as a
+//! per-instance `resume_at`, applied with prefill-first priority). The
+//! clock, slot pool, batching, ready heap and next-event machinery live in
+//! [`super::core`].
 
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::LatencyModel;
 use crate::util::rng::Rng;
 
+use super::core::{
+    decode_span_for, drive, EventDriven, FifoArrivals, NextEvent, ReadyQueue, SlotPool,
+    VisitOrder,
+};
 use super::metrics::{RequestOutcome, SimReport};
-use super::params::{SimParams, SpanMode};
+use super::params::SimParams;
 use super::request::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,19 +29,11 @@ enum Status {
     Decode,
 }
 
-#[derive(Debug, Clone, Copy)]
-struct BoxState {
-    /// Time the box frees; <= t means free.
-    until: f64,
-    /// Request occupying the box (for completion shifts on suspension).
-    req: usize,
-}
-
 struct Instance {
     status: Status,
     prefill_until: f64,
     resume_at: f64,
-    boxes: Vec<BoxState>,
+    slots: SlotPool,
 }
 
 impl Instance {
@@ -46,7 +42,7 @@ impl Instance {
             status: Status::Decode,
             prefill_until: 0.0,
             resume_at: f64::INFINITY,
-            boxes: vec![BoxState { until: 0.0, req: usize::MAX }; bmax_decode as usize],
+            slots: SlotPool::new(bmax_decode),
         }
     }
 
@@ -60,26 +56,11 @@ impl Instance {
     }
 
     fn idle_for_decode(&self, t: f64) -> bool {
-        let box_free = self.boxes.iter().any(|b| b.until <= t);
+        let slot_free = self.slots.has_free(t);
         match self.status {
-            Status::Decode => box_free,
-            Status::Prefill => self.prefill_until <= t && box_free,
+            Status::Decode => slot_free,
+            Status::Prefill => self.prefill_until <= t && slot_free,
         }
-    }
-
-    fn busy_boxes(&self, t: f64) -> u32 {
-        self.boxes.iter().filter(|b| b.until > t).count() as u32
-    }
-}
-
-/// An ordered float for the decode-ready heap.
-#[derive(PartialEq, PartialOrd)]
-struct F64Ord(f64);
-impl Eq for F64Ord {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
-impl Ord for F64Ord {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
     }
 }
 
@@ -90,6 +71,135 @@ pub struct CollocSimulator<'a> {
     pub bmax_prefill: u32,
     pub bmax_decode: u32,
     pub params: SimParams,
+}
+
+/// The Algorithms-4–7 scheduling rule, plugged into [`drive`]. One `step`
+/// performs at most one action, in strict priority order: prefill launch,
+/// then due resumptions, then decode insertion.
+struct CollocPolicy<'a> {
+    model: &'a dyn LatencyModel,
+    params: SimParams,
+    reqs: &'a [Request],
+    bmax_prefill: u32,
+    arrivals: FifoArrivals<'a>,
+    instances: Vec<Instance>,
+    order: VisitOrder,
+    rng: Rng,
+    /// Decode hand-off queue keyed by readiness (= prefill departure).
+    decode_q: ReadyQueue,
+    d1: Vec<f64>,
+    completion: Vec<f64>,
+    inserted: usize,
+}
+
+impl EventDriven for CollocPolicy<'_> {
+    fn step(&mut self, t: f64) -> bool {
+        // --- Algorithm 6: prefill processing (highest priority) -----------
+        if self.arrivals.head_arrived(t) {
+            let order = self.order.shuffled(&mut self.rng);
+            let found = order
+                .iter()
+                .copied()
+                .find(|&i| self.instances[i].idle_for_prefill(t));
+            if let Some(i) = found {
+                let batch = self.arrivals.take_batch(t, self.bmax_prefill);
+                let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+                for r in batch.range() {
+                    self.d1[r] = t + t_b;
+                    self.decode_q.push(t + t_b, r);
+                }
+                // Suspend (status decode) or further delay (status prefill)
+                // the ongoing decodes — Alg. 6 lines 13–18.
+                let completion = &mut self.completion;
+                let inst = &mut self.instances[i];
+                inst.slots.shift_busy(t, t_b, |r| completion[r] += t_b);
+                match inst.status {
+                    Status::Decode => {
+                        inst.status = Status::Prefill;
+                        inst.resume_at = t + t_b;
+                    }
+                    Status::Prefill => {
+                        if inst.resume_at.is_finite() {
+                            inst.resume_at = t + t_b;
+                        }
+                    }
+                }
+                inst.prefill_until = t + t_b;
+                return true;
+            }
+        }
+
+        // --- Algorithm 4 lines 13–16: due resumptions ----------------------
+        let mut resumed = false;
+        for inst in self.instances.iter_mut() {
+            if inst.resume_at <= t {
+                inst.status = Status::Decode;
+                inst.resume_at = f64::INFINITY;
+                resumed = true;
+            }
+        }
+        if resumed {
+            return true;
+        }
+
+        // --- Algorithm 7: decode processing --------------------------------
+        if let Some((ready, r)) = self.decode_q.peek() {
+            if ready <= t {
+                let order = self.order.shuffled(&mut self.rng);
+                let found = order
+                    .iter()
+                    .copied()
+                    .find(|&i| self.instances[i].idle_for_decode(t));
+                if let Some(i) = found {
+                    self.decode_q.pop();
+                    let req = self.reqs[r];
+                    let inst = &mut self.instances[i];
+                    let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
+                    let span = decode_span_for(
+                        self.model,
+                        &self.params,
+                        b_eff,
+                        req.input_len,
+                        req.gen_len,
+                    );
+                    let j = inst
+                        .slots
+                        .free_slot(t)
+                        .expect("idle_for_decode implies a free slot");
+                    inst.slots.occupy(j, t + span, r);
+                    if inst.status == Status::Prefill {
+                        // Prefill finished, no pending resume: flip.
+                        inst.status = Status::Decode;
+                    }
+                    self.completion[r] = t + span;
+                    self.inserted += 1;
+                    return true;
+                }
+            }
+        }
+
+        false
+    }
+
+    fn next_event(&self, t: f64) -> f64 {
+        let mut ne = NextEvent::after(t);
+        if let Some(a) = self.arrivals.head_arrival() {
+            ne.offer(a);
+        }
+        if let Some((ready, _)) = self.decode_q.peek() {
+            ne.offer(ready);
+        }
+        for inst in &self.instances {
+            ne.offer(inst.prefill_until);
+            ne.offer(inst.resume_at);
+            inst.slots.offer_releases(&mut ne);
+        }
+        ne.get()
+    }
+
+    fn done(&self) -> bool {
+        self.arrivals.exhausted() && self.inserted >= self.reqs.len()
+    }
 }
 
 impl<'a> CollocSimulator<'a> {
@@ -112,145 +222,28 @@ impl<'a> CollocSimulator<'a> {
         }
     }
 
-    fn span(&self, b_eff: u32, s: u32, s_plus: u32) -> f64 {
-        match self.params.span_mode {
-            SpanMode::PaperHeuristic => self.model.decode_span(b_eff, s, s_plus),
-            SpanMode::Exact => self.model.decode_span_exact(b_eff, s, s_plus),
-        }
-    }
-
     /// Run Algorithms 4–7 over a workload sorted by arrival.
     pub fn run(&self, reqs: &[Request]) -> SimReport {
         assert!(!reqs.is_empty());
         assert!(self.n_instances > 0);
         let n = reqs.len();
-        let mut rng = Rng::new(self.params.seed);
-        let mut instances: Vec<Instance> =
-            (0..self.n_instances).map(|_| Instance::new(self.bmax_decode)).collect();
-        let mut order: Vec<usize> = (0..self.n_instances).collect();
-
-        let mut d1 = vec![f64::INFINITY; n]; // prefill departures
-        let mut completion = vec![f64::INFINITY; n];
-        // Decode queue keyed by readiness (= prefill departure).
-        let mut decode_q: BinaryHeap<Reverse<(F64Ord, usize)>> = BinaryHeap::new();
-        let mut next_p = 0usize; // head of the un-prefilled FIFO
-        let mut inserted = 0usize; // decodes placed into boxes
-        let mut t = 0.0f64;
-
-        while next_p < n || inserted < n {
-            // --- Algorithm 6: prefill processing (highest priority) -------
-            if next_p < n && reqs[next_p].arrival <= t {
-                rng.shuffle(&mut order);
-                if let Some(&i) = order.iter().find(|&&i| instances[i].idle_for_prefill(t)) {
-                    // BATCH(P, A, bmax, t)
-                    let start = next_p;
-                    let mut s_max = 0u32;
-                    while next_p < n
-                        && (next_p - start) < self.bmax_prefill as usize
-                        && reqs[next_p].arrival <= t
-                    {
-                        s_max = s_max.max(reqs[next_p].input_len);
-                        next_p += 1;
-                    }
-                    let b = (next_p - start) as u32;
-                    let t_b = self.model.prefill_time(b, s_max);
-                    for r in start..next_p {
-                        d1[r] = t + t_b;
-                        decode_q.push(Reverse((F64Ord(t + t_b), r)));
-                    }
-                    let inst = &mut instances[i];
-                    // Suspend (status decode) or further delay (status
-                    // prefill) the ongoing decodes — Alg. 6 lines 13–18.
-                    for bx in inst.boxes.iter_mut().filter(|b| b.until > t) {
-                        bx.until += t_b;
-                        if bx.req != usize::MAX {
-                            completion[bx.req] += t_b;
-                        }
-                    }
-                    match inst.status {
-                        Status::Decode => {
-                            inst.status = Status::Prefill;
-                            inst.resume_at = t + t_b;
-                        }
-                        Status::Prefill => {
-                            if inst.resume_at.is_finite() {
-                                inst.resume_at = t + t_b;
-                            }
-                        }
-                    }
-                    inst.prefill_until = t + t_b;
-                    continue; // re-evaluate from the top (process once, exit)
-                }
-            }
-
-            // --- Algorithm 4 lines 13–16: due resumptions -----------------
-            let mut resumed = false;
-            for inst in instances.iter_mut() {
-                if inst.resume_at <= t {
-                    inst.status = Status::Decode;
-                    inst.resume_at = f64::INFINITY;
-                    resumed = true;
-                }
-            }
-            if resumed {
-                continue;
-            }
-
-            // --- Algorithm 7: decode processing ---------------------------
-            if let Some(&Reverse((F64Ord(ready), r))) = decode_q.peek() {
-                if ready <= t {
-                    rng.shuffle(&mut order);
-                    if let Some(&i) =
-                        order.iter().find(|&&i| instances[i].idle_for_decode(t))
-                    {
-                        decode_q.pop();
-                        let inst = &mut instances[i];
-                        let busy = inst.busy_boxes(t);
-                        let b_eff = self.params.pseudo_batch(busy);
-                        let req = &reqs[r];
-                        let span = self.span(b_eff, req.input_len, req.gen_len);
-                        let j = inst.boxes.iter().position(|b| b.until <= t).unwrap();
-                        inst.boxes[j] = BoxState { until: t + span, req: r };
-                        if inst.status == Status::Prefill {
-                            // Prefill finished, no pending resume: flip.
-                            inst.status = Status::Decode;
-                        }
-                        completion[r] = t + span;
-                        inserted += 1;
-                        continue;
-                    }
-                }
-            }
-
-            // --- Advance to the next event --------------------------------
-            let mut t_next = f64::INFINITY;
-            if next_p < n && reqs[next_p].arrival > t {
-                t_next = t_next.min(reqs[next_p].arrival);
-            }
-            if let Some(&Reverse((F64Ord(ready), _))) = decode_q.peek() {
-                if ready > t {
-                    t_next = t_next.min(ready);
-                }
-            }
-            for inst in &instances {
-                if inst.prefill_until > t {
-                    t_next = t_next.min(inst.prefill_until);
-                }
-                if inst.resume_at > t && inst.resume_at.is_finite() {
-                    t_next = t_next.min(inst.resume_at);
-                }
-                for bx in &inst.boxes {
-                    if bx.until > t {
-                        t_next = t_next.min(bx.until);
-                    }
-                }
-            }
-            assert!(
-                t_next.is_finite() && t_next > t,
-                "collocation simulator stalled at t={t} (next_p={next_p}/{n}, inserted={inserted})"
-            );
-            t = t_next;
-        }
+        let mut policy = CollocPolicy {
+            model: self.model,
+            params: self.params,
+            reqs,
+            bmax_prefill: self.bmax_prefill,
+            arrivals: FifoArrivals::new(reqs),
+            instances: (0..self.n_instances)
+                .map(|_| Instance::new(self.bmax_decode))
+                .collect(),
+            order: VisitOrder::new(self.n_instances),
+            rng: Rng::new(self.params.seed),
+            decode_q: ReadyQueue::new(),
+            d1: vec![f64::INFINITY; n],
+            completion: vec![f64::INFINITY; n],
+            inserted: 0,
+        };
+        drive(&mut policy, "collocation");
 
         let outcomes: Vec<RequestOutcome> = reqs
             .iter()
@@ -258,9 +251,9 @@ impl<'a> CollocSimulator<'a> {
             .map(|(idx, r)| RequestOutcome {
                 id: r.id,
                 arrival: r.arrival,
-                first_token: d1[idx],
-                decode_start: d1[idx],
-                completion: completion[idx],
+                first_token: policy.d1[idx],
+                decode_start: policy.d1[idx],
+                completion: policy.completion[idx],
                 gen_len: r.gen_len,
             })
             .collect();

@@ -1,0 +1,546 @@
+//! The shared discrete-event simulation core.
+//!
+//! Every architecture simulator — the prefill stage (Algorithm 2), the
+//! decode stage (Algorithm 3), the vLLM-mimicking collocation engine
+//! (Algorithms 4–7) and the disaggregation tandem (§3.4.3) — is a *policy*
+//! plugged into the machinery here. The core owns everything the engines
+//! used to hand-roll separately:
+//!
+//! * the simulation [`Clock`] and the stall-detecting advancement rule,
+//! * the [`NextEvent`] accumulator (earliest strictly-future event time),
+//! * the generic fixed-point event loop, [`drive`], over an [`EventDriven`]
+//!   policy,
+//! * the continuous-batching [`SlotPool`] ("boxes", §3.4.2),
+//! * the FIFO [`FifoArrivals`] queue with the paper's `BATCH` primitive,
+//! * the shuffled round-robin [`VisitOrder`] (§3.4.1),
+//! * the [`ReadyQueue`] event heap keyed by a total-ordered [`F64Ord`].
+//!
+//! Adding a new architecture (chunked prefill, dynamic PD reallocation, …)
+//! means writing a new [`EventDriven`] policy file that composes these
+//! parts — not a new engine with its own clock and queue code.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::estimator::LatencyModel;
+use crate::util::rng::Rng;
+
+use super::params::{SimParams, SpanMode};
+use super::request::Request;
+
+// ------------------------------------------------------------------ clock --
+
+/// Monotone simulation clock. All time advancement goes through
+/// [`Clock::advance_to`], which catches stalls (non-finite or non-advancing
+/// next event) for every engine in one place.
+#[derive(Debug, Clone)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Jump to `t`, which must be finite and strictly in the future.
+    pub fn advance_to(&mut self, t: f64, what: &str) {
+        assert!(
+            t.is_finite() && t > self.now,
+            "{what} simulator stalled at t={} (next event {t})",
+            self.now
+        );
+        self.now = t;
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}
+
+// ------------------------------------------------------------- next event --
+
+/// Accumulator for the earliest strictly-future event time relative to a
+/// fixed `now`. Offers at or before `now` (and `+inf`) are ignored.
+#[derive(Debug, Clone, Copy)]
+pub struct NextEvent {
+    now: f64,
+    t: f64,
+}
+
+impl NextEvent {
+    pub fn after(now: f64) -> NextEvent {
+        NextEvent { now, t: f64::INFINITY }
+    }
+
+    /// Offer a candidate wake-up time; kept only if strictly after `now`
+    /// and earlier than everything offered so far.
+    pub fn offer(&mut self, t: f64) {
+        if t > self.now {
+            self.t = self.t.min(t);
+        }
+    }
+
+    /// The earliest offered time (infinite if none).
+    pub fn get(&self) -> f64 {
+        self.t
+    }
+}
+
+// ------------------------------------------------------------- event loop --
+
+/// An architecture policy plugged into the shared event loop: [`drive`]
+/// calls [`EventDriven::step`] repeatedly at the current time until no more
+/// progress is possible, then advances the clock to
+/// [`EventDriven::next_event`], until [`EventDriven::done`].
+pub trait EventDriven {
+    /// Try to make one scheduling action (batch launch, slot insertion,
+    /// status flip, …) at time `t`; return whether anything happened. The
+    /// core re-invokes `step` at the same `t` until it returns `false`.
+    fn step(&mut self, t: f64) -> bool;
+
+    /// Earliest strictly-future time at which `step` could progress again.
+    /// Must be finite whenever `step` returned `false` and work remains —
+    /// the clock panics otherwise (a stalled simulation is a bug, not a
+    /// state).
+    fn next_event(&self, t: f64) -> f64;
+
+    /// All work complete?
+    fn done(&self) -> bool;
+}
+
+/// Drive a policy to completion; returns the final simulation time. `what`
+/// names the policy in stall panics.
+pub fn drive<P: EventDriven + ?Sized>(policy: &mut P, what: &str) -> f64 {
+    let mut clock = Clock::new();
+    while !policy.done() {
+        if policy.step(clock.now()) {
+            continue;
+        }
+        let t = policy.next_event(clock.now());
+        clock.advance_to(t, what);
+    }
+    clock.now()
+}
+
+// -------------------------------------------------------------- event heap --
+
+/// Total-ordered f64 event key (simulation timestamps are never NaN; the
+/// total order keeps the heap panic-free even if one slips through).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F64Ord(pub f64);
+
+impl Eq for F64Ord {}
+
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Min-heap of `(ready_time, id)` events — e.g. the collocation engine's
+/// decode hand-off queue. Ties on time break by ascending id.
+#[derive(Debug, Default)]
+pub struct ReadyQueue {
+    heap: BinaryHeap<Reverse<(F64Ord, usize)>>,
+}
+
+impl ReadyQueue {
+    pub fn new() -> ReadyQueue {
+        ReadyQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, ready: f64, id: usize) {
+        self.heap.push(Reverse((F64Ord(ready), id)));
+    }
+
+    /// Earliest event without removing it.
+    pub fn peek(&self) -> Option<(f64, usize)> {
+        self.heap.peek().map(|Reverse((F64Ord(t), id))| (*t, *id))
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        self.heap.pop().map(|Reverse((F64Ord(t), id))| (t, id))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+// -------------------------------------------------------------- slot pool --
+
+/// Marker for a slot with no request bound to it.
+pub const NO_REQ: usize = usize::MAX;
+
+/// The continuous-batching slots ("boxes", §3.4.2) of one instance: each
+/// slot holds at most one decoding request and its release time.
+#[derive(Debug, Clone)]
+pub struct SlotPool {
+    until: Vec<f64>,
+    req: Vec<usize>,
+}
+
+impl SlotPool {
+    pub fn new(slots: u32) -> SlotPool {
+        SlotPool {
+            until: vec![0.0; slots as usize],
+            req: vec![NO_REQ; slots as usize],
+        }
+    }
+
+    /// First slot free at `t` (release time `<= t`), if any.
+    pub fn free_slot(&self, t: f64) -> Option<usize> {
+        self.until.iter().position(|&u| u <= t)
+    }
+
+    pub fn has_free(&self, t: f64) -> bool {
+        self.free_slot(t).is_some()
+    }
+
+    /// Number of busy slots at `t` — the `b` fed to the pseudo-batch rule.
+    pub fn busy(&self, t: f64) -> u32 {
+        self.until.iter().filter(|&&u| u > t).count() as u32
+    }
+
+    /// Occupy `slot` with request `req` until `until`.
+    pub fn occupy(&mut self, slot: usize, until: f64, req: usize) {
+        self.until[slot] = until;
+        self.req[slot] = req;
+    }
+
+    /// Delay every slot busy at `t` by `dt` (the collocation suspension of
+    /// Algorithm 6), reporting each shifted request to `on_shift`.
+    pub fn shift_busy(&mut self, t: f64, dt: f64, mut on_shift: impl FnMut(usize)) {
+        for (u, &r) in self.until.iter_mut().zip(self.req.iter()) {
+            if *u > t {
+                *u += dt;
+                if r != NO_REQ {
+                    on_shift(r);
+                }
+            }
+        }
+    }
+
+    /// Offer every release time to a next-event accumulator (strictly-past
+    /// releases are filtered by the accumulator itself).
+    pub fn offer_releases(&self, ne: &mut NextEvent) {
+        for &u in &self.until {
+            ne.offer(u);
+        }
+    }
+
+    /// Earliest release strictly after `t` (infinite when none).
+    pub fn earliest_release(&self, t: f64) -> f64 {
+        let mut ne = NextEvent::after(t);
+        self.offer_releases(&mut ne);
+        ne.get()
+    }
+}
+
+// ---------------------------------------------------------------- arrivals --
+
+/// A batch assembled by [`FifoArrivals::take_batch`] — the paper's
+/// `BATCH(R, A, b_max, T)` primitive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Batch {
+    /// Half-open request-index range `[start, end)`.
+    pub start: usize,
+    pub end: usize,
+    /// Longest prompt in the batch (padding semantics).
+    pub s_max: u32,
+}
+
+impl Batch {
+    pub fn len(&self) -> u32 {
+        (self.end - self.start) as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+}
+
+/// FIFO queue over an arrival-sorted workload: tracks the head of the
+/// un-served prefix and assembles greedy batches.
+#[derive(Debug)]
+pub struct FifoArrivals<'a> {
+    reqs: &'a [Request],
+    next: usize,
+}
+
+impl<'a> FifoArrivals<'a> {
+    pub fn new(reqs: &'a [Request]) -> FifoArrivals<'a> {
+        debug_assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        FifoArrivals { reqs, next: 0 }
+    }
+
+    /// Index of the head request (== number of requests already batched).
+    pub fn next_index(&self) -> usize {
+        self.next
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.reqs.len()
+    }
+
+    /// Arrival time of the head request, if any.
+    pub fn head_arrival(&self) -> Option<f64> {
+        self.reqs.get(self.next).map(|r| r.arrival)
+    }
+
+    /// Has the head request arrived by `t`?
+    pub fn head_arrived(&self, t: f64) -> bool {
+        self.head_arrival().map_or(false, |a| a <= t)
+    }
+
+    /// `BATCH(R, A, b_max, T)` — pop up to `bmax` requests that have
+    /// arrived by `t`, FIFO order, recording the longest prompt.
+    pub fn take_batch(&mut self, t: f64, bmax: u32) -> Batch {
+        let start = self.next;
+        let mut s_max = 0u32;
+        while self.next < self.reqs.len()
+            && (self.next - start) < bmax as usize
+            && self.reqs[self.next].arrival <= t
+        {
+            s_max = s_max.max(self.reqs[self.next].input_len);
+            self.next += 1;
+        }
+        Batch { start, end: self.next, s_max }
+    }
+}
+
+// -------------------------------------------------------------- round robin --
+
+/// Round-robin emulation (§3.4.1): the simulators visit instances in an
+/// order reshuffled before every scheduling attempt.
+#[derive(Debug, Clone)]
+pub struct VisitOrder {
+    order: Vec<usize>,
+}
+
+impl VisitOrder {
+    pub fn new(n: usize) -> VisitOrder {
+        VisitOrder { order: (0..n).collect() }
+    }
+
+    /// Reshuffle in place and return the visit order.
+    pub fn shuffled(&mut self, rng: &mut Rng) -> &[usize] {
+        rng.shuffle(&mut self.order);
+        &self.order
+    }
+}
+
+// ------------------------------------------------------------ span pricing --
+
+/// Price a request's whole decode phase under the configured span mode —
+/// shared by every policy that inserts into decode slots.
+pub fn decode_span_for(
+    model: &dyn LatencyModel,
+    params: &SimParams,
+    b_eff: u32,
+    s: u32,
+    s_plus: u32,
+) -> f64 {
+    match params.span_mode {
+        SpanMode::PaperHeuristic => model.decode_span(b_eff, s, s_plus),
+        SpanMode::Exact => model.decode_span_exact(b_eff, s, s_plus),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5, "test");
+        assert_eq!(c.now(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "stalled")]
+    fn clock_rejects_non_advancing_time() {
+        let mut c = Clock::new();
+        c.advance_to(1.0, "test");
+        c.advance_to(1.0, "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "stalled")]
+    fn clock_rejects_infinite_time() {
+        let mut c = Clock::new();
+        c.advance_to(f64::INFINITY, "test");
+    }
+
+    #[test]
+    fn next_event_keeps_earliest_future_offer() {
+        let mut ne = NextEvent::after(2.0);
+        ne.offer(1.0); // past: ignored
+        ne.offer(2.0); // now: ignored
+        ne.offer(5.0);
+        ne.offer(3.0);
+        ne.offer(f64::INFINITY);
+        assert_eq!(ne.get(), 3.0);
+    }
+
+    #[test]
+    fn ready_queue_orders_by_time_then_id() {
+        let mut q = ReadyQueue::new();
+        q.push(2.0, 7);
+        q.push(1.0, 9);
+        q.push(1.0, 3);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek(), Some((1.0, 3)));
+        assert_eq!(q.pop(), Some((1.0, 3)));
+        assert_eq!(q.pop(), Some((1.0, 9)));
+        assert_eq!(q.pop(), Some((2.0, 7)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn slot_pool_tracks_busy_and_free() {
+        let mut p = SlotPool::new(2);
+        assert_eq!(p.free_slot(0.0), Some(0));
+        p.occupy(0, 3.0, 42);
+        assert_eq!(p.busy(1.0), 1);
+        assert_eq!(p.free_slot(1.0), Some(1));
+        p.occupy(1, 2.0, 43);
+        assert!(!p.has_free(1.0));
+        assert_eq!(p.earliest_release(1.0), 2.0);
+        // At t=2 the second slot frees.
+        assert_eq!(p.free_slot(2.0), Some(1));
+    }
+
+    #[test]
+    fn slot_pool_shift_reports_occupants() {
+        let mut p = SlotPool::new(3);
+        p.occupy(0, 2.0, 10);
+        p.occupy(1, 0.5, 11); // already free at t=1
+        let mut shifted = Vec::new();
+        p.shift_busy(1.0, 4.0, |r| shifted.push(r));
+        assert_eq!(shifted, vec![10]);
+        assert_eq!(p.earliest_release(1.0), 6.0);
+    }
+
+    #[test]
+    fn fifo_batches_respect_bmax_and_arrival() {
+        let reqs: Vec<Request> = [(0.0, 8u32), (0.0, 16), (0.0, 4), (5.0, 32)]
+            .iter()
+            .enumerate()
+            .map(|(id, &(arrival, input_len))| Request {
+                id,
+                arrival,
+                input_len,
+                gen_len: 1,
+            })
+            .collect();
+        let mut q = FifoArrivals::new(&reqs);
+        assert!(q.head_arrived(0.0));
+        let b = q.take_batch(0.0, 2);
+        assert_eq!((b.start, b.end, b.s_max), (0, 2, 16));
+        assert_eq!(b.len(), 2);
+        // Third request arrived; fourth has not.
+        let b = q.take_batch(0.0, 8);
+        assert_eq!((b.start, b.end, b.s_max), (2, 3, 4));
+        let b = q.take_batch(0.0, 8);
+        assert!(b.is_empty());
+        assert_eq!(q.head_arrival(), Some(5.0));
+        assert!(!q.exhausted());
+        let b = q.take_batch(5.0, 8);
+        assert_eq!(b.range(), 3..4);
+        assert!(q.exhausted());
+        assert_eq!(q.next_index(), 4);
+    }
+
+    #[test]
+    fn visit_order_is_a_permutation() {
+        let mut rng = Rng::new(7);
+        let mut v = VisitOrder::new(10);
+        let mut seen = v.shuffled(&mut rng).to_vec();
+        seen.sort();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    /// A toy policy: three jobs at fixed start times on one unit-time
+    /// server — exercises step/next_event/done and the fixed-point loop.
+    struct Toy {
+        starts: Vec<f64>,
+        next: usize,
+        free_at: f64,
+        finished: Vec<f64>,
+    }
+
+    impl EventDriven for Toy {
+        fn step(&mut self, t: f64) -> bool {
+            if self.next >= self.starts.len() || self.starts[self.next] > t || self.free_at > t {
+                return false;
+            }
+            self.free_at = t + 1.0;
+            self.finished.push(self.free_at);
+            self.next += 1;
+            true
+        }
+
+        fn next_event(&self, t: f64) -> f64 {
+            let mut ne = NextEvent::after(t);
+            if let Some(&s) = self.starts.get(self.next) {
+                ne.offer(s.max(self.free_at));
+            }
+            ne.get()
+        }
+
+        fn done(&self) -> bool {
+            self.next >= self.starts.len()
+        }
+    }
+
+    #[test]
+    fn drive_runs_a_toy_policy_to_completion() {
+        let mut toy = Toy {
+            starts: vec![0.0, 0.2, 5.0],
+            next: 0,
+            free_at: 0.0,
+            finished: Vec::new(),
+        };
+        let end = drive(&mut toy, "toy");
+        // Job 0: [0,1]; job 1 arrives at 0.2, waits for the server: [1,2];
+        // job 2: [5,6].
+        assert_eq!(toy.finished, vec![1.0, 2.0, 6.0]);
+        assert_eq!(end, 5.0); // final advancement target (job 2's start)
+    }
+
+    #[test]
+    fn decode_span_for_dispatches_on_mode() {
+        use crate::simulator::testutil::ConstModel;
+        let m = ConstModel { prefill: 1.0, step: 0.01 };
+        let p = SimParams::default();
+        let h = decode_span_for(&m, &p, 1, 128, 10);
+        assert!((h - 0.1).abs() < 1e-12);
+        let exact = SimParams { span_mode: SpanMode::Exact, ..p };
+        let e = decode_span_for(&m, &exact, 1, 128, 10);
+        assert!((e - 0.1).abs() < 1e-12); // const model: modes agree
+    }
+}

@@ -1,12 +1,14 @@
-//! Algorithm 3 — the decode-stage simulator: each instance has `bmax`
-//! *boxes* (continuous-batching slots); requests are inserted one at a time
-//! into the first free box, priced per-request with the pseudo-batch-size
+//! Algorithm 3 — the decode stage, expressed as a scheduling policy on the
+//! shared event core: each instance has a `bmax`-slot [`SlotPool`]
+//! (continuous-batching "boxes"); requests are inserted one at a time into
+//! the first free slot, priced per-request with the pseudo-batch-size
 //! heuristic b† = max(⌊(b+1)/τ⌋, 1) (§3.4.2, eq. (9)).
 
 use crate::estimator::LatencyModel;
 use crate::util::rng::Rng;
 
-use super::params::{SimParams, SpanMode};
+use super::core::{decode_span_for, drive, EventDriven, NextEvent, SlotPool, VisitOrder};
+use super::params::SimParams;
 
 /// One item entering the decode stage.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,7 +24,7 @@ pub struct DecodeItem {
     pub gen_len: u32,
 }
 
-/// Per-item result: when decoding started (box insertion) and finished.
+/// Per-item result: when decoding started (slot insertion) and finished.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DecodeOutcome {
     pub req: usize,
@@ -33,77 +35,96 @@ pub struct DecodeOutcome {
 pub struct DecodeStage<'a> {
     pub model: &'a dyn LatencyModel,
     pub n_instances: usize,
-    /// Boxes per instance — the prescribed maximum batch size.
+    /// Slots per instance — the prescribed maximum batch size.
     pub bmax: u32,
     pub params: SimParams,
 }
 
-impl<'a> DecodeStage<'a> {
-    fn span(&self, b_eff: u32, s: u32, s_plus: u32) -> f64 {
-        match self.params.span_mode {
-            SpanMode::PaperHeuristic => self.model.decode_span(b_eff, s, s_plus),
-            SpanMode::Exact => self.model.decode_span_exact(b_eff, s, s_plus),
+/// The Algorithm-3 insertion rule, plugged into [`drive`].
+struct DecodePolicy<'a, 'r> {
+    model: &'a dyn LatencyModel,
+    params: SimParams,
+    items: &'a [DecodeItem],
+    slots: Vec<SlotPool>,
+    order: VisitOrder,
+    rng: &'r mut Rng,
+    next: usize,
+    out: Vec<DecodeOutcome>,
+}
+
+impl EventDriven for DecodePolicy<'_, '_> {
+    fn step(&mut self, t: f64) -> bool {
+        let Some(item) = self.items.get(self.next).copied() else {
+            return false;
+        };
+        if item.ready > t {
+            return false;
         }
+        let order = self.order.shuffled(self.rng);
+        for &i in order {
+            let Some(j) = self.slots[i].free_slot(t) else {
+                continue;
+            };
+            // Batch size at the time of insertion (Alg. 3 line 7).
+            let b_eff = self.params.pseudo_batch(self.slots[i].busy(t));
+            let span =
+                decode_span_for(self.model, &self.params, b_eff, item.input_len, item.gen_len);
+            self.slots[i].occupy(j, t + span, item.req);
+            self.out.push(DecodeOutcome { req: item.req, inserted: t, completion: t + span });
+            self.next += 1;
+            return true;
+        }
+        false
     }
 
+    fn next_event(&self, t: f64) -> f64 {
+        let Some(item) = self.items.get(self.next) else {
+            return f64::INFINITY;
+        };
+        if item.ready > t {
+            // The tandem hands items over in ready order: jump straight to
+            // the head item's readiness.
+            return item.ready;
+        }
+        // Every slot busy: wake at the earliest release.
+        let mut ne = NextEvent::after(t);
+        for pool in &self.slots {
+            pool.offer_releases(&mut ne);
+        }
+        ne.get()
+    }
+
+    fn done(&self) -> bool {
+        self.next >= self.items.len()
+    }
+}
+
+impl<'a> DecodeStage<'a> {
     /// Simulate; `items` must be sorted by `ready` (the tandem queue hands
     /// them over in prefill-departure order). Returns outcomes in the same
     /// order.
     pub fn run(&self, items: &[DecodeItem], rng: &mut Rng) -> Vec<DecodeOutcome> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         debug_assert!(items.windows(2).all(|w| w[0].ready <= w[1].ready));
-        let bmax = self.bmax as usize;
-        // boxes[i][j] = time box j of instance i frees.
-        let mut boxes = vec![vec![0.0f64; bmax]; self.n_instances];
-        let mut order: Vec<usize> = (0..self.n_instances).collect();
-        let mut out = Vec::with_capacity(items.len());
-        let mut next = 0usize;
-        let mut t = 0.0f64;
-        while next < items.len() {
-            let item = items[next];
-            if item.ready > t {
-                t = item.ready;
-            }
-            rng.shuffle(&mut order);
-            let mut placed = false;
-            for &i in &order {
-                let Some(j) = boxes[i].iter().position(|&until| until <= t) else {
-                    continue;
-                };
-                // Batch size at the time of insertion (Alg. 3 line 7).
-                let busy = boxes[i].iter().filter(|&&until| until > t).count() as u32;
-                let b_eff = self.params.pseudo_batch(busy);
-                let span = self.span(b_eff, item.input_len, item.gen_len);
-                boxes[i][j] = t + span;
-                out.push(DecodeOutcome {
-                    req: item.req,
-                    inserted: t,
-                    completion: t + span,
-                });
-                next += 1;
-                placed = true;
-                break;
-            }
-            if !placed {
-                // Every box is busy: advance to the earliest box release
-                // (the item is already ready, so only releases matter).
-                let earliest = boxes
-                    .iter()
-                    .flat_map(|inst| inst.iter())
-                    .cloned()
-                    .filter(|&u| u > t)
-                    .fold(f64::INFINITY, f64::min);
-                debug_assert!(earliest.is_finite(), "deadlock in decode stage");
-                t = earliest;
-            }
-        }
-        out
+        let mut policy = DecodePolicy {
+            model: self.model,
+            params: self.params,
+            items,
+            slots: (0..self.n_instances).map(|_| SlotPool::new(self.bmax)).collect(),
+            order: VisitOrder::new(self.n_instances),
+            rng,
+            next: 0,
+            out: Vec::with_capacity(items.len()),
+        };
+        drive(&mut policy, "decode");
+        policy.out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simulator::params::SpanMode;
     use crate::simulator::testutil::ConstModel;
 
     fn items(readys: &[f64], s: u32, g: u32) -> Vec<DecodeItem> {

@@ -1,6 +1,9 @@
 //! §3.4.3 — the disaggregation simulator: prefill stage → KV-cache transfer
 //! → decode stage, composed as a tandem queue. The prefill simulator's
 //! departure distribution becomes the decode simulator's arrival process.
+//! Both stages are policies driven by the shared event loop in
+//! [`super::core`]; this file only encodes the tandem hand-off (KV transfer
+//! pricing and ready-order re-sorting).
 
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
@@ -81,7 +84,7 @@ impl<'a> DisaggSimulator<'a> {
                 gen_len: r.gen_len,
             })
             .collect();
-        items.sort_by(|a, b| a.ready.partial_cmp(&b.ready).unwrap());
+        items.sort_by(|a, b| a.ready.total_cmp(&b.ready));
 
         let decode = DecodeStage {
             model: self.model,

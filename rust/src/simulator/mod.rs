@@ -1,10 +1,33 @@
 //! The **Simulator** (§3.4) — middle layer of BestServe: discrete-event
 //! simulation of request arrival, batching and departure under the two
-//! architectures. Prefill stage (Algorithm 2), decode stage with boxes and
-//! the pseudo-batch heuristic (Algorithm 3), the disaggregation tandem
-//! (§3.4.3) and the vLLM-mimicking collocation simulator (Algorithms 4–7).
+//! architectures.
+//!
+//! # Architecture: one core, many policies
+//!
+//! All engines share a single discrete-event substrate, [`core`]: the
+//! simulation clock with stall detection, the generic fixed-point event
+//! loop ([`core::drive`] over [`core::EventDriven`]), continuous-batching
+//! slot pools ("boxes"), the FIFO arrival queue with the paper's `BATCH`
+//! primitive, the shuffled round-robin visit order (§3.4.1), and the
+//! ready-time event heap. On top of it, each architecture is a *policy*
+//! file encoding only its scheduling rule:
+//!
+//! * [`prefill`] — Algorithm 2: greedy FIFO batching on the first idle
+//!   instance.
+//! * [`decode`] — Algorithm 3: one-at-a-time slot insertion priced with the
+//!   pseudo-batch heuristic b† = max(⌊(b+1)/τ⌋, 1) (§3.4.2, eq. (9)).
+//! * [`colloc`] — Algorithms 4–7: the vLLM-mimicking collocation engine
+//!   (prefill prioritization, decode suspension/resumption).
+//! * [`disagg`] — §3.4.3: the disaggregation tandem composing the prefill
+//!   and decode policies through a KV-transfer hand-off.
+//!
+//! To add a new architecture (chunked prefill, dynamic PD reallocation, …),
+//! write a new policy implementing [`core::EventDriven`] from the [`core`]
+//! parts and dispatch to it from [`simulate`] — no new clock, queue or
+//! instance bookkeeping code.
 
 pub mod colloc;
+pub mod core;
 pub mod decode;
 pub mod disagg;
 pub mod metrics;

@@ -1,10 +1,13 @@
-//! Algorithm 2 — the prefill-stage simulator: FIFO arrivals, greedy batching
-//! up to `bmax` on the first idle instance, round-robin emulation by
-//! shuffling the instance visit order (§3.4.1).
+//! Algorithm 2 — the prefill stage, expressed as a scheduling policy on the
+//! shared event core: FIFO arrivals, greedy batching up to `bmax` on the
+//! first idle instance, round-robin emulation by shuffling the instance
+//! visit order (§3.4.1). The clock, batching and next-event machinery live
+//! in [`super::core`]; this file only encodes the prefill scheduling rule.
 
 use crate::estimator::LatencyModel;
 use crate::util::rng::Rng;
 
+use super::core::{drive, EventDriven, FifoArrivals, NextEvent, VisitOrder};
 use super::request::Request;
 
 /// Prefill stage over `n_instances` identical instances.
@@ -14,73 +17,81 @@ pub struct PrefillStage<'a> {
     pub bmax: u32,
 }
 
+/// The Algorithm-2 scheduling rule, plugged into [`drive`].
+struct PrefillPolicy<'a, 'r> {
+    model: &'a dyn LatencyModel,
+    bmax: u32,
+    arrivals: FifoArrivals<'a>,
+    /// Per-instance time the instance frees.
+    when_idle: Vec<f64>,
+    order: VisitOrder,
+    rng: &'r mut Rng,
+    /// Per-request departure (first-token) times, indexed like the workload.
+    departures: Vec<f64>,
+}
+
+impl EventDriven for PrefillPolicy<'_, '_> {
+    fn step(&mut self, t: f64) -> bool {
+        let order = self.order.shuffled(self.rng);
+        let mut progressed = false;
+        for &i in order {
+            if self.when_idle[i] > t || self.arrivals.exhausted() {
+                continue;
+            }
+            let batch = self.arrivals.take_batch(t, self.bmax);
+            if batch.is_empty() {
+                continue; // nothing arrived yet
+            }
+            // Variable-length batches are padded to the longest prompt
+            // (standard batching semantics; fixed-length scenarios are
+            // unaffected).
+            let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+            for r in batch.range() {
+                self.departures[r] = t + t_b;
+            }
+            self.when_idle[i] = t + t_b;
+            progressed = true;
+        }
+        progressed
+    }
+
+    fn next_event(&self, t: f64) -> f64 {
+        // Algorithm 2 line 20, fixed for the all-idle case: if an instance
+        // is idle we are waiting on the next arrival; otherwise wake when an
+        // instance frees, but not before work exists.
+        let next_arrival = self.arrivals.head_arrival().unwrap_or(f64::INFINITY);
+        if self.when_idle.iter().any(|&w| w <= t) {
+            next_arrival
+        } else {
+            let mut ne = NextEvent::after(t);
+            for &w in &self.when_idle {
+                ne.offer(w);
+            }
+            ne.get().max(next_arrival)
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.arrivals.exhausted()
+    }
+}
+
 impl<'a> PrefillStage<'a> {
     /// Simulate; returns per-request departure times (first-token times),
     /// indexed like `reqs`. `reqs` must be sorted by arrival (FIFO).
     pub fn run(&self, reqs: &[Request], rng: &mut Rng) -> Vec<f64> {
         assert!(self.n_instances > 0 && self.bmax > 0);
-        debug_assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
-        let mut departures = vec![f64::INFINITY; reqs.len()];
-        let mut when_idle = vec![0.0f64; self.n_instances];
-        let mut order: Vec<usize> = (0..self.n_instances).collect();
-        let mut next = 0usize; // head of the FIFO queue
-        let mut t = 0.0f64;
-        while next < reqs.len() {
-            rng.shuffle(&mut order);
-            let mut progressed = false;
-            for &i in &order {
-                if when_idle[i] > t || next >= reqs.len() {
-                    continue;
-                }
-                // BATCH(R, A, bmax, T_current): all arrived, up to bmax.
-                let start = next;
-                let mut s_max = 0u32;
-                while next < reqs.len()
-                    && (next - start) < self.bmax as usize
-                    && reqs[next].arrival <= t
-                {
-                    s_max = s_max.max(reqs[next].input_len);
-                    next += 1;
-                }
-                if next == start {
-                    continue; // nothing arrived yet
-                }
-                let b = (next - start) as u32;
-                // Variable-length batches are padded to the longest prompt
-                // (standard batching semantics; fixed-length scenarios are
-                // unaffected).
-                let t_b = self.model.prefill_time(b, s_max);
-                for r in start..next {
-                    departures[r] = t + t_b;
-                }
-                when_idle[i] = t + t_b;
-                progressed = true;
-            }
-            if next >= reqs.len() {
-                break;
-            }
-            if !progressed {
-                // Advance to the next event (Algorithm 2 line 20, fixed for
-                // the all-idle case): if an instance is idle we are waiting
-                // on the next arrival; otherwise on max(earliest idle,
-                // head arrival).
-                let next_arrival = reqs[next].arrival;
-                let any_idle = when_idle.iter().any(|&w| w <= t);
-                let t_next = if any_idle {
-                    // An instance is free, so we are waiting on an arrival.
-                    next_arrival
-                } else {
-                    // All busy: the paper's max(T_idle, A[R[0]]) — wake when
-                    // an instance frees, but not before work exists.
-                    let earliest_busy =
-                        when_idle.iter().cloned().fold(f64::INFINITY, f64::min);
-                    earliest_busy.max(next_arrival)
-                };
-                debug_assert!(t_next > t, "time must advance: {t_next} <= {t}");
-                t = t_next;
-            }
-        }
-        departures
+        let mut policy = PrefillPolicy {
+            model: self.model,
+            bmax: self.bmax,
+            arrivals: FifoArrivals::new(reqs),
+            when_idle: vec![0.0f64; self.n_instances],
+            order: VisitOrder::new(self.n_instances),
+            rng,
+            departures: vec![f64::INFINITY; reqs.len()],
+        };
+        drive(&mut policy, "prefill");
+        policy.departures
     }
 }
 

@@ -76,7 +76,7 @@ pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<Request>> {
     if reqs.is_empty() {
         return Err(Error::config("trace contains no requests"));
     }
-    reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     for (i, r) in reqs.iter_mut().enumerate() {
         r.id = i;
     }

@@ -176,7 +176,7 @@ impl<'a> Testbed<'a> {
             .enumerate()
             .map(|(idx, r)| (idx, first_token[idx] + self.kv_transfer_time(r.input_len)))
             .collect();
-        handoffs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        handoffs.sort_by(|a, b| a.1.total_cmp(&b.1));
         let mut per_decode: Vec<Vec<SeqInput>> = vec![Vec::new(); d];
         let mut decode_ready = vec![0.0f64; reqs.len()];
         for (k, &(idx, ready)) in handoffs.iter().enumerate() {

@@ -355,7 +355,7 @@ mod tests {
         let (out, _) = e.run(&seqs(&[0.0, 0.0, 0.0, 0.0], 64, 50, true));
         assert_eq!(out.len(), 4);
         let mut starts: Vec<f64> = out.iter().map(|o| o.decode_start).collect();
-        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        starts.sort_by(f64::total_cmp);
         assert!(starts[2] > starts[0], "{starts:?}");
     }
 

@@ -5,14 +5,31 @@
 
 /// Percentile with linear interpolation between order statistics
 /// (the "linear" / type-7 definition, matching numpy's default).
-/// `q` in [0, 100]. Returns NaN on empty input.
+/// `q` in [0, 100]. Returns NaN on empty input. NaN samples sort last
+/// (total order), so a degenerate sample surfaces as a NaN high percentile
+/// instead of a sort panic.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
+}
+
+/// Descending total order for ranking metrics: larger first, NaN (a
+/// degenerate metric — e.g. the goodput of a simulation that diverged)
+/// strictly last. Safe replacement for `partial_cmp().unwrap()` sorts,
+/// which panic the moment a NaN appears.
+pub fn rank_desc(a: f64, b: f64) -> std::cmp::Ordering {
+    fn key(x: f64) -> f64 {
+        if x.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            x
+        }
+    }
+    key(b).total_cmp(&key(a))
 }
 
 /// Percentile over an already-sorted slice. Prefer this in hot paths where
@@ -80,7 +97,7 @@ pub struct Summary {
 impl Summary {
     pub fn from(xs: &[f64]) -> Summary {
         let mut v: Vec<f64> = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Summary {
             n: v.len(),
             mean: mean(&v),
@@ -232,6 +249,25 @@ mod tests {
     fn percentile_single_and_empty() {
         assert_eq!(percentile(&[3.0], 90.0), 3.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn rank_desc_sorts_nan_last() {
+        let mut xs = vec![f64::NAN, 0.0, 2.5, f64::NAN, 1.0];
+        xs.sort_by(|a, b| rank_desc(*a, *b));
+        assert_eq!(xs[0], 2.5);
+        assert_eq!(xs[1], 1.0);
+        assert_eq!(xs[2], 0.0);
+        assert!(xs[3].is_nan() && xs[4].is_nan());
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: a NaN sample used to panic the sort inside
+        // percentile(); now it totals-orders last.
+        let xs = vec![1.0, f64::NAN, 3.0];
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
     }
 
     #[test]

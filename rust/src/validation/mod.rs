@@ -156,7 +156,7 @@ impl Default for ValidationConfig {
 
 /// Run the Figure 11 experiment for one scenario.
 pub fn validate(
-    factory: &mut dyn ModelFactory,
+    factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
     scenario: &Scenario,
@@ -194,7 +194,7 @@ pub fn validate(
             measured_norm: measured / cards as f64,
         });
     }
-    rows.sort_by(|a, b| b.predicted_norm.partial_cmp(&a.predicted_norm).unwrap());
+    rows.sort_by(|a, b| crate::util::stats::rank_desc(a.predicted_norm, b.predicted_norm));
     Ok(ValidationReport { scenario: scenario.name.clone(), rows })
 }
 
