@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example arch_comparison`
 
-use bestserve::config::{Architecture, Platform, Scenario, Slo, Strategy};
+use bestserve::config::{Architecture, Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::optimizer::{find_goodput, GoodputConfig};
 use bestserve::simulator::SimParams;
@@ -41,8 +41,9 @@ fn main() -> bestserve::Result<()> {
     for (j, sc) in scenarios.iter().enumerate() {
         let mut sc = sc.clone();
         sc.n_requests = 1500;
+        let w = Workload::poisson(&sc);
         for (i, st) in strategies.iter().enumerate() {
-            results[i][j] = find_goodput(&oracle, &platform, st, &sc, &slo, params, &cfg)?;
+            results[i][j] = find_goodput(&oracle, &platform, st, &w, &slo, params, &cfg)?;
         }
         let (bi, best) = results
             .iter()

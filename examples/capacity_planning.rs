@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo run --release --example capacity_planning`
 
-use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
 use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::SimParams;
 use bestserve::util::table::Table;
@@ -44,7 +44,7 @@ fn main() -> bestserve::Result<()> {
             &factory,
             &platform,
             &space,
-            &scenario,
+            &Workload::poisson(&scenario),
             &slo,
             SimParams::default(),
             &GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() },

@@ -16,7 +16,7 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
 use bestserve::optimizer::{optimize, GoodputConfig, GridFactory, ModelFactory};
 use bestserve::runtime::default_artifacts_dir;
 use bestserve::simulator::{generate_workload, SimParams};
@@ -35,6 +35,7 @@ fn main() -> bestserve::Result<()> {
     let slo = Slo::paper_default();
     let mut scenario = Scenario::op2();
     scenario.n_requests = 1500;
+    let workload = Workload::poisson(&scenario);
 
     // --- Stage 1: load + compile the AOT artifact (PJRT) -------------------
     let t0 = std::time::Instant::now();
@@ -57,7 +58,7 @@ fn main() -> bestserve::Result<()> {
         &factory,
         &platform,
         &space,
-        &scenario,
+        &workload,
         &slo,
         params,
         &GoodputConfig::default(),
@@ -76,7 +77,7 @@ fn main() -> bestserve::Result<()> {
 
     // --- Stage 3: serve a real workload on the recommendation --------------
     let serve_rate = 0.8 * best.goodput;
-    let reqs = generate_workload(&scenario, serve_rate, 0xE2E);
+    let reqs = generate_workload(&workload, serve_rate, 0xE2E)?;
     let model = factory.model_for_tp(best.strategy.tp)?;
     let tb = Testbed::new(
         model.as_ref(),

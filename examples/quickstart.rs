@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace, Workload};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::{simulate, SimParams};
@@ -25,12 +25,12 @@ fn main() -> bestserve::Result<()> {
 
     // --- 2. Simulator ------------------------------------------------------
     let strategy = Strategy::disaggregation(1, 1, 4);
-    let scenario = Scenario::fixed("table4", 2048, 64, 5000);
+    let workload = Workload::poisson(&Scenario::fixed("table4", 2048, 64, 5000));
     let report = simulate(
         &oracle,
         &platform,
         &strategy,
-        &scenario,
+        &workload,
         3.5,
         SimParams::default(),
     )?;
@@ -47,13 +47,13 @@ fn main() -> bestserve::Result<()> {
         tp_choices: vec![2, 4, 8],
         ..StrategySpace::default()
     };
-    let scenario = Scenario::op2();
+    let workload = Workload::preset("op2")?;
     let factory = AnalyticFactory::new(platform.clone());
     let rep = optimize(
         &factory,
         &platform,
         &space,
-        &scenario,
+        &workload,
         &Slo::paper_default(),
         SimParams::default(),
         &GoodputConfig::default(),

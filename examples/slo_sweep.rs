@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example slo_sweep`
 
-use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
 use bestserve::optimizer::{optimize, AnalyticFactory, GoodputConfig};
 use bestserve::simulator::SimParams;
 use bestserve::util::table::Table;
@@ -42,7 +42,7 @@ fn main() -> bestserve::Result<()> {
                 &factory,
                 &platform,
                 &space,
-                &scenario,
+                &Workload::poisson(&scenario),
                 &slo,
                 SimParams::default(),
                 &cfg,

@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy};
+use bestserve::config::{Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::optimizer::{find_goodput, GoodputConfig};
 use bestserve::simulator::{simulate, SimParams, SpanMode};
@@ -22,6 +22,7 @@ fn main() -> bestserve::Result<()> {
     let slo = Slo::paper_default();
     let mut scenario = Scenario::op2();
     scenario.n_requests = 1000;
+    let workload = Workload::poisson(&scenario);
     let strategy = Strategy::disaggregation(1, 1, 4);
     let cfg = GoodputConfig { tolerance: 0.05, ..GoodputConfig::default() };
     let t_start = Instant::now();
@@ -33,7 +34,7 @@ fn main() -> bestserve::Result<()> {
         &oracle,
         &platform,
         &strategy,
-        &scenario,
+        &workload,
         &slo,
         &GroundTruthConfig::default(),
         7,
@@ -42,7 +43,7 @@ fn main() -> bestserve::Result<()> {
     let mut csv = Csv::new(&["tau", "predicted", "truth", "rel_err"]);
     for tau in [1.0, 1.25, 1.5, 2.0, 2.5, 3.5, 5.0] {
         let params = SimParams { tau, ..SimParams::default() };
-        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo, params, &cfg)?;
+        let g = find_goodput(&oracle, &platform, &strategy, &workload, &slo, params, &cfg)?;
         let err = (g - truth) / truth;
         t.row(&[format!("{tau}"), format!("{g:.3}"), format!("{:+.1}%", err * 100.0)]);
         csv.row_f64(&[tau, g, truth, err]);
@@ -58,7 +59,7 @@ fn main() -> bestserve::Result<()> {
     for mode in [SpanMode::PaperHeuristic, SpanMode::Exact] {
         let params = SimParams { span_mode: mode, tau: 1.0, ..SimParams::default() };
         let t0 = Instant::now();
-        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo, params, &cfg)?;
+        let g = find_goodput(&oracle, &platform, &strategy, &workload, &slo, params, &cfg)?;
         println!(
             "  {:?}: goodput {:.3} req/s  (optimizer wall {:.2}s)",
             mode,
@@ -75,7 +76,7 @@ fn main() -> bestserve::Result<()> {
     for relax in [0.0, 0.05, 0.1, 0.2] {
         let slo_r = Slo { relaxation: relax, ..slo };
         let params = SimParams { tau: 1.0, ..SimParams::default() };
-        let g = find_goodput(&oracle, &platform, &strategy, &scenario, &slo_r, params, &cfg)?;
+        let g = find_goodput(&oracle, &platform, &strategy, &workload, &slo_r, params, &cfg)?;
         t.row(&[format!("{relax}"), format!("{g:.3}")]);
     }
     print!("{}", t.render());
@@ -85,7 +86,7 @@ fn main() -> bestserve::Result<()> {
     println!("=== A4: KV-cache transfer cost (disaggregation hand-off) ===");
     for (label, kv) in [("with transfer", true), ("without", false)] {
         let params = SimParams { tau: 1.0, kv_transfer: kv, ..SimParams::default() };
-        let rep = simulate(&oracle, &platform, &strategy, &scenario, 2.0, params)?;
+        let rep = simulate(&oracle, &platform, &strategy, &workload, 2.0, params)?;
         // TTFT/TPOT are transfer-invariant by definition (the shift moves
         // decode start and completion together); the end-to-end request
         // latency is where the hand-off cost lands.

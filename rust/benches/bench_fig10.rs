@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Strategy};
+use bestserve::config::{Platform, Scenario, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{results_dir, variance_study};
 use bestserve::simulator::SimParams;
@@ -16,7 +16,7 @@ fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let strategy = Strategy::disaggregation(1, 1, 4);
-    let scenario = Scenario::fixed("fig10", 2048, 64, 0 /* overridden */);
+    let workload = Workload::poisson(&Scenario::fixed("fig10", 2048, 64, 1 /* overridden */));
     let counts = [500usize, 1_000, 2_000, 4_000, 8_000, 16_000, 32_000];
     let seeds = 8;
 
@@ -25,7 +25,7 @@ fn main() -> bestserve::Result<()> {
         &oracle,
         &platform,
         &strategy,
-        &scenario,
+        &workload,
         2.5, // below the blow-up knee (ours is ~3.0) so P90 is stable-ish
         &counts,
         seeds,

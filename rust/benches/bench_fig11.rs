@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Slo, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
 use bestserve::optimizer::AnalyticFactory;
 use bestserve::report::results_dir;
 use bestserve::simulator::SimParams;
@@ -35,6 +35,7 @@ fn panel(
 ) -> bestserve::Result<bestserve::validation::ValidationReport> {
     let mut sc = scenario.clone();
     sc.n_requests = n_requests;
+    let workload = Workload::poisson(&sc);
     let space = StrategySpace {
         max_cards: 8,
         tp_choices: vec![2, 4, 8],
@@ -43,7 +44,8 @@ fn panel(
     let mut cfg = ValidationConfig::default();
     cfg.sim_params = SimParams { tau, ..SimParams::default() };
     let factory = AnalyticFactory::new(platform.clone());
-    validate(&factory, platform, &space, &sc, slo, &cfg)
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    validate(&factory, platform, &space, &workload, slo, &cfg, threads)
 }
 
 fn main() -> bestserve::Result<()> {

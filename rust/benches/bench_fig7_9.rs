@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Strategy};
+use bestserve::config::{Platform, Scenario, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{rate_sweep, results_dir};
 use bestserve::simulator::SimParams;
@@ -15,7 +15,7 @@ use bestserve::simulator::SimParams;
 fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
-    let scenario = Scenario::fixed("sweep", 2048, 64, 4_000);
+    let workload = Workload::poisson(&Scenario::fixed("sweep", 2048, 64, 4_000));
     let params = SimParams::default();
     let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
     let dir = results_dir();
@@ -26,7 +26,7 @@ fn main() -> bestserve::Result<()> {
         &oracle,
         &platform,
         &Strategy::disaggregation(1, 1, 4),
-        &scenario,
+        &workload,
         &rates,
         params,
     )?;
@@ -36,7 +36,7 @@ fn main() -> bestserve::Result<()> {
     println!("\n=== Figure 9: P90 TTFT/TPOT vs arrival rate — 2m-tp4 (bmax 4) ===");
     let mut colloc = Strategy::collocation(2, 4);
     colloc.bmax_decode = 4;
-    let f9 = rate_sweep(&oracle, &platform, &colloc, &scenario, &rates, params)?;
+    let f9 = rate_sweep(&oracle, &platform, &colloc, &workload, &rates, params)?;
     print!("{}", f9.to_table().render());
     f9.to_csv().save(dir.join("fig9_colloc_sweep.csv"))?;
 

@@ -6,7 +6,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace, Workload};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{optimize, optimize_parallel, AnalyticFactory, GoodputConfig};
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
@@ -65,14 +65,15 @@ fn main() -> bestserve::Result<()> {
     }
 
     // --- Simulator ----------------------------------------------------------
-    let scenario = Scenario::fixed("perf", 2048, 64, 20_000);
+    let workload = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 20_000));
     let st = Strategy::disaggregation(1, 1, 4);
     let params = SimParams::default();
     let mut rep_n = 0usize;
-    let dt = time(|| {
-        let r = simulate(&oracle, &platform, &st, &scenario, 3.0, params).unwrap();
+    let sim_dt = time(|| {
+        let r = simulate(&oracle, &platform, &st, &workload, 3.0, params).unwrap();
         rep_n = r.n;
     });
+    let dt = sim_dt;
     println!(
         "disagg simulator          : {:>10.0} requests/s simulated ({} reqs in {:.3}s)",
         rep_n as f64 / dt,
@@ -82,7 +83,7 @@ fn main() -> bestserve::Result<()> {
     let mut colloc = Strategy::collocation(2, 4);
     colloc.bmax_decode = 4;
     let dt = time(|| {
-        let r = simulate(&oracle, &platform, &colloc, &scenario, 3.0, params).unwrap();
+        let r = simulate(&oracle, &platform, &colloc, &workload, 3.0, params).unwrap();
         rep_n = r.n;
     });
     println!(
@@ -90,9 +91,36 @@ fn main() -> bestserve::Result<()> {
         rep_n as f64 / dt
     );
 
+    // --- Workload plane ------------------------------------------------------
+    // Generation must be an unmeasurable fraction of a sweep: every
+    // FEASIBLE(λ) call regenerates the workload, so a slow generator would
+    // tax every bisection step. Time the worst case we ship (bursty
+    // Gamma-renewal arrivals × 3-class mix) against one simulation of the
+    // same size.
+    let mix = Workload::example_mix(20_000);
+    let gen_rounds = 20u64;
+    let gen_dt = time(|| {
+        for k in 0..gen_rounds {
+            std::hint::black_box(generate_workload(&mix, 3.0, k).unwrap());
+        }
+    });
+    let per_gen = gen_dt / gen_rounds as f64;
+    println!(
+        "workload generation       : {:>10.0} requests/s generated (bursty 3-class mix)",
+        mix.n_requests as f64 * gen_rounds as f64 / gen_dt
+    );
+    println!(
+        "  generation / simulation : {:.2}% of one same-size disagg simulation",
+        100.0 * per_gen / sim_dt
+    );
+    assert!(
+        per_gen < 0.25 * sim_dt,
+        "workload generation ({per_gen:.3}s) should be a small fraction of simulation ({sim_dt:.3}s)"
+    );
+
     // --- Testbed -------------------------------------------------------------
-    let tb_scenario = Scenario::fixed("perf", 2048, 64, 3_000);
-    let reqs = generate_workload(&tb_scenario, 2.0, 99);
+    let tb_workload = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 3_000));
+    let reqs = generate_workload(&tb_workload, 2.0, 99).unwrap();
     let tokens: u64 = reqs.iter().map(|r| r.gen_len as u64).sum();
     let tb = Testbed::new(&oracle, &platform, st.clone(), TestbedConfig::default());
     let dt = time(|| {
@@ -113,13 +141,13 @@ fn main() -> bestserve::Result<()> {
     };
     let factory = AnalyticFactory::new(platform.clone());
     let mut n_strategies = 0usize;
-    let sc = Scenario::fixed("perf", 2048, 64, 2_000);
+    let sweep_wl = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 2_000));
     let dt = time(|| {
         let r = optimize(
             &factory,
             &platform,
             &space,
-            &sc,
+            &sweep_wl,
             &Slo::paper_default(),
             params,
             &GoodputConfig::default(),
@@ -142,7 +170,7 @@ fn main() -> bestserve::Result<()> {
             &factory,
             &platform,
             &space,
-            &sc,
+            &sweep_wl,
             &Slo::paper_default(),
             params,
             &GoodputConfig::default(),

@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy};
+use bestserve::config::{Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::report::{results_dir, table_slo};
 use bestserve::simulator::SimParams;
@@ -19,7 +19,7 @@ use bestserve::simulator::SimParams;
 fn main() -> bestserve::Result<()> {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
-    let scenario = Scenario::fixed("table4", 2048, 64, 10_000);
+    let workload = Workload::poisson(&Scenario::fixed("table4", 2048, 64, 10_000));
     let slo = Slo::paper_default();
     let params = SimParams::default();
     let dir = results_dir();
@@ -27,7 +27,7 @@ fn main() -> bestserve::Result<()> {
     println!("=== Table 4: 1p1d-tp4, bmax 4/16, lambda=3.5, n=10000 ===");
     let st4 = Strategy::disaggregation(1, 1, 4);
     let t0 = Instant::now();
-    let t4 = table_slo(&oracle, &platform, &st4, &scenario, 3.5, &slo, params)?;
+    let t4 = table_slo(&oracle, &platform, &st4, &workload, 3.5, &slo, params)?;
     let dt4 = t0.elapsed().as_secs_f64();
     print!("{}", t4.to_table().render());
     println!("(paper: TTFT P90 3650.3 / P99 6004.8; TPOT P90 44.8 — same SLO verdicts)\n");
@@ -36,7 +36,7 @@ fn main() -> bestserve::Result<()> {
     let mut st5 = Strategy::collocation(2, 4);
     st5.bmax_decode = 4; // Table 5a: maximum batch size 4
     let t1 = Instant::now();
-    let t5 = table_slo(&oracle, &platform, &st5, &scenario, 3.5, &slo, params)?;
+    let t5 = table_slo(&oracle, &platform, &st5, &workload, 3.5, &slo, params)?;
     let dt5 = t1.elapsed().as_secs_f64();
     print!("{}", t5.to_table().render());
     println!("(paper: TTFT P90 556.3; TPOT P90 4360.7 — same SLO verdicts)\n");

@@ -1,6 +1,7 @@
 //! Configuration system: model dims, hardware specs, efficiency parameters,
-//! operating scenarios, SLOs, and serving strategies — the "fundamental
-//! inputs" of Figure 4 — with presets matching §4.1 and JSON file loading.
+//! operating scenarios, workloads (arrival process × class mix), SLOs, and
+//! serving strategies — the "fundamental inputs" of Figure 4 — with presets
+//! matching §4.1 and JSON file loading.
 
 pub mod efficiency;
 pub mod hardware;
@@ -8,6 +9,7 @@ pub mod model;
 pub mod scenario;
 pub mod slo;
 pub mod strategy;
+pub mod workload;
 
 pub use efficiency::{Efficiency, EfficiencyParams};
 pub use hardware::{DispatchTimes, HardwareConfig};
@@ -15,6 +17,7 @@ pub use model::ModelConfig;
 pub use scenario::{LengthDist, Scenario};
 pub use slo::Slo;
 pub use strategy::{Architecture, Strategy, StrategySpace};
+pub use workload::{ArrivalProcess, RequestClass, Workload};
 
 use crate::error::Error;
 use crate::util::json::Json;

@@ -19,6 +19,38 @@ pub enum LengthDist {
 }
 
 impl LengthDist {
+    /// Reject parameterizations that would panic or degenerate at sample
+    /// time: `Uniform` with `lo > hi` (the `hi - lo + 1` in `sample` would
+    /// underflow), and non-positive `sigma`/`cap` or non-finite `mu` for
+    /// `LogNormal`.
+    pub fn validate(&self) -> Result<(), Error> {
+        match *self {
+            LengthDist::Fixed(_) => Ok(()),
+            LengthDist::Uniform { lo, hi } => {
+                if lo > hi {
+                    Err(Error::config(format!(
+                        "uniform length dist needs lo <= hi, got lo={lo} hi={hi}"
+                    )))
+                } else {
+                    Ok(())
+                }
+            }
+            LengthDist::LogNormal { mu, sigma, cap } => {
+                if !mu.is_finite() {
+                    Err(Error::config(format!("lognormal mu must be finite, got {mu}")))
+                } else if !(sigma > 0.0 && sigma.is_finite()) {
+                    Err(Error::config(format!(
+                        "lognormal sigma must be positive and finite, got {sigma}"
+                    )))
+                } else if cap == 0 {
+                    Err(Error::config("lognormal cap must be >= 1"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
     pub fn sample(&self, rng: &mut Rng) -> u64 {
         match *self {
             LengthDist::Fixed(v) => v,
@@ -50,7 +82,7 @@ impl LengthDist {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match *self {
             LengthDist::Fixed(v) => Json::obj(vec![
                 ("kind", Json::Str("fixed".into())),
@@ -70,24 +102,30 @@ impl LengthDist {
         }
     }
 
-    fn from_json(j: &Json) -> Result<LengthDist, Error> {
+    pub(crate) fn from_json(j: &Json) -> Result<LengthDist, Error> {
         // A bare number is shorthand for Fixed.
         if let Some(v) = j.as_f64() {
             return Ok(LengthDist::Fixed(v as u64));
         }
-        match j.get("kind").and_then(Json::as_str) {
-            Some("fixed") => Ok(LengthDist::Fixed(j.f64_or("value", 0.0) as u64)),
-            Some("uniform") => Ok(LengthDist::Uniform {
+        let dist = match j.get("kind").and_then(Json::as_str) {
+            Some("fixed") => LengthDist::Fixed(j.f64_or("value", 0.0) as u64),
+            Some("uniform") => LengthDist::Uniform {
                 lo: j.f64_or("lo", 1.0) as u64,
                 hi: j.f64_or("hi", 1.0) as u64,
-            }),
-            Some("lognormal") => Ok(LengthDist::LogNormal {
+            },
+            Some("lognormal") => LengthDist::LogNormal {
                 mu: j.f64_or("mu", 6.0),
                 sigma: j.f64_or("sigma", 0.5),
                 cap: j.f64_or("cap", 16384.0) as u64,
-            }),
-            _ => Err(Error::config("length dist needs kind fixed|uniform|lognormal")),
-        }
+            },
+            _ => {
+                return Err(Error::config(
+                    "length dist needs kind fixed|uniform|lognormal",
+                ))
+            }
+        };
+        dist.validate()?;
+        Ok(dist)
     }
 }
 
@@ -228,6 +266,49 @@ mod tests {
     fn means() {
         assert_eq!(LengthDist::Fixed(7).mean(), 7.0);
         assert_eq!(LengthDist::Uniform { lo: 0, hi: 10 }.mean(), 5.0);
+    }
+
+    #[test]
+    fn invalid_dists_rejected() {
+        // Uniform lo > hi used to underflow `hi - lo + 1` and panic in
+        // `sample`; now it is rejected up front.
+        assert!(LengthDist::Uniform { lo: 20, hi: 10 }.validate().is_err());
+        assert!(LengthDist::Uniform { lo: 10, hi: 10 }.validate().is_ok());
+        assert!(LengthDist::LogNormal { mu: 6.0, sigma: 0.0, cap: 100 }
+            .validate()
+            .is_err());
+        assert!(LengthDist::LogNormal { mu: 6.0, sigma: -1.0, cap: 100 }
+            .validate()
+            .is_err());
+        assert!(LengthDist::LogNormal { mu: 6.0, sigma: f64::NAN, cap: 100 }
+            .validate()
+            .is_err());
+        assert!(LengthDist::LogNormal { mu: f64::INFINITY, sigma: 0.5, cap: 100 }
+            .validate()
+            .is_err());
+        assert!(LengthDist::LogNormal { mu: 6.0, sigma: 0.5, cap: 0 }
+            .validate()
+            .is_err());
+        assert!(LengthDist::Fixed(0).validate().is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_invalid_dists() {
+        let bad_uniform = Json::parse(
+            r#"{"input_len": {"kind": "uniform", "lo": 50, "hi": 10}, "gen_len": 8}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&bad_uniform).is_err());
+        let bad_sigma = Json::parse(
+            r#"{"input_len": 64, "gen_len": {"kind": "lognormal", "mu": 4.0, "sigma": -0.5, "cap": 64}}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&bad_sigma).is_err());
+        let bad_cap = Json::parse(
+            r#"{"input_len": 64, "gen_len": {"kind": "lognormal", "mu": 4.0, "sigma": 0.5, "cap": 0}}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&bad_cap).is_err());
     }
 
     #[test]

@@ -1,0 +1,568 @@
+//! The **workload plane**: what traffic a deployment must serve, as a
+//! first-class value instead of a `(scenario, rate)` pair threaded through
+//! every layer. A [`Workload`] combines
+//!
+//! * an [`ArrivalProcess`] — *when* requests arrive (Poisson, bursty
+//!   Gamma-renewal, deterministic, or replay of a recorded trace), and
+//! * a weighted multi-class request mix ([`RequestClass`]) — *what* arrives
+//!   (each class names its own input/generation [`LengthDist`] and weight,
+//!   e.g. 70% chat / 20% summarization / 10% codegen),
+//!
+//! all seed-deterministic and JSON round-trippable. Every layer above the
+//! estimator (simulator, goodput bisection, optimizer, validation, testbed
+//! ground truth, CLI) consumes a `Workload` plus a *rate scale*: the
+//! bisection of Algorithm 8 searches over the scale factor, so goodput is
+//! well-defined for any arrival process, not just Poisson. The paper's
+//! OP1–OP4 scenarios are the trivial presets — single fixed-length class,
+//! Poisson arrivals, `base_rate` 1.0 — and reproduce the pre-workload-plane
+//! behavior byte for byte (identical RNG consumption order).
+
+use crate::error::Error;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::scenario::{LengthDist, Scenario};
+
+/// When requests arrive: the stochastic process generating arrival
+/// timestamps at a given effective rate (requests/second).
+///
+/// To add a new arrival process: add a variant here, extend `sample`,
+/// `validate`, `to_json`/`from_json`, and (if it needs external data, like
+/// `Replay`) teach `simulator::request::generate_workload` to materialize
+/// it. Everything downstream — bisection, optimizer, validation, CLI —
+/// works unchanged because they only ever scale the rate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless Poisson process (the paper's §4.1 setting): exponential
+    /// inter-arrivals, CV = 1.
+    Poisson,
+    /// Bursty Gamma-renewal process (on-off/MMPP-style clustering):
+    /// inter-arrivals are Gamma with shape k = 1/cv², so the inter-arrival
+    /// coefficient of variation is `cv` (> 1 = bursty, clustered traffic;
+    /// cv = 1 degenerates to exponential inter-arrivals).
+    Bursty { cv: f64 },
+    /// Deterministic arrivals at exact 1/rate spacing (CV = 0) — the
+    /// best-case arrival discipline, useful for isolating queueing noise.
+    Deterministic,
+    /// Replay the arrival *timestamps* of a recorded trace (CSV as written
+    /// by `simulator::save_trace`), time-scaled so the effective rate
+    /// matches the requested one while preserving the trace's shape
+    /// (bursts, lulls). Request lengths still come from the class mix; the
+    /// trace is cycled if more requests are needed than it holds.
+    Replay { path: String },
+}
+
+impl ArrivalProcess {
+    pub fn validate(&self) -> Result<(), Error> {
+        match self {
+            ArrivalProcess::Poisson | ArrivalProcess::Deterministic => Ok(()),
+            ArrivalProcess::Bursty { cv } => {
+                if *cv > 0.0 && cv.is_finite() {
+                    Ok(())
+                } else {
+                    Err(Error::config(format!(
+                        "bursty arrival cv must be positive and finite, got {cv}"
+                    )))
+                }
+            }
+            ArrivalProcess::Replay { path } => {
+                if path.is_empty() {
+                    Err(Error::config("replay arrival process needs a trace path"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Sample `n` arrival timestamps at effective rate `rate` (req/s),
+    /// sorted ascending, deterministic in `rng`. `Replay` arrivals are
+    /// materialized by `simulator::request::generate_workload` (they need
+    /// file I/O, not randomness); calling `sample` on one is a logic error.
+    pub fn sample(&self, rate: f64, n: usize, rng: &mut Rng) -> Vec<f64> {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        match self {
+            ArrivalProcess::Poisson => rng.poisson_arrivals(rate, n),
+            ArrivalProcess::Deterministic => {
+                (1..=n).map(|k| k as f64 / rate).collect()
+            }
+            ArrivalProcess::Bursty { cv } => {
+                // Gamma-renewal: shape k = 1/cv², mean kθ = 1/rate.
+                let k = 1.0 / (cv * cv);
+                let theta = 1.0 / (rate * k);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t += rng.gamma(k, theta);
+                    out.push(t);
+                }
+                out
+            }
+            ArrivalProcess::Replay { path } => {
+                panic!("replay arrivals ({path}) are materialized by generate_workload")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ArrivalProcess::Poisson => {
+                Json::obj(vec![("kind", Json::Str("poisson".into()))])
+            }
+            ArrivalProcess::Bursty { cv } => Json::obj(vec![
+                ("kind", Json::Str("bursty".into())),
+                ("cv", Json::Num(*cv)),
+            ]),
+            ArrivalProcess::Deterministic => {
+                Json::obj(vec![("kind", Json::Str("deterministic".into()))])
+            }
+            ArrivalProcess::Replay { path } => Json::obj(vec![
+                ("kind", Json::Str("replay".into())),
+                ("path", Json::Str(path.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ArrivalProcess, Error> {
+        let process = match j.get("kind").and_then(Json::as_str) {
+            Some("poisson") => ArrivalProcess::Poisson,
+            Some("bursty") => ArrivalProcess::Bursty { cv: j.f64_or("cv", 2.0) },
+            Some("deterministic") => ArrivalProcess::Deterministic,
+            Some("replay") => ArrivalProcess::Replay {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::config("replay arrival needs 'path'"))?
+                    .to_string(),
+            },
+            _ => {
+                return Err(Error::config(
+                    "arrival process needs kind poisson|bursty|deterministic|replay",
+                ))
+            }
+        };
+        process.validate()?;
+        Ok(process)
+    }
+}
+
+/// One request class of the mix: a named (input, generation) length profile
+/// with a sampling weight. Weights need not sum to 1; they are normalized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestClass {
+    pub name: String,
+    pub weight: f64,
+    pub input_len: LengthDist,
+    pub gen_len: LengthDist,
+}
+
+impl RequestClass {
+    pub fn validate(&self) -> Result<(), Error> {
+        if !(self.weight > 0.0 && self.weight.is_finite()) {
+            return Err(Error::config(format!(
+                "class '{}' weight must be positive and finite, got {}",
+                self.name, self.weight
+            )));
+        }
+        self.input_len.validate()?;
+        self.gen_len.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("weight", Json::Num(self.weight)),
+            ("input_len", self.input_len.to_json()),
+            ("gen_len", self.gen_len.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RequestClass, Error> {
+        let c = RequestClass {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("class")
+                .to_string(),
+            weight: j.f64_or("weight", 1.0),
+            input_len: LengthDist::from_json(
+                j.get("input_len")
+                    .ok_or_else(|| Error::config("class missing 'input_len'"))?,
+            )?,
+            gen_len: LengthDist::from_json(
+                j.get("gen_len")
+                    .ok_or_else(|| Error::config("class missing 'gen_len'"))?,
+            )?,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// A complete workload: arrival process × weighted class mix × sample size,
+/// rate-parameterized by a scale factor. `base_rate` is the effective
+/// request rate (req/s) at scale 1.0 — it stays at the default 1.0 for the
+/// paper presets so the scale factor *is* the arrival rate λ, exactly as in
+/// Algorithms 8/9.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    pub classes: Vec<RequestClass>,
+    /// Requests/second at rate scale 1.0.
+    pub base_rate: f64,
+    /// Number of requests generated per simulation / feasibility check.
+    pub n_requests: usize,
+}
+
+impl Workload {
+    /// The trivial single-class Poisson workload equivalent to `(scenario,
+    /// rate)` — the bridge that keeps OP1–OP4 byte-identical: one class,
+    /// weight 1, `base_rate` 1.0, arrivals from `Rng::poisson_arrivals`.
+    pub fn poisson(scenario: &Scenario) -> Workload {
+        Workload {
+            name: scenario.name.clone(),
+            arrival: ArrivalProcess::Poisson,
+            classes: vec![RequestClass {
+                name: scenario.name.clone(),
+                weight: 1.0,
+                input_len: scenario.input_len.clone(),
+                gen_len: scenario.gen_len.clone(),
+            }],
+            base_rate: 1.0,
+            n_requests: scenario.n_requests,
+        }
+    }
+
+    /// Preset lookup: OP1–OP4 map to their single-class Poisson workloads.
+    pub fn preset(name: &str) -> Result<Workload, Error> {
+        Ok(Workload::poisson(&Scenario::preset(name)?))
+    }
+
+    /// The canonical three-class demo mix — 70% chat (lognormal prompts,
+    /// short-to-medium generations), 20% summarization (long fixed
+    /// prompts), 10% codegen (long-tailed generations) — under bursty
+    /// CV-2 Gamma-renewal arrivals. Shared by the `workload_mix` example,
+    /// `bench_perf`, and the unit tests so the three never diverge.
+    pub fn example_mix(n_requests: usize) -> Workload {
+        Workload {
+            name: "chat+summarize+codegen".into(),
+            arrival: ArrivalProcess::Bursty { cv: 2.0 },
+            classes: vec![
+                RequestClass {
+                    name: "chat".into(),
+                    weight: 0.7,
+                    input_len: LengthDist::LogNormal { mu: 6.0, sigma: 0.8, cap: 4096 },
+                    gen_len: LengthDist::Uniform { lo: 32, hi: 256 },
+                },
+                RequestClass {
+                    name: "summarization".into(),
+                    weight: 0.2,
+                    input_len: LengthDist::Fixed(8192),
+                    gen_len: LengthDist::Fixed(512),
+                },
+                RequestClass {
+                    name: "codegen".into(),
+                    weight: 0.1,
+                    input_len: LengthDist::Uniform { lo: 256, hi: 2048 },
+                    gen_len: LengthDist::LogNormal { mu: 5.5, sigma: 0.6, cap: 2048 },
+                },
+            ],
+            base_rate: 1.0,
+            n_requests,
+        }
+    }
+
+    /// Same mix, bursty arrivals with the given inter-arrival CV — the
+    /// `--burstiness` CLI override.
+    pub fn with_burstiness(mut self, cv: f64) -> Workload {
+        self.arrival = ArrivalProcess::Bursty { cv };
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.classes.is_empty() {
+            return Err(Error::config("workload needs at least one request class"));
+        }
+        if self.classes.len() > u16::MAX as usize {
+            return Err(Error::config("workload has too many classes (max 65535)"));
+        }
+        if !(self.base_rate > 0.0 && self.base_rate.is_finite()) {
+            return Err(Error::config(format!(
+                "workload base_rate must be positive and finite, got {}",
+                self.base_rate
+            )));
+        }
+        if self.n_requests == 0 {
+            return Err(Error::config("workload n_requests must be >= 1"));
+        }
+        self.arrival.validate()?;
+        for c in &self.classes {
+            c.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Weighted mean input length across classes — the optimizer's grid /
+    /// bisection-bound sizing input (reduces to the class mean for
+    /// single-class workloads).
+    pub fn mean_input(&self) -> f64 {
+        self.weighted_mean(|c| c.input_len.mean())
+    }
+
+    pub fn mean_gen(&self) -> f64 {
+        self.weighted_mean(|c| c.gen_len.mean())
+    }
+
+    fn weighted_mean(&self, f: impl Fn(&RequestClass) -> f64) -> f64 {
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        self.classes.iter().map(|c| c.weight * f(c)).sum::<f64>() / total
+    }
+
+    /// Largest input-length upper bound over the classes (grid sizing).
+    pub fn upper_input(&self) -> u64 {
+        self.classes.iter().map(|c| c.input_len.upper()).max().unwrap_or(1)
+    }
+
+    pub fn upper_gen(&self) -> u64 {
+        self.classes.iter().map(|c| c.gen_len.upper()).max().unwrap_or(1)
+    }
+
+    /// Cumulative (unnormalized) class weights, for weighted sampling.
+    pub fn cumulative_weights(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.classes
+            .iter()
+            .map(|c| {
+                acc += c.weight;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("arrival", self.arrival.to_json()),
+            (
+                "classes",
+                Json::Arr(self.classes.iter().map(RequestClass::to_json).collect()),
+            ),
+            ("base_rate", Json::Num(self.base_rate)),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload, Error> {
+        // A workload file may also be a bare scenario ({"input_len": ...,
+        // "gen_len": ...}): it denotes the single-class Poisson workload.
+        if j.get("classes").is_none() && j.get("input_len").is_some() {
+            return Ok(Workload::poisson(&Scenario::from_json(j)?));
+        }
+        let arrival = match j.get("arrival") {
+            Some(a) => ArrivalProcess::from_json(a)?,
+            None => ArrivalProcess::Poisson,
+        };
+        let classes = j
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::config("workload missing 'classes' array"))?
+            .iter()
+            .map(RequestClass::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let w = Workload {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            arrival,
+            classes,
+            base_rate: j.f64_or("base_rate", 1.0),
+            n_requests: j.f64_or("n_requests", 2000.0) as usize,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn from_file(path: &str) -> Result<Workload, Error> {
+        let body = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("cannot read workload '{path}': {e}")))?;
+        let j = Json::parse(&body).map_err(|e| Error::config(format!("{path}: {e}")))?;
+        Workload::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix3() -> Workload {
+        Workload::example_mix(1000)
+    }
+
+    #[test]
+    fn example_mix_is_valid_and_bursty() {
+        let w = mix3();
+        w.validate().unwrap();
+        assert_eq!(w.classes.len(), 3);
+        assert_eq!(w.arrival, ArrivalProcess::Bursty { cv: 2.0 });
+        let total: f64 = w.classes.iter().map(|c| c.weight).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preset_equals_scenario_bridge() {
+        let w = Workload::preset("op2").unwrap();
+        assert_eq!(w.name, "OP2");
+        assert_eq!(w.arrival, ArrivalProcess::Poisson);
+        assert_eq!(w.classes.len(), 1);
+        assert_eq!(w.classes[0].input_len, LengthDist::Fixed(2048));
+        assert_eq!(w.base_rate, 1.0);
+        assert_eq!(w.mean_input(), 2048.0);
+        assert_eq!(w.mean_gen(), 64.0);
+        assert_eq!(w.upper_input(), 2048);
+        assert!(Workload::preset("OP9").is_err());
+    }
+
+    #[test]
+    fn weighted_means_and_uppers() {
+        let w = Workload {
+            classes: vec![
+                RequestClass {
+                    name: "a".into(),
+                    weight: 3.0,
+                    input_len: LengthDist::Fixed(1000),
+                    gen_len: LengthDist::Fixed(10),
+                },
+                RequestClass {
+                    name: "b".into(),
+                    weight: 1.0,
+                    input_len: LengthDist::Fixed(2000),
+                    gen_len: LengthDist::Fixed(50),
+                },
+            ],
+            ..Workload::preset("op1").unwrap()
+        };
+        assert!((w.mean_input() - 1250.0).abs() < 1e-9);
+        assert!((w.mean_gen() - 20.0).abs() < 1e-9);
+        assert_eq!(w.upper_input(), 2000);
+        assert_eq!(w.upper_gen(), 50);
+        assert_eq!(w.cumulative_weights(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_multi_class() {
+        let w = mix3();
+        let back = Workload::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        // Replay + deterministic arrivals round-trip too.
+        for arrival in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Deterministic,
+            ArrivalProcess::Replay { path: "trace.csv".into() },
+        ] {
+            let w = Workload { arrival: arrival.clone(), ..mix3() };
+            assert_eq!(Workload::from_json(&w.to_json()).unwrap().arrival, arrival);
+        }
+    }
+
+    #[test]
+    fn bare_scenario_json_is_single_class_poisson() {
+        let j = Json::parse(r#"{"name": "t", "input_len": 512, "gen_len": 64}"#).unwrap();
+        let w = Workload::from_json(&j).unwrap();
+        assert_eq!(w.classes.len(), 1);
+        assert_eq!(w.arrival, ArrivalProcess::Poisson);
+        assert_eq!(w.classes[0].input_len, LengthDist::Fixed(512));
+    }
+
+    #[test]
+    fn validation_rejects_degenerates() {
+        assert!(Workload { classes: vec![], ..mix3() }.validate().is_err());
+        assert!(Workload { base_rate: 0.0, ..mix3() }.validate().is_err());
+        assert!(Workload { base_rate: f64::NAN, ..mix3() }.validate().is_err());
+        assert!(Workload { n_requests: 0, ..mix3() }.validate().is_err());
+        assert!(Workload { arrival: ArrivalProcess::Bursty { cv: 0.0 }, ..mix3() }
+            .validate()
+            .is_err());
+        assert!(Workload { arrival: ArrivalProcess::Replay { path: "".into() }, ..mix3() }
+            .validate()
+            .is_err());
+        let mut bad_weight = mix3();
+        bad_weight.classes[0].weight = -1.0;
+        assert!(bad_weight.validate().is_err());
+        let mut bad_dist = mix3();
+        bad_dist.classes[1].input_len = LengthDist::Uniform { lo: 9, hi: 3 };
+        assert!(bad_dist.validate().is_err());
+    }
+
+    #[test]
+    fn poisson_sample_matches_rng_primitive() {
+        // The preset path must consume the RNG exactly like the historical
+        // `rng.poisson_arrivals` call — this is what keeps OP1–OP4 output
+        // byte-identical across the workload-plane refactor.
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let from_process = ArrivalProcess::Poisson.sample(3.5, 100, &mut a);
+        let from_rng = b.poisson_arrivals(3.5, 100);
+        assert_eq!(from_process, from_rng);
+    }
+
+    #[test]
+    fn deterministic_arrivals_are_evenly_spaced() {
+        let mut rng = Rng::new(1);
+        let arr = ArrivalProcess::Deterministic.sample(4.0, 8, &mut rng);
+        for (k, t) in arr.iter().enumerate() {
+            assert!((t - (k as f64 + 1.0) / 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrival_processes_hit_target_rate() {
+        // Empirical inter-arrival mean ≈ 1/rate for every synthetic process.
+        let n = 50_000;
+        let rate = 3.0;
+        for (name, p) in [
+            ("poisson", ArrivalProcess::Poisson),
+            ("bursty", ArrivalProcess::Bursty { cv: 2.5 }),
+            ("deterministic", ArrivalProcess::Deterministic),
+        ] {
+            let mut rng = Rng::new(7);
+            let arr = p.sample(rate, n, &mut rng);
+            assert!(arr.windows(2).all(|w| w[0] <= w[1]), "{name} not sorted");
+            let mean_gap = arr.last().unwrap() / n as f64;
+            assert!(
+                (mean_gap - 1.0 / rate).abs() / (1.0 / rate) < 0.05,
+                "{name}: mean gap {mean_gap} vs {}",
+                1.0 / rate
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_process_is_actually_bursty() {
+        // Inter-arrival CV must materialize: ≈ cv for Gamma renewal, > 1.
+        let mut rng = Rng::new(11);
+        let arr = ArrivalProcess::Bursty { cv: 2.0 }.sample(1.0, 100_000, &mut rng);
+        let gaps: Vec<f64> = std::iter::once(arr[0])
+            .chain(arr.windows(2).map(|w| w[1] - w[0]))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.5, "inter-arrival CV {cv} not bursty");
+        assert!((cv - 2.0).abs() < 0.35, "CV {cv} far from configured 2.0");
+        // And the Poisson baseline sits at CV ≈ 1 with the same estimator.
+        let mut rng = Rng::new(11);
+        let arr = ArrivalProcess::Poisson.sample(1.0, 100_000, &mut rng);
+        let gaps: Vec<f64> = std::iter::once(arr[0])
+            .chain(arr.windows(2).map(|w| w[1] - w[0]))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.1, "poisson CV {cv}");
+    }
+}

@@ -14,15 +14,23 @@
 //!   shared event core ([`simulator::core`]: clock, event loop, slot pools,
 //!   FIFO batching, round-robin order, ready heap). New architectures are
 //!   new policy files, not new engines.
-//! * [`optimizer`] — goodput search by bisection over arrival rate under
-//!   P90-SLO feasibility (Algorithms 8–9), enumerating the strategy space
-//!   and fanning the per-strategy bisections out across scoped worker
-//!   threads with deterministic, thread-count-independent rankings.
+//! * [`optimizer`] — goodput search by bisection over the workload's rate
+//!   scale factor under P90-SLO feasibility (Algorithms 8–9), enumerating
+//!   the strategy space and fanning the per-strategy bisections out across
+//!   scoped worker threads with deterministic, thread-count-independent
+//!   rankings.
+//!
+//! All three layers consume the **workload plane**
+//! ([`config::Workload`]): an arrival process (Poisson / bursty
+//! Gamma-renewal / deterministic / trace replay) crossed with a weighted
+//! multi-class request mix, scaled by a rate multiplier. The paper's
+//! OP1–OP4 scenarios are single-class Poisson presets of it; reports break
+//! TTFT/TPOT percentiles down per class for multi-class mixes.
 //!
 //! Plus the substrates a production deployment of the idea needs:
 //!
-//! * [`config`] — model / hardware / efficiency / scenario / SLO / strategy
-//!   presets and JSON loading.
+//! * [`config`] — model / hardware / efficiency / scenario / workload /
+//!   SLO / strategy presets and JSON loading.
 //! * [`runtime`] — PJRT client loading the AOT-compiled latency-surface
 //!   artifact produced by the python/JAX/Pallas layer (build-time only;
 //!   python never runs on the request path).

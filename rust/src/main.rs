@@ -15,6 +15,7 @@ use std::sync::Arc;
 use bestserve::cli::Args;
 use bestserve::config::{
     HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy, StrategySpace,
+    Workload,
 };
 use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
@@ -47,8 +48,9 @@ COMMANDS
                              Output is identical for any thread count)
             [--check-memory] (reject strategies whose weights+KV overflow HBM)
   testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
-            [--trace F]     (replay a CSV trace instead of Poisson traffic)
+            [--trace F]     (replay a CSV trace instead of generated traffic)
   validate  --scenario OP [--max-cards 8] [--tp 2,4,8] [--n N] [--out DIR]
+            [--threads N]   (parallel validation; deterministic for any N)
 
 COMMON OPTIONS
   --model    model preset (default codellama-34b)
@@ -56,6 +58,16 @@ COMMON OPTIONS
   --config   platform JSON file (overrides the two above)
   --grid     use the AOT/PJRT latency artifact instead of the native oracle
   --slo-ttft ms (default 1500)    --slo-tpot ms (default 70)
+
+WORKLOAD PLANE (simulate / sweep / optimize / testbed / validate)
+  --workload F.json  multi-class workload file (arrival process + weighted
+                     class mix + base_rate); replaces --scenario. --rate and
+                     --rates stay in effective req/s (converted to scale
+                     factors on base_rate internally), and goodput is
+                     reported in req/s for any arrival process.
+  --burstiness CV    override arrivals with a bursty Gamma-renewal process
+                     of inter-arrival CV (CV > 1 = clustered traffic)
+  Multi-class runs additionally report per-class TTFT/TPOT percentiles.
 ";
 
 fn platform_from(args: &Args) -> Result<Platform> {
@@ -80,6 +92,34 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
             .map_err(|_| Error::config(format!("--n expects an integer, got '{n}'")))?;
     }
     Ok(sc)
+}
+
+/// Resolve the workload: `--workload file.json` when given, otherwise the
+/// single-class Poisson preset of `--scenario` (byte-identical to the
+/// pre-workload-plane behavior). `--n` and `--burstiness` apply on top.
+fn workload_from(args: &Args) -> Result<Workload> {
+    let mut w = match args.get("workload") {
+        Some(path) => {
+            let mut w = Workload::from_file(path)?;
+            if let Some(n) = args.get("n") {
+                w.n_requests = n.parse().map_err(|_| {
+                    Error::config(format!("--n expects an integer, got '{n}'"))
+                })?;
+            }
+            w
+        }
+        None => Workload::poisson(&scenario_from(args)?),
+    };
+    if let Some(cv) = args.get("burstiness") {
+        let cv: f64 = cv
+            .parse()
+            .map_err(|_| Error::config(format!("--burstiness expects a number, got '{cv}'")))?;
+        w = w.with_burstiness(cv);
+    }
+    // Re-validate after every override (--n 0 or --burstiness 0 must be a
+    // config error here, not an assertion failure deep in the simulator).
+    w.validate()?;
+    Ok(w)
 }
 
 fn slo_from(args: &Args) -> Result<Slo> {
@@ -196,21 +236,29 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
-    let scenario = scenario_from(args)?;
+    let workload = workload_from(args)?;
     let slo = slo_from(args)?;
+    // --rate is the effective arrival rate in req/s; the simulator takes a
+    // scale factor on the workload's base rate (identical for the presets,
+    // whose base_rate is 1.0).
     let rate = args.f64_or("rate", 3.5)?;
+    let scale = rate / workload.base_rate;
     let params = sim_params_from(args)?;
     let model = model_for(args, &platform, strategy.tp)?;
     let t =
-        report::table_slo(model.as_ref(), &platform, &strategy, &scenario, rate, &slo, params)?;
+        report::table_slo(model.as_ref(), &platform, &strategy, &workload, scale, &slo, params)?;
     println!(
         "{} | scenario {} | rate {} req/s | n={}",
         strategy,
-        scenario.name,
+        workload.name,
         fr(rate),
-        scenario.n_requests
+        workload.n_requests
     );
     print!("{}", t.to_table().render());
+    if !t.report.per_class.is_empty() {
+        println!("per-class percentiles:");
+        print!("{}", report::per_class_table(&t.report, &workload).render());
+    }
     println!(
         "throughput {:.3} req/s | makespan {:.1} s",
         t.report.throughput, t.report.makespan
@@ -219,7 +267,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("\n{}", t.render_histograms(24, 48));
     }
     if let Some(path) = args.get("save-trace") {
-        let reqs = generate_workload(&scenario, rate, params.seed);
+        let reqs = generate_workload(&workload, scale, params.seed)?;
         bestserve::simulator::save_trace(&reqs, path)?;
         println!("wrote trace to {path}");
     }
@@ -229,18 +277,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
-    let scenario = scenario_from(args)?;
+    let workload = workload_from(args)?;
     let rates =
         args.rates_or("rates", &[0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.0])?;
     let params = sim_params_from(args)?;
     let model = model_for(args, &platform, strategy.tp)?;
-    let sw =
-        report::rate_sweep(model.as_ref(), &platform, &strategy, &scenario, &rates, params)?;
-    println!("{} | scenario {}", strategy, scenario.name);
+    // --rates are effective req/s; simulate at the equivalent scale factors
+    // but report the req/s values the user asked for.
+    let scales: Vec<f64> = rates.iter().map(|r| r / workload.base_rate).collect();
+    let mut sw =
+        report::rate_sweep(model.as_ref(), &platform, &strategy, &workload, &scales, params)?;
+    sw.rates = rates;
+    println!("{} | scenario {}", strategy, workload.name);
     print!("{}", sw.to_table().render());
     if let Some(out) = args.get("out") {
         let path =
-            std::path::Path::new(out).join(format!("sweep_{}_{}.csv", strategy, scenario.name));
+            std::path::Path::new(out).join(format!("sweep_{}_{}.csv", strategy, workload.name));
         sw.to_csv().save(&path)?;
         println!("wrote {}", path.display());
     }
@@ -249,7 +301,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_optimize(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
-    let scenario = scenario_from(args)?;
+    let workload = workload_from(args)?;
     let slo = slo_from(args)?;
     let space = StrategySpace {
         max_cards: args.u32_or("max-cards", 8)?,
@@ -272,7 +324,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         factory.as_ref(),
         &platform,
         &space,
-        &scenario,
+        &workload,
         &slo,
         params,
         &cfg,
@@ -292,7 +344,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     }
     println!(
         "scenario {} | {} strategies | optimized in {:.1}s on {} thread(s)",
-        rep.scenario,
+        rep.workload,
         rep.ranked.len(),
         dt.as_secs_f64(),
         threads
@@ -305,6 +357,21 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             fr(best.goodput),
             fr(best.normalized)
         );
+        // Multi-class workloads: show how the winner treats each class at
+        // its goodput operating point.
+        if workload.classes.len() > 1 && best.goodput > 0.0 {
+            let model = factory.model_for_tp(best.strategy.tp)?;
+            let sim = bestserve::simulator::simulate(
+                model.as_ref(),
+                &platform,
+                &best.strategy,
+                &workload,
+                best.goodput / workload.base_rate,
+                params,
+            )?;
+            println!("per-class percentiles at goodput:");
+            print!("{}", report::per_class_table(&sim, &workload).render());
+        }
     }
     Ok(())
 }
@@ -312,7 +379,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 fn cmd_testbed(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
-    let scenario = scenario_from(args)?;
+    let workload = workload_from(args)?;
     let slo = slo_from(args)?;
     let rate = args.f64_or("rate", 3.5)?;
     let model = model_for(args, &platform, strategy.tp)?;
@@ -329,7 +396,11 @@ fn cmd_testbed(args: &Args) -> Result<()> {
             eprintln!("[trace] replaying {} requests from {path}", t.len());
             t
         }
-        None => generate_workload(&scenario, rate, args.u64_or("seed", 0xBE57)?),
+        None => generate_workload(
+            &workload,
+            rate / workload.base_rate,
+            args.u64_or("seed", 0xBE57)?,
+        )?,
     };
     let tb = Testbed::new(model.as_ref(), &platform, strategy.clone(), config);
     let t0 = std::time::Instant::now();
@@ -338,7 +409,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     println!(
         "[testbed] {} | scenario {} | rate {} | n={} | wall {:.2}s",
         strategy,
-        scenario.name,
+        workload.name,
         fr(rate),
         reqs.len(),
         dt.as_secs_f64()
@@ -358,6 +429,10 @@ fn cmd_testbed(args: &Args) -> Result<()> {
         format!("{:.3}", slo.tpot * 1e3),
     ]);
     print!("{}", t.render());
+    if !rep.per_class.is_empty() {
+        println!("per-class percentiles:");
+        print!("{}", report::per_class_table(rep, &workload).render());
+    }
     println!("throughput {:.3} req/s", rep.throughput);
     for (i, st) in out.stats.iter().enumerate() {
         println!(
@@ -370,7 +445,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
 
 fn cmd_validate(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
-    let scenario = scenario_from(args)?;
+    let workload = workload_from(args)?;
     let slo = slo_from(args)?;
     let space = StrategySpace {
         max_cards: args.u32_or("max-cards", 8)?,
@@ -386,14 +461,16 @@ fn cmd_validate(args: &Args) -> Result<()> {
     };
     cfg.goodput.tolerance = args.f64_or("tolerance", 0.1)?;
     cfg.ground_truth.tolerance = args.f64_or("tolerance", 0.1)?;
+    let threads = args.usize_or("threads", default_threads())?.max(1);
     let factory = factory_for(args, &platform)?;
     let t0 = std::time::Instant::now();
-    let rep = validate(factory.as_ref(), &platform, &space, &scenario, &slo, &cfg)?;
+    let rep = validate(factory.as_ref(), &platform, &space, &workload, &slo, &cfg, threads)?;
     println!(
-        "Figure-11 panel for {} ({} strategies, {:.1}s):",
-        rep.scenario,
+        "Figure-11 panel for {} ({} strategies, {:.1}s on {} thread(s)):",
+        rep.workload,
         rep.rows.len(),
-        t0.elapsed().as_secs_f64()
+        t0.elapsed().as_secs_f64(),
+        threads
     );
     print!("{}", rep.to_table().render());
     println!(
@@ -402,7 +479,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         rep.recommendation_quality()
     );
     if let Some(out) = args.get("out") {
-        let path = std::path::Path::new(out).join(format!("fig11_{}.csv", rep.scenario));
+        let path = std::path::Path::new(out).join(format!("fig11_{}.csv", rep.workload));
         rep.to_csv().save(&path)?;
         println!("wrote {}", path.display());
     }

@@ -1,7 +1,12 @@
 //! Algorithms 8 & 9 — goodput of one serving strategy by bisection over the
-//! arrival rate, with the relaxed P90-SLO feasibility check.
+//! arrival-rate *scale factor*, with the relaxed P90-SLO feasibility check.
+//! Because the search variable is the multiplier on the workload's base
+//! rate (not an exponential-interarrival parameter), the same bisection
+//! ranks strategies under any arrival process — Poisson presets, bursty
+//! Gamma-renewal traffic, deterministic arrivals, or replayed traces — and
+//! any multi-class request mix.
 
-use crate::config::{Platform, Scenario, Slo, Strategy};
+use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 use crate::simulator::{simulate, simulate_averaged, SimParams};
@@ -30,47 +35,50 @@ impl Default for GoodputConfig {
     }
 }
 
-/// Algorithm 9 — `FEASIBLE(λ)`: simulate at rate λ and compare the P90s
-/// against the relaxed SLO thresholds (1+τ)·goal.
+/// Algorithm 9 — `FEASIBLE(λ)`: simulate at rate scale `scale` and compare
+/// the P90s against the relaxed SLO thresholds (1+τ)·goal.
+#[allow(clippy::too_many_arguments)]
 pub fn feasible(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     params: SimParams,
-    rate: f64,
+    scale: f64,
     repeats: usize,
 ) -> Result<bool> {
     let (ttft_pxx, tpot_pxx) = if repeats <= 1 {
-        let rep = simulate(model, platform, strategy, scenario, rate, params)?;
+        let rep = simulate(model, platform, strategy, workload, scale, params)?;
         (rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile))
     } else {
         // Figure 10b protocol: average the P90s over repeated runs.
-        simulate_averaged(model, platform, strategy, scenario, rate, params, repeats)?
+        simulate_averaged(model, platform, strategy, workload, scale, params, repeats)?
     };
     Ok(slo.feasible(ttft_pxx, tpot_pxx))
 }
 
-/// Algorithm 8 — `GET_GOODPUT(S)`: bisection on the arrival rate.
+/// Algorithm 8 — `GET_GOODPUT(S)`: bisection on the rate scale factor.
+/// Returns goodput in requests/second (= feasible scale × the workload's
+/// base rate; for the presets base_rate is 1.0, so the scale *is* λ).
 ///
-/// λ_u is initialized to `upper_factor / T_min` where `T_min` is the
-/// minimum time to process a single request under the strategy, scaled by
-/// the amount of parallel capacity (instances × batch slots): a deployment
-/// of p prefill instances with batch size b can sustain roughly p·b/T_pre
-/// arrivals, so the naive 1.2/T_min would truncate the search space for
-/// multi-instance strategies.
+/// The upper bound starts at `upper_factor / T_min` where `T_min` is the
+/// minimum time to process a single (mean-length) request under the
+/// strategy, scaled by the amount of parallel capacity (instances × batch
+/// slots): a deployment of p prefill instances with batch size b can
+/// sustain roughly p·b/T_pre arrivals, so the naive 1.2/T_min would
+/// truncate the search space for multi-instance strategies.
 pub fn find_goodput(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     params: SimParams,
     cfg: &GoodputConfig,
 ) -> Result<f64> {
-    let s = scenario.mean_input().round() as u32;
-    let s_plus = scenario.mean_gen().round().max(1.0) as u32;
+    let s = workload.mean_input().round() as u32;
+    let s_plus = workload.mean_gen().round().max(1.0) as u32;
     let t_min = model.min_request_time(s, s_plus);
     // Parallel capacity factor: how many requests the deployment can hold
     // concurrently, per stage, bounded by the weaker stage.
@@ -84,32 +92,33 @@ pub fn find_goodput(
             pre.max(dec)
         }
     };
-    let mut lo = cfg.lambda_min;
-    let mut hi = cfg.upper_factor * capacity / t_min;
+    // Bisect in scale units: rate bounds divided by the base rate.
+    let mut lo = cfg.lambda_min / workload.base_rate;
+    let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
 
-    if !feasible(model, platform, strategy, scenario, slo, params, lo, cfg.repeats)? {
+    if !feasible(model, platform, strategy, workload, slo, params, lo, cfg.repeats)? {
         return Ok(0.0); // rejected outright (Algorithm 8 line 5)
     }
     // If even the optimistic ceiling is feasible, report it (the strategy
     // is SLO-bound by capacity, not queueing).
-    if feasible(model, platform, strategy, scenario, slo, params, hi, cfg.repeats)? {
-        return Ok(hi);
+    if feasible(model, platform, strategy, workload, slo, params, hi, cfg.repeats)? {
+        return Ok(hi * workload.base_rate);
     }
-    while hi - lo > cfg.tolerance {
+    while hi - lo > cfg.tolerance / workload.base_rate {
         let mid = 0.5 * (lo + hi);
-        if feasible(model, platform, strategy, scenario, slo, params, mid, cfg.repeats)? {
+        if feasible(model, platform, strategy, workload, slo, params, mid, cfg.repeats)? {
             lo = mid;
         } else {
             hi = mid;
         }
     }
-    Ok(lo)
+    Ok(lo * workload.base_rate)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Architecture;
+    use crate::config::{Architecture, ArrivalProcess, Scenario};
 
     /// M/D/1-ish toy model: prefill takes exactly 100 ms per batch, decode
     /// is negligible. With bmax=1 and one instance, the TTFT SLO of 1.5 s
@@ -124,24 +133,24 @@ mod tests {
         }
     }
 
-    fn setup() -> (Platform, Scenario, Slo) {
+    fn setup() -> (Platform, Workload, Slo) {
         (
             Platform::paper_testbed(),
-            Scenario::fixed("t", 256, 8, 2000),
+            Workload::poisson(&Scenario::fixed("t", 256, 8, 2000)),
             Slo::paper_default(),
         )
     }
 
     #[test]
     fn goodput_between_zero_and_service_rate() {
-        let (platform, scenario, slo) = setup();
+        let (platform, workload, slo) = setup();
         let mut st = Strategy::disaggregation(1, 1, 1);
         st.bmax_prefill = 1;
         let g = find_goodput(
             &Toy,
             &platform,
             &st,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             &GoodputConfig::default(),
@@ -164,13 +173,13 @@ mod tests {
                 0.2 // 200 ms/token >> 70 ms SLO
             }
         }
-        let (platform, scenario, slo) = setup();
+        let (platform, workload, slo) = setup();
         let st = Strategy::disaggregation(1, 1, 1);
         let g = find_goodput(
             &Slow,
             &platform,
             &st,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             &GoodputConfig::default(),
@@ -181,7 +190,7 @@ mod tests {
 
     #[test]
     fn goodput_monotone_in_instances() {
-        let (platform, scenario, slo) = setup();
+        let (platform, workload, slo) = setup();
         let cfg = GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() };
         let mut g = Vec::new();
         for p in [1u32, 2, 4] {
@@ -196,7 +205,7 @@ mod tests {
                     &Toy,
                     &platform,
                     &st,
-                    &scenario,
+                    &workload,
                     &slo,
                     SimParams::default(),
                     &cfg,
@@ -210,14 +219,14 @@ mod tests {
 
     #[test]
     fn feasible_matches_direct_simulation() {
-        let (platform, scenario, slo) = setup();
+        let (platform, workload, slo) = setup();
         let st = Strategy::disaggregation(1, 1, 1);
         // At a tiny rate the toy system is trivially feasible.
         assert!(feasible(
             &Toy,
             &platform,
             &st,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             0.1,
@@ -228,18 +237,63 @@ mod tests {
 
     #[test]
     fn averaged_repeats_accepted() {
-        let (platform, scenario, slo) = setup();
+        let (platform, workload, slo) = setup();
         let st = Strategy::disaggregation(1, 1, 1);
         assert!(feasible(
             &Toy,
             &platform,
             &st,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             0.5,
             3
         )
         .unwrap());
+    }
+
+    #[test]
+    fn base_rate_invariance() {
+        // Expressing the same workload with base_rate 2.0 must report the
+        // same goodput in req/s (the bisection searches scale, the report
+        // converts back).
+        let (platform, workload, slo) = setup();
+        let mut st = Strategy::disaggregation(1, 1, 1);
+        st.bmax_prefill = 1;
+        let doubled = Workload { base_rate: 2.0, ..workload.clone() };
+        let cfg = GoodputConfig::default();
+        let g1 = find_goodput(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        let g2 = find_goodput(
+            &Toy, &platform, &st, &doubled, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        assert!((g1 - g2).abs() < 2.0 * cfg.tolerance, "{g1} vs {g2}");
+    }
+
+    #[test]
+    fn bursty_goodput_no_higher_than_poisson() {
+        // At the same mean rate, heavy burstiness can only hurt the SLO
+        // tail, so goodput under the bursty process must not exceed the
+        // Poisson preset's (allowing bisection tolerance).
+        let (platform, workload, slo) = setup();
+        let mut st = Strategy::disaggregation(1, 1, 1);
+        st.bmax_prefill = 1;
+        let bursty = Workload {
+            arrival: ArrivalProcess::Bursty { cv: 4.0 },
+            ..workload.clone()
+        };
+        let cfg = GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() };
+        let gp = find_goodput(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        let gb = find_goodput(
+            &Toy, &platform, &st, &bursty, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        assert!(gb <= gp + 0.5, "bursty {gb} vs poisson {gp}");
     }
 }

@@ -5,14 +5,14 @@
 //! feasible by BestServe but could fail in practice due to insufficient
 //! memory capacity").
 
-use crate::config::{Architecture, Platform, Scenario, Strategy};
+use crate::config::{Architecture, Platform, Strategy, Workload};
 
 /// Expected KV footprint of one fully-loaded instance (bytes per CARD),
-/// for the given scenario: every batch slot holding a sequence at its
-/// final context (the steady-state peak the deployment must sustain).
+/// for the given workload: every batch slot holding a sequence at its
+/// (mix-weighted mean) final context — the steady-state peak the
+/// deployment must sustain.
 fn peak_kv_bytes_per_card(
     platform: &Platform,
-    scenario: &Scenario,
     slots: u32,
     tokens_per_slot: f64,
     tp: u32,
@@ -43,27 +43,28 @@ impl MemoryCheck {
     }
 }
 
-/// Check whether `strategy` fits device memory for `scenario`.
+/// Check whether `strategy` fits device memory for `workload`.
 ///
 /// Collocated instances hold prefill and decode sequences: `bmax_decode`
 /// slots at the full context `s + s_+` plus a prefill batch in flight.
 /// Disaggregated prefill instances hold only `bmax_prefill · s`; decode
-/// instances hold `bmax_decode · (s + s_+)`.
-pub fn check_memory(platform: &Platform, strategy: &Strategy, scenario: &Scenario) -> MemoryCheck {
+/// instances hold `bmax_decode · (s + s_+)`. Lengths are the workload's
+/// mix-weighted means.
+pub fn check_memory(platform: &Platform, strategy: &Strategy, workload: &Workload) -> MemoryCheck {
     let tp = strategy.tp;
     let weights = platform.model.weight_bytes() as f64 / tp as f64;
-    let s = scenario.mean_input();
-    let full = scenario.mean_input() + scenario.mean_gen();
+    let s = workload.mean_input();
+    let full = workload.mean_input() + workload.mean_gen();
     let peak_kv = match strategy.arch {
         Architecture::Collocation { .. } => {
-            peak_kv_bytes_per_card(platform, scenario, strategy.bmax_decode, full, tp)
-                + peak_kv_bytes_per_card(platform, scenario, strategy.bmax_prefill, s, tp)
+            peak_kv_bytes_per_card(platform, strategy.bmax_decode, full, tp)
+                + peak_kv_bytes_per_card(platform, strategy.bmax_prefill, s, tp)
         }
         Architecture::Disaggregation { .. } => {
             // The binding instance kind is whichever holds more KV.
-            let prefill = peak_kv_bytes_per_card(platform, scenario, strategy.bmax_prefill, s, tp);
+            let prefill = peak_kv_bytes_per_card(platform, strategy.bmax_prefill, s, tp);
             let decode =
-                peak_kv_bytes_per_card(platform, scenario, strategy.bmax_decode, full, tp);
+                peak_kv_bytes_per_card(platform, strategy.bmax_decode, full, tp);
             prefill.max(decode)
         }
     };
@@ -77,6 +78,11 @@ pub fn check_memory(platform: &Platform, strategy: &Strategy, scenario: &Scenari
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Scenario;
+
+    fn wl(s: u64, g: u64) -> Workload {
+        Workload::poisson(&Scenario::fixed("t", s, g, 100))
+    }
 
     #[test]
     fn paper_testbed_fits_table4_config() {
@@ -84,8 +90,7 @@ mod tests {
         // 16 slots x 2112 tokens x 48 KB/token = ~1.7 GB KV — fits easily.
         let p = Platform::paper_testbed();
         let st = Strategy::disaggregation(1, 1, 4);
-        let sc = Scenario::fixed("t", 2048, 64, 100);
-        let m = check_memory(&p, &st, &sc);
+        let m = check_memory(&p, &st, &wl(2048, 64));
         assert!(m.fits(), "{m:?}");
         assert!(m.weights > 15e9 && m.weights < 20e9, "{}", m.weights);
         assert!(m.utilization() < 0.5, "{}", m.utilization());
@@ -96,8 +101,7 @@ mod tests {
         // 34B params x 2 bytes = 68 GB > 64 GB on a single card.
         let p = Platform::paper_testbed();
         let st = Strategy::collocation(1, 1);
-        let sc = Scenario::fixed("t", 2048, 64, 100);
-        assert!(!check_memory(&p, &st, &sc).fits());
+        assert!(!check_memory(&p, &st, &wl(2048, 64)).fits());
     }
 
     #[test]
@@ -105,9 +109,8 @@ mod tests {
         let p = Platform::paper_testbed();
         let mut st = Strategy::disaggregation(1, 1, 4);
         st.bmax_decode = 4096;
-        let sc = Scenario::fixed("t", 8192, 2048, 100);
         // 4096 slots x 10240 tokens x 49 KB = ~2 TB >> 64 GB.
-        let m = check_memory(&p, &st, &sc);
+        let m = check_memory(&p, &st, &wl(8192, 2048));
         assert!(!m.fits());
         assert!(m.utilization() > 10.0);
     }
@@ -115,9 +118,9 @@ mod tests {
     #[test]
     fn colloc_charges_both_phases() {
         let p = Platform::paper_testbed();
-        let sc = Scenario::fixed("t", 2048, 64, 100);
-        let colloc = check_memory(&p, &Strategy::collocation(1, 4), &sc);
-        let disagg = check_memory(&p, &Strategy::disaggregation(1, 1, 4), &sc);
+        let w = wl(2048, 64);
+        let colloc = check_memory(&p, &Strategy::collocation(1, 4), &w);
+        let disagg = check_memory(&p, &Strategy::disaggregation(1, 1, 4), &w);
         assert!(colloc.peak_kv > disagg.peak_kv);
     }
 }

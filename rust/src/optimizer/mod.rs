@@ -1,8 +1,10 @@
 //! The **Optimizer** (§3.5) — topmost layer of BestServe: enumerate every
 //! permissible serving strategy, find each one's goodput by bisection over
-//! the arrival rate (Algorithm 8) under P90-SLO feasibility with the
-//! relaxation factor τ (Algorithm 9), and rank by normalized goodput
-//! (goodput per card, the §4.1 metric).
+//! the workload's rate scale factor (Algorithm 8) under P90-SLO
+//! feasibility with the relaxation factor τ (Algorithm 9), and rank by
+//! normalized goodput (goodput per card, the §4.1 metric). The sweep is
+//! workload-generic: any arrival process × class mix ranks the same way
+//! the paper's Poisson presets do, because only the rate scale is searched.
 //!
 //! The sweep over the strategy space is embarrassingly parallel — each
 //! strategy's bisection is independent and deterministic in the simulation
@@ -22,7 +24,7 @@ pub use memory::{check_memory, MemoryCheck};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::config::{Platform, Scenario, Slo, Strategy, StrategySpace};
+use crate::config::{Platform, Slo, Strategy, StrategySpace, Workload};
 use crate::error::Result;
 use crate::estimator::{AnalyticOracle, LatencyModel};
 use crate::simulator::SimParams;
@@ -108,7 +110,8 @@ pub struct RankedStrategy {
 /// Full optimizer output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerReport {
-    pub scenario: String,
+    /// Name of the workload the sweep ranked strategies for.
+    pub workload: String,
     pub ranked: Vec<RankedStrategy>,
 }
 
@@ -131,12 +134,12 @@ pub fn optimize(
     factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     sim_params: SimParams,
     cfg: &GoodputConfig,
 ) -> Result<OptimizerReport> {
-    optimize_parallel(factory, platform, space, scenario, slo, sim_params, cfg, false, 1)
+    optimize_parallel(factory, platform, space, workload, slo, sim_params, cfg, false, 1)
 }
 
 /// [`optimize`] with the memory pre-filter toggle exposed.
@@ -150,13 +153,13 @@ pub fn optimize_with_memory(
     factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     sim_params: SimParams,
     cfg: &GoodputConfig,
     check_mem: bool,
 ) -> Result<OptimizerReport> {
-    optimize_parallel(factory, platform, space, scenario, slo, sim_params, cfg, check_mem, 1)
+    optimize_parallel(factory, platform, space, workload, slo, sim_params, cfg, check_mem, 1)
 }
 
 /// The full optimizer: enumerate, pre-build the per-tp models, fan the
@@ -173,7 +176,7 @@ pub fn optimize_parallel(
     factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     sim_params: SimParams,
     cfg: &GoodputConfig,
@@ -190,7 +193,7 @@ pub fn optimize_parallel(
     // the PJRT artifact — not free).
     let mut models: HashMap<u32, Arc<dyn LatencyModel>> = HashMap::new();
     for strategy in &strategies {
-        if check_mem && !memory::check_memory(platform, strategy, scenario).fits() {
+        if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
             continue;
         }
         if !models.contains_key(&strategy.tp) {
@@ -199,7 +202,7 @@ pub fn optimize_parallel(
     }
 
     let eval = |strategy: &Strategy| -> Result<RankedStrategy> {
-        if check_mem && !memory::check_memory(platform, strategy, scenario).fits() {
+        if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
             return Ok(RankedStrategy {
                 strategy: strategy.clone(),
                 goodput: 0.0,
@@ -212,7 +215,7 @@ pub fn optimize_parallel(
             model.as_ref(),
             platform,
             strategy,
-            scenario,
+            workload,
             slo,
             sim_params,
             cfg,
@@ -226,49 +229,16 @@ pub fn optimize_parallel(
         })
     };
 
-    let threads = threads.max(1).min(strategies.len().max(1));
-    let mut ranked: Vec<RankedStrategy> = Vec::with_capacity(strategies.len());
-    if threads == 1 {
-        for strategy in &strategies {
-            ranked.push(eval(strategy)?);
-        }
-    } else {
-        let mut results: Vec<Option<Result<RankedStrategy>>> =
-            (0..strategies.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(threads);
-            for worker in 0..threads {
-                let eval = &eval;
-                let strategies = &strategies;
-                handles.push(scope.spawn(move || {
-                    strategies
-                        .iter()
-                        .enumerate()
-                        .skip(worker)
-                        .step_by(threads)
-                        .map(|(i, s)| (i, eval(s)))
-                        .collect::<Vec<_>>()
-                }));
-            }
-            for handle in handles {
-                for (i, r) in handle.join().expect("optimizer worker panicked") {
-                    results[i] = Some(r);
-                }
-            }
-        });
-        for r in results {
-            ranked.push(r.expect("every strategy slot is filled")?);
-        }
-    }
+    let mut ranked = crate::util::parallel::parallel_map(&strategies, threads, eval)?;
 
     rank(&mut ranked);
-    Ok(OptimizerReport { scenario: scenario.name.clone(), ranked })
+    Ok(OptimizerReport { workload: workload.name.clone(), ranked })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Architecture;
+    use crate::config::{Architecture, Scenario};
 
     /// A fast fake factory for optimizer-level tests: constant-time model.
     struct FakeFactory;
@@ -295,14 +265,14 @@ mod tests {
             tp_choices: vec![1, 2],
             ..StrategySpace::default()
         };
-        let scenario = Scenario::fixed("t", 256, 16, 300);
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 300));
         let slo = Slo::paper_default();
         let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
         let report = optimize(
             &FakeFactory,
             &platform,
             &space,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             &cfg,
@@ -347,7 +317,7 @@ mod tests {
             tp_choices: vec![1, 2],
             ..StrategySpace::default()
         };
-        let scenario = Scenario::fixed("t", 256, 16, 200);
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 200));
         let slo = Slo::paper_default();
         let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
         let run = |threads: usize| {
@@ -355,7 +325,7 @@ mod tests {
                 &FakeFactory,
                 &platform,
                 &space,
-                &scenario,
+                &workload,
                 &slo,
                 SimParams::default(),
                 &cfg,
@@ -422,14 +392,14 @@ mod tests {
             tp_choices: vec![1],
             ..StrategySpace::default()
         };
-        let scenario = Scenario::fixed("t", 64, 4, 50);
+        let workload = Workload::poisson(&Scenario::fixed("t", 64, 4, 50));
         let slo = Slo::paper_default();
         let cfg = GoodputConfig { tolerance: 0.5, ..GoodputConfig::default() };
         let report = optimize(
             &SlowFactory,
             &platform,
             &space,
-            &scenario,
+            &workload,
             &slo,
             SimParams::default(),
             &cfg,

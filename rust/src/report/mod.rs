@@ -3,7 +3,7 @@
 //! (results/). Shared by the CLI (`bestserve <cmd>`) and the bench harness
 //! (`cargo bench`), so the artifacts are regenerated identically everywhere.
 
-use crate::config::{Phase, Platform, Scenario, Slo, Strategy};
+use crate::config::{Phase, Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::{block_breakdown, LatencyModel};
 use crate::simulator::{simulate, SimParams, SimReport};
@@ -77,12 +77,12 @@ pub fn table_slo(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     rate: f64,
     slo: &Slo,
     params: SimParams,
 ) -> Result<TableSlo> {
-    let report = simulate(model, platform, strategy, scenario, rate, params)?;
+    let report = simulate(model, platform, strategy, workload, rate, params)?;
     Ok(TableSlo {
         strategy: strategy.to_string(),
         rate,
@@ -167,6 +167,41 @@ impl TableSlo {
     }
 }
 
+/// Per-class TTFT/TPOT percentile breakdown of a multi-class simulation —
+/// the workload-plane extension of the Tables 4/5 panels. Class indices
+/// are resolved to names through the workload's mix.
+pub fn per_class_table(report: &SimReport, workload: &Workload) -> Table {
+    let mut t = Table::new(&[
+        "class",
+        "n",
+        "TTFT P50 (ms)",
+        "TTFT P90 (ms)",
+        "TTFT P99 (ms)",
+        "TPOT P50 (ms)",
+        "TPOT P90 (ms)",
+        "TPOT P99 (ms)",
+    ])
+    .numeric_body();
+    for c in &report.per_class {
+        let name = workload
+            .classes
+            .get(c.class as usize)
+            .map(|rc| rc.name.clone())
+            .unwrap_or_else(|| format!("class{}", c.class));
+        t.row(&[
+            name,
+            c.n.to_string(),
+            ms(c.ttft.p50 * 1e3),
+            ms(c.ttft.p90 * 1e3),
+            ms(c.ttft.p99 * 1e3),
+            ms(c.tpot.p50 * 1e3),
+            ms(c.tpot.p90 * 1e3),
+            ms(c.tpot.p99 * 1e3),
+        ]);
+    }
+    t
+}
+
 /// Figures 7/9 — P90 TTFT & TPOT against request arrival rates.
 pub struct RateSweep {
     pub strategy: String,
@@ -179,14 +214,14 @@ pub fn rate_sweep(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     rates: &[f64],
     params: SimParams,
 ) -> Result<RateSweep> {
     let mut ttft = Vec::with_capacity(rates.len());
     let mut tpot = Vec::with_capacity(rates.len());
     for &r in rates {
-        let rep = simulate(model, platform, strategy, scenario, r, params)?;
+        let rep = simulate(model, platform, strategy, workload, r, params)?;
         ttft.push(rep.ttft.p90);
         tpot.push(rep.tpot.p90);
     }
@@ -236,11 +271,12 @@ pub struct VarianceStudy {
     pub averaged: Vec<Vec<f64>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn variance_study(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario_proto: &Scenario,
+    workload_proto: &Workload,
     rate: f64,
     n_requests: &[usize],
     seeds: usize,
@@ -249,8 +285,8 @@ pub fn variance_study(
     let mut oneshot = Vec::new();
     let mut averaged = Vec::new();
     for &n in n_requests {
-        let mut sc = scenario_proto.clone();
-        sc.n_requests = n;
+        let mut w = workload_proto.clone();
+        w.n_requests = n;
         let mut one = Vec::new();
         let mut avg = Vec::new();
         for k in 0..seeds {
@@ -258,9 +294,9 @@ pub fn variance_study(
                 seed: params.seed.wrapping_add(k as u64 * 1299709),
                 ..params
             };
-            one.push(simulate(model, platform, strategy, &sc, rate, p1)?.ttft.p90);
+            one.push(simulate(model, platform, strategy, &w, rate, p1)?.ttft.p90);
             let (a, _) = crate::simulator::simulate_averaged(
-                model, platform, strategy, &sc, rate, p1, 3,
+                model, platform, strategy, &w, rate, p1, 3,
             )?;
             avg.push(a);
         }
@@ -327,6 +363,7 @@ pub fn results_dir() -> std::path::PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Scenario;
     use crate::simulator::testutil::ConstModel;
 
     #[test]
@@ -346,12 +383,12 @@ mod tests {
         let m = ConstModel { prefill: 0.3, step: 0.001 };
         let platform = Platform::paper_testbed();
         let st = Strategy::disaggregation(1, 1, 4);
-        let sc = Scenario::fixed("t", 256, 16, 400);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 400));
         let sw = rate_sweep(
             &m,
             &platform,
             &st,
-            &sc,
+            &w,
             &[0.5, 2.0, 6.0, 12.0],
             SimParams::default(),
         )
@@ -367,12 +404,12 @@ mod tests {
         let m = ConstModel { prefill: 0.2, step: 0.001 };
         let platform = Platform::paper_testbed();
         let st = Strategy::disaggregation(1, 1, 4);
-        let sc = Scenario::fixed("t", 256, 16, 100);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 100));
         let vs = variance_study(
             &m,
             &platform,
             &st,
-            &sc,
+            &w,
             3.0,
             &[100, 400],
             3,
@@ -386,16 +423,41 @@ mod tests {
     }
 
     #[test]
+    fn per_class_table_renders_names() {
+        use crate::config::{ArrivalProcess, LengthDist, RequestClass};
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let platform = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let mk = |name: &str, s: u64, g: u64| RequestClass {
+            name: name.into(),
+            weight: 0.5,
+            input_len: LengthDist::Fixed(s),
+            gen_len: LengthDist::Fixed(g),
+        };
+        let w = Workload {
+            name: "mix".into(),
+            arrival: ArrivalProcess::Poisson,
+            classes: vec![mk("chat", 128, 16), mk("code", 1024, 64)],
+            base_rate: 1.0,
+            n_requests: 200,
+        };
+        let rep = simulate(&m, &platform, &st, &w, 1.0, SimParams::default()).unwrap();
+        let rendered = per_class_table(&rep, &w).render();
+        assert!(rendered.contains("chat") && rendered.contains("code"), "{rendered}");
+        assert!(rendered.contains("TTFT P90"));
+    }
+
+    #[test]
     fn table_slo_histograms() {
         let m = ConstModel { prefill: 0.2, step: 0.002 };
         let platform = Platform::paper_testbed();
         let st = Strategy::disaggregation(1, 1, 4);
-        let sc = Scenario::fixed("t", 256, 16, 300);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 300));
         let t = table_slo(
             &m,
             &platform,
             &st,
-            &sc,
+            &w,
             2.0,
             &Slo::paper_default(),
             SimParams::default(),

@@ -255,6 +255,7 @@ impl<'a> CollocSimulator<'a> {
                 decode_start: policy.d1[idx],
                 completion: policy.completion[idx],
                 gen_len: r.gen_len,
+                class: r.class,
             })
             .collect();
         SimReport::from_outcomes(&outcomes)
@@ -264,7 +265,7 @@ impl<'a> CollocSimulator<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Scenario;
+    use crate::config::{Scenario, Workload};
     use crate::simulator::request::generate_workload;
     use crate::simulator::testutil::ConstModel;
 
@@ -288,7 +289,7 @@ mod tests {
         let m = ConstModel { prefill: 0.5, step: 0.01 };
         let p = platform();
         let s = sim(&m, &p, 1);
-        let reqs = vec![Request { id: 0, arrival: 1.0, input_len: 128, gen_len: 10 }];
+        let reqs = vec![Request { id: 0, arrival: 1.0, input_len: 128, gen_len: 10, class: 0 }];
         let rep = s.run(&reqs);
         // TTFT = 0.5; decode span = 10 * 0.01 = 0.1 -> TPOT 0.01.
         assert!((rep.ttft.p50 - 0.5).abs() < 1e-9, "{}", rep.ttft.p50);
@@ -303,8 +304,8 @@ mod tests {
         // Request 0 decodes for 1 s (100 tokens); request 1 arrives mid-way
         // and suspends it, adding its prefill time to request 0's completion.
         let reqs = vec![
-            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100 },
-            Request { id: 1, arrival: 1.5, input_len: 64, gen_len: 1 },
+            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100, class: 0 },
+            Request { id: 1, arrival: 1.5, input_len: 64, gen_len: 1, class: 0 },
         ];
         let rep = s.run(&reqs);
         // Req 0: prefill [0,1], decode [1, 2] without interference; req 1's
@@ -319,10 +320,10 @@ mod tests {
         let m = ConstModel { prefill: 1.0, step: 0.01 };
         let p = platform();
         let s = sim(&m, &p, 1);
-        let mut reqs = vec![Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100 }];
+        let mut reqs = vec![Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 100, class: 0 }];
         // Two more prefills arrive back-to-back during the decode.
-        reqs.push(Request { id: 1, arrival: 1.2, input_len: 64, gen_len: 1 });
-        reqs.push(Request { id: 2, arrival: 2.4, input_len: 64, gen_len: 1 });
+        reqs.push(Request { id: 1, arrival: 1.2, input_len: 64, gen_len: 1, class: 0 });
+        reqs.push(Request { id: 2, arrival: 2.4, input_len: 64, gen_len: 1, class: 0 });
         let rep = s.run(&reqs);
         // Request 0's decode is pushed by both prefills: span 1 + 2 = 3 s.
         assert!((rep.tpots[0] - 0.03).abs() < 1e-9, "{}", rep.tpots[0]);
@@ -335,8 +336,8 @@ mod tests {
         let s = sim(&m, &p, 1);
         // Both arrive together: prefill batch [0,1] -> both decode after 1 s.
         let reqs = vec![
-            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 10 },
-            Request { id: 1, arrival: 0.0, input_len: 64, gen_len: 10 },
+            Request { id: 0, arrival: 0.0, input_len: 64, gen_len: 10, class: 0 },
+            Request { id: 1, arrival: 0.0, input_len: 64, gen_len: 10, class: 0 },
         ];
         let rep = s.run(&reqs);
         assert!((rep.ttfts[0] - 1.0).abs() < 1e-9);
@@ -350,8 +351,8 @@ mod tests {
         let m = ConstModel { prefill: 0.05, step: 0.0005 };
         let p = platform();
         let s = sim(&m, &p, 2);
-        let sc = Scenario::fixed("t", 256, 32, 800);
-        let rep = s.run(&generate_workload(&sc, 8.0, 6));
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 32, 800));
+        let rep = s.run(&generate_workload(&w, 8.0, 6).unwrap());
         assert_eq!(rep.n, 800);
         assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
         assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
@@ -365,8 +366,8 @@ mod tests {
         use crate::simulator::disagg::DisaggSimulator;
         let m = ConstModel { prefill: 0.4, step: 0.002 };
         let p = platform();
-        let sc = Scenario::fixed("t", 2048, 64, 500);
-        let reqs = generate_workload(&sc, 3.5, 7);
+        let w = Workload::poisson(&Scenario::fixed("t", 2048, 64, 500));
+        let reqs = generate_workload(&w, 3.5, 7).unwrap();
         let colloc = sim(&m, &p, 2).run(&reqs);
         let disagg = DisaggSimulator {
             model: &m,

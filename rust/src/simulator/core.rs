@@ -311,7 +311,7 @@ impl<'a> FifoArrivals<'a> {
 
     /// Has the head request arrived by `t`?
     pub fn head_arrived(&self, t: f64) -> bool {
-        self.head_arrival().map_or(false, |a| a <= t)
+        self.head_arrival().is_some_and(|a| a <= t)
     }
 
     /// `BATCH(R, A, b_max, T)` — pop up to `bmax` requests that have
@@ -455,6 +455,7 @@ mod tests {
                 arrival,
                 input_len,
                 gen_len: 1,
+                class: 0,
             })
             .collect();
         let mut q = FifoArrivals::new(&reqs);

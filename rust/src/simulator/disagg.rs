@@ -105,6 +105,7 @@ impl<'a> DisaggSimulator<'a> {
                 decode_start: item.ready,
                 completion: o.completion,
                 gen_len: r.gen_len,
+                class: r.class,
             });
         }
         SimReport::from_outcomes(&outcomes)
@@ -114,7 +115,7 @@ impl<'a> DisaggSimulator<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Scenario;
+    use crate::config::{Scenario, Workload};
     use crate::simulator::request::generate_workload;
     use crate::simulator::testutil::{AffineModel, ConstModel};
 
@@ -144,8 +145,8 @@ mod tests {
         let m = ConstModel { prefill: 0.2, step: 0.001 };
         let p = platform();
         let s = sim(&m, &p, 1, 1);
-        let sc = Scenario::fixed("t", 512, 32, 50);
-        let reqs = generate_workload(&sc, 0.1, 1); // λ << service rate
+        let w = Workload::poisson(&Scenario::fixed("t", 512, 32, 50));
+        let reqs = generate_workload(&w, 0.1, 1).unwrap(); // λ << service rate
         let rep = s.run(&reqs);
         // Essentially no queueing: P90 TTFT ≈ prefill service time.
         assert!((rep.ttft.p90 - 0.2).abs() < 0.01, "{}", rep.ttft.p90);
@@ -158,10 +159,10 @@ mod tests {
         let m = ConstModel { prefill: 1.0, step: 0.001 };
         let p = platform();
         let s = sim(&m, &p, 1, 1);
-        let sc = Scenario::fixed("t", 512, 8, 300);
+        let w = Workload::poisson(&Scenario::fixed("t", 512, 8, 300));
         // bmax 4 => max service rate 4 req/s; λ=8 is overload.
-        let lo = s.run(&generate_workload(&sc, 1.0, 2));
-        let hi = s.run(&generate_workload(&sc, 8.0, 2));
+        let lo = s.run(&generate_workload(&w, 1.0, 2).unwrap());
+        let hi = s.run(&generate_workload(&w, 8.0, 2).unwrap());
         assert!(hi.ttft.p90 > 5.0 * lo.ttft.p90, "{} vs {}", hi.ttft.p90, lo.ttft.p90);
     }
 
@@ -174,8 +175,8 @@ mod tests {
         let t = s.kv_transfer_time(2048);
         // CodeLlama-34b: 196608 B/token * 2048 / (0.3 * 90e9) ≈ 14.9 ms
         assert!(t > 0.005 && t < 0.05, "{t}");
-        let sc = Scenario::fixed("t", 2048, 4, 20);
-        let rep = s.run(&generate_workload(&sc, 0.1, 3));
+        let w = Workload::poisson(&Scenario::fixed("t", 2048, 4, 20));
+        let rep = s.run(&generate_workload(&w, 0.1, 3).unwrap());
         // decode_start - first_token == transfer for every request.
         // (verified via TPOT being unaffected but TTFT unchanged)
         assert!(rep.ttft.p90 < 0.2);
@@ -191,8 +192,8 @@ mod tests {
             step_per_ctx: 0.0,
         };
         let p = platform();
-        let sc = Scenario::fixed("t", 512, 64, 400);
-        let reqs = generate_workload(&sc, 6.0, 4);
+        let w = Workload::poisson(&Scenario::fixed("t", 512, 64, 400));
+        let reqs = generate_workload(&w, 6.0, 4).unwrap();
         let one = sim(&m, &p, 1, 1).run(&reqs);
         let three = sim(&m, &p, 1, 3).run(&reqs);
         assert!(three.tpot.p90 < one.tpot.p90, "{} vs {}", three.tpot.p90, one.tpot.p90);
@@ -203,8 +204,8 @@ mod tests {
         let m = ConstModel { prefill: 0.05, step: 0.0005 };
         let p = platform();
         let s = sim(&m, &p, 2, 3);
-        let sc = Scenario::fixed("t", 256, 16, 1000);
-        let rep = s.run(&generate_workload(&sc, 10.0, 5));
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 1000));
+        let rep = s.run(&generate_workload(&w, 10.0, 5).unwrap());
         assert_eq!(rep.n, 1000);
         assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
         assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));

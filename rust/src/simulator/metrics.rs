@@ -15,6 +15,8 @@ pub struct RequestOutcome {
     /// Final token time.
     pub completion: f64,
     pub gen_len: u32,
+    /// Workload class tag, carried through from the request.
+    pub class: u16,
 }
 
 impl RequestOutcome {
@@ -36,6 +38,17 @@ impl RequestOutcome {
     }
 }
 
+/// TTFT/TPOT percentile summaries for one workload class — the per-class
+/// panels of a multi-class (mix) simulation report.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    /// Class index into the workload's mix.
+    pub class: u16,
+    pub n: usize,
+    pub ttft: Summary,
+    pub tpot: Summary,
+}
+
 /// Aggregated simulation report.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -50,6 +63,9 @@ pub struct SimReport {
     pub makespan: f64,
     pub ttfts: Vec<f64>,
     pub tpots: Vec<f64>,
+    /// Per-class TTFT/TPOT breakdowns, ascending by class index. Empty for
+    /// single-class workloads (the aggregate summaries are the breakdown).
+    pub per_class: Vec<ClassStats>,
 }
 
 impl SimReport {
@@ -62,6 +78,30 @@ impl SimReport {
             .iter()
             .map(|o| o.completion)
             .fold(f64::NEG_INFINITY, f64::max);
+        let mut classes: Vec<u16> = outcomes.iter().map(|o| o.class).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        let per_class = if classes.len() <= 1 {
+            Vec::new()
+        } else {
+            classes
+                .into_iter()
+                .map(|class| {
+                    let (t, p): (Vec<f64>, Vec<f64>) = outcomes
+                        .iter()
+                        .zip(ttfts.iter().zip(tpots.iter()))
+                        .filter(|(o, _)| o.class == class)
+                        .map(|(_, (t, p))| (*t, *p))
+                        .unzip();
+                    ClassStats {
+                        class,
+                        n: t.len(),
+                        ttft: Summary::from(&t),
+                        tpot: Summary::from(&p),
+                    }
+                })
+                .collect()
+        };
         SimReport {
             n: outcomes.len(),
             ttft: Summary::from(&ttfts),
@@ -71,6 +111,7 @@ impl SimReport {
             makespan,
             ttfts,
             tpots,
+            per_class,
         }
     }
 
@@ -105,6 +146,7 @@ mod tests {
             decode_start: ds,
             completion: done,
             gen_len: g,
+            class: 0,
         }
     }
 
@@ -130,6 +172,35 @@ mod tests {
         assert!((r.e2e.p50 - 2.25).abs() < 1e-9);
         assert!((r.makespan - 101.25).abs() < 1e-9);
         assert!((r.throughput - 100.0 / 101.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_class_reports_skip_breakdown() {
+        let outs = vec![outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5];
+        assert!(SimReport::from_outcomes(&outs).per_class.is_empty());
+    }
+
+    #[test]
+    fn per_class_breakdown_partitions_outcomes() {
+        // Class 2: slow TTFT; class 0: fast. The breakdown separates them
+        // and partitions n.
+        let mut outs = Vec::new();
+        for i in 0..40 {
+            let t = i as f64;
+            let mut o = outcome(i, t, t + 0.1, t + 0.1, t + 1.0, 10);
+            if i % 4 == 0 {
+                o.class = 2;
+                o.first_token = t + 0.9;
+            }
+            outs.push(o);
+        }
+        let r = SimReport::from_outcomes(&outs);
+        assert_eq!(r.per_class.len(), 2);
+        assert_eq!(r.per_class[0].class, 0);
+        assert_eq!(r.per_class[1].class, 2);
+        assert_eq!(r.per_class[0].n + r.per_class[1].n, r.n);
+        assert!((r.per_class[0].ttft.p50 - 0.1).abs() < 1e-9);
+        assert!((r.per_class[1].ttft.p50 - 0.9).abs() < 1e-9);
     }
 
     #[test]

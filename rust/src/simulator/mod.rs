@@ -2,6 +2,28 @@
 //! simulation of request arrival, batching and departure under the two
 //! architectures.
 //!
+//! # The workload plane
+//!
+//! Simulation input is a [`crate::config::Workload`] — an arrival process ×
+//! a weighted multi-class request mix — plus a *rate scale*, not a bare
+//! `(scenario, rate)` pair:
+//!
+//! * the [`crate::config::ArrivalProcess`] decides *when* requests arrive
+//!   (Poisson, bursty Gamma-renewal, deterministic, or replay of a recorded
+//!   [`trace`]),
+//! * the class mix decides *what* arrives (each class has its own
+//!   input/generation length distributions and weight), and
+//! * the scale factor multiplies the workload's base rate — it is the λ
+//!   that Algorithm 8 bisects over, which is why goodput search works
+//!   unchanged for any arrival process.
+//!
+//! [`generate_workload`] materializes this into a concrete request vector,
+//! deterministically in the seed; [`Request`] carries its class tag through
+//! the engines so [`SimReport`] can break TTFT/TPOT percentiles down per
+//! class ([`metrics::ClassStats`]). The paper's OP1–OP4 settings are
+//! single-class Poisson presets and generate byte-identical workloads to
+//! the pre-workload-plane code.
+//!
 //! # Architecture: one core, many policies
 //!
 //! All engines share a single discrete-event substrate, [`core`]: the
@@ -24,7 +46,8 @@
 //! To add a new architecture (chunked prefill, dynamic PD reallocation, …),
 //! write a new policy implementing [`core::EventDriven`] from the [`core`]
 //! parts and dispatch to it from [`simulate`] — no new clock, queue or
-//! instance bookkeeping code.
+//! instance bookkeeping code. To add a new *arrival process*, extend
+//! `config::ArrivalProcess` instead — see the recipe in ROADMAP.md.
 
 pub mod colloc;
 pub mod core;
@@ -41,28 +64,29 @@ pub mod testutil;
 pub use colloc::CollocSimulator;
 pub use decode::{DecodeItem, DecodeOutcome, DecodeStage};
 pub use disagg::DisaggSimulator;
-pub use metrics::{RequestOutcome, SimReport};
+pub use metrics::{ClassStats, RequestOutcome, SimReport};
 pub use params::{SimParams, SpanMode};
 pub use prefill::PrefillStage;
 pub use request::{generate_workload, Request};
 pub use trace::{load_trace, save_trace};
 
-use crate::config::{Architecture, Platform, Scenario, Strategy};
+use crate::config::{Architecture, Platform, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 
-/// Simulate one strategy at one arrival rate — the `SIMULATE(λ)` call of
-/// Algorithm 9. Dispatches on the architecture; the latency model must have
-/// been built for `strategy.tp`.
+/// Simulate one strategy at one rate scale — the `SIMULATE(λ)` call of
+/// Algorithm 9, generalized to any workload: the effective arrival rate is
+/// `workload.base_rate * scale`. Dispatches on the architecture; the
+/// latency model must have been built for `strategy.tp`.
 pub fn simulate(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
-    rate: f64,
+    workload: &Workload,
+    scale: f64,
     params: SimParams,
 ) -> Result<SimReport> {
-    let reqs = generate_workload(scenario, rate, params.seed);
+    let reqs = generate_workload(workload, scale, params.seed)?;
     match strategy.arch {
         Architecture::Collocation { .. } => {
             Ok(CollocSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
@@ -79,8 +103,8 @@ pub fn simulate_averaged(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
-    rate: f64,
+    workload: &Workload,
+    scale: f64,
     params: SimParams,
     repeats: usize,
 ) -> Result<(f64, f64)> {
@@ -92,7 +116,7 @@ pub fn simulate_averaged(
             seed: params.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B97F4A7C15),
             ..params
         };
-        let rep = simulate(model, platform, strategy, scenario, rate, p)?;
+        let rep = simulate(model, platform, strategy, workload, scale, p)?;
         ttft_sum += rep.ttft.p90;
         tpot_sum += rep.tpot.p90;
     }
@@ -102,18 +126,19 @@ pub fn simulate_averaged(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{ArrivalProcess, LengthDist, RequestClass, Scenario};
     use crate::simulator::testutil::ConstModel;
 
     #[test]
     fn simulate_dispatches_on_architecture() {
         let m = ConstModel { prefill: 0.1, step: 0.001 };
         let p = Platform::paper_testbed();
-        let sc = Scenario::fixed("t", 256, 16, 100);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 100));
         let colloc = simulate(
             &m,
             &p,
             &Strategy::collocation(2, 4),
-            &sc,
+            &w,
             1.0,
             SimParams::default(),
         )
@@ -122,7 +147,7 @@ mod tests {
             &m,
             &p,
             &Strategy::disaggregation(1, 1, 4),
-            &sc,
+            &w,
             1.0,
             SimParams::default(),
         )
@@ -135,7 +160,7 @@ mod tests {
     fn averaged_reduces_variance() {
         let m = ConstModel { prefill: 0.2, step: 0.001 };
         let p = Platform::paper_testbed();
-        let sc = Scenario::fixed("t", 256, 16, 200);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 200));
         let st = Strategy::disaggregation(1, 1, 4);
         // Collect one-shot P90 TTFTs across seeds vs 3-run averages.
         let singles: Vec<f64> = (0..8)
@@ -144,7 +169,7 @@ mod tests {
                     &m,
                     &p,
                     &st,
-                    &sc,
+                    &w,
                     3.0,
                     SimParams { seed: 1000 + k, ..SimParams::default() },
                 )
@@ -159,7 +184,7 @@ mod tests {
                     &m,
                     &p,
                     &st,
-                    &sc,
+                    &w,
                     3.0,
                     SimParams { seed: 2000 + k, ..SimParams::default() },
                     3,
@@ -174,6 +199,52 @@ mod tests {
             "averaged {} vs single {}",
             var(&averaged),
             var(&singles)
+        );
+    }
+
+    #[test]
+    fn multi_class_simulation_reports_per_class_percentiles() {
+        // Two classes with very different prompt lengths: the per-class
+        // breakdown must separate their TTFTs in both engines.
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let mk = |name: &str, weight: f64, s: u64, g: u64| RequestClass {
+            name: name.into(),
+            weight,
+            input_len: LengthDist::Fixed(s),
+            gen_len: LengthDist::Fixed(g),
+        };
+        let w = Workload {
+            name: "mix".into(),
+            arrival: ArrivalProcess::Poisson,
+            classes: vec![mk("short", 0.6, 128, 8), mk("long", 0.4, 4096, 64)],
+            base_rate: 1.0,
+            n_requests: 400,
+        };
+        for st in [Strategy::collocation(2, 4), Strategy::disaggregation(1, 1, 4)] {
+            let rep = simulate(&m, &p, &st, &w, 1.0, SimParams::default()).unwrap();
+            assert_eq!(rep.per_class.len(), 2, "{st}");
+            assert_eq!(rep.per_class[0].n + rep.per_class[1].n, rep.n);
+            assert!(rep.per_class.iter().all(|c| c.ttft.p90.is_finite()));
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_degrade_tail_latency() {
+        // Same mean rate, CV 4 vs Poisson: burstiness must hurt the TTFT
+        // tail — the whole point of modelling non-Poisson arrivals.
+        let m = ConstModel { prefill: 0.25, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let st = Strategy::disaggregation(1, 1, 4);
+        let base = Workload::poisson(&Scenario::fixed("t", 512, 16, 1500));
+        let bursty = base.clone().with_burstiness(4.0);
+        let smooth = simulate(&m, &p, &st, &base, 3.0, SimParams::default()).unwrap();
+        let spiky = simulate(&m, &p, &st, &bursty, 3.0, SimParams::default()).unwrap();
+        assert!(
+            spiky.ttft.p99 > smooth.ttft.p99,
+            "bursty P99 {} vs poisson {}",
+            spiky.ttft.p99,
+            smooth.ttft.p99
         );
     }
 }

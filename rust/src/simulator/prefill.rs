@@ -104,7 +104,7 @@ mod tests {
         arrivals
             .iter()
             .enumerate()
-            .map(|(id, &arrival)| Request { id, arrival, input_len: s, gen_len: 1 })
+            .map(|(id, &arrival)| Request { id, arrival, input_len: s, gen_len: 1, class: 0 })
             .collect()
     }
 

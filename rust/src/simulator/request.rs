@@ -1,8 +1,10 @@
-//! Requests and workload generation: Poisson arrivals (§4.1 "arrival times
-//! sampled from a Poisson process") with per-request input/generation
-//! lengths drawn from the scenario's distributions.
+//! Requests and workload generation: arrival times sampled from the
+//! workload's [`ArrivalProcess`] (the paper's §4.1 Poisson setting is the
+//! preset), per-request class drawn from the weighted mix, and input /
+//! generation lengths from the chosen class's distributions.
 
-use crate::config::Scenario;
+use crate::config::{ArrivalProcess, Workload};
+use crate::error::Result;
 use crate::util::rng::Rng;
 
 /// One inference request.
@@ -15,50 +17,128 @@ pub struct Request {
     pub input_len: u32,
     /// Generation length `s_+`.
     pub gen_len: u32,
+    /// Index into the workload's class mix (0 for single-class workloads).
+    pub class: u16,
 }
 
-/// Generate `scenario.n_requests` requests with Poisson-process arrivals at
-/// `rate` requests/second. Deterministic in `seed`.
-pub fn generate_workload(scenario: &Scenario, rate: f64, seed: u64) -> Vec<Request> {
-    assert!(rate > 0.0, "arrival rate must be positive");
+/// Generate `workload.n_requests` requests at `scale` times the workload's
+/// base rate. Deterministic in `seed`; for single-class Poisson workloads
+/// the RNG consumption order is identical to the historical
+/// `(scenario, rate)` generator, so preset outputs are unchanged.
+pub fn generate_workload(workload: &Workload, scale: f64, seed: u64) -> Result<Vec<Request>> {
+    assert!(scale > 0.0, "rate scale must be positive");
+    let rate = workload.base_rate * scale;
+    let n = workload.n_requests;
     let mut rng = Rng::new(seed);
-    let arrivals = rng.poisson_arrivals(rate, scenario.n_requests);
-    arrivals
+    let arrivals = match &workload.arrival {
+        ArrivalProcess::Replay { path } => replay_arrivals(path, rate, n)?,
+        synthetic => synthetic.sample(rate, n, &mut rng),
+    };
+    let cum = workload.cumulative_weights();
+    let total = *cum.last().expect("validated workloads have classes");
+    let reqs = arrivals
         .into_iter()
         .enumerate()
-        .map(|(id, arrival)| Request {
-            id,
-            arrival,
-            input_len: scenario.input_len.sample(&mut rng).max(1) as u32,
-            gen_len: scenario.gen_len.sample(&mut rng).max(1) as u32,
+        .map(|(id, arrival)| {
+            // Single-class workloads skip the class draw entirely — this
+            // keeps the RNG stream bit-identical to the pre-workload-plane
+            // generator for the OP1–OP4 presets.
+            let class = if cum.len() == 1 {
+                0
+            } else {
+                let x = rng.f64() * total;
+                cum.iter().position(|&c| x < c).unwrap_or(cum.len() - 1)
+            };
+            let c = &workload.classes[class];
+            Request {
+                id,
+                arrival,
+                input_len: c.input_len.sample(&mut rng).max(1) as u32,
+                gen_len: c.gen_len.sample(&mut rng).max(1) as u32,
+                class: class as u16,
+            }
         })
-        .collect()
+        .collect();
+    Ok(reqs)
+}
+
+/// Materialize `n` arrival timestamps by replaying a recorded trace:
+/// normalize the trace to its native rate, then rescale time so the
+/// effective rate is `rate` while the arrival *shape* (bursts, lulls) is
+/// preserved. Cycles the trace when `n` exceeds its length.
+///
+/// The parsed timestamps are memoized per path for the life of the
+/// process: `generate_workload` sits inside the goodput-bisection hot loop
+/// (every `FEASIBLE(λ)` probe of every strategy regenerates the workload),
+/// and the trace file is immutable for the duration of a sweep — without
+/// the cache a replay workload would re-read, re-parse and re-sort the
+/// same CSV thousands of times per `optimize` run.
+fn replay_arrivals(path: &str, rate: f64, n: usize) -> Result<Vec<f64>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    use std::time::SystemTime;
+    type Key = (String, u64, Option<SystemTime>);
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Vec<f64>>>>> = OnceLock::new();
+    // Keying on (path, len, mtime) keeps the hot-loop win while staying
+    // correct when a trace file is rewritten in place mid-process.
+    let meta = std::fs::metadata(path).map_err(|e| {
+        crate::error::Error::config(format!("cannot read trace '{path}': {e}"))
+    })?;
+    let key: Key = (path.to_string(), meta.len(), meta.modified().ok());
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let cached = cache.lock().unwrap().get(&key).cloned();
+    let ts: Arc<Vec<f64>> = match cached {
+        Some(ts) => ts,
+        None => {
+            let trace = super::trace::load_trace(path)?;
+            let ts = Arc::new(trace.iter().map(|r| r.arrival).collect::<Vec<f64>>());
+            cache.lock().unwrap().insert(key, ts.clone());
+            ts
+        }
+    };
+    let horizon = *ts.last().expect("load_trace rejects empty traces");
+    // Native rate of the trace; degenerate single-instant traces fall back
+    // to a unit gap so the cycle offset stays positive.
+    let native_gap = if horizon > 0.0 { horizon / ts.len() as f64 } else { 1.0 };
+    let time_scale = 1.0 / (native_gap * rate); // trace seconds -> sim seconds
+    let cycle_span = horizon + native_gap; // gap between trace repetitions
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let cycle = (k / ts.len()) as f64;
+        out.push((ts[k % ts.len()] + cycle * cycle_span) * time_scale);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::LengthDist;
+    use crate::config::{LengthDist, RequestClass, Scenario};
+
+    fn wl(scenario: &Scenario) -> Workload {
+        Workload::poisson(scenario)
+    }
 
     #[test]
     fn deterministic_in_seed() {
-        let sc = Scenario::op2();
-        let a = generate_workload(&sc, 3.5, 42);
-        let b = generate_workload(&sc, 3.5, 42);
+        let w = wl(&Scenario::op2());
+        let a = generate_workload(&w, 3.5, 42).unwrap();
+        let b = generate_workload(&w, 3.5, 42).unwrap();
         assert_eq!(a, b);
-        let c = generate_workload(&sc, 3.5, 43);
+        let c = generate_workload(&w, 3.5, 43).unwrap();
         assert_ne!(a, c);
     }
 
     #[test]
     fn arrivals_sorted_rate_ok() {
-        let sc = Scenario::fixed("x", 128, 16, 20_000);
-        let w = generate_workload(&sc, 5.0, 7);
-        assert_eq!(w.len(), 20_000);
-        assert!(w.windows(2).all(|p| p[0].arrival <= p[1].arrival));
-        let rate = w.len() as f64 / w.last().unwrap().arrival;
+        let w = wl(&Scenario::fixed("x", 128, 16, 20_000));
+        let reqs = generate_workload(&w, 5.0, 7).unwrap();
+        assert_eq!(reqs.len(), 20_000);
+        assert!(reqs.windows(2).all(|p| p[0].arrival <= p[1].arrival));
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
         assert!((rate - 5.0).abs() < 0.2, "rate {rate}");
-        assert!(w.iter().all(|r| r.input_len == 128 && r.gen_len == 16));
+        assert!(reqs.iter().all(|r| r.input_len == 128 && r.gen_len == 16));
+        assert!(reqs.iter().all(|r| r.class == 0));
     }
 
     #[test]
@@ -69,10 +149,139 @@ mod tests {
             gen_len: LengthDist::Uniform { lo: 10, hi: 20 },
             n_requests: 1000,
         };
-        let w = generate_workload(&sc, 1.0, 3);
-        assert!(w.iter().all(|r| (100..=200).contains(&r.input_len)));
-        assert!(w.iter().all(|r| (10..=20).contains(&r.gen_len)));
+        let reqs = generate_workload(&wl(&sc), 1.0, 3).unwrap();
+        assert!(reqs.iter().all(|r| (100..=200).contains(&r.input_len)));
+        assert!(reqs.iter().all(|r| (10..=20).contains(&r.gen_len)));
         // Not all identical.
-        assert!(w.iter().any(|r| r.input_len != w[0].input_len));
+        assert!(reqs.iter().any(|r| r.input_len != reqs[0].input_len));
+    }
+
+    #[test]
+    fn single_class_poisson_matches_legacy_generator() {
+        // The historical generator: poisson_arrivals then input/gen samples
+        // per request, one Rng seeded directly. Byte-compat contract.
+        let sc = Scenario {
+            name: "legacy".into(),
+            input_len: LengthDist::Uniform { lo: 64, hi: 512 },
+            gen_len: LengthDist::LogNormal { mu: 4.0, sigma: 0.5, cap: 256 },
+            n_requests: 500,
+        };
+        let mut rng = Rng::new(99);
+        let arrivals = rng.poisson_arrivals(2.5, sc.n_requests);
+        let legacy: Vec<Request> = arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(id, arrival)| Request {
+                id,
+                arrival,
+                input_len: sc.input_len.sample(&mut rng).max(1) as u32,
+                gen_len: sc.gen_len.sample(&mut rng).max(1) as u32,
+                class: 0,
+            })
+            .collect();
+        let new = generate_workload(&wl(&sc), 2.5, 99).unwrap();
+        assert_eq!(legacy, new);
+    }
+
+    #[test]
+    fn base_rate_scales_effective_rate() {
+        let w = Workload { base_rate: 2.0, ..wl(&Scenario::fixed("b", 64, 8, 10_000)) };
+        let reqs = generate_workload(&w, 3.0, 5).unwrap();
+        // Effective rate = base_rate * scale = 6 req/s.
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        assert!((rate - 6.0).abs() < 0.3, "rate {rate}");
+    }
+
+    #[test]
+    fn class_mix_proportions_converge_to_weights() {
+        let mk = |name: &str, weight: f64, s: u64, g: u64| RequestClass {
+            name: name.into(),
+            weight,
+            input_len: LengthDist::Fixed(s),
+            gen_len: LengthDist::Fixed(g),
+        };
+        let w = Workload {
+            name: "mix".into(),
+            arrival: crate::config::ArrivalProcess::Poisson,
+            classes: vec![
+                mk("chat", 0.7, 512, 128),
+                mk("summarization", 0.2, 4096, 64),
+                mk("codegen", 0.1, 1024, 512),
+            ],
+            base_rate: 1.0,
+            n_requests: 20_000,
+        };
+        let reqs = generate_workload(&w, 2.0, 13).unwrap();
+        let mut counts = [0usize; 3];
+        for r in &reqs {
+            counts[r.class as usize] += 1;
+            // Lengths must match the tagged class.
+            let c = &w.classes[r.class as usize];
+            assert_eq!(r.input_len as u64, c.input_len.mean() as u64);
+        }
+        let n = reqs.len() as f64;
+        for (i, &target) in [0.7, 0.2, 0.1].iter().enumerate() {
+            let frac = counts[i] as f64 / n;
+            assert!(
+                (frac - target).abs() < 0.02,
+                "class {i}: fraction {frac} vs weight {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_arrival_process_preserves_shape() {
+        // Save a bursty trace, replay it at a different rate: gaps are a
+        // uniform rescale of the original (shape preserved), and the
+        // effective rate matches the request.
+        let dir = std::env::temp_dir().join("bestserve_replay_shape.csv");
+        let w = wl(&Scenario::fixed("r", 64, 8, 200)).with_burstiness(2.0);
+        let orig = generate_workload(&w, 1.0, 21).unwrap();
+        super::super::trace::save_trace(&orig, &dir).unwrap();
+
+        let replayed = Workload {
+            arrival: crate::config::ArrivalProcess::Replay {
+                path: dir.to_str().unwrap().to_string(),
+            },
+            ..wl(&Scenario::fixed("r", 64, 8, 200))
+        };
+        let reqs = generate_workload(&replayed, 4.0, 5).unwrap();
+        assert_eq!(reqs.len(), 200);
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        assert!((rate - 4.0).abs() < 0.4, "rate {rate}");
+        // Shape: ratios of consecutive arrival times match the trace's.
+        let k = orig[10].arrival / orig[50].arrival;
+        let k2 = reqs[10].arrival / reqs[50].arrival;
+        assert!((k - k2).abs() < 1e-9, "{k} vs {k2}");
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn replay_cycles_short_traces() {
+        let dir = std::env::temp_dir().join("bestserve_replay_cycle.csv");
+        let w = wl(&Scenario::fixed("c", 64, 8, 50));
+        let orig = generate_workload(&w, 2.0, 3).unwrap();
+        super::super::trace::save_trace(&orig, &dir).unwrap();
+        let replayed = Workload {
+            arrival: crate::config::ArrivalProcess::Replay {
+                path: dir.to_str().unwrap().to_string(),
+            },
+            ..wl(&Scenario::fixed("c", 64, 8, 500))
+        };
+        let reqs = generate_workload(&replayed, 2.0, 5).unwrap();
+        assert_eq!(reqs.len(), 500);
+        assert!(reqs.windows(2).all(|p| p[0].arrival < p[1].arrival + 1e-12));
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn replay_missing_file_is_clean_error() {
+        let w = Workload {
+            arrival: crate::config::ArrivalProcess::Replay {
+                path: "/nonexistent/trace.csv".into(),
+            },
+            ..wl(&Scenario::fixed("m", 64, 8, 10))
+        };
+        assert!(generate_workload(&w, 1.0, 1).is_err());
     }
 }

@@ -1,8 +1,10 @@
 //! Workload trace I/O: persist generated workloads and replay external
-//! traces (CSV: `id,arrival_s,input_len,gen_len`). This is how real request
-//! logs (e.g. production arrival timestamps, the paper's "patterns of
-//! requests") are fed to the Simulator/Testbed instead of synthetic Poisson
-//! traffic.
+//! traces (CSV: `id,arrival_s,input_len,gen_len[,class]`; the class column
+//! is optional and defaults to 0). This is how real request logs (e.g.
+//! production arrival timestamps, the paper's "patterns of requests") are
+//! fed to the Simulator/Testbed instead of synthetic traffic — either
+//! verbatim (`--trace`) or as the arrival shape behind a class mix
+//! (`ArrivalProcess::Replay`).
 
 use std::path::Path;
 
@@ -11,15 +13,17 @@ use crate::util::csv::Csv;
 
 use super::request::Request;
 
-/// Save a workload as a replayable CSV trace.
+/// Save a workload as a replayable CSV trace (including each request's
+/// class tag, so multi-class mixes replay with their per-class breakdowns).
 pub fn save_trace<P: AsRef<Path>>(reqs: &[Request], path: P) -> Result<()> {
-    let mut c = Csv::new(&["id", "arrival_s", "input_len", "gen_len"]);
+    let mut c = Csv::new(&["id", "arrival_s", "input_len", "gen_len", "class"]);
     for r in reqs {
         c.row(&[
             r.id.to_string(),
             format!("{}", r.arrival),
             r.input_len.to_string(),
             r.gen_len.to_string(),
+            r.class.to_string(),
         ]);
     }
     c.save(path)?;
@@ -43,13 +47,16 @@ pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<Request>> {
             .ok_or_else(|| Error::config(format!("trace missing column '{name}'")))
     };
     let (ci_arr, ci_in, ci_gen) = (col("arrival_s")?, col("input_len")?, col("gen_len")?);
+    // Class column is optional: traces predating the workload plane (or
+    // external request logs) default every request to class 0.
+    let ci_class = cols.iter().position(|c| *c == "class");
     let mut reqs = Vec::new();
     for (lineno, line) in lines.enumerate() {
         if line.trim().is_empty() {
             continue;
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        let need = ci_arr.max(ci_in).max(ci_gen);
+        let need = ci_arr.max(ci_in).max(ci_gen).max(ci_class.unwrap_or(0));
         if fields.len() <= need {
             return Err(Error::config(format!(
                 "trace line {}: expected {} columns, got {}",
@@ -65,13 +72,17 @@ pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<Request>> {
         let arrival = parse_f(fields[ci_arr], "arrival_s")?;
         let input_len = parse_f(fields[ci_in], "input_len")? as u32;
         let gen_len = parse_f(fields[ci_gen], "gen_len")? as u32;
+        let class = match ci_class {
+            Some(ci) => parse_f(fields[ci], "class")? as u16,
+            None => 0,
+        };
         if arrival < 0.0 || input_len == 0 || gen_len == 0 {
             return Err(Error::config(format!(
                 "trace line {}: arrival must be >= 0 and lengths >= 1",
                 lineno + 2
             )));
         }
-        reqs.push(Request { id: 0, arrival, input_len, gen_len });
+        reqs.push(Request { id: 0, arrival, input_len, gen_len, class });
     }
     if reqs.is_empty() {
         return Err(Error::config("trace contains no requests"));
@@ -86,7 +97,7 @@ pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<Request>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Scenario;
+    use crate::config::{LengthDist, RequestClass, Scenario, Workload};
     use crate::simulator::request::generate_workload;
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -95,7 +106,8 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_workload() {
-        let reqs = generate_workload(&Scenario::fixed("t", 512, 32, 200), 3.0, 17);
+        let w = Workload::poisson(&Scenario::fixed("t", 512, 32, 200));
+        let reqs = generate_workload(&w, 3.0, 17).unwrap();
         let p = tmp("roundtrip");
         save_trace(&reqs, &p).unwrap();
         let back = load_trace(&p).unwrap();
@@ -104,7 +116,43 @@ mod tests {
             assert!((a.arrival - b.arrival).abs() < 1e-9);
             assert_eq!(a.input_len, b.input_len);
             assert_eq!(a.gen_len, b.gen_len);
+            assert_eq!(a.class, b.class);
         }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_preserves_class_tags() {
+        let mk = |name: &str, weight: f64, s: u64| RequestClass {
+            name: name.into(),
+            weight,
+            input_len: LengthDist::Fixed(s),
+            gen_len: LengthDist::Fixed(16),
+        };
+        let w = Workload {
+            name: "mix".into(),
+            arrival: crate::config::ArrivalProcess::Poisson,
+            classes: vec![mk("a", 0.5, 128), mk("b", 0.5, 1024)],
+            base_rate: 1.0,
+            n_requests: 300,
+        };
+        let reqs = generate_workload(&w, 2.0, 23).unwrap();
+        assert!(reqs.iter().any(|r| r.class == 1), "mix produced one class only");
+        let p = tmp("classes");
+        save_trace(&reqs, &p).unwrap();
+        let back = load_trace(&p).unwrap();
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.class, b.class);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn classless_trace_defaults_to_class_zero() {
+        let p = tmp("no_class_col");
+        std::fs::write(&p, "id,arrival_s,input_len,gen_len\n0,1.0,100,10\n").unwrap();
+        let reqs = load_trace(&p).unwrap();
+        assert_eq!(reqs[0].class, 0);
         std::fs::remove_file(&p).ok();
     }
 

@@ -128,6 +128,7 @@ impl<'a> Testbed<'a> {
                     decode_start: o.first_token,
                     completion: o.completion,
                     gen_len: r.gen_len,
+                    class: r.class,
                 });
             }
         }
@@ -209,6 +210,7 @@ impl<'a> Testbed<'a> {
                     decode_start: decode_ready[o.req],
                     completion: o.completion,
                     gen_len: r.gen_len,
+                    class: r.class,
                 });
             }
         }
@@ -221,7 +223,7 @@ impl<'a> Testbed<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Scenario;
+    use crate::config::{Scenario, Workload};
     use crate::simulator::generate_workload;
     use crate::simulator::testutil::ConstModel;
 
@@ -239,7 +241,7 @@ mod tests {
             Strategy::collocation(3, 1),
             TestbedConfig::default(),
         );
-        let reqs = generate_workload(&Scenario::fixed("t", 256, 16, 500), 8.0, 11);
+        let reqs = generate_workload(&Workload::poisson(&Scenario::fixed("t", 256, 16, 500)), 8.0, 11).unwrap();
         let rep = tb.run(&reqs).unwrap().report;
         assert_eq!(rep.n, 500);
         assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
@@ -255,7 +257,7 @@ mod tests {
             Strategy::disaggregation(2, 2, 1),
             TestbedConfig::default(),
         );
-        let reqs = generate_workload(&Scenario::fixed("t", 256, 16, 400), 8.0, 12);
+        let reqs = generate_workload(&Workload::poisson(&Scenario::fixed("t", 256, 16, 400)), 8.0, 12).unwrap();
         let out = tb.run(&reqs).unwrap();
         assert_eq!(out.report.n, 400);
         // Prefill + decode engines all report stats.
@@ -275,7 +277,7 @@ mod tests {
             Strategy::collocation(1, 1),
             TestbedConfig::default(),
         );
-        let reqs = generate_workload(&Scenario::fixed("t", 128, 10, 40), 0.05, 13);
+        let reqs = generate_workload(&Workload::poisson(&Scenario::fixed("t", 128, 10, 40)), 0.05, 13).unwrap();
         let rep = tb.run(&reqs).unwrap().report;
         // No contention: TTFT == prefill time, TPOT == step time.
         assert!((rep.ttft.p50 - 0.2).abs() < 1e-6, "{}", rep.ttft.p50);
@@ -315,7 +317,7 @@ mod tests {
                 ..TestbedConfig::default()
             },
         );
-        let reqs = generate_workload(&Scenario::fixed("t", 200, 100, 60), 2.0, 14);
+        let reqs = generate_workload(&Workload::poisson(&Scenario::fixed("t", 200, 100, 60)), 2.0, 14).unwrap();
         let out = tb.run(&reqs).unwrap();
         assert_eq!(out.report.n, 60);
     }

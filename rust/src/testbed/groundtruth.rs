@@ -3,7 +3,7 @@
 //! the P90 SLOs, report the highest feasible rate. This is what Figure 11's
 //! gray "ground truth" bars are in the paper.
 
-use crate::config::{Platform, Scenario, Slo, Strategy};
+use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 use crate::simulator::generate_workload;
@@ -32,18 +32,19 @@ impl Default for GroundTruthConfig {
     }
 }
 
-/// Is `rate` feasible on the token-level testbed?
+/// Is rate scale `scale` feasible on the token-level testbed?
+#[allow(clippy::too_many_arguments)]
 pub fn testbed_feasible(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     cfg: &GroundTruthConfig,
-    rate: f64,
+    scale: f64,
     seed: u64,
 ) -> Result<bool> {
-    let reqs = generate_workload(scenario, rate, seed);
+    let reqs = generate_workload(workload, scale, seed)?;
     let tb = Testbed::new(model, platform, strategy.clone(), cfg.testbed);
     let rep = tb.run(&reqs)?.report;
     Ok(slo.feasible(rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile)))
@@ -56,13 +57,13 @@ pub fn testbed_goodput(
     model: &dyn LatencyModel,
     platform: &Platform,
     strategy: &Strategy,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     cfg: &GroundTruthConfig,
     seed: u64,
 ) -> Result<f64> {
-    let s = scenario.mean_input().round() as u32;
-    let s_plus = scenario.mean_gen().round().max(1.0) as u32;
+    let s = workload.mean_input().round() as u32;
+    let s_plus = workload.mean_gen().round().max(1.0) as u32;
     let t_min = model.prefill_time(1, s) + model.decode_span_exact(1, s, s_plus);
     let capacity = match strategy.arch {
         crate::config::Architecture::Collocation { m } => {
@@ -72,23 +73,24 @@ pub fn testbed_goodput(
             * strategy.bmax_prefill as f64)
             .max(d as f64 * strategy.bmax_decode as f64),
     };
-    let mut lo = cfg.lambda_min;
-    let mut hi = cfg.upper_factor * capacity / t_min;
-    if !testbed_feasible(model, platform, strategy, scenario, slo, cfg, lo, seed)? {
+    // Bisect in scale units: rate bounds divided by the base rate.
+    let mut lo = cfg.lambda_min / workload.base_rate;
+    let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
+    if !testbed_feasible(model, platform, strategy, workload, slo, cfg, lo, seed)? {
         return Ok(0.0);
     }
-    if testbed_feasible(model, platform, strategy, scenario, slo, cfg, hi, seed)? {
-        return Ok(hi);
+    if testbed_feasible(model, platform, strategy, workload, slo, cfg, hi, seed)? {
+        return Ok(hi * workload.base_rate);
     }
-    while hi - lo > cfg.tolerance {
+    while hi - lo > cfg.tolerance / workload.base_rate {
         let mid = 0.5 * (lo + hi);
-        if testbed_feasible(model, platform, strategy, scenario, slo, cfg, mid, seed)? {
+        if testbed_feasible(model, platform, strategy, workload, slo, cfg, mid, seed)? {
             lo = mid;
         } else {
             hi = mid;
         }
     }
-    Ok(lo)
+    Ok(lo * workload.base_rate)
 }
 
 #[cfg(test)]
@@ -104,12 +106,12 @@ mod tests {
         let platform = Platform::paper_testbed();
         let mut st = Strategy::disaggregation(1, 1, 1);
         st.bmax_prefill = 1;
-        let sc = Scenario::fixed("t", 256, 8, 1500);
+        let w = Workload::poisson(&crate::config::Scenario::fixed("t", 256, 8, 1500));
         let g = testbed_goodput(
             &m,
             &platform,
             &st,
-            &sc,
+            &w,
             &Slo::paper_default(),
             &GroundTruthConfig::default(),
             21,
@@ -123,12 +125,12 @@ mod tests {
         let m = ConstModel { prefill: 0.01, step: 0.5 }; // TPOT hopeless
         let platform = Platform::paper_testbed();
         let st = Strategy::collocation(1, 1);
-        let sc = Scenario::fixed("t", 64, 8, 200);
+        let w = Workload::poisson(&crate::config::Scenario::fixed("t", 64, 8, 200));
         let g = testbed_goodput(
             &m,
             &platform,
             &st,
-            &sc,
+            &w,
             &Slo::paper_default(),
             &GroundTruthConfig::default(),
             22,

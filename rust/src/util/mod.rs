@@ -5,6 +5,7 @@
 
 pub mod csv;
 pub mod json;
+pub mod parallel;
 pub mod quickcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,88 @@
+//! Deterministic scoped-thread fan-out — the one parallel scaffold shared
+//! by the optimizer sweep and the validation run (and any future
+//! embarrassingly-parallel per-item stage).
+
+use crate::error::Result;
+
+/// Map `eval` over `items` across up to `threads` scoped workers,
+/// returning results in item order.
+///
+/// Deterministic by construction: workers take strided slices of the index
+/// space, every result is scattered back to its item's slot, and the output
+/// order is the input order — so `threads = 1` and `threads = N` produce
+/// identical vectors whenever `eval` itself is deterministic. The first
+/// `Err` (in item order) is returned; a panicking worker propagates the
+/// panic.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    eval: impl Fn(&T) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads == 1 {
+        return items.iter().map(&eval).collect();
+    }
+    let mut results: Vec<Option<Result<R>>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for worker in 0..threads {
+            let eval = &eval;
+            handles.push(scope.spawn(move || {
+                items
+                    .iter()
+                    .enumerate()
+                    .skip(worker)
+                    .step_by(threads)
+                    .map(|(i, item)| (i, eval(item)))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for handle in handles {
+            for (i, r) in handle.join().expect("parallel_map worker panicked") {
+                results[i] = Some(r);
+            }
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("every item slot is filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn preserves_item_order_for_any_thread_count() {
+        let items: Vec<u64> = (0..37).collect();
+        let serial = parallel_map(&items, 1, |&x| Ok(x * x)).unwrap();
+        for threads in [2, 3, 8, 64] {
+            let par = parallel_map(&items, threads, |&x| Ok(x * x)).unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
+        assert_eq!(serial[6], 36);
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let none: Vec<u32> = vec![];
+        assert_eq!(parallel_map(&none, 8, |&x| Ok(x)).unwrap(), Vec::<u32>::new());
+        assert_eq!(parallel_map(&[7u32], 8, |&x| Ok(x + 1)).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn first_error_in_item_order_wins() {
+        let items: Vec<u32> = (0..20).collect();
+        let err = parallel_map(&items, 4, |&x| {
+            if x >= 3 {
+                Err(Error::config(format!("boom {x}")))
+            } else {
+                Ok(x)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom 3"), "{err}");
+    }
+}

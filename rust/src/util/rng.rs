@@ -137,6 +137,33 @@ impl Rng {
         out
     }
 
+    /// Gamma(shape, scale) via Marsaglia–Tsang squeeze (2000), with the
+    /// standard `U^{1/shape}` boost for shape < 1. Used by the bursty
+    /// (Gamma-renewal) arrival process: shape k < 1 gives inter-arrival
+    /// CV = 1/sqrt(k) > 1, i.e. clustered, bursty traffic.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) =d Gamma(a+1) * U^(1/a).
+            let u = 1.0 - self.f64(); // (0, 1]: ln/powf stay finite
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = 1.0 - self.f64(); // (0, 1]
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3 * scale;
+            }
+        }
+    }
+
     /// Poisson-distributed count with mean `mu` (Knuth for small mu,
     /// normal approximation above 64 — adequate for workload generation).
     pub fn poisson_count(&mut self, mu: f64) -> u64 {
@@ -256,6 +283,23 @@ mod tests {
             let sum: u64 = (0..n).map(|_| r.poisson_count(mu)).sum();
             let mean = sum as f64 / n as f64;
             assert!((mean - mu).abs() / mu.max(1.0) < 0.05, "mu={mu} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(29);
+        // (shape, scale): mean = k·θ, var = k·θ².
+        for &(k, theta) in &[(0.25, 4.0), (1.0, 1.0), (4.0, 0.5), (9.3, 2.0)] {
+            let n = 100_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(k, theta)).collect();
+            assert!(xs.iter().all(|&x| x > 0.0 && x.is_finite()));
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            let (m0, v0) = (k * theta, k * theta * theta);
+            assert!((mean - m0).abs() / m0 < 0.05, "k={k} mean {mean} vs {m0}");
+            assert!((var - v0).abs() / v0 < 0.15, "k={k} var {var} vs {v0}");
         }
     }
 

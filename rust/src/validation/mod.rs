@@ -2,8 +2,15 @@
 //! for every strategy in the space, compare the Optimizer's goodput
 //! estimate with the token-level testbed's measured maximum feasible rate,
 //! reporting normalized goodputs and relative errors.
+//!
+//! Like the optimizer sweep, validation is embarrassingly parallel per
+//! strategy — prediction bisection and testbed ground truth are both
+//! deterministic in their seeds — so [`validate`] fans strategies across
+//! `std::thread::scope` workers, scatters results back by enumeration
+//! index, and sorts with the stable NaN-last ranking: reports are
+//! byte-identical for any thread count.
 
-use crate::config::{Platform, Scenario, Slo, StrategySpace};
+use crate::config::{Platform, Slo, StrategySpace, Workload};
 use crate::error::Result;
 use crate::optimizer::{find_goodput, GoodputConfig, ModelFactory};
 use crate::simulator::SimParams;
@@ -41,7 +48,8 @@ impl ValidationRow {
 
 #[derive(Debug, Clone)]
 pub struct ValidationReport {
-    pub scenario: String,
+    /// Name of the validated workload.
+    pub workload: String,
     /// Sorted descending by predicted normalized goodput (the paper sorts
     /// its histograms by the BestServe prediction).
     pub rows: Vec<ValidationRow>,
@@ -109,7 +117,7 @@ impl ValidationReport {
 
     pub fn to_csv(&self) -> Csv {
         let mut c = Csv::new(&[
-            "scenario",
+            "workload",
             "strategy",
             "cards",
             "predicted",
@@ -120,7 +128,7 @@ impl ValidationReport {
         ]);
         for r in &self.rows {
             c.row(&[
-                self.scenario.clone(),
+                self.workload.clone(),
                 r.strategy.clone(),
                 r.cards.to_string(),
                 format!("{}", r.predicted),
@@ -154,23 +162,40 @@ impl Default for ValidationConfig {
     }
 }
 
-/// Run the Figure 11 experiment for one scenario.
+/// Run the Figure 11 experiment for one workload, fanning the per-strategy
+/// (prediction, ground truth) pairs across `threads` scoped workers.
+///
+/// Deterministic by construction, exactly like `optimize_parallel`: each
+/// strategy's result depends only on the fixed seeds, results are written
+/// to their enumeration slot, and the final sort is stable NaN-last — so
+/// `threads = 1` and `threads = N` produce identical reports.
 pub fn validate(
     factory: &dyn ModelFactory,
     platform: &Platform,
     space: &StrategySpace,
-    scenario: &Scenario,
+    workload: &Workload,
     slo: &Slo,
     cfg: &ValidationConfig,
+    threads: usize,
 ) -> Result<ValidationReport> {
-    let mut rows = Vec::new();
-    for strategy in space.enumerate() {
-        let model = factory.model_for_tp(strategy.tp)?;
+    let strategies = space.enumerate();
+
+    // Pre-build the per-tp models serially; workers only share the Arcs.
+    let mut models: std::collections::HashMap<u32, std::sync::Arc<dyn crate::estimator::LatencyModel>> =
+        std::collections::HashMap::new();
+    for strategy in &strategies {
+        if !models.contains_key(&strategy.tp) {
+            models.insert(strategy.tp, factory.model_for_tp(strategy.tp)?);
+        }
+    }
+
+    let eval = |strategy: &crate::config::Strategy| -> Result<ValidationRow> {
+        let model = &models[&strategy.tp];
         let predicted = find_goodput(
             model.as_ref(),
             platform,
-            &strategy,
-            scenario,
+            strategy,
+            workload,
             slo,
             cfg.sim_params,
             &cfg.goodput,
@@ -178,24 +203,27 @@ pub fn validate(
         let measured = testbed_goodput(
             model.as_ref(),
             platform,
-            &strategy,
-            scenario,
+            strategy,
+            workload,
             slo,
             &cfg.ground_truth,
             cfg.seed,
         )?;
         let cards = strategy.total_cards();
-        rows.push(ValidationRow {
+        Ok(ValidationRow {
             strategy: strategy.to_string(),
             cards,
             predicted,
             measured,
             predicted_norm: predicted / cards as f64,
             measured_norm: measured / cards as f64,
-        });
-    }
+        })
+    };
+
+    let mut rows = crate::util::parallel::parallel_map(&strategies, threads, eval)?;
+
     rows.sort_by(|a, b| crate::util::stats::rank_desc(a.predicted_norm, b.predicted_norm));
-    Ok(ValidationReport { scenario: scenario.name.clone(), rows })
+    Ok(ValidationReport { workload: workload.name.clone(), rows })
 }
 
 #[cfg(test)]
@@ -224,7 +252,7 @@ mod tests {
     #[test]
     fn mean_abs_rel_error_and_quality() {
         let rep = ValidationReport {
-            scenario: "t".into(),
+            workload: "t".into(),
             rows: vec![row("x", 1.2, 1.0), row("y", 0.8, 1.0)],
         };
         assert!((rep.mean_abs_rel_error() - 0.2).abs() < 1e-12);
@@ -233,15 +261,63 @@ mod tests {
     }
 
     #[test]
+    fn parallel_validation_matches_serial_bit_for_bit() {
+        use crate::config::{Scenario, StrategySpace};
+        use crate::estimator::LatencyModel;
+        use std::sync::Arc;
+        struct FakeFactory;
+        impl ModelFactory for FakeFactory {
+            fn model_for_tp(&self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
+                struct M;
+                impl LatencyModel for M {
+                    fn prefill_time(&self, b: u32, _s: u32) -> f64 {
+                        0.05 + 0.01 * b as f64
+                    }
+                    fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+                        0.001
+                    }
+                }
+                Ok(Arc::new(M))
+            }
+        }
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 4,
+            tp_choices: vec![1, 2],
+            ..StrategySpace::default()
+        };
+        let workload = Workload::poisson(&Scenario::fixed("t", 128, 8, 120));
+        let slo = Slo::paper_default();
+        let mut cfg = ValidationConfig::default();
+        cfg.goodput.tolerance = 0.25;
+        cfg.ground_truth.tolerance = 0.25;
+        let run = |threads: usize| {
+            validate(&FakeFactory, &platform, &space, &workload, &slo, &cfg, threads)
+                .unwrap()
+        };
+        let serial = run(1);
+        assert!(!serial.rows.is_empty());
+        for threads in [2, 4, 8] {
+            let par = run(threads);
+            assert_eq!(serial.rows.len(), par.rows.len(), "threads={threads}");
+            for (a, b) in serial.rows.iter().zip(par.rows.iter()) {
+                assert_eq!(a.strategy, b.strategy, "threads={threads}");
+                assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+                assert_eq!(a.measured.to_bits(), b.measured.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn table_and_csv_render() {
         let rep = ValidationReport {
-            scenario: "OP2".into(),
+            workload: "OP2".into(),
             rows: vec![row("3p2d-tp4", 2.0, 1.8)],
         };
         let t = rep.to_table().render();
         assert!(t.contains("3p2d-tp4"));
         let c = rep.to_csv().render();
-        assert!(c.starts_with("scenario,"));
+        assert!(c.starts_with("workload,"));
         assert!(c.contains("OP2"));
     }
 }

@@ -9,7 +9,7 @@
 //! violates and by roughly what order — rather than the paper's absolute
 //! numbers (its tuned constants are unpublished; see DESIGN.md §6).
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy};
+use bestserve::config::{Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
 use bestserve::simulator::{simulate, SimParams};
 
@@ -19,8 +19,8 @@ fn params(seed: u64) -> SimParams {
 
 /// Table 4's operating point: the paper simulates 10k requests of OP2-like
 /// shape (s=2048, s+=64). 4k requests keeps the test fast with stable P90s.
-fn scenario() -> Scenario {
-    Scenario::fixed("table4", 2048, 64, 4000)
+fn workload() -> Workload {
+    Workload::poisson(&Scenario::fixed("table4", 2048, 64, 4000))
 }
 
 #[test]
@@ -28,7 +28,7 @@ fn table4_disagg_1p1d_shape() {
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let strategy = Strategy::disaggregation(1, 1, 4);
-    let rep = simulate(&oracle, &platform, &strategy, &scenario(), 3.5, params(42)).unwrap();
+    let rep = simulate(&oracle, &platform, &strategy, &workload(), 3.5, params(42)).unwrap();
     let slo = Slo::paper_default();
     let ttft_ms = rep.ttft.p90 * 1e3;
     let tpot_ms = rep.tpot.p90 * 1e3;
@@ -57,7 +57,7 @@ fn table5_colloc_2m_shape() {
     let oracle = AnalyticOracle::new(platform.clone(), 4);
     let mut strategy = Strategy::collocation(2, 4);
     strategy.bmax_decode = 4; // Table 5a: maximum batch size 4
-    let rep = simulate(&oracle, &platform, &strategy, &scenario(), 3.5, params(42)).unwrap();
+    let rep = simulate(&oracle, &platform, &strategy, &workload(), 3.5, params(42)).unwrap();
     let ttft_ms = rep.ttft.p90 * 1e3;
     let tpot_ms = rep.tpot.p90 * 1e3;
     // TTFT: within SLO (paper: 556 ms) — prefill prioritization works.
@@ -75,19 +75,19 @@ fn architectures_flip_which_slo_breaks() {
     // The headline contrast of §2.4 / Tables 4–5, in one assertion pair.
     let platform = Platform::paper_testbed();
     let oracle = AnalyticOracle::new(platform.clone(), 4);
-    let sc = scenario();
+    let w = workload();
     let disagg = simulate(
         &oracle,
         &platform,
         &Strategy::disaggregation(1, 1, 4),
-        &sc,
+        &w,
         3.5,
         params(7),
     )
     .unwrap();
     let mut colloc_st = Strategy::collocation(2, 4);
     colloc_st.bmax_decode = 4;
-    let colloc = simulate(&oracle, &platform, &colloc_st, &sc, 3.5, params(7)).unwrap();
+    let colloc = simulate(&oracle, &platform, &colloc_st, &w, 3.5, params(7)).unwrap();
     assert!(disagg.ttft.p90 > colloc.ttft.p90, "disagg queues prefill");
     assert!(colloc.tpot.p90 > disagg.tpot.p90, "colloc starves decode");
 }

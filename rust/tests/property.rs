@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use bestserve::config::{
     Architecture, EfficiencyParams, HardwareConfig, ModelConfig, Phase, Platform, Scenario,
-    Slo, Strategy,
+    Slo, Strategy, Workload,
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{find_goodput, GoodputConfig};
@@ -127,7 +127,12 @@ fn prop_simulators_conserve_requests_and_order_time() {
         let p = Platform::paper_testbed();
         let o = Arc::new(AnalyticOracle::new(p.clone(), 4));
         let n = g.usize_in(50, 400);
-        let sc = Scenario::fixed("prop", g.usize_in(64, 2048) as u64, g.usize_in(4, 64) as u64, n);
+        let w = Workload::poisson(&Scenario::fixed(
+            "prop",
+            g.usize_in(64, 2048) as u64,
+            g.usize_in(4, 64) as u64,
+            n,
+        ));
         let rate = g.f64_in(0.2, 6.0);
         let strategy = if g.bool() {
             Strategy::collocation(g.usize_in(1, 3) as u32, 4)
@@ -135,7 +140,7 @@ fn prop_simulators_conserve_requests_and_order_time() {
             Strategy::disaggregation(g.usize_in(1, 2) as u32, g.usize_in(1, 2) as u32, 4)
         };
         let params = SimParams { seed: g.u64_below(1 << 40), ..SimParams::default() };
-        let rep = simulate(o.as_ref(), &p, &strategy, &sc, rate, params)
+        let rep = simulate(o.as_ref(), &p, &strategy, &w, rate, params)
             .map_err(|e| e.to_string())?;
         if rep.n != n {
             return Err(format!("lost requests: {} != {n}", rep.n));
@@ -158,13 +163,14 @@ fn prop_testbed_conserves_and_respects_service_floor() {
         let n = g.usize_in(40, 150);
         let s = g.usize_in(64, 1024) as u64;
         let s_plus = g.usize_in(4, 32) as u64;
-        let sc = Scenario::fixed("prop", s, s_plus, n);
+        let w = Workload::poisson(&Scenario::fixed("prop", s, s_plus, n));
         let strategy = if g.bool() {
             Strategy::collocation(g.usize_in(1, 2) as u32, 4)
         } else {
             Strategy::disaggregation(1, g.usize_in(1, 2) as u32, 4)
         };
-        let reqs = generate_workload(&sc, g.f64_in(0.2, 3.0), g.u64_below(1 << 40));
+        let reqs = generate_workload(&w, g.f64_in(0.2, 3.0), g.u64_below(1 << 40))
+            .map_err(|e| e.to_string())?;
         let tb = Testbed::new(&o, &p, strategy, TestbedConfig::default());
         let rep = tb.run(&reqs).map_err(|e| e.to_string())?.report;
         if rep.n != n {
@@ -185,7 +191,7 @@ fn prop_goodput_monotone_in_slo_relaxation() {
     check("goodput slo monotone", 8, |g| {
         let p = Platform::paper_testbed();
         let o = AnalyticOracle::new(p.clone(), 4);
-        let sc = Scenario::fixed("prop", 1024, 32, 400);
+        let w = Workload::poisson(&Scenario::fixed("prop", 1024, 32, 400));
         let strategy = if g.bool() {
             Strategy::collocation(2, 4)
         } else {
@@ -195,9 +201,9 @@ fn prop_goodput_monotone_in_slo_relaxation() {
         let params = SimParams::default();
         let tight = Slo { ttft: 1.0, tpot: 0.05, ..Slo::paper_default() };
         let loose = Slo { ttft: 4.0, tpot: 0.2, ..Slo::paper_default() };
-        let gt = find_goodput(&o, &p, &strategy, &sc, &tight, params, &cfg)
+        let gt = find_goodput(&o, &p, &strategy, &w, &tight, params, &cfg)
             .map_err(|e| e.to_string())?;
-        let gl = find_goodput(&o, &p, &strategy, &sc, &loose, params, &cfg)
+        let gl = find_goodput(&o, &p, &strategy, &w, &loose, params, &cfg)
             .map_err(|e| e.to_string())?;
         if gl + 0.25 < gt {
             return Err(format!("loose SLO goodput {gl} < tight {gt} for {strategy}"));

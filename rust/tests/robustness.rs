@@ -3,7 +3,7 @@
 //! downstream user hits first.
 
 use bestserve::config::{
-    HardwareConfig, ModelConfig, Platform, Scenario, Slo, Strategy, StrategySpace,
+    HardwareConfig, ModelConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::runtime::{GridLatencyModel, GridManifest, PjrtExecutable};
@@ -80,9 +80,9 @@ fn invalid_configs_rejected_with_messages() {
 fn single_request_workload() {
     let p = Platform::paper_testbed();
     let o = AnalyticOracle::new(p.clone(), 4);
-    let sc = Scenario::fixed("one", 512, 8, 1);
+    let w = Workload::poisson(&Scenario::fixed("one", 512, 8, 1));
     for st in [Strategy::collocation(1, 4), Strategy::disaggregation(1, 1, 4)] {
-        let rep = simulate(&o, &p, &st, &sc, 0.5, SimParams::default()).unwrap();
+        let rep = simulate(&o, &p, &st, &w, 0.5, SimParams::default()).unwrap();
         assert_eq!(rep.n, 1);
         assert!(rep.ttft.p90 > 0.0);
     }
@@ -93,12 +93,12 @@ fn gen_len_one_requests() {
     // s+ = 1: decode span is a single token; nothing divides by zero.
     let p = Platform::paper_testbed();
     let o = AnalyticOracle::new(p.clone(), 4);
-    let sc = Scenario::fixed("g1", 512, 1, 50);
+    let w = Workload::poisson(&Scenario::fixed("g1", 512, 1, 50));
     let rep = simulate(
         &o,
         &p,
         &Strategy::disaggregation(1, 1, 4),
-        &sc,
+        &w,
         1.0,
         SimParams::default(),
     )
@@ -111,12 +111,12 @@ fn extreme_overload_terminates() {
     // 100x beyond capacity must still terminate with finite numbers.
     let p = Platform::paper_testbed();
     let o = AnalyticOracle::new(p.clone(), 4);
-    let sc = Scenario::fixed("flood", 2048, 32, 500);
+    let w = Workload::poisson(&Scenario::fixed("flood", 2048, 32, 500));
     let rep = simulate(
         &o,
         &p,
         &Strategy::disaggregation(1, 1, 4),
-        &sc,
+        &w,
         500.0,
         SimParams::default(),
     )
@@ -131,8 +131,8 @@ fn tiny_kv_capacity_still_serves() {
     // request completes.
     let p = Platform::paper_testbed();
     let o = AnalyticOracle::new(p.clone(), 4);
-    let sc = Scenario::fixed("tinykv", 100, 50, 30);
-    let reqs = generate_workload(&sc, 1.0, 3);
+    let w = Workload::poisson(&Scenario::fixed("tinykv", 100, 50, 30));
+    let reqs = generate_workload(&w, 1.0, 3).unwrap();
     let tb = Testbed::new(
         &o,
         &p,
@@ -153,16 +153,16 @@ fn variable_length_scenario_end_to_end() {
     use bestserve::config::LengthDist;
     let p = Platform::paper_testbed();
     let o = AnalyticOracle::new(p.clone(), 4);
-    let sc = Scenario {
+    let w = Workload::poisson(&Scenario {
         name: "mixed".into(),
         input_len: LengthDist::LogNormal { mu: 6.5, sigma: 0.6, cap: 4096 },
         gen_len: LengthDist::Uniform { lo: 8, hi: 128 },
         n_requests: 300,
-    };
+    });
     let st = Strategy::disaggregation(1, 1, 4);
-    let rep = simulate(&o, &p, &st, &sc, 1.0, SimParams::default()).unwrap();
+    let rep = simulate(&o, &p, &st, &w, 1.0, SimParams::default()).unwrap();
     assert_eq!(rep.n, 300);
-    let reqs = generate_workload(&sc, 1.0, 9);
+    let reqs = generate_workload(&w, 1.0, 9).unwrap();
     let tb = Testbed::new(&o, &p, st, TestbedConfig::default());
     assert_eq!(tb.run(&reqs).unwrap().report.n, 300);
 }
