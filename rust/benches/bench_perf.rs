@@ -90,6 +90,17 @@ fn main() -> bestserve::Result<()> {
         "colloc simulator          : {:>10.0} requests/s simulated",
         rep_n as f64 / dt
     );
+    let dynamic = Strategy::dynamic(2, 4);
+    let mut switches = 0u64;
+    let dt = time(|| {
+        let r = simulate(&oracle, &platform, &dynamic, &workload, 3.0, params).unwrap();
+        rep_n = r.n;
+        switches = r.role_occupancy.map(|o| o.switches).unwrap_or(0);
+    });
+    println!(
+        "dynamic (Nf) simulator    : {:>10.0} requests/s simulated ({switches} role switches)",
+        rep_n as f64 / dt
+    );
 
     // --- Workload plane ------------------------------------------------------
     // Generation must be an unmeasurable fraction of a sweep: every

@@ -6,6 +6,43 @@ use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
+/// Options known to take a value. A trailing `--workload` (or one directly
+/// followed by another `--option`) used to silently demote to a bare flag,
+/// so the run proceeded on defaults instead of erroring; options listed
+/// here fail hard instead. Keep in sync with the accessors in `main.rs`.
+pub const VALUE_OPTIONS: &[&str] = &[
+    "b",
+    "bmax-decode",
+    "bmax-prefill",
+    "burstiness",
+    "config",
+    "hardware",
+    "kv-blocks",
+    "max-cards",
+    "model",
+    "n",
+    "out",
+    "phase",
+    "rate",
+    "rates",
+    "repeats",
+    "s",
+    "save-trace",
+    "scenario",
+    "seed",
+    "slo-relax",
+    "slo-tpot",
+    "slo-ttft",
+    "strategy",
+    "switch-latency",
+    "tau",
+    "threads",
+    "tolerance",
+    "tp",
+    "trace",
+    "workload",
+];
+
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     /// Positional arguments (subcommand etc.).
@@ -30,6 +67,11 @@ impl Args {
                 {
                     let v = it.next().unwrap();
                     out.opts.insert(stripped.to_string(), v);
+                } else if VALUE_OPTIONS.contains(&stripped) {
+                    return Err(Error::config(format!(
+                        "--{stripped} expects a value (use --{stripped} VALUE or \
+                         --{stripped}=VALUE)"
+                    )));
                 } else {
                     out.flags.push(stripped.to_string());
                 }
@@ -181,5 +223,29 @@ mod tests {
         // "--x -3" — the "-3" does not start with "--" so it binds as value.
         let a = parse("--x -3");
         assert_eq!(a.f64_or("x", 0.0).unwrap(), -3.0);
+    }
+
+    fn try_parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn value_option_missing_value_is_a_hard_error() {
+        // Regression: "bestserve optimize --workload" used to demote
+        // --workload to a bare flag and silently run the default preset.
+        let err = try_parse("optimize --workload").unwrap_err();
+        assert!(err.to_string().contains("--workload"), "{err}");
+        // A value option directly followed by another option is the same
+        // mistake.
+        assert!(try_parse("optimize --workload --threads 4").is_err());
+        assert!(try_parse("simulate --rate --hist").is_err());
+        // --opt=VALUE always binds, even for odd-looking values.
+        assert_eq!(
+            try_parse("optimize --workload=--weird").unwrap().get("workload"),
+            Some("--weird")
+        );
+        // Genuine flags at end-of-argv still parse as flags.
+        let a = try_parse("optimize --check-memory").unwrap();
+        assert!(a.flag("check-memory"));
     }
 }

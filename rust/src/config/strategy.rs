@@ -1,17 +1,22 @@
 //! Serving strategies (§2.4): collocation `xm` vs disaggregation `ypzd`
-//! notation, tensor-parallel sizes, batch limits, and the enumeration of the
-//! admissible strategy space the Optimizer searches (§3.5).
+//! notation — extended with the dynamic PD-reallocation pool `Nf`
+//! ("flexible") — tensor-parallel sizes, batch limits, and the enumeration
+//! of the admissible strategy space the Optimizer searches (§3.5).
 
 use crate::error::Error;
 use crate::util::json::Json;
 use std::fmt;
 
 /// Architecture of a deployment, in the paper's notation:
-/// `Collocation { m }` is "xm"; `Disaggregation { p, d }` is "ypzd".
+/// `Collocation { m }` is "xm"; `Disaggregation { p, d }` is "ypzd";
+/// `Dynamic { m }` is "xf" — a pool of `m` *flexible* instances that flip
+/// between prefill and decode roles at runtime based on queue pressure
+/// (see `simulator::dynamic`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Architecture {
     Collocation { m: u32 },
     Disaggregation { p: u32, d: u32 },
+    Dynamic { m: u32 },
 }
 
 impl fmt::Display for Architecture {
@@ -19,21 +24,34 @@ impl fmt::Display for Architecture {
         match self {
             Architecture::Collocation { m } => write!(f, "{m}m"),
             Architecture::Disaggregation { p, d } => write!(f, "{p}p{d}d"),
+            Architecture::Dynamic { m } => write!(f, "{m}f"),
         }
     }
 }
 
 impl Architecture {
-    /// Parse the paper's notation: "5m", "3p2d".
+    /// Parse the paper's notation plus the dynamic extension: "5m", "3p2d",
+    /// "5f".
     pub fn parse(s: &str) -> Result<Architecture, Error> {
         let s = s.trim().to_lowercase();
-        let bad = || Error::config(format!("cannot parse architecture '{s}' (want e.g. '5m' or '3p2d')"));
+        let bad = || {
+            Error::config(format!(
+                "cannot parse architecture '{s}' (want e.g. '5m', '3p2d' or '5f')"
+            ))
+        };
         if let Some(mstr) = s.strip_suffix('m') {
             let m: u32 = mstr.parse().map_err(|_| bad())?;
             if m == 0 {
                 return Err(bad());
             }
             return Ok(Architecture::Collocation { m });
+        }
+        if let Some(mstr) = s.strip_suffix('f') {
+            let m: u32 = mstr.parse().map_err(|_| bad())?;
+            if m == 0 {
+                return Err(bad());
+            }
+            return Ok(Architecture::Dynamic { m });
         }
         if let Some(dstr) = s.strip_suffix('d') {
             let mut parts = dstr.splitn(2, 'p');
@@ -52,11 +70,17 @@ impl Architecture {
         match *self {
             Architecture::Collocation { m } => m,
             Architecture::Disaggregation { p, d } => p + d,
+            Architecture::Dynamic { m } => m,
         }
     }
 
     pub fn is_disaggregated(&self) -> bool {
         matches!(self, Architecture::Disaggregation { .. })
+    }
+
+    /// Dynamic PD-reallocation pool?
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Architecture::Dynamic { .. })
     }
 }
 
@@ -99,7 +123,18 @@ impl Strategy {
         }
     }
 
-    /// Parse "3p2d-tp4" / "5m-tp2" / bare "3p2d" (tp defaults to 1).
+    /// A dynamic PD-reallocation pool of `m` flexible instances.
+    pub fn dynamic(m: u32, tp: u32) -> Strategy {
+        Strategy {
+            arch: Architecture::Dynamic { m },
+            tp,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+        }
+    }
+
+    /// Parse "3p2d-tp4" / "5m-tp2" / "5f-tp4" / bare "3p2d" (tp defaults
+    /// to 1).
     pub fn parse(s: &str) -> Result<Strategy, Error> {
         let s = s.trim().to_lowercase();
         let (arch_str, tp) = match s.split_once("-tp") {
@@ -173,9 +208,10 @@ pub struct StrategySpace {
     pub tp_choices: Vec<u32>,
     pub bmax_prefill: u32,
     pub bmax_decode: u32,
-    /// Whether to include collocation / disaggregation families.
+    /// Whether to include collocation / disaggregation / dynamic families.
     pub include_collocation: bool,
     pub include_disaggregation: bool,
+    pub include_dynamic: bool,
 }
 
 impl Default for StrategySpace {
@@ -187,14 +223,16 @@ impl Default for StrategySpace {
             bmax_decode: 16,
             include_collocation: true,
             include_disaggregation: true,
+            include_dynamic: true,
         }
     }
 }
 
 impl StrategySpace {
     /// Enumerate every admissible strategy: all `m`·`tp` ≤ budget collocation
-    /// deployments and all `(p+d)`·`tp` ≤ budget disaggregation splits with
-    /// p, d ≥ 1 (§2.4's two comparison axes).
+    /// deployments, all `(p+d)`·`tp` ≤ budget disaggregation splits with
+    /// p, d ≥ 1 (§2.4's two comparison axes), and all `m`·`tp` ≤ budget
+    /// dynamic PD-reallocation pools (the `Nf` extension).
     pub fn enumerate(&self) -> Vec<Strategy> {
         let mut out = Vec::new();
         for &tp in &self.tp_choices {
@@ -225,6 +263,18 @@ impl StrategySpace {
                     }
                 }
             }
+            if self.include_dynamic {
+                // A 1-instance pool degenerates to 1m with extra switch
+                // overhead; still enumerated so rankings show the contrast.
+                for m in 1..=max_instances {
+                    out.push(Strategy {
+                        arch: Architecture::Dynamic { m },
+                        tp,
+                        bmax_prefill: self.bmax_prefill,
+                        bmax_decode: self.bmax_decode,
+                    });
+                }
+            }
         }
         out
     }
@@ -244,9 +294,11 @@ mod tests {
             Architecture::parse("3p2d").unwrap(),
             Architecture::Disaggregation { p: 3, d: 2 }
         );
+        assert_eq!(Architecture::parse("5f").unwrap(), Architecture::Dynamic { m: 5 });
         assert_eq!(Architecture::parse("3p2d").unwrap().to_string(), "3p2d");
         assert_eq!(Architecture::parse("1M").unwrap().to_string(), "1m");
-        for bad in ["", "m", "pd", "0m", "0p1d", "3p0d", "3x2y", "p2d"] {
+        assert_eq!(Architecture::parse("5F").unwrap().to_string(), "5f");
+        for bad in ["", "m", "f", "pd", "0m", "0f", "0p1d", "3p0d", "3x2y", "p2d"] {
             assert!(Architecture::parse(bad).is_err(), "{bad}");
         }
     }
@@ -264,6 +316,19 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_notation_round_trips() {
+        let s = Strategy::parse("5f").unwrap();
+        assert_eq!(s.arch, Architecture::Dynamic { m: 5 });
+        assert!(s.arch.is_dynamic());
+        assert_eq!(s.arch.instances(), 5);
+        assert_eq!(s.to_string(), "5f-tp1");
+        assert_eq!(Strategy::parse(&s.arch.to_string()).unwrap().arch, s.arch);
+        let t = Strategy::parse("5f-tp4").unwrap();
+        assert_eq!(t.total_cards(), 20);
+        assert_eq!(Strategy::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
     fn enumeration_respects_budget() {
         let space = StrategySpace {
             max_cards: 8,
@@ -276,22 +341,34 @@ mod tests {
             assert!(s.total_cards() <= 8, "{s} uses {} cards", s.total_cards());
             s.validate().unwrap();
         }
-        // tp=8 admits exactly one deployment: 1m (no disagg possible at 8 cards).
+        // tp=8 admits exactly two deployments: 1m and 1f (no disagg
+        // possible at 8 cards).
         let tp8: Vec<&Strategy> = all.iter().filter(|s| s.tp == 8).collect();
-        assert_eq!(tp8.len(), 1);
+        assert_eq!(tp8.len(), 2);
         assert_eq!(tp8[0].arch, Architecture::Collocation { m: 1 });
-        // For tp=4, budget 8: colloc {1m, 2m} + disagg {1p1d} = 3.
+        assert_eq!(tp8[1].arch, Architecture::Dynamic { m: 1 });
+        // For tp=4, budget 8: colloc {1m, 2m} + disagg {1p1d} + dynamic
+        // {1f, 2f} = 5.
         let tp4 = all.iter().filter(|s| s.tp == 4).count();
-        assert_eq!(tp4, 3);
+        assert_eq!(tp4, 5);
     }
 
     #[test]
     fn enumeration_family_filters() {
         let space = StrategySpace {
             include_collocation: false,
+            include_dynamic: false,
             ..StrategySpace::default()
         };
         assert!(space.enumerate().iter().all(|s| s.arch.is_disaggregated()));
+        let dyn_only = StrategySpace {
+            include_collocation: false,
+            include_disaggregation: false,
+            ..StrategySpace::default()
+        };
+        let all = dyn_only.enumerate();
+        assert!(!all.is_empty());
+        assert!(all.iter().all(|s| s.arch.is_dynamic()));
     }
 
     #[test]

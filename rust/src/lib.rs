@@ -10,7 +10,8 @@
 //!   safe to share across sweep threads.
 //! * [`simulator`] — discrete-event simulation of request arrival, batching,
 //!   and departure (Algorithms 2–7), built as architecture *policies*
-//!   (prefill, decode, collocation, disaggregation tandem) plugged into one
+//!   (prefill, decode, collocation, disaggregation tandem, and the dynamic
+//!   PD-reallocation pool `Nf` — [`simulator::dynamic`]) plugged into one
 //!   shared event core ([`simulator::core`]: clock, event loop, slot pools,
 //!   FIFO batching, round-robin order, ready heap). New architectures are
 //!   new policy files, not new engines.

@@ -47,6 +47,7 @@ COMMANDS
             [--threads N]   (parallel strategy sweep; default: all cores.
                              Output is identical for any thread count)
             [--check-memory] (reject strategies whose weights+KV overflow HBM)
+            [--no-colloc] [--no-disagg] [--no-dynamic] (family filters)
   testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
             [--trace F]     (replay a CSV trace instead of generated traffic)
   validate  --scenario OP [--max-cards 8] [--tp 2,4,8] [--n N] [--out DIR]
@@ -58,6 +59,15 @@ COMMON OPTIONS
   --config   platform JSON file (overrides the two above)
   --grid     use the AOT/PJRT latency artifact instead of the native oracle
   --slo-ttft ms (default 1500)    --slo-tpot ms (default 70)
+
+STRATEGY NOTATION
+  5m         collocation: 5 instances serving both phases (vLLM-style)
+  3p2d       disaggregation: 3 static prefill + 2 static decode instances
+  5f         dynamic PD reallocation ("flexible"): a pool of 5 instances
+             flipping between prefill and decode roles on queue pressure;
+             simulate reports per-role occupancy for these
+  --switch-latency ms   dynamic role-switch dead time (KV drain/warm-up,
+                        default 30)
 
 WORKLOAD PLANE (simulate / sweep / optimize / testbed / validate)
   --workload F.json  multi-class workload file (arrival process + weighted
@@ -132,6 +142,7 @@ fn slo_from(args: &Args) -> Result<Slo> {
 }
 
 fn sim_params_from(args: &Args) -> Result<SimParams> {
+    let defaults = SimParams::default();
     Ok(SimParams {
         tau: args.f64_or("tau", 2.5)?,
         seed: args.u64_or("seed", 0xBE57_5E7F)?,
@@ -141,6 +152,9 @@ fn sim_params_from(args: &Args) -> Result<SimParams> {
         } else {
             SpanMode::PaperHeuristic
         },
+        // Dynamic (Nf) role-switch dead time, in ms on the CLI.
+        switch_latency: args.f64_or("switch-latency", defaults.switch_latency * 1e3)? / 1e3,
+        ..defaults
     })
 }
 
@@ -259,6 +273,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("per-class percentiles:");
         print!("{}", report::per_class_table(&t.report, &workload).render());
     }
+    if let Some(occ) = report::role_occupancy_table(&t.report) {
+        println!("role occupancy (dynamic pool):");
+        print!("{}", occ.render());
+    }
     println!(
         "throughput {:.3} req/s | makespan {:.1} s",
         t.report.throughput, t.report.makespan
@@ -310,6 +328,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         bmax_decode: args.u32_or("bmax-decode", 16)?,
         include_collocation: !args.flag("no-colloc"),
         include_disaggregation: !args.flag("no-disagg"),
+        include_dynamic: !args.flag("no-dynamic"),
     };
     let params = sim_params_from(args)?;
     let cfg = GoodputConfig {
@@ -454,6 +473,9 @@ fn cmd_validate(args: &Args) -> Result<()> {
         bmax_decode: args.u32_or("bmax-decode", 16)?,
         include_collocation: true,
         include_disaggregation: true,
+        // The token-level ground-truth testbed has no dynamic engine yet,
+        // so validation sticks to the static families.
+        include_dynamic: false,
     };
     let mut cfg = ValidationConfig {
         sim_params: sim_params_from(args)?,

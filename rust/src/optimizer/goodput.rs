@@ -83,7 +83,10 @@ pub fn find_goodput(
     // Parallel capacity factor: how many requests the deployment can hold
     // concurrently, per stage, bounded by the weaker stage.
     let capacity = match strategy.arch {
-        crate::config::Architecture::Collocation { m } => {
+        crate::config::Architecture::Collocation { m }
+        | crate::config::Architecture::Dynamic { m } => {
+            // Dynamic pools can commit every instance to either phase, so
+            // their optimistic ceiling matches collocation's.
             m as f64 * strategy.bmax_decode.max(strategy.bmax_prefill) as f64
         }
         crate::config::Architecture::Disaggregation { p, d } => {
@@ -95,6 +98,24 @@ pub fn find_goodput(
     // Bisect in scale units: rate bounds divided by the base rate.
     let mut lo = cfg.lambda_min / workload.base_rate;
     let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
+
+    if hi <= lo {
+        // Degenerate bracket: the capacity ceiling sits at or below the
+        // pessimistic floor (slow model, tiny capacity, or large
+        // base_rate). Bisection is meaningless here, and probing at `lo`
+        // would wrongly reject (or report) a rate *above* the ceiling the
+        // line above just computed — so feasibility-check the ceiling
+        // itself and report it, or 0.
+        let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
+        if !(bound.is_finite() && bound > 0.0) {
+            return Ok(0.0); // infinite T_min (or zero capacity): nothing to probe
+        }
+        return if feasible(model, platform, strategy, workload, slo, params, bound, cfg.repeats)? {
+            Ok(bound * workload.base_rate)
+        } else {
+            Ok(0.0)
+        };
+    }
 
     if !feasible(model, platform, strategy, workload, slo, params, lo, cfg.repeats)? {
         return Ok(0.0); // rejected outright (Algorithm 8 line 5)
@@ -215,6 +236,60 @@ mod tests {
         }
         assert!(g[1] > g[0] * 1.2, "{g:?}");
         assert!(g[2] > g[1] * 1.2, "{g:?}");
+    }
+
+    #[test]
+    fn degenerate_bracket_returns_feasibility_checked_ceiling() {
+        // Regression: a model so slow that the capacity ceiling
+        // (upper_factor/T_min) sits below lambda_min makes the bisection
+        // bracket degenerate (hi <= lo). The old code probed feasibility at
+        // lambda_min — *above* the ceiling it had just computed — so it
+        // rejected this strategy outright, and in the feasible-at-lo case
+        // could report a goodput above the ceiling. The fix
+        // feasibility-checks the ceiling itself.
+        struct Glacial;
+        impl LatencyModel for Glacial {
+            fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+                60.0 // one minute per prompt: T_min >> 1/lambda_min
+            }
+            fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+                1e-6
+            }
+        }
+        let platform = Platform::paper_testbed();
+        // Deterministic arrivals: the regression targets bracket logic, so
+        // keep the feasibility probes noise-free.
+        let workload = Workload {
+            arrival: ArrivalProcess::Deterministic,
+            ..Workload::poisson(&Scenario::fixed("t", 256, 8, 30))
+        };
+        let mut st = Strategy::collocation(1, 1);
+        st.bmax_prefill = 1;
+        st.bmax_decode = 1;
+        let cfg = GoodputConfig::default();
+        let ceiling = cfg.upper_factor / Glacial.min_request_time(256, 8);
+        assert!(
+            ceiling < cfg.lambda_min,
+            "setup must produce a degenerate bracket ({ceiling} vs {})",
+            cfg.lambda_min
+        );
+        // Generous TTFT budget: the ceiling rate is sustainable, lambda_min
+        // is not.
+        let slo = Slo { ttft: 600.0, tpot: 1_000.0, ..Slo::paper_default() };
+        let g = find_goodput(
+            &Glacial, &platform, &st, &workload, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        assert!(g > 0.0, "degenerate bracket must not reject a feasible strategy");
+        assert!((g - ceiling).abs() < 1e-12, "goodput {g} vs ceiling {ceiling}");
+        // An SLO even the ceiling cannot meet still yields 0 — never
+        // lambda_min.
+        let tight = Slo { ttft: 100.0, tpot: 1_000.0, ..Slo::paper_default() };
+        let g0 = find_goodput(
+            &Glacial, &platform, &st, &workload, &tight, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        assert_eq!(g0, 0.0);
     }
 
     #[test]

@@ -48,15 +48,19 @@ impl MemoryCheck {
 /// Collocated instances hold prefill and decode sequences: `bmax_decode`
 /// slots at the full context `s + s_+` plus a prefill batch in flight.
 /// Disaggregated prefill instances hold only `bmax_prefill · s`; decode
-/// instances hold `bmax_decode · (s + s_+)`. Lengths are the workload's
-/// mix-weighted means.
+/// instances hold `bmax_decode · (s + s_+)`. Dynamic (`Nf`) instances are
+/// charged the *worst-case role assignment*: a flexible instance may be
+/// mid-switch with a full decode slot load still draining while its
+/// incoming prefill batch materializes, so it must budget for both —
+/// the collocation sum, not the disaggregation max. Lengths are the
+/// workload's mix-weighted means.
 pub fn check_memory(platform: &Platform, strategy: &Strategy, workload: &Workload) -> MemoryCheck {
     let tp = strategy.tp;
     let weights = platform.model.weight_bytes() as f64 / tp as f64;
     let s = workload.mean_input();
     let full = workload.mean_input() + workload.mean_gen();
     let peak_kv = match strategy.arch {
-        Architecture::Collocation { .. } => {
+        Architecture::Collocation { .. } | Architecture::Dynamic { .. } => {
             peak_kv_bytes_per_card(platform, strategy.bmax_decode, full, tp)
                 + peak_kv_bytes_per_card(platform, strategy.bmax_prefill, s, tp)
         }
@@ -122,5 +126,20 @@ mod tests {
         let colloc = check_memory(&p, &Strategy::collocation(1, 4), &w);
         let disagg = check_memory(&p, &Strategy::disaggregation(1, 1, 4), &w);
         assert!(colloc.peak_kv > disagg.peak_kv);
+    }
+
+    #[test]
+    fn dynamic_charged_worst_case_role_assignment() {
+        // A flexible instance must budget for decode slots AND an incoming
+        // prefill batch at once (mid-switch drain): same bill as
+        // collocation, strictly above disaggregation's per-role max.
+        let p = Platform::paper_testbed();
+        let w = wl(2048, 64);
+        let dynamic = check_memory(&p, &Strategy::dynamic(1, 4), &w);
+        let colloc = check_memory(&p, &Strategy::collocation(1, 4), &w);
+        let disagg = check_memory(&p, &Strategy::disaggregation(1, 1, 4), &w);
+        assert_eq!(dynamic.peak_kv, colloc.peak_kv);
+        assert!(dynamic.peak_kv > disagg.peak_kv);
+        assert!(dynamic.fits());
     }
 }

@@ -302,11 +302,12 @@ mod tests {
     }
 
     #[test]
-    fn collocation_and_disagg_both_present() {
+    fn all_three_architecture_families_present() {
         let space = StrategySpace { max_cards: 8, tp_choices: vec![4], ..StrategySpace::default() };
         let all = space.enumerate();
         assert!(all.iter().any(|s| matches!(s.arch, Architecture::Collocation { .. })));
         assert!(all.iter().any(|s| matches!(s.arch, Architecture::Disaggregation { .. })));
+        assert!(all.iter().any(|s| matches!(s.arch, Architecture::Dynamic { .. })));
     }
 
     #[test]
@@ -317,6 +318,9 @@ mod tests {
             tp_choices: vec![1, 2],
             ..StrategySpace::default()
         };
+        // The default space now includes dynamic (Nf) strategies, so this
+        // also pins the reallocation policy's thread-count independence.
+        assert!(space.enumerate().iter().any(|s| s.arch.is_dynamic()));
         let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 200));
         let slo = Slo::paper_default();
         let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };

@@ -202,6 +202,23 @@ pub fn per_class_table(report: &SimReport, workload: &Workload) -> Table {
     t
 }
 
+/// Role-occupancy panel of a dynamic (`Nf`) PD-reallocation run:
+/// instance-seconds and share of pool time per role, plus the completed
+/// switch count. Returns `None` for static-architecture reports.
+pub fn role_occupancy_table(report: &SimReport) -> Option<Table> {
+    let occ = report.role_occupancy?;
+    let mut t = Table::new(&["role", "instance-s", "share"]).numeric_body();
+    for (name, secs, frac) in [
+        ("prefill", occ.prefill, occ.prefill_frac()),
+        ("decode", occ.decode, occ.decode_frac()),
+        ("switching", occ.switching, occ.switching_frac()),
+    ] {
+        t.row(&[name.into(), format!("{secs:.1}"), format!("{:.1}%", frac * 100.0)]);
+    }
+    t.row(&["switches".into(), occ.switches.to_string(), String::new()]);
+    Some(t)
+}
+
 /// Figures 7/9 — P90 TTFT & TPOT against request arrival rates.
 pub struct RateSweep {
     pub strategy: String,
@@ -445,6 +462,34 @@ mod tests {
         let rendered = per_class_table(&rep, &w).render();
         assert!(rendered.contains("chat") && rendered.contains("code"), "{rendered}");
         assert!(rendered.contains("TTFT P90"));
+    }
+
+    #[test]
+    fn role_occupancy_table_only_for_dynamic() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let platform = Platform::paper_testbed();
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 100));
+        let stat = simulate(
+            &m,
+            &platform,
+            &Strategy::disaggregation(1, 1, 4),
+            &w,
+            1.0,
+            SimParams::default(),
+        )
+        .unwrap();
+        assert!(role_occupancy_table(&stat).is_none());
+        let dynamic = simulate(
+            &m,
+            &platform,
+            &Strategy::dynamic(2, 4),
+            &w,
+            1.0,
+            SimParams::default(),
+        )
+        .unwrap();
+        let rendered = role_occupancy_table(&dynamic).unwrap().render();
+        assert!(rendered.contains("prefill") && rendered.contains("switches"), "{rendered}");
     }
 
     #[test]

@@ -182,6 +182,16 @@ impl ReadyQueue {
     pub fn len(&self) -> usize {
         self.heap.len()
     }
+
+    /// Number of queued events with ready time `<= t` — a pressure signal
+    /// for reallocation policies. O(len); queue lengths are bounded by the
+    /// in-flight request count, not the workload size.
+    pub fn count_ready(&self, t: f64) -> usize {
+        self.heap
+            .iter()
+            .filter(|Reverse((F64Ord(ready), _))| *ready <= t)
+            .count()
+    }
 }
 
 // -------------------------------------------------------------- slot pool --
@@ -312,6 +322,14 @@ impl<'a> FifoArrivals<'a> {
     /// Has the head request arrived by `t`?
     pub fn head_arrived(&self, t: f64) -> bool {
         self.head_arrival().is_some_and(|a| a <= t)
+    }
+
+    /// Backlog at `t`: how many requests have arrived but not been batched
+    /// yet — the prefill pressure signal for reallocation policies.
+    /// O(log n) via binary search on the arrival-sorted workload.
+    pub fn pending(&self, t: f64) -> usize {
+        let arrived = self.reqs.partition_point(|r| r.arrival <= t);
+        arrived.saturating_sub(self.next)
     }
 
     /// `BATCH(R, A, b_max, T)` — pop up to `bmax` requests that have
@@ -474,6 +492,40 @@ mod tests {
         assert_eq!(b.range(), 3..4);
         assert!(q.exhausted());
         assert_eq!(q.next_index(), 4);
+    }
+
+    #[test]
+    fn ready_queue_counts_due_events() {
+        let mut q = ReadyQueue::new();
+        q.push(1.0, 0);
+        q.push(2.0, 1);
+        q.push(5.0, 2);
+        assert_eq!(q.count_ready(0.5), 0);
+        assert_eq!(q.count_ready(2.0), 2);
+        assert_eq!(q.count_ready(10.0), 3);
+    }
+
+    #[test]
+    fn fifo_pending_tracks_backlog() {
+        let reqs: Vec<Request> = [0.0, 1.0, 2.0, 5.0]
+            .iter()
+            .enumerate()
+            .map(|(id, &arrival)| Request {
+                id,
+                arrival,
+                input_len: 8,
+                gen_len: 1,
+                class: 0,
+            })
+            .collect();
+        let mut q = FifoArrivals::new(&reqs);
+        assert_eq!(q.pending(0.0), 1);
+        assert_eq!(q.pending(2.5), 3);
+        q.take_batch(2.5, 2);
+        assert_eq!(q.pending(2.5), 1);
+        q.take_batch(2.5, 8);
+        assert_eq!(q.pending(2.5), 0);
+        assert_eq!(q.pending(5.0), 1);
     }
 
     #[test]

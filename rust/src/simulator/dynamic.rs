@@ -1,0 +1,583 @@
+//! Dynamic PD reallocation (`Nf` — "flexible") — our architecture
+//! extension beyond the paper's static collocation/disaggregation pair,
+//! motivated by DistServe's observation that the prefill/decode split is
+//! the dominant goodput lever and DOPD's result that re-assigning
+//! instances between the two roles at runtime beats both static extremes
+//! under shifting load.
+//!
+//! A pool of `m` identical instances. At any moment each instance serves
+//! exactly one role — prefill batches (Algorithm 2 style) or decode slots
+//! (Algorithm 3 style, pseudo-batch priced) — and flips roles based on two
+//! *pressure signals*:
+//!
+//! * **prefill backlog** — requests arrived but not yet batched
+//!   ([`FifoArrivals::pending`]), measured in full prefill batches per
+//!   prefill-committed instance;
+//! * **decode pressure** — prefill-finished requests waiting for a slot
+//!   right now ([`ReadyQueue::count_ready`]).
+//!
+//! Switching is governed by a hysteresis dead band
+//! ([`SimParams::switch_up`] / [`SimParams::switch_down`]) so the pool
+//! does not thrash, and every flip costs [`SimParams::switch_latency`]
+//! seconds of dead time, modelling the KV-cache drain on the old role plus
+//! scheduler warm-up on the new one. A decode instance with occupied slots
+//! first *drains* (keeps serving its slots, accepts no new work) before
+//! the switch proper begins. KV hand-off between roles is otherwise free —
+//! the pool is modelled as sharing one fast interconnect domain, unlike
+//! the disaggregation tandem's priced transfer.
+//!
+//! The policy is a [`core::EventDriven`] plug-in composing the shared
+//! [`Clock`]-driven event loop, [`SlotPool`], [`FifoArrivals`] and
+//! [`ReadyQueue`] — per the ROADMAP's architecture-extension recipe — and
+//! is deterministic in the simulation seed: scheduling uses the same
+//! shuffled [`VisitOrder`] as the static engines, while role-switch
+//! decisions pick the lowest-index eligible instance and consume no
+//! randomness. Per-role instance-time and switch counts are reported as
+//! [`RoleOccupancy`] on the [`SimReport`].
+//!
+//! [`Clock`]: super::core::Clock
+//! [`core::EventDriven`]: super::core::EventDriven
+//! [`FifoArrivals`]: super::core::FifoArrivals
+//! [`FifoArrivals::pending`]: super::core::FifoArrivals::pending
+//! [`ReadyQueue`]: super::core::ReadyQueue
+//! [`ReadyQueue::count_ready`]: super::core::ReadyQueue::count_ready
+//! [`SlotPool`]: super::core::SlotPool
+//! [`VisitOrder`]: super::core::VisitOrder
+//! [`SimParams::switch_up`]: super::params::SimParams::switch_up
+//! [`SimParams::switch_down`]: super::params::SimParams::switch_down
+//! [`SimParams::switch_latency`]: super::params::SimParams::switch_latency
+
+use crate::config::{Platform, Strategy};
+use crate::error::{Error, Result};
+use crate::estimator::LatencyModel;
+use crate::util::rng::Rng;
+
+use super::core::{
+    decode_span_for, drive, EventDriven, FifoArrivals, NextEvent, ReadyQueue, SlotPool,
+    VisitOrder,
+};
+use super::metrics::{RequestOutcome, RoleOccupancy, SimReport};
+use super::params::SimParams;
+use super::request::Request;
+
+/// The two serving roles an instance can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Prefill,
+    Decode,
+}
+
+/// Per-instance role state machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Serving prefill batches.
+    Prefill,
+    /// Serving decode slots.
+    Decode,
+    /// Committed to prefill but still holding occupied decode slots: keeps
+    /// serving them, accepts no new insertions, and begins the switch
+    /// proper the moment the slots drain.
+    Draining,
+    /// Mid-switch dead time (KV drain / warm-up); assumes `to` at `until`.
+    Switching { to: Role, until: f64 },
+}
+
+struct Instance {
+    state: State,
+    /// Busy-until time while in the prefill role.
+    prefill_until: f64,
+    slots: SlotPool,
+    /// Occupancy accounting: time attributed to the state held since
+    /// `last_change` (draining counts as decode — the slots are still
+    /// being served).
+    last_change: f64,
+    time: RoleOccupancy,
+}
+
+impl Instance {
+    fn new(bmax_decode: u32) -> Instance {
+        Instance {
+            state: State::Decode,
+            prefill_until: 0.0,
+            slots: SlotPool::new(bmax_decode),
+            last_change: 0.0,
+            time: RoleOccupancy::default(),
+        }
+    }
+
+    /// Attribute the elapsed time to the current state's role bucket.
+    fn account(&mut self, t: f64) {
+        let dt = t - self.last_change;
+        if dt > 0.0 {
+            match self.state {
+                State::Prefill => self.time.prefill += dt,
+                State::Decode | State::Draining => self.time.decode += dt,
+                State::Switching { .. } => self.time.switching += dt,
+            }
+        }
+        self.last_change = t;
+    }
+
+    fn set_state(&mut self, t: f64, state: State) {
+        self.account(t);
+        self.state = state;
+    }
+
+    /// Does this instance count towards prefill capacity for the pressure
+    /// signal? Draining and switching-to-prefill instances do — they are
+    /// already committed, so the policy must not over-switch.
+    fn commits_prefill(&self) -> bool {
+        matches!(
+            self.state,
+            State::Prefill | State::Draining | State::Switching { to: Role::Prefill, .. }
+        )
+    }
+}
+
+/// Dynamic PD-reallocation pool simulator: `m` flexible instances at the
+/// strategy's tensor-parallel size.
+pub struct DynamicSimulator<'a> {
+    pub model: &'a dyn LatencyModel,
+    pub platform: &'a Platform,
+    pub n_instances: usize,
+    pub bmax_prefill: u32,
+    pub bmax_decode: u32,
+    pub params: SimParams,
+}
+
+/// The reallocation scheduling rule, plugged into [`drive`]. One `step`
+/// performs at most one action, in strict priority order: role-switch
+/// bookkeeping, prefill launch, decode insertion, then pressure-driven
+/// reallocation.
+struct DynamicPolicy<'a> {
+    model: &'a dyn LatencyModel,
+    params: SimParams,
+    reqs: &'a [Request],
+    bmax_prefill: u32,
+    arrivals: FifoArrivals<'a>,
+    instances: Vec<Instance>,
+    order: VisitOrder,
+    rng: Rng,
+    /// Decode hand-off queue keyed by readiness (= prefill departure).
+    decode_q: ReadyQueue,
+    d1: Vec<f64>,
+    completion: Vec<f64>,
+    inserted: usize,
+}
+
+impl DynamicPolicy<'_> {
+    /// Pressure-driven reallocation, evaluated only when no serving action
+    /// was possible at `t`. At most one instance changes state per call.
+    fn reallocate(&mut self, t: f64) -> bool {
+        let backlog = self.arrivals.pending(t) as f64;
+        let n_pre = self.instances.iter().filter(|i| i.commits_prefill()).count() as f64;
+        // Backlog thresholds are in full prefill batches per committed
+        // prefill instance.
+        let unit = self.bmax_prefill as f64;
+
+        // Up: decode -> prefill when the backlog exceeds the upper
+        // hysteresis edge. Prefer an already-drained instance (switches
+        // immediately); otherwise put one into draining.
+        if backlog > self.params.switch_up * n_pre * unit {
+            let drained = self
+                .instances
+                .iter()
+                .position(|i| matches!(i.state, State::Decode) && i.slots.busy(t) == 0);
+            if let Some(i) = drained {
+                let until = t + self.params.switch_latency;
+                self.instances[i].set_state(t, State::Switching { to: Role::Prefill, until });
+                return true;
+            }
+            let occupied = self.instances.iter().position(|i| matches!(i.state, State::Decode));
+            if let Some(i) = occupied {
+                self.instances[i].set_state(t, State::Draining);
+                return true;
+            }
+        }
+
+        // Down: an idle prefill instance returns to decode when the
+        // backlog sits at the lower hysteresis edge AND requests are
+        // waiting for a slot right now (the insertion rule ran before us,
+        // so waiting work means decode is genuinely under-provisioned).
+        if backlog <= self.params.switch_down * n_pre * unit
+            && self.decode_q.count_ready(t) > 0
+        {
+            let idle = self
+                .instances
+                .iter()
+                .position(|i| matches!(i.state, State::Prefill) && i.prefill_until <= t);
+            if let Some(i) = idle {
+                let until = t + self.params.switch_latency;
+                self.instances[i].set_state(t, State::Switching { to: Role::Decode, until });
+                return true;
+            }
+        }
+
+        false
+    }
+}
+
+impl EventDriven for DynamicPolicy<'_> {
+    fn step(&mut self, t: f64) -> bool {
+        // --- bookkeeping: finish due switches, start drained switches ----
+        for inst in self.instances.iter_mut() {
+            match inst.state {
+                State::Switching { to, until } if until <= t => {
+                    inst.time.switches += 1;
+                    let serving = match to {
+                        Role::Prefill => State::Prefill,
+                        Role::Decode => State::Decode,
+                    };
+                    inst.set_state(t, serving);
+                    return true;
+                }
+                State::Draining if inst.slots.busy(t) == 0 => {
+                    let until = t + self.params.switch_latency;
+                    inst.set_state(t, State::Switching { to: Role::Prefill, until });
+                    return true;
+                }
+                _ => {}
+            }
+        }
+
+        // --- prefill launch (highest serving priority) -------------------
+        if self.arrivals.head_arrived(t) {
+            let order = self.order.shuffled(&mut self.rng);
+            let found = order.iter().copied().find(|&i| {
+                matches!(self.instances[i].state, State::Prefill)
+                    && self.instances[i].prefill_until <= t
+            });
+            if let Some(i) = found {
+                let batch = self.arrivals.take_batch(t, self.bmax_prefill);
+                let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+                for r in batch.range() {
+                    self.d1[r] = t + t_b;
+                    self.decode_q.push(t + t_b, r);
+                }
+                self.instances[i].prefill_until = t + t_b;
+                return true;
+            }
+        }
+
+        // --- decode insertion --------------------------------------------
+        if let Some((ready, r)) = self.decode_q.peek() {
+            if ready <= t {
+                let order = self.order.shuffled(&mut self.rng);
+                let found = order.iter().copied().find(|&i| {
+                    matches!(self.instances[i].state, State::Decode)
+                        && self.instances[i].slots.has_free(t)
+                });
+                if let Some(i) = found {
+                    self.decode_q.pop();
+                    let req = self.reqs[r];
+                    let inst = &mut self.instances[i];
+                    let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
+                    let span = decode_span_for(
+                        self.model,
+                        &self.params,
+                        b_eff,
+                        req.input_len,
+                        req.gen_len,
+                    );
+                    let j = inst
+                        .slots
+                        .free_slot(t)
+                        .expect("has_free implies a free slot");
+                    inst.slots.occupy(j, t + span, r);
+                    self.completion[r] = t + span;
+                    self.inserted += 1;
+                    return true;
+                }
+            }
+        }
+
+        // --- pressure-driven reallocation --------------------------------
+        self.reallocate(t)
+    }
+
+    fn next_event(&self, t: f64) -> f64 {
+        let mut ne = NextEvent::after(t);
+        if let Some(a) = self.arrivals.head_arrival() {
+            ne.offer(a);
+        }
+        if let Some((ready, _)) = self.decode_q.peek() {
+            ne.offer(ready);
+        }
+        for inst in &self.instances {
+            ne.offer(inst.prefill_until);
+            if let State::Switching { until, .. } = inst.state {
+                ne.offer(until);
+            }
+            inst.slots.offer_releases(&mut ne);
+        }
+        ne.get()
+    }
+
+    fn done(&self) -> bool {
+        self.arrivals.exhausted() && self.inserted >= self.reqs.len()
+    }
+}
+
+impl<'a> DynamicSimulator<'a> {
+    pub fn from_strategy(
+        model: &'a dyn LatencyModel,
+        platform: &'a Platform,
+        strategy: &Strategy,
+        params: SimParams,
+    ) -> Result<DynamicSimulator<'a>> {
+        if !(params.switch_latency >= 0.0 && params.switch_latency.is_finite()) {
+            return Err(Error::config(format!(
+                "switch latency must be finite and >= 0, got {}",
+                params.switch_latency
+            )));
+        }
+        if params.switch_up <= params.switch_down
+            || !params.switch_up.is_finite()
+            || params.switch_down.is_nan()
+        {
+            return Err(Error::config(format!(
+                "switch hysteresis needs switch_up > switch_down, got {} <= {}",
+                params.switch_up, params.switch_down
+            )));
+        }
+        match strategy.arch {
+            crate::config::Architecture::Dynamic { m } => Ok(DynamicSimulator {
+                model,
+                platform,
+                n_instances: m as usize,
+                bmax_prefill: strategy.bmax_prefill,
+                bmax_decode: strategy.bmax_decode,
+                params,
+            }),
+            _ => Err(Error::config("strategy is not a dynamic pool")),
+        }
+    }
+
+    /// Run the reallocation policy over a workload sorted by arrival.
+    pub fn run(&self, reqs: &[Request]) -> SimReport {
+        assert!(!reqs.is_empty());
+        assert!(self.n_instances > 0);
+        let n = reqs.len();
+        let mut policy = DynamicPolicy {
+            model: self.model,
+            params: self.params,
+            reqs,
+            bmax_prefill: self.bmax_prefill,
+            arrivals: FifoArrivals::new(reqs),
+            instances: (0..self.n_instances)
+                .map(|_| Instance::new(self.bmax_decode))
+                .collect(),
+            order: VisitOrder::new(self.n_instances),
+            rng: Rng::new(self.params.seed),
+            decode_q: ReadyQueue::new(),
+            d1: vec![f64::INFINITY; n],
+            completion: vec![f64::INFINITY; n],
+            inserted: 0,
+        };
+        let end = drive(&mut policy, "dynamic");
+
+        // Attribute the occupancy tail through the true makespan (the event
+        // loop exits at the last insertion; slots release later).
+        let makespan = policy.completion.iter().copied().fold(end, f64::max);
+        let mut occ = RoleOccupancy::default();
+        for inst in policy.instances.iter_mut() {
+            inst.account(makespan);
+            occ.prefill += inst.time.prefill;
+            occ.decode += inst.time.decode;
+            occ.switching += inst.time.switching;
+            occ.switches += inst.time.switches;
+        }
+
+        let outcomes: Vec<RequestOutcome> = reqs
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| RequestOutcome {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: policy.d1[idx],
+                decode_start: policy.d1[idx],
+                completion: policy.completion[idx],
+                gen_len: r.gen_len,
+                class: r.class,
+            })
+            .collect();
+        let mut report = SimReport::from_outcomes(&outcomes);
+        report.role_occupancy = Some(occ);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, Workload};
+    use crate::simulator::request::generate_workload;
+    use crate::simulator::testutil::ConstModel;
+
+    fn platform() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    fn sim<'a>(m: &'a dyn LatencyModel, p: &'a Platform, inst: usize) -> DynamicSimulator<'a> {
+        DynamicSimulator {
+            model: m,
+            platform: p,
+            n_instances: inst,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            params: SimParams::default(),
+        }
+    }
+
+    #[test]
+    fn single_request_pays_prefill_plus_switches() {
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 1);
+        let lat = s.params.switch_latency;
+        let reqs = vec![Request { id: 0, arrival: 1.0, input_len: 128, gen_len: 10, class: 0 }];
+        let rep = s.run(&reqs);
+        // The pool starts all-decode: the request waits one up-switch, then
+        // its prefill; TTFT = switch latency + prefill time.
+        assert!((rep.ttft.p50 - (lat + 0.5)).abs() < 1e-9, "{}", rep.ttft.p50);
+        // The single instance then flips back to decode before inserting:
+        // TPOT = (down-switch + decode span) / gen_len.
+        assert!(
+            (rep.tpot.p50 - (lat + 0.1) / 10.0).abs() < 1e-9,
+            "{}",
+            rep.tpot.p50
+        );
+        let occ = rep.role_occupancy.expect("dynamic reports occupancy");
+        assert_eq!(occ.switches, 2);
+        assert!(occ.prefill > 0.0 && occ.decode > 0.0 && occ.switching > 0.0);
+    }
+
+    #[test]
+    fn zero_switch_latency_degenerates_cleanly() {
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let p = platform();
+        let mut s = sim(&m, &p, 1);
+        s.params.switch_latency = 0.0;
+        let reqs = vec![Request { id: 0, arrival: 0.0, input_len: 128, gen_len: 10, class: 0 }];
+        let rep = s.run(&reqs);
+        assert!((rep.ttft.p50 - 0.5).abs() < 1e-9, "{}", rep.ttft.p50);
+        assert!((rep.tpot.p50 - 0.01).abs() < 1e-9, "{}", rep.tpot.p50);
+    }
+
+    #[test]
+    fn pool_flexes_roles_under_shifting_load() {
+        // Two separated all-at-once bursts: each burst pulls instances to
+        // prefill (backlog pressure), then the waiting decode work pulls
+        // them back (ready pressure). The pool must complete several role
+        // switches and spend real time in both roles.
+        let m = ConstModel { prefill: 0.2, step: 0.005 };
+        let p = platform();
+        let mut s = sim(&m, &p, 3);
+        s.bmax_decode = 4;
+        let reqs: Vec<Request> = (0..24)
+            .map(|id| Request {
+                id,
+                arrival: if id < 12 { 0.0 } else { 5.0 },
+                input_len: 512,
+                gen_len: 64,
+                class: 0,
+            })
+            .collect();
+        let rep = s.run(&reqs);
+        assert_eq!(rep.n, 24);
+        let occ = rep.role_occupancy.unwrap();
+        assert!(occ.switches >= 4, "only {} switches", occ.switches);
+        assert!(occ.prefill_frac() > 0.0 && occ.decode_frac() > 0.0);
+        let total_frac = occ.prefill_frac() + occ.decode_frac() + occ.switching_frac();
+        assert!((total_frac - 1.0).abs() < 1e-9, "{total_frac}");
+    }
+
+    #[test]
+    fn conservation_under_load() {
+        let m = ConstModel { prefill: 0.05, step: 0.0005 };
+        let p = platform();
+        let s = sim(&m, &p, 2);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 32, 800));
+        let rep = s.run(&generate_workload(&w, 8.0, 6).unwrap());
+        assert_eq!(rep.n, 800);
+        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        let s = sim(&m, &p, 3);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 300));
+        let reqs = generate_workload(&w, 5.0, 11).unwrap();
+        let a = s.run(&reqs);
+        let b = s.run(&reqs);
+        assert_eq!(a.ttfts, b.ttfts);
+        assert_eq!(a.tpots, b.tpots);
+        assert_eq!(a.role_occupancy.unwrap(), b.role_occupancy.unwrap());
+    }
+
+    #[test]
+    fn avoids_collocations_decode_suspension() {
+        // Collocation suspends ongoing decodes whenever a prefill lands on
+        // the instance; the dynamic pool never mixes roles on one
+        // instance, so under sustained prefill pressure its TPOT tail
+        // must stay below collocation's at equal instance count.
+        use crate::simulator::colloc::CollocSimulator;
+        let m = ConstModel { prefill: 0.4, step: 0.002 };
+        let p = platform();
+        let w = Workload::poisson(&Scenario::fixed("t", 2048, 64, 500));
+        let reqs = generate_workload(&w, 3.5, 7).unwrap();
+        let dynamic = sim(&m, &p, 2).run(&reqs);
+        let colloc = CollocSimulator {
+            model: &m,
+            platform: &p,
+            n_instances: 2,
+            bmax_prefill: 4,
+            bmax_decode: 16,
+            params: SimParams::default(),
+        }
+        .run(&reqs);
+        assert!(
+            dynamic.tpot.p90 < colloc.tpot.p90,
+            "dynamic {} vs colloc {}",
+            dynamic.tpot.p90,
+            colloc.tpot.p90
+        );
+    }
+
+    #[test]
+    fn from_strategy_rejects_static_archs_and_bad_knobs() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        assert!(DynamicSimulator::from_strategy(
+            &m,
+            &p,
+            &Strategy::collocation(2, 4),
+            SimParams::default()
+        )
+        .is_err());
+        assert!(DynamicSimulator::from_strategy(
+            &m,
+            &p,
+            &Strategy::dynamic(2, 4),
+            SimParams { switch_latency: f64::NAN, ..SimParams::default() }
+        )
+        .is_err());
+        assert!(DynamicSimulator::from_strategy(
+            &m,
+            &p,
+            &Strategy::dynamic(2, 4),
+            SimParams { switch_up: 0.0, switch_down: 0.0, ..SimParams::default() }
+        )
+        .is_err());
+        assert!(DynamicSimulator::from_strategy(
+            &m,
+            &p,
+            &Strategy::dynamic(2, 4),
+            SimParams::default()
+        )
+        .is_ok());
+    }
+}

@@ -38,6 +38,53 @@ impl RequestOutcome {
     }
 }
 
+/// Time-weighted role occupancy of a dynamic (`Nf`) PD-reallocation pool:
+/// instance-seconds spent in each role over the whole run, plus the number
+/// of completed role switches. Produced only by the dynamic simulator;
+/// static architectures leave [`SimReport::role_occupancy`] at `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RoleOccupancy {
+    /// Instance-seconds spent in the prefill role.
+    pub prefill: f64,
+    /// Instance-seconds spent in the decode role (draining included — a
+    /// draining instance is still serving its decode slots).
+    pub decode: f64,
+    /// Instance-seconds spent switching (KV drain / warm-up dead time).
+    pub switching: f64,
+    /// Completed role flips across all instances.
+    pub switches: u64,
+}
+
+impl RoleOccupancy {
+    /// Total accounted instance-seconds.
+    pub fn total(&self) -> f64 {
+        self.prefill + self.decode + self.switching
+    }
+
+    /// Fraction of instance-time spent in the prefill role (0 when the run
+    /// had no accounted time).
+    pub fn prefill_frac(&self) -> f64 {
+        self.frac(self.prefill)
+    }
+
+    pub fn decode_frac(&self) -> f64 {
+        self.frac(self.decode)
+    }
+
+    pub fn switching_frac(&self) -> f64 {
+        self.frac(self.switching)
+    }
+
+    fn frac(&self, part: f64) -> f64 {
+        let total = self.total();
+        if total > 0.0 {
+            part / total
+        } else {
+            0.0
+        }
+    }
+}
+
 /// TTFT/TPOT percentile summaries for one workload class — the per-class
 /// panels of a multi-class (mix) simulation report.
 #[derive(Debug, Clone)]
@@ -66,6 +113,9 @@ pub struct SimReport {
     /// Per-class TTFT/TPOT breakdowns, ascending by class index. Empty for
     /// single-class workloads (the aggregate summaries are the breakdown).
     pub per_class: Vec<ClassStats>,
+    /// Per-role occupancy of a dynamic (`Nf`) pool; `None` for the static
+    /// architectures, whose roles are fixed by construction.
+    pub role_occupancy: Option<RoleOccupancy>,
 }
 
 impl SimReport {
@@ -112,6 +162,7 @@ impl SimReport {
             ttfts,
             tpots,
             per_class,
+            role_occupancy: None,
         }
     }
 
@@ -201,6 +252,20 @@ mod tests {
         assert_eq!(r.per_class[0].n + r.per_class[1].n, r.n);
         assert!((r.per_class[0].ttft.p50 - 0.1).abs() < 1e-9);
         assert!((r.per_class[1].ttft.p50 - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn role_occupancy_fractions() {
+        let r = RoleOccupancy { prefill: 2.0, decode: 6.0, switching: 2.0, switches: 4 };
+        assert!((r.total() - 10.0).abs() < 1e-12);
+        assert!((r.prefill_frac() - 0.2).abs() < 1e-12);
+        assert!((r.decode_frac() - 0.6).abs() < 1e-12);
+        assert!((r.switching_frac() - 0.2).abs() < 1e-12);
+        // Degenerate (no accounted time): fractions are 0, not NaN.
+        assert_eq!(RoleOccupancy::default().prefill_frac(), 0.0);
+        // Static-architecture reports carry no occupancy.
+        let outs = vec![outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5];
+        assert!(SimReport::from_outcomes(&outs).role_occupancy.is_none());
     }
 
     #[test]

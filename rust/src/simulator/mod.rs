@@ -42,17 +42,23 @@
 //!   (prefill prioritization, decode suspension/resumption).
 //! * [`disagg`] — §3.4.3: the disaggregation tandem composing the prefill
 //!   and decode policies through a KV-transfer hand-off.
+//! * [`dynamic`] — our `Nf` extension: a pool of flexible instances that
+//!   flip between prefill and decode roles on queue pressure, with
+//!   hysteresis thresholds and a role-switch latency (KV drain/warm-up);
+//!   reports per-role occupancy ([`metrics::RoleOccupancy`]).
 //!
-//! To add a new architecture (chunked prefill, dynamic PD reallocation, …),
-//! write a new policy implementing [`core::EventDriven`] from the [`core`]
-//! parts and dispatch to it from [`simulate`] — no new clock, queue or
-//! instance bookkeeping code. To add a new *arrival process*, extend
-//! `config::ArrivalProcess` instead — see the recipe in ROADMAP.md.
+//! To add a new architecture (chunked prefill, hybrid pools, …), write a
+//! new policy implementing [`core::EventDriven`] from the [`core`] parts
+//! and dispatch to it from [`simulate`] — no new clock, queue or instance
+//! bookkeeping code; [`dynamic`] is the worked example in ROADMAP.md. To
+//! add a new *arrival process*, extend `config::ArrivalProcess` instead —
+//! see the other recipe there.
 
 pub mod colloc;
 pub mod core;
 pub mod decode;
 pub mod disagg;
+pub mod dynamic;
 pub mod metrics;
 pub mod params;
 pub mod prefill;
@@ -64,7 +70,8 @@ pub mod testutil;
 pub use colloc::CollocSimulator;
 pub use decode::{DecodeItem, DecodeOutcome, DecodeStage};
 pub use disagg::DisaggSimulator;
-pub use metrics::{ClassStats, RequestOutcome, SimReport};
+pub use dynamic::DynamicSimulator;
+pub use metrics::{ClassStats, RequestOutcome, RoleOccupancy, SimReport};
 pub use params::{SimParams, SpanMode};
 pub use prefill::PrefillStage;
 pub use request::{generate_workload, Request};
@@ -93,6 +100,9 @@ pub fn simulate(
         }
         Architecture::Disaggregation { .. } => {
             Ok(DisaggSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+        }
+        Architecture::Dynamic { .. } => {
+            Ok(DynamicSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
         }
     }
 }
@@ -152,8 +162,41 @@ mod tests {
             SimParams::default(),
         )
         .unwrap();
+        let dynamic = simulate(
+            &m,
+            &p,
+            &Strategy::dynamic(2, 4),
+            &w,
+            1.0,
+            SimParams::default(),
+        )
+        .unwrap();
         assert_eq!(colloc.n, 100);
         assert_eq!(disagg.n, 100);
+        assert_eq!(dynamic.n, 100);
+        // Only the dynamic pool reports role occupancy.
+        assert!(colloc.role_occupancy.is_none());
+        assert!(disagg.role_occupancy.is_none());
+        assert!(dynamic.role_occupancy.is_some());
+    }
+
+    #[test]
+    fn invariants_hold_for_collocation() {
+        crate::simulator::testutil::assert_architecture_invariants(
+            &Strategy::collocation(2, 1),
+        );
+    }
+
+    #[test]
+    fn invariants_hold_for_disaggregation() {
+        crate::simulator::testutil::assert_architecture_invariants(
+            &Strategy::disaggregation(1, 1, 1),
+        );
+    }
+
+    #[test]
+    fn invariants_hold_for_dynamic() {
+        crate::simulator::testutil::assert_architecture_invariants(&Strategy::dynamic(2, 1));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Simulation hyperparameters: the pseudo-batch balancing scalar τ (§3.4.2,
-//! eq. (9)), decode-span pricing mode, and the disaggregation KV-transfer
-//! toggle.
+//! eq. (9)), decode-span pricing mode, the disaggregation KV-transfer
+//! toggle, and the dynamic PD-reallocation policy knobs (role-switch
+//! latency + hysteresis thresholds — see `simulator::dynamic`).
 
 /// How the Simulator prices a request's whole decode phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,6 +25,21 @@ pub struct SimParams {
     /// it — on our presets it is ≤ 10 ms per request.
     pub kv_transfer: bool,
     pub span_mode: SpanMode,
+    /// Dynamic (`Nf`) policy: seconds a role switch takes — models the
+    /// KV-cache drain on the old role plus scheduler warm-up on the new
+    /// one. Must be >= 0; it is dead time for the switching instance.
+    pub switch_latency: f64,
+    /// Dynamic policy up-hysteresis: a drained decode-role instance flips
+    /// to prefill when the prefill backlog exceeds `switch_up` *full
+    /// prefill batches per prefill-role instance* (counting instances
+    /// already switching towards prefill). Must exceed `switch_down`.
+    pub switch_up: f64,
+    /// Dynamic policy down-hysteresis: an idle prefill-role instance flips
+    /// back to decode when the backlog (in the same per-instance batch
+    /// units) is at or below this and decode work is waiting. The gap
+    /// between the two thresholds is the dead band that prevents role
+    /// thrashing.
+    pub switch_down: f64,
 }
 
 impl Default for SimParams {
@@ -33,6 +49,9 @@ impl Default for SimParams {
             seed: 0xBE57_5E7F,
             kv_transfer: true,
             span_mode: SpanMode::PaperHeuristic,
+            switch_latency: 0.03,
+            switch_up: 1.0,
+            switch_down: 0.0,
         }
     }
 }
@@ -56,6 +75,14 @@ mod tests {
         assert_eq!(p.pseudo_batch(4), 2); // 5/2.5 = 2
         assert_eq!(p.pseudo_batch(9), 4); // 10/2.5 = 4
         assert_eq!(p.pseudo_batch(15), 6); // 16/2.5 = 6.4 -> 6
+    }
+
+    #[test]
+    fn dynamic_knob_defaults_are_hysteretic() {
+        let p = SimParams::default();
+        assert!(p.switch_latency >= 0.0);
+        // Up threshold strictly above down: a dead band must exist.
+        assert!(p.switch_up > p.switch_down);
     }
 
     #[test]

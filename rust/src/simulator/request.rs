@@ -77,14 +77,22 @@ fn replay_arrivals(path: &str, rate: f64, n: usize) -> Result<Vec<f64>> {
     use std::collections::HashMap;
     use std::sync::{Arc, Mutex, OnceLock};
     use std::time::SystemTime;
-    type Key = (String, u64, Option<SystemTime>);
+    type Key = (String, u64, Option<SystemTime>, u64);
     static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Vec<f64>>>>> = OnceLock::new();
-    // Keying on (path, len, mtime) keeps the hot-loop win while staying
-    // correct when a trace file is rewritten in place mid-process.
+    // Keying on (path, len, mtime, content fingerprint) keeps the hot-loop
+    // win while staying correct when a trace file is rewritten in place
+    // mid-process — including a rewrite to the *same byte length* within
+    // the filesystem's mtime granularity, which the old (path, len, mtime)
+    // key could not distinguish and served stale arrivals for.
     let meta = std::fs::metadata(path).map_err(|e| {
         crate::error::Error::config(format!("cannot read trace '{path}': {e}"))
     })?;
-    let key: Key = (path.to_string(), meta.len(), meta.modified().ok());
+    let key: Key = (
+        path.to_string(),
+        meta.len(),
+        meta.modified().ok(),
+        content_fingerprint(path)?,
+    );
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let cached = cache.lock().unwrap().get(&key).cloned();
     let ts: Arc<Vec<f64>> = match cached {
@@ -97,6 +105,49 @@ fn replay_arrivals(path: &str, rate: f64, n: usize) -> Result<Vec<f64>> {
         }
     };
     let horizon = *ts.last().expect("load_trace rejects empty traces");
+    scale_cycled(&ts, horizon, rate, n)
+}
+
+/// Cheap content fingerprint for the replay cache key: FNV-1a over the
+/// file length plus its first and last 64 KiB. Reading two bounded chunks
+/// keeps the hot-loop cost O(1) in the trace size; a rewrite that only
+/// touches the middle of a > 128 KiB file slips through, but trace CSVs
+/// carry timestamps on every line, so realistic rewrites perturb the head
+/// or tail chunk.
+fn content_fingerprint(path: &str) -> Result<u64> {
+    use std::io::{Read, Seek, SeekFrom};
+    const CHUNK: u64 = 64 * 1024;
+    let err = |e: std::io::Error| {
+        crate::error::Error::config(format!("cannot read trace '{path}': {e}"))
+    };
+    let mut f = std::fs::File::open(path).map_err(err)?;
+    let len = f.metadata().map_err(err)?.len();
+    let mut hash: u64 = 0xcbf29ce484222325;
+    let mut fold = |bytes: &[u8]| {
+        for &b in bytes {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x100000001b3);
+        }
+    };
+    fold(&len.to_le_bytes());
+    let mut buf = vec![0u8; CHUNK.min(len) as usize];
+    f.read_exact(&mut buf).map_err(err)?;
+    fold(&buf);
+    if len > CHUNK {
+        let tail_start = len.saturating_sub(CHUNK).max(CHUNK);
+        let mut tail = vec![0u8; (len - tail_start) as usize];
+        if !tail.is_empty() {
+            f.seek(SeekFrom::Start(tail_start)).map_err(err)?;
+            f.read_exact(&mut tail).map_err(err)?;
+            fold(&tail);
+        }
+    }
+    Ok(hash)
+}
+
+/// Time-scale a cached trace to the requested rate, cycling it when more
+/// requests are needed than it holds.
+fn scale_cycled(ts: &[f64], horizon: f64, rate: f64, n: usize) -> Result<Vec<f64>> {
     // Native rate of the trace; degenerate single-instant traces fall back
     // to a unit gap so the cycle offset stays positive.
     let native_gap = if horizon > 0.0 { horizon / ts.len() as f64 } else { 1.0 };
@@ -272,6 +323,62 @@ mod tests {
         assert_eq!(reqs.len(), 500);
         assert!(reqs.windows(2).all(|p| p[0].arrival < p[1].arrival + 1e-12));
         std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_same_length_content() {
+        let dir = std::env::temp_dir();
+        let a = dir.join("bestserve_fp_a.csv");
+        let b = dir.join("bestserve_fp_b.csv");
+        std::fs::write(&a, "arrival\n1.00\n2.00\n").unwrap();
+        std::fs::write(&b, "arrival\n1.00\n2.50\n").unwrap();
+        assert_eq!(
+            std::fs::metadata(&a).unwrap().len(),
+            std::fs::metadata(&b).unwrap().len()
+        );
+        let fa = content_fingerprint(a.to_str().unwrap()).unwrap();
+        let fb = content_fingerprint(b.to_str().unwrap()).unwrap();
+        assert_ne!(fa, fb);
+        // Identical content hashes identically.
+        std::fs::write(&b, "arrival\n1.00\n2.00\n").unwrap();
+        assert_eq!(fa, content_fingerprint(b.to_str().unwrap()).unwrap());
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn replay_cache_survives_same_length_rewrite() {
+        // Regression: rewriting a trace in place to the same byte length
+        // within the filesystem's mtime granularity used to serve the OLD
+        // arrivals from the (path, len, mtime) cache. The content
+        // fingerprint in the key must bust it.
+        let path = std::env::temp_dir().join("bestserve_replay_rewrite.csv");
+        let w = wl(&Scenario::fixed("rw", 64, 8, 40));
+        let first = generate_workload(&w, 1.0, 31).unwrap();
+        super::super::trace::save_trace(&first, &path).unwrap();
+        let replayed = Workload {
+            arrival: crate::config::ArrivalProcess::Replay {
+                path: path.to_str().unwrap().to_string(),
+            },
+            ..wl(&Scenario::fixed("rw", 64, 8, 40))
+        };
+        let before = generate_workload(&replayed, 2.0, 5).unwrap();
+
+        // Rewrite byte-for-byte-length-identical but with shifted content:
+        // swap two digit characters in every timestamp cell.
+        let body = std::fs::read_to_string(&path).unwrap();
+        let swapped: String = body.chars().map(|c| if c == '1' { '2' } else { c }).collect();
+        assert_eq!(body.len(), swapped.len());
+        assert_ne!(body, swapped);
+        std::fs::write(&path, &swapped).unwrap();
+
+        let after = generate_workload(&replayed, 2.0, 5).unwrap();
+        assert_ne!(
+            before.iter().map(|r| r.arrival).collect::<Vec<_>>(),
+            after.iter().map(|r| r.arrival).collect::<Vec<_>>(),
+            "rewritten trace must not replay stale cached arrivals"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

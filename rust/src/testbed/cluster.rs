@@ -93,6 +93,10 @@ impl<'a> Testbed<'a> {
             Architecture::Disaggregation { p, d } => {
                 self.run_disagg(reqs, p as usize, d as usize)
             }
+            Architecture::Dynamic { .. } => Err(Error::config(
+                "the token-level testbed has no dynamic PD-reallocation engine yet; \
+                 validate dynamic (Nf) strategies with the simulator instead",
+            )),
         }
     }
 

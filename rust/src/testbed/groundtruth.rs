@@ -66,7 +66,8 @@ pub fn testbed_goodput(
     let s_plus = workload.mean_gen().round().max(1.0) as u32;
     let t_min = model.prefill_time(1, s) + model.decode_span_exact(1, s, s_plus);
     let capacity = match strategy.arch {
-        crate::config::Architecture::Collocation { m } => {
+        crate::config::Architecture::Collocation { m }
+        | crate::config::Architecture::Dynamic { m } => {
             m as f64 * strategy.bmax_decode.max(strategy.bmax_prefill) as f64
         }
         crate::config::Architecture::Disaggregation { p, d } => (p as f64
@@ -76,6 +77,19 @@ pub fn testbed_goodput(
     // Bisect in scale units: rate bounds divided by the base rate.
     let mut lo = cfg.lambda_min / workload.base_rate;
     let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
+    if hi <= lo {
+        // Degenerate bracket (see `find_goodput`): feasibility-check the
+        // capacity ceiling itself instead of probing above it at lambda_min.
+        let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
+        if !(bound.is_finite() && bound > 0.0) {
+            return Ok(0.0); // infinite T_min (or zero capacity): nothing to probe
+        }
+        return if testbed_feasible(model, platform, strategy, workload, slo, cfg, bound, seed)? {
+            Ok(bound * workload.base_rate)
+        } else {
+            Ok(0.0)
+        };
+    }
     if !testbed_feasible(model, platform, strategy, workload, slo, cfg, lo, seed)? {
         return Ok(0.0);
     }

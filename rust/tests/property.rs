@@ -215,13 +215,13 @@ fn prop_goodput_monotone_in_slo_relaxation() {
 #[test]
 fn prop_architecture_parse_display_roundtrip() {
     check("arch roundtrip", 200, |g| {
-        let arch = if g.bool() {
-            Architecture::Collocation { m: g.usize_in(1, 99) as u32 }
-        } else {
-            Architecture::Disaggregation {
+        let arch = match *g.choose(&[0u8, 1, 2]) {
+            0 => Architecture::Collocation { m: g.usize_in(1, 99) as u32 },
+            1 => Architecture::Disaggregation {
                 p: g.usize_in(1, 99) as u32,
                 d: g.usize_in(1, 99) as u32,
-            }
+            },
+            _ => Architecture::Dynamic { m: g.usize_in(1, 99) as u32 },
         };
         let s = arch.to_string();
         let back = Architecture::parse(&s).map_err(|e| e.to_string())?;
