@@ -6,9 +6,12 @@
 
 use std::time::Instant;
 
-use bestserve::config::{Platform, Scenario, Slo, Strategy, StrategySpace, Workload};
+use bestserve::config::{
+    HardwareConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
+};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{optimize, optimize_parallel, AnalyticFactory, GoodputConfig};
+use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, simulate, SimParams};
 use bestserve::testbed::{Testbed, TestbedConfig};
@@ -211,5 +214,51 @@ fn main() -> bestserve::Result<()> {
              ({t_serial:.2}s serial vs {t_par:.2}s parallel)"
         );
     }
+
+    // --- Capacity planner ---------------------------------------------------
+    // The inverse question (target rate → min-cost cluster) over the FULL
+    // preset grid: every hardware preset × cluster sizes ≤ 8 cards × the
+    // whole strategy space, on ONE thread. The planner's promise is the
+    // paper's "minutes on a single standard CPU" — hold it to a hard budget.
+    let profiles = HardwareConfig::presets();
+    let plan_wl = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 1_000));
+    let plan_cfg = PlannerConfig {
+        targets: vec![2.0, 6.0],
+        space: StrategySpace {
+            max_cards: 8,
+            tp_choices: vec![1, 2, 4, 8],
+            ..StrategySpace::default()
+        },
+        goodput: GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() },
+        sim_params: params,
+        check_memory: true,
+    };
+    let mut plan_points = 0usize;
+    let mut frontier_len = 0usize;
+    let dt = time(|| {
+        let r = plan(
+            &platform.model,
+            &platform.eff,
+            &profiles,
+            &plan_wl,
+            &Slo::paper_default(),
+            &LinearCardCost,
+            &plan_cfg,
+            1,
+        )
+        .unwrap();
+        plan_points = r.points.len();
+        frontier_len = r.frontier.len();
+    });
+    println!(
+        "capacity planner          : {plan_points} plan points ({} hw profiles) in {dt:.2}s \
+         on one thread — frontier {frontier_len}",
+        profiles.len()
+    );
+    const PLAN_BUDGET_S: f64 = 120.0;
+    assert!(
+        dt < PLAN_BUDGET_S,
+        "full preset-grid plan sweep took {dt:.1}s, budget {PLAN_BUDGET_S}s on one CPU"
+    );
     Ok(())
 }

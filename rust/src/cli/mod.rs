@@ -35,6 +35,8 @@ pub const VALUE_OPTIONS: &[&str] = &[
     "slo-ttft",
     "strategy",
     "switch-latency",
+    "target-rate",
+    "target-rates",
     "tau",
     "threads",
     "tolerance",

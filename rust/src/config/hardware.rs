@@ -54,6 +54,12 @@ pub struct HardwareConfig {
     /// feasibility pre-filter (`optimizer::fits_memory`) and the testbed's
     /// `BlockManager::from_memory` sizing.
     pub hbm_bytes: u64,
+    /// Rental cost of ONE card in $/hour — the planner's cost-model input
+    /// (`planner::cost`). Preset values are rough on-demand cloud rates;
+    /// profile files (`HardwareConfig::registry_from_file`) override them.
+    /// Defaults to 1.0 (normalized cost units) when absent from JSON, which
+    /// reduces $/hr rankings to card count.
+    pub hourly_cost: f64,
 }
 
 impl HardwareConfig {
@@ -79,6 +85,7 @@ impl HardwareConfig {
             kappa_upcast: 1.6e12,
             comm_latency_floor: 100e-6,
             hbm_bytes: 64 << 30,
+            hourly_cost: 1.20,
         }
     }
 
@@ -102,6 +109,7 @@ impl HardwareConfig {
             kappa_upcast: 2.04e12,
             comm_latency_floor: 60e-6,
             hbm_bytes: 80 << 30,
+            hourly_cost: 2.00,
         }
     }
 
@@ -123,6 +131,7 @@ impl HardwareConfig {
             kappa_upcast: 3.35e12,
             comm_latency_floor: 50e-6,
             hbm_bytes: 80 << 30,
+            hourly_cost: 3.90,
         }
     }
 
@@ -167,6 +176,7 @@ impl HardwareConfig {
             ("kappa_upcast", Json::Num(self.kappa_upcast)),
             ("comm_latency_floor", Json::Num(self.comm_latency_floor)),
             ("hbm_bytes", Json::Num(self.hbm_bytes as f64)),
+            ("hourly_cost", Json::Num(self.hourly_cost)),
         ])
     }
 
@@ -198,9 +208,52 @@ impl HardwareConfig {
             kappa_upcast: j.f64_or("kappa_upcast", 1.6e12),
             comm_latency_floor: j.f64_or("comm_latency_floor", 100e-6),
             hbm_bytes: j.f64_or("hbm_bytes", (64u64 << 30) as f64) as u64,
+            hourly_cost: j.f64_or("hourly_cost", 1.0),
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Parse a hardware *registry* — the planner's sweepable hardware axis.
+    /// Accepts a bare array, an object `{"profiles": [...]}`, or a single
+    /// profile object; array entries may be full profile objects or preset
+    /// name strings. Duplicate profile names are rejected (they would make
+    /// plan rows ambiguous).
+    pub fn registry_from_json(j: &Json) -> Result<Vec<HardwareConfig>, Error> {
+        let entries: Vec<&Json> = if let Some(arr) = j.as_arr() {
+            arr.iter().collect()
+        } else if let Some(arr) = j.get("profiles").and_then(Json::as_arr) {
+            arr.iter().collect()
+        } else {
+            vec![j]
+        };
+        if entries.is_empty() {
+            return Err(Error::config("hardware registry has no profiles"));
+        }
+        let profiles = entries
+            .into_iter()
+            .map(|e| match e {
+                Json::Str(name) => Self::preset(name),
+                other => Self::from_json(other),
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        for (i, a) in profiles.iter().enumerate() {
+            if profiles[..i].iter().any(|b| b.name == a.name) {
+                return Err(Error::config(format!(
+                    "hardware registry lists profile '{}' twice",
+                    a.name
+                )));
+            }
+        }
+        Ok(profiles)
+    }
+
+    /// Load a hardware registry from a JSON file (`--hardware profiles.json`).
+    pub fn registry_from_file(path: &str) -> Result<Vec<HardwareConfig>, Error> {
+        let body = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("cannot read hardware registry '{path}': {e}")))?;
+        let j = Json::parse(&body).map_err(|e| Error::config(format!("{path}: {e}")))?;
+        Self::registry_from_json(&j)
     }
 
     pub fn validate(&self) -> Result<(), Error> {
@@ -222,9 +275,21 @@ impl HardwareConfig {
         if self.hbm_bytes == 0 {
             return Err(Error::config("hbm_bytes must be > 0"));
         }
-        if self.dispatch.rmsnorm < 0.0 || self.dispatch.attention < 0.0 || self.dispatch.mlp < 0.0
-        {
-            return Err(Error::config("dispatch times must be >= 0"));
+        // NaN fails every `>= 0.0` comparison, so spell the check as "is a
+        // finite non-negative number" — `< 0.0` alone would wave NaN through.
+        for (label, v) in [
+            ("rmsnorm", self.dispatch.rmsnorm),
+            ("attention", self.dispatch.attention),
+            ("mlp", self.dispatch.mlp),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(Error::config(format!(
+                    "dispatch time '{label}' must be finite and >= 0"
+                )));
+            }
+        }
+        if !(self.hourly_cost.is_finite() && self.hourly_cost > 0.0) {
+            return Err(Error::config("hourly_cost must be finite and > 0"));
         }
         Ok(())
     }
@@ -266,6 +331,23 @@ mod tests {
     fn json_roundtrip() {
         let h = HardwareConfig::h100_sxm();
         assert_eq!(HardwareConfig::from_json(&h.to_json()).unwrap(), h);
+        // Every preset round-trips byte-identically (incl. hourly_cost).
+        for p in HardwareConfig::presets() {
+            assert_eq!(HardwareConfig::from_json(&p.to_json()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn json_without_hourly_cost_still_loads() {
+        // Pre-planner hardware JSON (no hourly_cost key) must keep loading:
+        // the field defaults to 1.0 normalized cost units.
+        let mut j = HardwareConfig::a100_80g().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("hourly_cost");
+        }
+        let h = HardwareConfig::from_json(&j).unwrap();
+        assert_eq!(h.hourly_cost, 1.0);
+        assert_eq!(h.sm_bytes, 2.04e12);
     }
 
     #[test]
@@ -273,5 +355,63 @@ mod tests {
         let mut h = HardwareConfig::a100_80g();
         h.sm_bytes = 0.0;
         assert!(h.validate().is_err());
+        let mut h = HardwareConfig::a100_80g();
+        h.hourly_cost = 0.0;
+        assert!(h.validate().is_err());
+        let mut h = HardwareConfig::a100_80g();
+        h.hourly_cost = f64::NAN;
+        assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_nan_dispatch_times() {
+        // Regression: `dispatch < 0.0` waved NaN through (NaN fails every
+        // ordered comparison), poisoning every downstream latency estimate.
+        let mut h = HardwareConfig::ascend_910b3();
+        h.dispatch.attention = f64::NAN;
+        assert!(h.validate().is_err());
+        let mut h = HardwareConfig::ascend_910b3();
+        h.kappa_kv = f64::NAN;
+        assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn registry_accepts_arrays_objects_and_preset_names() {
+        let j = Json::parse(
+            r#"{"profiles": ["a100", {"name": "budget", "sc_flops": 1e14,
+                 "sm_bytes": 1e12, "s_plus_bytes": 5e10,
+                 "dispatch": {"rmsnorm": 2e-5, "attention": 2e-4, "mlp": 4e-5},
+                 "hourly_cost": 0.5}]}"#,
+        )
+        .unwrap();
+        let reg = HardwareConfig::registry_from_json(&j).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg[0].name, "A100-SXM4-80GB");
+        assert_eq!(reg[1].name, "budget");
+        assert_eq!(reg[1].hourly_cost, 0.5);
+        // A bare array and a single object both parse.
+        let arr = Json::parse(r#"["ascend", "h100"]"#).unwrap();
+        assert_eq!(HardwareConfig::registry_from_json(&arr).unwrap().len(), 2);
+        let single = HardwareConfig::h100_sxm().to_json();
+        assert_eq!(HardwareConfig::registry_from_json(&single).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_empties() {
+        let dup = Json::parse(r#"["a100", "a100"]"#).unwrap();
+        assert!(HardwareConfig::registry_from_json(&dup).is_err());
+        let empty = Json::parse(r#"{"profiles": []}"#).unwrap();
+        assert!(HardwareConfig::registry_from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn registry_file_roundtrip() {
+        let path = std::env::temp_dir().join("bestserve_hw_registry_test.json");
+        let arr =
+            Json::Arr(HardwareConfig::presets().iter().map(HardwareConfig::to_json).collect());
+        std::fs::write(&path, arr.pretty()).unwrap();
+        let reg = HardwareConfig::registry_from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(reg, HardwareConfig::presets());
+        std::fs::remove_file(&path).ok();
     }
 }

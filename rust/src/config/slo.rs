@@ -29,11 +29,20 @@ impl Slo {
         Slo::default()
     }
 
+    /// The relaxed (TTFT, TPOT) thresholds of Algorithm 9: (1+τ)·goal.
+    /// Shared by [`Slo::feasible`] and the planner's feasibility reporting.
+    pub fn relaxed_bounds(&self) -> (f64, f64) {
+        (
+            (1.0 + self.relaxation) * self.ttft,
+            (1.0 + self.relaxation) * self.tpot,
+        )
+    }
+
     /// Is a simulated (ttft_pXX, tpot_pXX) pair feasible under the relaxed
     /// check of Algorithm 9: pXX ≤ (1+τ)·goal?
     pub fn feasible(&self, ttft_pxx: f64, tpot_pxx: f64) -> bool {
-        ttft_pxx <= (1.0 + self.relaxation) * self.ttft
-            && tpot_pxx <= (1.0 + self.relaxation) * self.tpot
+        let (ttft_max, tpot_max) = self.relaxed_bounds();
+        ttft_pxx <= ttft_max && tpot_pxx <= tpot_max
     }
 
     /// Strict check (τ=0) — used by ablations (DESIGN.md notes the paper's
@@ -88,6 +97,14 @@ mod tests {
         assert_eq!(s.tpot, 0.070);
         assert_eq!(s.percentile, 90.0);
         assert_eq!(s.relaxation, 0.1);
+    }
+
+    #[test]
+    fn relaxed_bounds_scale_with_tau() {
+        let s = Slo::default();
+        let (t, p) = s.relaxed_bounds();
+        assert!((t - 1.65).abs() < 1e-12);
+        assert!((p - 0.077).abs() < 1e-12);
     }
 
     #[test]

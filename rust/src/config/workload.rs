@@ -22,6 +22,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::scenario::{LengthDist, Scenario};
+use super::slo::Slo;
 
 /// When requests arrive: the stochastic process generating arrival
 /// timestamps at a given effective rate (requests/second).
@@ -148,12 +149,20 @@ impl ArrivalProcess {
 
 /// One request class of the mix: a named (input, generation) length profile
 /// with a sampling weight. Weights need not sum to 1; they are normalized.
+/// A class may carry its own SLO budget (`slo`): feasibility then requires
+/// the class's own TTFT/TPOT percentiles to meet it, on top of the
+/// aggregate check — a mix can be feasible in aggregate yet infeasible for
+/// a latency-critical minority class.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestClass {
     pub name: String,
     pub weight: f64,
     pub input_len: LengthDist,
     pub gen_len: LengthDist,
+    /// Optional per-class SLO budget. `None` means the class is covered by
+    /// the aggregate SLO only. In JSON this is an `"slo"` object; fields
+    /// missing from it fall back to the paper defaults (`Slo::default`).
+    pub slo: Option<Slo>,
 }
 
 impl RequestClass {
@@ -164,17 +173,24 @@ impl RequestClass {
                 self.name, self.weight
             )));
         }
+        if let Some(slo) = &self.slo {
+            slo.validate()?;
+        }
         self.input_len.validate()?;
         self.gen_len.validate()
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("weight", Json::Num(self.weight)),
             ("input_len", self.input_len.to_json()),
             ("gen_len", self.gen_len.to_json()),
-        ])
+        ];
+        if let Some(slo) = &self.slo {
+            pairs.push(("slo", slo.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<RequestClass, Error> {
@@ -193,6 +209,7 @@ impl RequestClass {
                 j.get("gen_len")
                     .ok_or_else(|| Error::config("class missing 'gen_len'"))?,
             )?,
+            slo: j.get("slo").map(Slo::from_json).transpose()?,
         };
         c.validate()?;
         Ok(c)
@@ -228,6 +245,7 @@ impl Workload {
                 weight: 1.0,
                 input_len: scenario.input_len.clone(),
                 gen_len: scenario.gen_len.clone(),
+                slo: None,
             }],
             base_rate: 1.0,
             n_requests: scenario.n_requests,
@@ -254,18 +272,21 @@ impl Workload {
                     weight: 0.7,
                     input_len: LengthDist::LogNormal { mu: 6.0, sigma: 0.8, cap: 4096 },
                     gen_len: LengthDist::Uniform { lo: 32, hi: 256 },
+                    slo: None,
                 },
                 RequestClass {
                     name: "summarization".into(),
                     weight: 0.2,
                     input_len: LengthDist::Fixed(8192),
                     gen_len: LengthDist::Fixed(512),
+                    slo: None,
                 },
                 RequestClass {
                     name: "codegen".into(),
                     weight: 0.1,
                     input_len: LengthDist::Uniform { lo: 256, hi: 2048 },
                     gen_len: LengthDist::LogNormal { mu: 5.5, sigma: 0.6, cap: 2048 },
+                    slo: None,
                 },
             ],
             base_rate: 1.0,
@@ -326,6 +347,18 @@ impl Workload {
 
     pub fn upper_gen(&self) -> u64 {
         self.classes.iter().map(|c| c.gen_len.upper()).max().unwrap_or(1)
+    }
+
+    /// The per-class SLO budgets of the mix, as (class index, SLO) pairs —
+    /// empty when no class declares one. Feasibility (Algorithm 9) then
+    /// additionally requires each listed class to meet its own budget,
+    /// checked against the simulator's per-class percentiles.
+    pub fn class_slos(&self) -> Vec<(u16, Slo)> {
+        self.classes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.slo.map(|s| (i as u16, s)))
+            .collect()
     }
 
     /// Cumulative (unnormalized) class weights, for weighted sampling.
@@ -434,12 +467,14 @@ mod tests {
                     weight: 3.0,
                     input_len: LengthDist::Fixed(1000),
                     gen_len: LengthDist::Fixed(10),
+                    slo: None,
                 },
                 RequestClass {
                     name: "b".into(),
                     weight: 1.0,
                     input_len: LengthDist::Fixed(2000),
                     gen_len: LengthDist::Fixed(50),
+                    slo: None,
                 },
             ],
             ..Workload::preset("op1").unwrap()
@@ -449,6 +484,32 @@ mod tests {
         assert_eq!(w.upper_input(), 2000);
         assert_eq!(w.upper_gen(), 50);
         assert_eq!(w.cumulative_weights(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn class_slo_overrides_roundtrip_and_validate() {
+        let mut w = mix3();
+        assert!(w.class_slos().is_empty());
+        w.classes[1].slo = Some(Slo { ttft: 0.8, tpot: 0.05, ..Slo::default() });
+        let back = Workload::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        let slos = back.class_slos();
+        assert_eq!(slos.len(), 1);
+        assert_eq!(slos[0].0, 1);
+        assert_eq!(slos[0].1.ttft, 0.8);
+        // A partial JSON override inherits the paper defaults.
+        let j = Json::parse(
+            r#"{"classes": [{"input_len": 128, "gen_len": 16, "slo": {"ttft": 0.5}}]}"#,
+        )
+        .unwrap();
+        let w = Workload::from_json(&j).unwrap();
+        let slo = w.classes[0].slo.unwrap();
+        assert_eq!(slo.ttft, 0.5);
+        assert_eq!(slo.tpot, Slo::default().tpot);
+        // An invalid per-class SLO is a config error.
+        let mut bad = mix3();
+        bad.classes[0].slo = Some(Slo { ttft: -1.0, ..Slo::default() });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

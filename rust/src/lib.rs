@@ -21,6 +21,11 @@
 //!   scoped worker threads with deterministic, thread-count-independent
 //!   rankings.
 //!
+//! Inverted by a fourth layer, the [`planner`] (`bestserve plan`): given a
+//! target traffic level and an SLO, sweep hardware profiles × cluster sizes
+//! × strategies, and report the cheapest feasible deployment plus the
+//! Pareto frontier over {goodput, cards, $/hr, $/1M output tokens}.
+//!
 //! All three layers consume the **workload plane**
 //! ([`config::Workload`]): an arrival process (Poisson / bursty
 //! Gamma-renewal / deterministic / trace replay) crossed with a weighted
@@ -47,6 +52,7 @@ pub mod config;
 pub mod estimator;
 pub mod runtime;
 pub mod optimizer;
+pub mod planner;
 pub mod report;
 pub mod simulator;
 pub mod testbed;

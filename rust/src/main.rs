@@ -7,6 +7,8 @@
 //!   sweep      P90s vs arrival rate (Figures 7/9)
 //!   optimize   rank all strategies by goodput (the Optimizer, §3.5),
 //!              fanned out across worker threads (--threads)
+//!   plan       invert the optimizer: target rate + SLO → min-cost cluster
+//!              plans and a Pareto frontier over hardware profiles
 //!   testbed    token-level ground-truth serving run
 //!   validate   BestServe vs ground truth across a strategy space (Fig. 11)
 
@@ -14,14 +16,15 @@ use std::sync::Arc;
 
 use bestserve::cli::Args;
 use bestserve::config::{
-    HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy, StrategySpace,
-    Workload,
+    EfficiencyParams, HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy,
+    StrategySpace, Workload,
 };
 use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{
     optimize_parallel, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
 };
+use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
 use bestserve::report;
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, SimParams, SpanMode};
@@ -48,6 +51,17 @@ COMMANDS
                              Output is identical for any thread count)
             [--check-memory] (reject strategies whose weights+KV overflow HBM)
             [--no-colloc] [--no-disagg] [--no-dynamic] (family filters)
+  plan      --target-rate R (req/s) | --target-rates lo:hi:step
+            [--workload mix.json | --scenario OP]
+            [--hardware profiles.json | preset[,preset...]]  (default: all
+                             presets; a .json file is a profile registry,
+                             each profile priced by its hourly_cost)
+            [--max-cards 16] [--tp 1,2,4,8] [--threads N] [--check-memory]
+            [--tolerance 0.1] [--repeats 1] [--out DIR]
+            Sweeps hardware x cluster size x strategy, then reports the
+            cheapest feasible plan per target and the Pareto frontier over
+            {goodput, cards, $/hr, $/1M output tokens}. Deterministic for
+            any --threads.
   testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
             [--trace F]     (replay a CSV trace instead of generated traffic)
   validate  --scenario OP [--max-cards 8] [--tp 2,4,8] [--n N] [--out DIR]
@@ -395,6 +409,103 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The planner's hardware axis: `--hardware` may name a profile-registry
+/// JSON file or a comma-separated list of presets; absent, every preset is
+/// swept.
+fn hardware_profiles_from(args: &Args) -> Result<Vec<HardwareConfig>> {
+    match args.get("hardware") {
+        None => Ok(HardwareConfig::presets()),
+        Some(v) if v.ends_with(".json") || std::path::Path::new(v).is_file() => {
+            HardwareConfig::registry_from_file(v)
+        }
+        Some(v) => {
+            let profiles: Vec<HardwareConfig> = v
+                .split(',')
+                .map(|name| HardwareConfig::preset(name.trim()))
+                .collect::<Result<_>>()?;
+            // Same ambiguity rule as the JSON registry: duplicate profile
+            // names would produce indistinguishable plan rows.
+            for (i, a) in profiles.iter().enumerate() {
+                if profiles[..i].iter().any(|b| b.name == a.name) {
+                    return Err(Error::config(format!(
+                        "--hardware lists profile '{}' twice",
+                        a.name
+                    )));
+                }
+            }
+            Ok(profiles)
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    // Model + efficiency come from --config (its hardware entry is ignored:
+    // the planner sweeps its own hardware axis) or the --model preset.
+    let (model, eff) = match args.get("config") {
+        Some(path) => {
+            let p = Platform::from_file(path)?;
+            (p.model, p.eff)
+        }
+        None => (
+            ModelConfig::preset(&args.str_or("model", "codellama-34b"))?,
+            EfficiencyParams::paper_defaults(),
+        ),
+    };
+    let profiles = hardware_profiles_from(args)?;
+    let workload = workload_from(args)?;
+    let slo = slo_from(args)?;
+    let targets = if args.get("target-rates").is_some() {
+        args.rates_or("target-rates", &[])?
+    } else {
+        vec![args.f64_or("target-rate", 2.0)?]
+    };
+    let cfg = PlannerConfig {
+        targets,
+        space: StrategySpace {
+            max_cards: args.u32_or("max-cards", 16)?,
+            tp_choices: args.u32_list_or("tp", &[1, 2, 4, 8])?,
+            bmax_prefill: args.u32_or("bmax-prefill", 4)?,
+            bmax_decode: args.u32_or("bmax-decode", 16)?,
+            include_collocation: !args.flag("no-colloc"),
+            include_disaggregation: !args.flag("no-disagg"),
+            include_dynamic: !args.flag("no-dynamic"),
+        },
+        goodput: GoodputConfig {
+            tolerance: args.f64_or("tolerance", 0.1)?,
+            repeats: args.usize_or("repeats", 1)?,
+            ..GoodputConfig::default()
+        },
+        sim_params: sim_params_from(args)?,
+        check_memory: args.flag("check-memory"),
+    };
+    let threads = args.usize_or("threads", default_threads())?.max(1);
+    let t0 = std::time::Instant::now();
+    let rep = plan(&model, &eff, &profiles, &workload, &slo, &LinearCardCost, &cfg, threads)?;
+    println!(
+        "capacity plan | {} on {} profile(s) | workload {} | {} plan points in {:.1}s on {} thread(s)",
+        model.name,
+        profiles.len(),
+        rep.workload,
+        rep.points.len(),
+        t0.elapsed().as_secs_f64(),
+        threads
+    );
+    println!(
+        "\nPareto frontier ({} of {} plans survive dominance pruning):",
+        rep.frontier.len(),
+        rep.points.len()
+    );
+    print!("{}", report::frontier_table(&rep).render());
+    println!("\nmin-cost plan per target rate:");
+    print!("{}", report::min_cost_table(&rep).render());
+    if let Some(out) = args.get("out") {
+        let path = std::path::Path::new(out).join(format!("plan_{}.csv", rep.workload));
+        rep.to_csv().save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_testbed(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
@@ -520,6 +631,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "optimize" => cmd_optimize(&args),
+        "plan" => cmd_plan(&args),
         "testbed" => cmd_testbed(&args),
         "validate" => cmd_validate(&args),
         "help" | "--help" | "-h" => {

@@ -107,6 +107,18 @@ pub struct RankedStrategy {
     pub memory_rejected: bool,
 }
 
+impl RankedStrategy {
+    /// The zero-goodput row of a strategy the memory pre-filter rejected.
+    fn rejected(strategy: &Strategy) -> RankedStrategy {
+        RankedStrategy {
+            strategy: strategy.clone(),
+            goodput: 0.0,
+            normalized: 0.0,
+            memory_rejected: true,
+        }
+    }
+}
+
 /// Full optimizer output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerReport {
@@ -126,6 +138,35 @@ impl OptimizerReport {
 /// — so the ranking is independent of the sweep's thread count.
 pub(crate) fn rank(ranked: &mut [RankedStrategy]) {
     ranked.sort_by(|a, b| rank_desc(a.normalized, b.normalized));
+}
+
+/// Score ONE strategy: the per-point goodput probe both the optimizer sweep
+/// and the capacity planner (`crate::planner`) fan out over worker threads.
+/// Runs the memory pre-filter (when `check_mem`), then the Algorithm-8
+/// bisection, and returns the strategy with its goodput and per-card
+/// normalization. Deterministic in `(strategy, workload, sim_params.seed)`.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_strategy(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    workload: &Workload,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+    check_mem: bool,
+) -> Result<RankedStrategy> {
+    if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
+        return Ok(RankedStrategy::rejected(strategy));
+    }
+    let g = find_goodput(model, platform, strategy, workload, slo, sim_params, cfg)?;
+    let cards = strategy.total_cards() as f64;
+    Ok(RankedStrategy {
+        strategy: strategy.clone(),
+        goodput: g,
+        normalized: g / cards,
+        memory_rejected: false,
+    })
 }
 
 /// Enumerate the strategy space and rank by normalized goodput (§3.5).
@@ -202,31 +243,22 @@ pub fn optimize_parallel(
     }
 
     let eval = |strategy: &Strategy| -> Result<RankedStrategy> {
+        // Rejected strategies never built a model, so pre-filter before
+        // the `models` lookup; survivors then skip the probe's own check
+        // (`check_mem: false` below) — it already ran here.
         if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
-            return Ok(RankedStrategy {
-                strategy: strategy.clone(),
-                goodput: 0.0,
-                normalized: 0.0,
-                memory_rejected: true,
-            });
+            return Ok(RankedStrategy::rejected(strategy));
         }
-        let model = &models[&strategy.tp];
-        let g = find_goodput(
-            model.as_ref(),
+        probe_strategy(
+            models[&strategy.tp].as_ref(),
             platform,
             strategy,
             workload,
             slo,
             sim_params,
             cfg,
-        )?;
-        let cards = strategy.total_cards() as f64;
-        Ok(RankedStrategy {
-            strategy: strategy.clone(),
-            goodput: g,
-            normalized: g / cards,
-            memory_rejected: false,
-        })
+            false, // pre-filter already applied above
+        )
     };
 
     let mut ranked = crate::util::parallel::parallel_map(&strategies, threads, eval)?;

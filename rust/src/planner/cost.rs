@@ -1,0 +1,79 @@
+//! Cost models: price a candidate deployment in $/hour, and convert an
+//! operating point into $ per million generated tokens. The planner ranks
+//! and prunes plans on these two axes (besides goodput and card count), so
+//! the cost model is an explicit extension point: implement [`CostModel`]
+//! and pass it to [`crate::planner::plan`] — the ROADMAP "add a cost model"
+//! recipe walks through it.
+
+use crate::config::HardwareConfig;
+
+/// Prices a deployment. Implementations must be cheap and deterministic:
+/// the planner calls `hourly` once per plan point from parallel workers
+/// (hence the `Sync` bound).
+pub trait CostModel: Sync {
+    /// $/hour of running `cards` cards of hardware `hw`.
+    fn hourly(&self, hw: &HardwareConfig, cards: u32) -> f64;
+}
+
+/// The default model: linear in card count at the profile's per-card
+/// on-demand rate (`HardwareConfig::hourly_cost`).
+pub struct LinearCardCost;
+
+impl CostModel for LinearCardCost {
+    fn hourly(&self, hw: &HardwareConfig, cards: u32) -> f64 {
+        cards as f64 * hw.hourly_cost
+    }
+}
+
+/// $ per 1M generated tokens at a goodput operating point: the hourly bill
+/// spread over `goodput · mean_gen · 3600` tokens. Infinite when the point
+/// serves nothing (zero goodput) — such plans can never be cost-optimal
+/// per token and never survive Pareto pruning.
+pub fn per_million_tokens(cost_per_hour: f64, goodput: f64, mean_gen_tokens: f64) -> f64 {
+    let tokens_per_hour = goodput * mean_gen_tokens * 3600.0;
+    if tokens_per_hour > 0.0 {
+        cost_per_hour / tokens_per_hour * 1e6
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_card_cost_scales_with_cards_and_rate() {
+        let a100 = HardwareConfig::a100_80g();
+        assert!((LinearCardCost.hourly(&a100, 8) - 8.0 * a100.hourly_cost).abs() < 1e-12);
+        let h100 = HardwareConfig::h100_sxm();
+        // Same card count, pricier hardware: strictly more per hour.
+        assert!(LinearCardCost.hourly(&h100, 8) > LinearCardCost.hourly(&a100, 8));
+    }
+
+    #[test]
+    fn per_million_tokens_math() {
+        // $7.20/hr at 10 req/s × 100 tokens/req = 3.6M tokens/hr → $2/1M.
+        let c = per_million_tokens(7.2, 10.0, 100.0);
+        assert!((c - 2.0).abs() < 1e-9, "{c}");
+        // Zero goodput: infinite $/token, not NaN or a divide-by-zero panic.
+        assert_eq!(per_million_tokens(7.2, 0.0, 100.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn custom_cost_models_plug_in() {
+        // A reserved-capacity discount — the "add a cost model" recipe's
+        // worked example, pinned here so the trait stays implementable.
+        struct Reserved {
+            discount: f64,
+        }
+        impl CostModel for Reserved {
+            fn hourly(&self, hw: &HardwareConfig, cards: u32) -> f64 {
+                LinearCardCost.hourly(hw, cards) * (1.0 - self.discount)
+            }
+        }
+        let hw = HardwareConfig::ascend_910b3();
+        let full = LinearCardCost.hourly(&hw, 4);
+        assert!((Reserved { discount: 0.3 }.hourly(&hw, 4) - 0.7 * full).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,519 @@
+//! The **Planner** — the inverse of the [`crate::optimizer`]. The optimizer
+//! answers *"given a fixed cluster, which strategy maximizes goodput?"*;
+//! the deployment question practitioners actually ask is the other way
+//! around: *"given a target traffic level and an SLO, what is the cheapest
+//! cluster — hardware, size, and serving strategy — that serves it?"*
+//!
+//! [`plan`] sweeps the full cross product of
+//!
+//! * **hardware profiles** (a JSON-loadable registry,
+//!   [`crate::config::HardwareConfig::registry_from_file`], each profile
+//!   priced by its `hourly_cost`),
+//! * **cluster sizes** — every strategy of the [`StrategySpace`] up to the
+//!   card ceiling `M = space.max_cards`, and
+//! * **serving strategies** — collocation `Nm`, disaggregation `NpMd`, and
+//!   the dynamic PD-reallocation pool `Nf`,
+//!
+//! scoring each point with the same Algorithm-8 goodput bisection the
+//! optimizer uses ([`crate::optimizer::probe_strategy`]) and pricing it
+//! through a pluggable [`CostModel`]. The output is
+//!
+//! * the **minimum-cost feasible plan** per target rate (cheapest $/hour
+//!   among plans whose goodput covers the target), and
+//! * the **Pareto frontier** over {goodput, card count, $/hour, $/1M
+//!   generated tokens}, with dominated plans pruned ([`pareto`]).
+//!
+//! Per-class SLO budgets in the workload mix are honored automatically:
+//! the goodput probe's feasibility check already enforces them.
+//!
+//! Determinism: plan points fan out through
+//! [`crate::util::parallel::parallel_map`] with index-ordered reduction and
+//! the frontier/min-cost selections break ties by sweep order, so `plan`
+//! output is byte-identical for any `--threads` value — exactly like
+//! `optimize_parallel`.
+
+pub mod cost;
+pub mod pareto;
+
+pub use cost::{CostModel, LinearCardCost};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{
+    EfficiencyParams, HardwareConfig, ModelConfig, Platform, Slo, Strategy, StrategySpace,
+    Workload,
+};
+use crate::error::{Error, Result};
+use crate::estimator::{AnalyticOracle, LatencyModel};
+use crate::optimizer::{probe_strategy, GoodputConfig};
+use crate::simulator::SimParams;
+use crate::util::csv::Csv;
+use crate::util::parallel::parallel_map;
+
+/// Planner search configuration: the targets to plan for and the axes to
+/// sweep.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Target effective arrival rates (req/s) the deployment must sustain.
+    /// One min-cost plan is reported per target; a range of targets shares
+    /// a single sweep.
+    pub targets: Vec<f64>,
+    /// Strategy-space template swept *per hardware profile*. Its
+    /// `max_cards` is the cluster-size ceiling `M`: every cluster size
+    /// `1..=M` appears because the enumeration contains every strategy
+    /// with `total_cards() <= M`.
+    pub space: StrategySpace,
+    pub goodput: GoodputConfig,
+    pub sim_params: SimParams,
+    /// Reject plans whose weights + peak KV overflow the profile's HBM
+    /// before simulating ([`crate::optimizer::check_memory`]).
+    pub check_memory: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            targets: vec![1.0],
+            space: StrategySpace::default(),
+            goodput: GoodputConfig::default(),
+            sim_params: SimParams::default(),
+            check_memory: false,
+        }
+    }
+}
+
+impl PlannerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.targets.is_empty() {
+            return Err(Error::config("planner needs at least one target rate"));
+        }
+        for &t in &self.targets {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(Error::config(format!(
+                    "planner target rates must be positive and finite, got {t}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One evaluated plan point: a (hardware, strategy) deployment with its
+/// goodput and price tags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanPoint {
+    /// Hardware profile name.
+    pub hardware: String,
+    pub strategy: Strategy,
+    /// Total accelerator cards (`strategy.total_cards()`).
+    pub cards: u32,
+    /// Goodput in req/s (0 if infeasible even at λ_min).
+    pub goodput: f64,
+    /// Goodput per card.
+    pub normalized: f64,
+    /// Rejected by the memory pre-filter without simulating.
+    pub memory_rejected: bool,
+    /// $/hour of the deployment under the plan's cost model.
+    pub cost_per_hour: f64,
+    /// $ per 1M generated tokens at the goodput operating point
+    /// (infinite when goodput is 0).
+    pub cost_per_mtok: f64,
+}
+
+/// Full planner output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanReport {
+    /// Name of the planned-for workload.
+    pub workload: String,
+    /// The target rates planned for (same order as [`PlanReport::min_cost`]).
+    pub targets: Vec<f64>,
+    /// Every swept point, in sweep (profile × strategy enumeration) order.
+    pub points: Vec<PlanPoint>,
+    /// The dominance-pruned Pareto frontier, in sweep order.
+    pub frontier: Vec<PlanPoint>,
+    /// Per target: the cheapest plan whose goodput covers it (`None` when
+    /// the target is unreachable within the swept space).
+    pub min_cost: Vec<Option<PlanPoint>>,
+}
+
+impl PlanReport {
+    /// Best achievable goodput using at most `cards` cards — monotone
+    /// non-decreasing in `cards`, because a larger budget only ever adds
+    /// candidate deployments (the frontier-monotonicity invariant).
+    pub fn best_goodput_within(&self, cards: u32) -> f64 {
+        self.points
+            .iter()
+            .filter(|p| p.cards <= cards)
+            .map(|p| p.goodput)
+            .fold(0.0, f64::max)
+    }
+
+    /// Machine-readable dump of the sweep: one row per point, with a
+    /// frontier marker.
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "hardware",
+            "strategy",
+            "cards",
+            "goodput",
+            "normalized",
+            "cost_per_hour",
+            "cost_per_mtok",
+            "on_frontier",
+        ]);
+        for p in &self.points {
+            let on_frontier = self.frontier.contains(p);
+            c.row(&[
+                p.hardware.clone(),
+                p.strategy.to_string(),
+                p.cards.to_string(),
+                format!("{}", p.goodput),
+                format!("{}", p.normalized),
+                format!("{}", p.cost_per_hour),
+                format!("{}", p.cost_per_mtok),
+                (on_frontier as u8).to_string(),
+            ]);
+        }
+        c
+    }
+}
+
+/// Cheapest feasible plan for `target` req/s: minimum $/hour, ties broken
+/// by fewer cards, then sweep order (`Iterator::min_by` keeps the first of
+/// equals) — deterministic for any thread count.
+fn min_cost_plan(points: &[PlanPoint], target: f64) -> Option<&PlanPoint> {
+    points
+        .iter()
+        .filter(|p| !p.memory_rejected && p.goodput >= target)
+        .min_by(|a, b| {
+            a.cost_per_hour
+                .total_cmp(&b.cost_per_hour)
+                .then(a.cards.cmp(&b.cards))
+        })
+}
+
+/// Sweep hardware profiles × the strategy space, score every point with
+/// the Algorithm-8 goodput bisection, and reduce to min-cost plans and the
+/// Pareto frontier. See the module docs for the contract; `threads` fans
+/// the per-point probes out without changing any output bit.
+#[allow(clippy::too_many_arguments)]
+pub fn plan(
+    model: &ModelConfig,
+    eff: &EfficiencyParams,
+    profiles: &[HardwareConfig],
+    workload: &Workload,
+    slo: &Slo,
+    cost_model: &dyn CostModel,
+    cfg: &PlannerConfig,
+    threads: usize,
+) -> Result<PlanReport> {
+    if profiles.is_empty() {
+        return Err(Error::config("planner needs at least one hardware profile"));
+    }
+    for h in profiles {
+        h.validate()?;
+    }
+    model.validate()?;
+    workload.validate()?;
+    slo.validate()?;
+    cfg.validate()?;
+
+    let strategies = cfg.space.enumerate();
+    if strategies.is_empty() {
+        return Err(Error::config(
+            "planner strategy space is empty (check max_cards / tp choices / family filters)",
+        ));
+    }
+
+    // Flatten (profile × strategy) into one deterministic work list.
+    let platforms: Vec<Platform> = profiles
+        .iter()
+        .map(|hw| Platform {
+            model: model.clone(),
+            hardware: hw.clone(),
+            eff: eff.clone(),
+        })
+        .collect();
+    let mut items: Vec<(usize, &Strategy)> =
+        Vec::with_capacity(profiles.len() * strategies.len());
+    for hi in 0..profiles.len() {
+        for st in &strategies {
+            items.push((hi, st));
+        }
+    }
+
+    // Pre-build every latency model serially, one per (profile, tp): the
+    // workers then only share `Arc<dyn LatencyModel>`, exactly like
+    // `optimize_parallel`.
+    let mut models: HashMap<(usize, u32), Arc<dyn LatencyModel>> = HashMap::new();
+    for &(hi, st) in &items {
+        if cfg.check_memory
+            && !crate::optimizer::check_memory(&platforms[hi], st, workload).fits()
+        {
+            continue;
+        }
+        models
+            .entry((hi, st.tp))
+            .or_insert_with(|| Arc::new(AnalyticOracle::new(platforms[hi].clone(), st.tp)));
+    }
+
+    let mean_gen = workload.mean_gen();
+    let eval = |&(hi, st): &(usize, &Strategy)| -> Result<PlanPoint> {
+        let platform = &platforms[hi];
+        let ranked = if cfg.check_memory
+            && !crate::optimizer::check_memory(platform, st, workload).fits()
+        {
+            // Rejected points never built a latency model (the serial
+            // pre-build above skipped them), so synthesize the zero row
+            // instead of going through the probe.
+            crate::optimizer::RankedStrategy {
+                strategy: st.clone(),
+                goodput: 0.0,
+                normalized: 0.0,
+                memory_rejected: true,
+            }
+        } else {
+            probe_strategy(
+                models[&(hi, st.tp)].as_ref(),
+                platform,
+                st,
+                workload,
+                slo,
+                cfg.sim_params,
+                &cfg.goodput,
+                false, // pre-filter already applied above
+            )?
+        };
+        let cards = st.total_cards();
+        let cost_per_hour = cost_model.hourly(&platform.hardware, cards);
+        Ok(PlanPoint {
+            hardware: platform.hardware.name.clone(),
+            strategy: ranked.strategy,
+            cards,
+            goodput: ranked.goodput,
+            normalized: ranked.normalized,
+            memory_rejected: ranked.memory_rejected,
+            cost_per_hour,
+            cost_per_mtok: cost::per_million_tokens(cost_per_hour, ranked.goodput, mean_gen),
+        })
+    };
+    let points = parallel_map(&items, threads, eval)?;
+
+    let frontier = pareto::frontier(&points);
+    let min_cost = cfg
+        .targets
+        .iter()
+        .map(|&t| min_cost_plan(&points, t).cloned())
+        .collect();
+    Ok(PlanReport {
+        workload: workload.name.clone(),
+        targets: cfg.targets.clone(),
+        points,
+        frontier,
+        min_cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    fn small_cfg(targets: Vec<f64>, max_cards: u32) -> PlannerConfig {
+        PlannerConfig {
+            targets,
+            space: StrategySpace {
+                max_cards,
+                tp_choices: vec![1, 2],
+                ..StrategySpace::default()
+            },
+            goodput: GoodputConfig { tolerance: 0.3, ..GoodputConfig::default() },
+            sim_params: SimParams::default(),
+            check_memory: false,
+        }
+    }
+
+    fn small_plan(targets: Vec<f64>, max_cards: u32, threads: usize) -> PlanReport {
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3(), HardwareConfig::h100_sxm()];
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 150));
+        plan(
+            &platform.model,
+            &platform.eff,
+            &profiles,
+            &workload,
+            &Slo::paper_default(),
+            &LinearCardCost,
+            &small_cfg(targets, max_cards),
+            threads,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_reports_min_cost_and_pruned_frontier() {
+        let rep = small_plan(vec![0.5, 1e6], 4, 1);
+        // Every (profile × strategy) point is scored.
+        assert_eq!(rep.points.len() % 2, 0);
+        assert!(!rep.points.is_empty());
+        assert!(!rep.frontier.is_empty());
+        // Frontier ⊆ points, and no survivor is dominated by ANY point.
+        for f in &rep.frontier {
+            assert!(rep.points.contains(f));
+            assert!(
+                !rep.points.iter().any(|q| pareto::dominates(q, f)),
+                "dominated plan survived pruning: {f:?}"
+            );
+        }
+        // The modest target is coverable: its min-cost plan exists, covers
+        // it, and no cheaper covering plan exists in the sweep.
+        let best = rep.min_cost[0].as_ref().expect("0.5 req/s must be plannable");
+        assert!(best.goodput >= 0.5);
+        for p in &rep.points {
+            if p.goodput >= 0.5 {
+                assert!(p.cost_per_hour >= best.cost_per_hour);
+            }
+        }
+        // The absurd target is not: reported as None, not as a bogus plan.
+        assert!(rep.min_cost[1].is_none());
+    }
+
+    #[test]
+    fn plan_is_thread_count_invariant_bit_for_bit() {
+        let serial = small_plan(vec![0.5], 4, 1);
+        for threads in [2, 4, 8] {
+            let par = small_plan(vec![0.5], 4, threads);
+            assert_eq!(serial, par, "threads={threads}");
+            for (a, b) in serial.points.iter().zip(par.points.iter()) {
+                assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+                assert_eq!(a.cost_per_hour.to_bits(), b.cost_per_hour.to_bits());
+                assert_eq!(a.cost_per_mtok.to_bits(), b.cost_per_mtok.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_monotonicity_adding_cards_never_lowers_best_goodput() {
+        let rep = small_plan(vec![0.5], 6, 4);
+        let mut prev = 0.0;
+        for cards in 1..=6 {
+            let best = rep.best_goodput_within(cards);
+            assert!(
+                best >= prev,
+                "best goodput dropped from {prev} to {best} at {cards} cards"
+            );
+            prev = best;
+        }
+        // And a bigger sweep can only extend, never shrink, the per-budget
+        // best (same seed, superset of candidate plans).
+        let wide = small_plan(vec![0.5], 8, 4);
+        for cards in 1..=6 {
+            assert!(wide.best_goodput_within(cards) >= rep.best_goodput_within(cards));
+        }
+    }
+
+    #[test]
+    fn cost_model_is_pluggable() {
+        // Halving every price must exactly halve the min-cost bill without
+        // changing which plan wins.
+        struct Half;
+        impl CostModel for Half {
+            fn hourly(&self, hw: &HardwareConfig, cards: u32) -> f64 {
+                0.5 * LinearCardCost.hourly(hw, cards)
+            }
+        }
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3()];
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 150));
+        let run = |cost_model: &dyn CostModel| {
+            plan(
+                &platform.model,
+                &platform.eff,
+                &profiles,
+                &workload,
+                &Slo::paper_default(),
+                cost_model,
+                &small_cfg(vec![0.5], 3),
+                2,
+            )
+            .unwrap()
+        };
+        let full = run(&LinearCardCost);
+        let half = run(&Half);
+        let (a, b) = (
+            full.min_cost[0].as_ref().unwrap(),
+            half.min_cost[0].as_ref().unwrap(),
+        );
+        assert_eq!(a.strategy, b.strategy);
+        assert!((b.cost_per_hour - 0.5 * a.cost_per_hour).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planner_rejects_degenerate_inputs() {
+        let platform = Platform::paper_testbed();
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 100));
+        let base = small_cfg(vec![1.0], 2);
+        let run = |profiles: &[HardwareConfig], cfg: &PlannerConfig| {
+            plan(
+                &platform.model,
+                &platform.eff,
+                profiles,
+                &workload,
+                &Slo::paper_default(),
+                &LinearCardCost,
+                cfg,
+                1,
+            )
+        };
+        assert!(run(&[], &base).is_err());
+        let profiles = vec![HardwareConfig::ascend_910b3()];
+        assert!(run(&profiles, &PlannerConfig { targets: vec![], ..base.clone() }).is_err());
+        assert!(
+            run(&profiles, &PlannerConfig { targets: vec![-1.0], ..base.clone() }).is_err()
+        );
+        assert!(run(
+            &profiles,
+            &PlannerConfig {
+                space: StrategySpace { tp_choices: vec![], ..base.space.clone() },
+                ..base.clone()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn memory_filter_marks_oom_plans() {
+        // CodeLlama-34b needs ~68 GB of weights: tp=1 can never fit a
+        // 64 GB card, so every tp=1 plan must be memory-rejected and the
+        // min-cost winner must be a tp>=2 deployment.
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3()];
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 150));
+        let cfg = PlannerConfig {
+            check_memory: true,
+            ..small_cfg(vec![0.2], 4)
+        };
+        // Loose SLO: this test pins the memory filter, not SLO tightness
+        // (a tp=2 34B decode step sits near the paper's 70 ms budget).
+        let slo = Slo { ttft: 5.0, tpot: 0.5, ..Slo::paper_default() };
+        let rep = plan(
+            &platform.model,
+            &platform.eff,
+            &profiles,
+            &workload,
+            &slo,
+            &LinearCardCost,
+            &cfg,
+            2,
+        )
+        .unwrap();
+        assert!(rep.points.iter().any(|p| p.memory_rejected));
+        for p in &rep.points {
+            assert_eq!(p.memory_rejected, p.strategy.tp < 2, "{p:?}");
+        }
+        let best = rep.min_cost[0].as_ref().expect("tp=2 plans are feasible");
+        assert!(best.strategy.tp >= 2);
+        assert!(rep.frontier.iter().all(|p| !p.memory_rejected));
+    }
+}

@@ -1,0 +1,107 @@
+//! Dominance pruning over the planner's four objectives: goodput
+//! (maximize), card count, $/hour, and $/1M generated tokens (all
+//! minimized). A plan that is no better than another on every axis — and
+//! strictly worse on at least one — is dominated and never worth
+//! deploying; the Pareto frontier is what survives.
+
+use super::PlanPoint;
+
+/// Does `b` dominate `a`? At least as good on all four objectives and
+/// strictly better on one. Two plans with identical objective vectors do
+/// NOT dominate each other (both survive pruning).
+pub fn dominates(b: &PlanPoint, a: &PlanPoint) -> bool {
+    let at_least_as_good = b.goodput >= a.goodput
+        && b.cards <= a.cards
+        && b.cost_per_hour <= a.cost_per_hour
+        && b.cost_per_mtok <= a.cost_per_mtok;
+    let strictly_better = b.goodput > a.goodput
+        || b.cards < a.cards
+        || b.cost_per_hour < a.cost_per_hour
+        || b.cost_per_mtok < a.cost_per_mtok;
+    at_least_as_good && strictly_better
+}
+
+/// The Pareto frontier of a plan sweep. Zero-goodput points (SLO-infeasible
+/// at any rate, or memory-rejected) are excluded up front: they serve
+/// nothing, so they are never deployment candidates even where their card
+/// count undercuts every feasible plan. Survivors keep their sweep
+/// (enumeration) order, so the frontier is identical for any thread count.
+pub fn frontier(points: &[PlanPoint]) -> Vec<PlanPoint> {
+    points
+        .iter()
+        .filter(|p| p.goodput > 0.0 && !p.memory_rejected)
+        .filter(|p| !points.iter().any(|q| !q.memory_rejected && dominates(q, p)))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+
+    fn point(goodput: f64, cards: u32, rate_per_card: f64) -> PlanPoint {
+        let cost_per_hour = cards as f64 * rate_per_card;
+        PlanPoint {
+            hardware: "test-hw".into(),
+            strategy: Strategy::collocation(cards, 1),
+            cards,
+            goodput,
+            normalized: if cards > 0 { goodput / cards as f64 } else { 0.0 },
+            memory_rejected: false,
+            cost_per_hour,
+            cost_per_mtok: super::super::cost::per_million_tokens(cost_per_hour, goodput, 64.0),
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement() {
+        let a = point(4.0, 4, 1.0);
+        let better = point(5.0, 4, 1.0);
+        assert!(dominates(&better, &a));
+        assert!(!dominates(&a, &better));
+        // Identical objective vectors: neither dominates.
+        let twin = point(4.0, 4, 1.0);
+        assert!(!dominates(&a, &twin));
+        assert!(!dominates(&twin, &a));
+        // Trade-off (more goodput for more cards): incomparable.
+        let big = point(9.0, 8, 1.0);
+        assert!(!dominates(&big, &a));
+        assert!(!dominates(&a, &big));
+    }
+
+    #[test]
+    fn frontier_prunes_dominated_keeps_tradeoffs() {
+        let pts = vec![
+            point(4.0, 4, 1.0),  // frontier: cheapest feasible
+            point(3.0, 4, 1.0),  // dominated by the first (less goodput, same cost)
+            point(9.0, 8, 1.0),  // frontier: more goodput for more cards
+            point(8.0, 8, 1.5),  // dominated by the third (less goodput, pricier)
+            point(0.0, 1, 1.0),  // zero goodput: excluded outright
+        ];
+        let f = frontier(&pts);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].goodput, 4.0);
+        assert_eq!(f[1].goodput, 9.0);
+        // Invariant: no survivor is dominated by any swept point.
+        for s in &f {
+            assert!(!pts.iter().any(|q| dominates(q, s)));
+        }
+    }
+
+    #[test]
+    fn memory_rejected_points_neither_survive_nor_dominate() {
+        let mut oom = point(100.0, 1, 1.0); // absurdly good numbers, but OOM
+        oom.memory_rejected = true;
+        let real = point(2.0, 4, 1.0);
+        let f = frontier(&[oom.clone(), real.clone()]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0], real);
+    }
+
+    #[test]
+    fn identical_plans_both_survive() {
+        let pts = vec![point(4.0, 4, 1.0), point(4.0, 4, 1.0)];
+        assert_eq!(frontier(&pts).len(), 2);
+    }
+}

@@ -219,6 +219,80 @@ pub fn role_occupancy_table(report: &SimReport) -> Option<Table> {
     Some(t)
 }
 
+/// The planner's Pareto-frontier panel: one row per plan surviving
+/// dominance pruning over {goodput, cards, $/hr, $/1M output tokens}, in
+/// sweep order (thread-count independent).
+pub fn frontier_table(plan: &crate::planner::PlanReport) -> Table {
+    let mut t = Table::new(&[
+        "hardware",
+        "strategy",
+        "cards",
+        "goodput (req/s)",
+        "per card",
+        "$/hr",
+        "$/1M tok",
+    ])
+    .numeric_body();
+    for p in &plan.frontier {
+        t.row(&[
+            p.hardware.clone(),
+            p.strategy.to_string(),
+            p.cards.to_string(),
+            rate(p.goodput),
+            rate(p.normalized),
+            format!("{:.2}", p.cost_per_hour),
+            money_per_mtok(p.cost_per_mtok),
+        ]);
+    }
+    t
+}
+
+/// The planner's headline answer: the cheapest feasible plan per target
+/// rate (or an explicit "unreachable" row).
+pub fn min_cost_table(plan: &crate::planner::PlanReport) -> Table {
+    let mut t = Table::new(&[
+        "target (req/s)",
+        "hardware",
+        "strategy",
+        "cards",
+        "goodput (req/s)",
+        "$/hr",
+        "$/1M tok",
+    ])
+    .numeric_body();
+    for (target, best) in plan.targets.iter().zip(&plan.min_cost) {
+        match best {
+            Some(p) => t.row(&[
+                rate(*target),
+                p.hardware.clone(),
+                p.strategy.to_string(),
+                p.cards.to_string(),
+                rate(p.goodput),
+                format!("{:.2}", p.cost_per_hour),
+                money_per_mtok(p.cost_per_mtok),
+            ]),
+            None => t.row(&[
+                rate(*target),
+                "-".into(),
+                "unreachable in sweep".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        };
+    }
+    t
+}
+
+fn money_per_mtok(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "inf".into()
+    }
+}
+
 /// Figures 7/9 — P90 TTFT & TPOT against request arrival rates.
 pub struct RateSweep {
     pub strategy: String,
@@ -450,6 +524,7 @@ mod tests {
             weight: 0.5,
             input_len: LengthDist::Fixed(s),
             gen_len: LengthDist::Fixed(g),
+            slo: None,
         };
         let w = Workload {
             name: "mix".into(),
@@ -490,6 +565,34 @@ mod tests {
         .unwrap();
         let rendered = role_occupancy_table(&dynamic).unwrap().render();
         assert!(rendered.contains("prefill") && rendered.contains("switches"), "{rendered}");
+    }
+
+    #[test]
+    fn planner_tables_render_frontier_and_unreachable_targets() {
+        use crate::planner::{PlanPoint, PlanReport};
+        let point = |hw: &str, goodput: f64, cards: u32| PlanPoint {
+            hardware: hw.into(),
+            strategy: Strategy::collocation(cards, 1),
+            cards,
+            goodput,
+            normalized: goodput / cards as f64,
+            memory_rejected: false,
+            cost_per_hour: cards as f64 * 2.0,
+            cost_per_mtok: if goodput > 0.0 { 1.25 } else { f64::INFINITY },
+        };
+        let plan = PlanReport {
+            workload: "t".into(),
+            targets: vec![1.0, 50.0],
+            points: vec![point("ascend", 2.0, 2), point("h100", 4.0, 4)],
+            frontier: vec![point("ascend", 2.0, 2), point("h100", 4.0, 4)],
+            min_cost: vec![Some(point("ascend", 2.0, 2)), None],
+        };
+        let f = frontier_table(&plan).render();
+        assert!(f.contains("ascend") && f.contains("h100"), "{f}");
+        assert!(f.contains("$/1M tok"));
+        let m = min_cost_table(&plan).render();
+        assert!(m.contains("unreachable"), "{m}");
+        assert!(m.contains("2m-tp1"), "{m}");
     }
 
     #[test]

@@ -110,6 +110,9 @@ pub struct SimReport {
     pub makespan: f64,
     pub ttfts: Vec<f64>,
     pub tpots: Vec<f64>,
+    /// Per-outcome class tags, parallel to `ttfts`/`tpots` — lets callers
+    /// take per-class percentiles at arbitrary q (the per-class SLO check).
+    pub classes: Vec<u16>,
     /// Per-class TTFT/TPOT breakdowns, ascending by class index. Empty for
     /// single-class workloads (the aggregate summaries are the breakdown).
     pub per_class: Vec<ClassStats>,
@@ -128,7 +131,8 @@ impl SimReport {
             .iter()
             .map(|o| o.completion)
             .fold(f64::NEG_INFINITY, f64::max);
-        let mut classes: Vec<u16> = outcomes.iter().map(|o| o.class).collect();
+        let class_tags: Vec<u16> = outcomes.iter().map(|o| o.class).collect();
+        let mut classes = class_tags.clone();
         classes.sort_unstable();
         classes.dedup();
         let per_class = if classes.len() <= 1 {
@@ -161,9 +165,29 @@ impl SimReport {
             makespan,
             ttfts,
             tpots,
+            classes: class_tags,
             per_class,
             role_occupancy: None,
         }
+    }
+
+    /// TTFT percentile of one class's sample (q in [0, 100]). Returns NaN
+    /// when the class produced no outcomes in this run.
+    pub fn class_ttft_pct(&self, class: u16, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.class_sample(class, &self.ttfts), q)
+    }
+
+    pub fn class_tpot_pct(&self, class: u16, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.class_sample(class, &self.tpots), q)
+    }
+
+    fn class_sample(&self, class: u16, values: &[f64]) -> Vec<f64> {
+        self.classes
+            .iter()
+            .zip(values)
+            .filter(|(c, _)| **c == class)
+            .map(|(_, v)| *v)
+            .collect()
     }
 
     /// Percentile of the TTFT sample (q in [0, 100]).
@@ -252,6 +276,14 @@ mod tests {
         assert_eq!(r.per_class[0].n + r.per_class[1].n, r.n);
         assert!((r.per_class[0].ttft.p50 - 0.1).abs() < 1e-9);
         assert!((r.per_class[1].ttft.p50 - 0.9).abs() < 1e-9);
+        // Arbitrary-percentile accessors agree with the Summary panels and
+        // return NaN for an absent class.
+        assert_eq!(r.classes.len(), r.n);
+        assert!((r.class_ttft_pct(0, 50.0) - r.per_class[0].ttft.p50).abs() < 1e-12);
+        assert!((r.class_ttft_pct(2, 50.0) - r.per_class[1].ttft.p50).abs() < 1e-12);
+        assert!(r.class_ttft_pct(0, 90.0).is_finite());
+        assert!(r.class_tpot_pct(2, 90.0).is_finite());
+        assert!(r.class_ttft_pct(7, 90.0).is_nan());
     }
 
     #[test]

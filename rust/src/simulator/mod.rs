@@ -107,6 +107,17 @@ pub fn simulate(
     }
 }
 
+/// The derived parameters of repeat `k` of an averaged run: the seed
+/// scheme of the Figure-10b protocol. Shared by [`simulate_averaged`] and
+/// the optimizer's averaged feasibility check so the two can never
+/// diverge.
+pub fn repeat_params(params: SimParams, k: usize) -> SimParams {
+    SimParams {
+        seed: params.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        ..params
+    }
+}
+
 /// Repeat `simulate` with different seeds and average the P90s — the
 /// variance-reduction protocol of Figure 10b.
 pub fn simulate_averaged(
@@ -122,11 +133,7 @@ pub fn simulate_averaged(
     let mut ttft_sum = 0.0;
     let mut tpot_sum = 0.0;
     for k in 0..repeats {
-        let p = SimParams {
-            seed: params.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B97F4A7C15),
-            ..params
-        };
-        let rep = simulate(model, platform, strategy, workload, scale, p)?;
+        let rep = simulate(model, platform, strategy, workload, scale, repeat_params(params, k))?;
         ttft_sum += rep.ttft.p90;
         tpot_sum += rep.tpot.p90;
     }
@@ -256,6 +263,7 @@ mod tests {
             weight,
             input_len: LengthDist::Fixed(s),
             gen_len: LengthDist::Fixed(g),
+            slo: None,
         };
         let w = Workload {
             name: "mix".into(),

@@ -250,6 +250,7 @@ mod tests {
             weight,
             input_len: LengthDist::Fixed(s),
             gen_len: LengthDist::Fixed(g),
+            slo: None,
         };
         let w = Workload {
             name: "mix".into(),

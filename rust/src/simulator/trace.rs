@@ -128,6 +128,7 @@ mod tests {
             weight,
             input_len: LengthDist::Fixed(s),
             gen_len: LengthDist::Fixed(16),
+            slo: None,
         };
         let w = Workload {
             name: "mix".into(),
