@@ -147,6 +147,28 @@ fn main() -> bestserve::Result<()> {
         dt
     );
 
+    // --- Flexible-pool (Nf) testbed -----------------------------------------
+    // The iteration-granular role-flipping ground truth engine on the same
+    // workload: role switches, KV hand-offs and all.
+    let tb_flex = Testbed::new(
+        &oracle,
+        &platform,
+        Strategy::dynamic(2, 4),
+        TestbedConfig::default(),
+    );
+    let mut flex_switches = 0u64;
+    let mut flex_handoffs = 0u64;
+    let dt = time(|| {
+        let out = tb_flex.run(&reqs).unwrap();
+        flex_switches = out.report.role_occupancy.map(|o| o.switches).unwrap_or(0);
+        flex_handoffs = out.kv_handoffs;
+    });
+    println!(
+        "flex-pool (Nf) testbed    : {:>10.0} tokens/s simulated ({flex_switches} role \
+         switches, {flex_handoffs} KV hand-offs)",
+        tokens as f64 / dt
+    );
+
     // --- Optimizer ------------------------------------------------------------
     let space = StrategySpace {
         max_cards: 8,

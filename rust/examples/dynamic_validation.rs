@@ -1,0 +1,70 @@
+//! Figure-11-style validation extended to the dynamic (`Nf`) pool: for a
+//! small strategy space covering all three architectures, compare
+//! BestServe's predicted goodput against the token-level testbed's
+//! measured ground truth — the flexible-role engine makes the `Nf` rows
+//! possible (they used to be skipped).
+//!
+//! The run is sized for CI (a one-card toy space, 150 requests, coarse
+//! bisection) so the full prediction-vs-measurement loop is exercised end
+//! to end on every PR within a wall-clock budget.
+//!
+//! Run: `cargo run --release --example dynamic_validation`
+
+use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
+use bestserve::optimizer::AnalyticFactory;
+use bestserve::validation::{validate, ValidationConfig};
+
+fn main() -> bestserve::Result<()> {
+    let platform = Platform::paper_testbed();
+    let factory = AnalyticFactory::new(platform.clone());
+    let space = StrategySpace {
+        max_cards: 3,
+        tp_choices: vec![1],
+        ..StrategySpace::default()
+    };
+    let workload = Workload::poisson(&Scenario::fixed("toy-op", 512, 32, 150));
+    // Looser budgets than the paper defaults: a 34B model on single cards
+    // needs headroom, and the point here is the Nf comparison, not SLO
+    // tuning.
+    let slo = Slo { ttft: 3.0, tpot: 0.2, ..Slo::paper_default() };
+    let mut cfg = ValidationConfig::default();
+    cfg.goodput.tolerance = 0.25;
+    cfg.ground_truth.tolerance = 0.25;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let t0 = std::time::Instant::now();
+    let rep = validate(&factory, &platform, &space, &workload, &slo, &cfg, threads)?;
+    println!(
+        "predicted vs token-level measured goodput, {} strategies in {:.1}s on {} thread(s):\n",
+        rep.rows.len(),
+        t0.elapsed().as_secs_f64(),
+        threads
+    );
+    print!("{}", rep.to_table().render());
+
+    println!("\nmean |relative error| per architecture family:");
+    for fam in ["collocation", "disaggregation", "dynamic"] {
+        let errs: Vec<f64> = rep
+            .rows
+            .iter()
+            .filter(|r| r.arch.family() == fam)
+            .filter_map(|r| r.rel_error())
+            .map(f64::abs)
+            .collect();
+        assert!(
+            !errs.is_empty(),
+            "{fam} produced no comparable rows — the validation loop regressed"
+        );
+        println!(
+            "  {fam:14}  {:5.1}%  ({} strategies)",
+            100.0 * errs.iter().sum::<f64>() / errs.len() as f64,
+            errs.len()
+        );
+    }
+    println!(
+        "\noverall |rel err| {:.1}% | recommendation quality {:.2}",
+        rep.mean_abs_rel_error() * 100.0,
+        rep.recommendation_quality()
+    );
+    Ok(())
+}

@@ -82,6 +82,16 @@ impl Architecture {
     pub fn is_dynamic(&self) -> bool {
         matches!(self, Architecture::Dynamic { .. })
     }
+
+    /// Family name for grouping and reporting — robust against notation
+    /// collisions, unlike substring checks on the rendered strategy string.
+    pub fn family(&self) -> &'static str {
+        match self {
+            Architecture::Collocation { .. } => "collocation",
+            Architecture::Disaggregation { .. } => "disaggregation",
+            Architecture::Dynamic { .. } => "dynamic",
+        }
+    }
 }
 
 /// A complete serving strategy: architecture + tensor-parallel size +
@@ -295,6 +305,9 @@ mod tests {
             Architecture::Disaggregation { p: 3, d: 2 }
         );
         assert_eq!(Architecture::parse("5f").unwrap(), Architecture::Dynamic { m: 5 });
+        assert_eq!(Architecture::parse("5m").unwrap().family(), "collocation");
+        assert_eq!(Architecture::parse("3p2d").unwrap().family(), "disaggregation");
+        assert_eq!(Architecture::parse("5f").unwrap().family(), "dynamic");
         assert_eq!(Architecture::parse("3p2d").unwrap().to_string(), "3p2d");
         assert_eq!(Architecture::parse("1M").unwrap().to_string(), "1m");
         assert_eq!(Architecture::parse("5F").unwrap().to_string(), "5f");

@@ -42,10 +42,12 @@
 //!   python never runs on the request path).
 //! * [`testbed`] — a token-level, vLLM-like serving testbed (iteration-level
 //!   continuous batching, paged KV accounting, prefill prioritization,
-//!   disaggregated KV transfer) used as the ground-truth reference the paper
-//!   obtained by manual benchmarking.
+//!   role-aware routing with disaggregated KV transfer, and a flexible-role
+//!   pool engine for `Nf` — [`testbed::flex`]) used as the ground-truth
+//!   reference the paper obtained by manual benchmarking.
 //! * [`validation`] — the Figure 11 experiment: BestServe vs ground truth
-//!   across strategies and operating scenarios.
+//!   across strategies and operating scenarios, covering the full
+//!   `Nm`/`NpMd`/`Nf` space.
 //! * [`util`] — RNG, stats, JSON, tables, property-testing harness.
 pub mod cli;
 pub mod config;

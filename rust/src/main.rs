@@ -64,8 +64,13 @@ COMMANDS
             any --threads.
   testbed   --strategy S --scenario OP --rate R [--n N] [--kv-blocks B]
             [--trace F]     (replay a CSV trace instead of generated traffic)
+            Serves all three architectures token-level; 5f strategies run
+            the flexible-role pool (role flips honor --switch-latency).
   validate  --scenario OP [--max-cards 8] [--tp 2,4,8] [--n N] [--out DIR]
+            [--no-colloc] [--no-disagg] [--no-dynamic] (family filters)
             [--threads N]   (parallel validation; deterministic for any N)
+            Compares predicted vs token-level measured goodput for the FULL
+            space — collocation, disaggregation and dynamic Nf pools.
 
 COMMON OPTIONS
   --model    model preset (default codellama-34b)
@@ -513,7 +518,12 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     let slo = slo_from(args)?;
     let rate = args.f64_or("rate", 3.5)?;
     let model = model_for(args, &platform, strategy.tp)?;
-    let mut config = TestbedConfig::default();
+    let defaults = TestbedConfig::default();
+    let mut config = TestbedConfig {
+        // Dynamic (Nf) pools honor the same switch knob as the simulator.
+        switch_latency: args.f64_or("switch-latency", defaults.switch_latency * 1e3)? / 1e3,
+        ..defaults
+    };
     if let Some(b) = args.get("kv-blocks") {
         let blocks = b
             .parse()
@@ -563,7 +573,14 @@ fn cmd_testbed(args: &Args) -> Result<()> {
         println!("per-class percentiles:");
         print!("{}", report::per_class_table(rep, &workload).render());
     }
+    if let Some(occ) = report::role_occupancy_table(rep) {
+        println!("role occupancy (flexible pool):");
+        print!("{}", occ.render());
+    }
     println!("throughput {:.3} req/s", rep.throughput);
+    if out.kv_handoffs > 0 {
+        println!("KV hand-offs over the interconnect: {}", out.kv_handoffs);
+    }
     for (i, st) in out.stats.iter().enumerate() {
         println!(
             "  engine {i}: {} prefill iters, {} decode iters, {} preemptions, busy {:.1}s",
@@ -582,11 +599,10 @@ fn cmd_validate(args: &Args) -> Result<()> {
         tp_choices: args.u32_list_or("tp", &[2, 4, 8])?,
         bmax_prefill: args.u32_or("bmax-prefill", 4)?,
         bmax_decode: args.u32_or("bmax-decode", 16)?,
-        include_collocation: true,
-        include_disaggregation: true,
-        // The token-level ground-truth testbed has no dynamic engine yet,
-        // so validation sticks to the static families.
-        include_dynamic: false,
+        include_collocation: !args.flag("no-colloc"),
+        include_disaggregation: !args.flag("no-disagg"),
+        // The flexible-role testbed engine ground-truths Nf pools too.
+        include_dynamic: !args.flag("no-dynamic"),
     };
     let mut cfg = ValidationConfig {
         sim_params: sim_params_from(args)?,

@@ -10,6 +10,7 @@ use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 use crate::simulator::{repeat_params, simulate, SimParams, SimReport};
+use crate::util::bisect::{bisect_feasible_rate, RateBracket};
 
 #[derive(Debug, Clone, Copy)]
 pub struct GoodputConfig {
@@ -140,45 +141,19 @@ pub fn find_goodput(
             pre.max(dec)
         }
     };
-    // Bisect in scale units: rate bounds divided by the base rate.
-    let mut lo = cfg.lambda_min / workload.base_rate;
-    let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
-
-    if hi <= lo {
-        // Degenerate bracket: the capacity ceiling sits at or below the
-        // pessimistic floor (slow model, tiny capacity, or large
-        // base_rate). Bisection is meaningless here, and probing at `lo`
-        // would wrongly reject (or report) a rate *above* the ceiling the
-        // line above just computed — so feasibility-check the ceiling
-        // itself and report it, or 0.
-        let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
-        if !(bound.is_finite() && bound > 0.0) {
-            return Ok(0.0); // infinite T_min (or zero capacity): nothing to probe
-        }
-        return if feasible(model, platform, strategy, workload, slo, params, bound, cfg.repeats)? {
-            Ok(bound * workload.base_rate)
-        } else {
-            Ok(0.0)
-        };
-    }
-
-    if !feasible(model, platform, strategy, workload, slo, params, lo, cfg.repeats)? {
-        return Ok(0.0); // rejected outright (Algorithm 8 line 5)
-    }
-    // If even the optimistic ceiling is feasible, report it (the strategy
-    // is SLO-bound by capacity, not queueing).
-    if feasible(model, platform, strategy, workload, slo, params, hi, cfg.repeats)? {
-        return Ok(hi * workload.base_rate);
-    }
-    while hi - lo > cfg.tolerance / workload.base_rate {
-        let mid = 0.5 * (lo + hi);
-        if feasible(model, platform, strategy, workload, slo, params, mid, cfg.repeats)? {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    Ok(lo * workload.base_rate)
+    // The search loop itself — degenerate-bracket arm included — is the
+    // shared `bisect_feasible_rate`, the exact same code the testbed's
+    // ground-truth measurement runs.
+    bisect_feasible_rate(
+        RateBracket {
+            // Bisect in scale units: rate bounds divided by the base rate.
+            lo: cfg.lambda_min / workload.base_rate,
+            hi: cfg.upper_factor * capacity / t_min / workload.base_rate,
+            tolerance: cfg.tolerance,
+            base_rate: workload.base_rate,
+        },
+        |scale| feasible(model, platform, strategy, workload, slo, params, scale, cfg.repeats),
+    )
 }
 
 #[cfg(test)]

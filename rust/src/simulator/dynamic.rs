@@ -325,21 +325,11 @@ impl<'a> DynamicSimulator<'a> {
         strategy: &Strategy,
         params: SimParams,
     ) -> Result<DynamicSimulator<'a>> {
-        if !(params.switch_latency >= 0.0 && params.switch_latency.is_finite()) {
-            return Err(Error::config(format!(
-                "switch latency must be finite and >= 0, got {}",
-                params.switch_latency
-            )));
-        }
-        if params.switch_up <= params.switch_down
-            || !params.switch_up.is_finite()
-            || params.switch_down.is_nan()
-        {
-            return Err(Error::config(format!(
-                "switch hysteresis needs switch_up > switch_down, got {} <= {}",
-                params.switch_up, params.switch_down
-            )));
-        }
+        super::params::validate_switch_knobs(
+            params.switch_latency,
+            params.switch_up,
+            params.switch_down,
+        )?;
         match strategy.arch {
             crate::config::Architecture::Dynamic { m } => Ok(DynamicSimulator {
                 model,

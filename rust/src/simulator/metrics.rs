@@ -40,8 +40,9 @@ impl RequestOutcome {
 
 /// Time-weighted role occupancy of a dynamic (`Nf`) PD-reallocation pool:
 /// instance-seconds spent in each role over the whole run, plus the number
-/// of completed role switches. Produced only by the dynamic simulator;
-/// static architectures leave [`SimReport::role_occupancy`] at `None`.
+/// of completed role switches. Produced by the dynamic simulator and the
+/// flexible-role testbed; static architectures leave
+/// [`SimReport::role_occupancy`] at `None`.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct RoleOccupancy {
     /// Instance-seconds spent in the prefill role.

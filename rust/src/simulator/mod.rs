@@ -72,7 +72,7 @@ pub use decode::{DecodeItem, DecodeOutcome, DecodeStage};
 pub use disagg::DisaggSimulator;
 pub use dynamic::DynamicSimulator;
 pub use metrics::{ClassStats, RequestOutcome, RoleOccupancy, SimReport};
-pub use params::{SimParams, SpanMode};
+pub use params::{validate_switch_knobs, SimParams, SpanMode};
 pub use prefill::PrefillStage;
 pub use request::{generate_workload, Request};
 pub use trace::{load_trace, save_trace};

@@ -64,6 +64,25 @@ impl SimParams {
     }
 }
 
+/// Validate a dynamic-pool switch-knob triple. Shared by the request-level
+/// simulator policy (`simulator::dynamic`) and the token-level testbed's
+/// flexible-role cluster (`testbed::flex`): `validate` mirrors the
+/// simulator's knobs into the testbed, so the two fidelity levels must
+/// accept exactly the same knob sets — one rule, no drift.
+pub fn validate_switch_knobs(latency: f64, up: f64, down: f64) -> crate::error::Result<()> {
+    if !(latency >= 0.0 && latency.is_finite()) {
+        return Err(crate::error::Error::config(format!(
+            "switch latency must be finite and >= 0, got {latency}"
+        )));
+    }
+    if up <= down || !up.is_finite() || down.is_nan() {
+        return Err(crate::error::Error::config(format!(
+            "switch hysteresis needs switch_up > switch_down, got {up} <= {down}"
+        )));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,9 +1,13 @@
 //! Tiny latency models for simulator unit tests, plus the shared
 //! cross-architecture invariant suite: properties every serving engine —
 //! collocation, disaggregation, dynamic reallocation, and whatever comes
-//! next — must satisfy on any workload. New architectures get the whole
-//! suite by adding one strategy literal to the callers in
-//! `simulator::tests`.
+//! next — must satisfy on any workload, at *both* fidelity levels. The
+//! suite core ([`assert_report_invariants`]) is agnostic to where a
+//! [`SimReport`] came from: [`assert_architecture_invariants`] drives the
+//! request-level simulator, [`assert_testbed_invariants`] the token-level
+//! testbed, over the same fixed operating point. New architectures get the
+//! whole suite by adding one strategy literal to the callers in
+//! `simulator::tests` and `testbed::tests`.
 
 use crate::config::{Platform, Scenario, Strategy, Workload};
 use crate::estimator::LatencyModel;
@@ -71,35 +75,64 @@ fn invariant_report(strategy: &Strategy, seed: u64) -> SimReport {
     .unwrap()
 }
 
-/// The invariant suite proper. For any architecture at moderate load:
+/// Token-level testbed run at the same operating point, through the public
+/// dispatch path (so the role-aware cluster routing is exercised too).
+fn testbed_invariant_report(strategy: &Strategy, seed: u64) -> SimReport {
+    use crate::testbed::{Testbed, TestbedConfig};
+    let model = ConstModel { prefill: INV_PREFILL, step: INV_STEP };
+    let platform = Platform::paper_testbed();
+    let workload = Workload::poisson(&Scenario::fixed("inv", 256, INV_GEN, INV_N));
+    let reqs = generate_workload(&workload, 4.0, seed).unwrap();
+    assert_eq!(reqs.len(), INV_N);
+    Testbed::new(&model, &platform, strategy.clone(), TestbedConfig::default())
+        .run(&reqs)
+        .unwrap()
+        .report
+}
+
+/// Run the invariant suite over the request-level simulator.
+pub fn assert_architecture_invariants(strategy: &Strategy) {
+    assert_report_invariants(&strategy.to_string(), |seed| invariant_report(strategy, seed));
+}
+
+/// Run the same suite over the token-level testbed — one contract for both
+/// fidelity levels.
+pub fn assert_testbed_invariants(strategy: &Strategy) {
+    assert_report_invariants(&format!("testbed {strategy}"), |seed| {
+        testbed_invariant_report(strategy, seed)
+    });
+}
+
+/// The invariant suite proper, over any [`SimReport`] producer (simulator
+/// or testbed). For any architecture at moderate load:
 ///
 /// 1. every request completes exactly once (conservation),
 /// 2. TTFT is never below the single-request prefill service time, and
 ///    TPOT never below one decode step (causality),
 /// 3. all reported metrics are finite and NaN-free,
-/// 4. the report is bit-identical when re-simulated with the same seed
+/// 4. the report is bit-identical when re-produced with the same seed
 ///    (determinism — the thread-count independence of the optimizer sweep
-///    reduces to exactly this per-strategy property).
-pub fn assert_architecture_invariants(strategy: &Strategy) {
-    let rep = invariant_report(strategy, 0xA5EED);
+///    and of `validate` reduces to exactly this per-strategy property).
+pub fn assert_report_invariants(label: &str, make_report: impl Fn(u64) -> SimReport) {
+    let rep = make_report(0xA5EED);
 
     // 1. Conservation: one outcome per generated request.
-    assert_eq!(rep.n, INV_N, "{strategy}: dropped or duplicated requests");
-    assert_eq!(rep.ttfts.len(), INV_N, "{strategy}");
-    assert_eq!(rep.tpots.len(), INV_N, "{strategy}");
+    assert_eq!(rep.n, INV_N, "{label}: dropped or duplicated requests");
+    assert_eq!(rep.ttfts.len(), INV_N, "{label}");
+    assert_eq!(rep.tpots.len(), INV_N, "{label}");
 
     // 2. Causality: no request beats its own service time.
     let eps = 1e-9;
     for (i, &ttft) in rep.ttfts.iter().enumerate() {
         assert!(
             ttft >= INV_PREFILL - eps,
-            "{strategy}: request {i} TTFT {ttft} below prefill service {INV_PREFILL}"
+            "{label}: request {i} TTFT {ttft} below prefill service {INV_PREFILL}"
         );
     }
     for (i, &tpot) in rep.tpots.iter().enumerate() {
         assert!(
             tpot >= INV_STEP - eps,
-            "{strategy}: request {i} TPOT {tpot} below one decode step {INV_STEP}"
+            "{label}: request {i} TPOT {tpot} below one decode step {INV_STEP}"
         );
     }
 
@@ -115,17 +148,17 @@ pub fn assert_architecture_invariants(strategy: &Strategy) {
         rep.throughput,
         rep.makespan,
     ] {
-        assert!(v.is_finite(), "{strategy}: non-finite summary metric {v}");
+        assert!(v.is_finite(), "{label}: non-finite summary metric {v}");
     }
-    assert!(rep.ttfts.iter().chain(rep.tpots.iter()).all(|x| x.is_finite()), "{strategy}");
+    assert!(rep.ttfts.iter().chain(rep.tpots.iter()).all(|x| x.is_finite()), "{label}");
 
     // 4. Determinism: bit-identical replay under the same seed.
-    let rep2 = invariant_report(strategy, 0xA5EED);
-    assert_eq!(rep.ttfts, rep2.ttfts, "{strategy}: non-deterministic TTFTs");
-    assert_eq!(rep.tpots, rep2.tpots, "{strategy}: non-deterministic TPOTs");
+    let rep2 = make_report(0xA5EED);
+    assert_eq!(rep.ttfts, rep2.ttfts, "{label}: non-deterministic TTFTs");
+    assert_eq!(rep.tpots, rep2.tpots, "{label}: non-deterministic TPOTs");
     assert_eq!(
         rep.makespan.to_bits(),
         rep2.makespan.to_bits(),
-        "{strategy}: non-deterministic makespan"
+        "{label}: non-deterministic makespan"
     );
 }

@@ -1,17 +1,22 @@
-//! Cluster-level testbed: a round-robin router over per-instance engines,
-//! for both architectures. Collocated instances own a request end-to-end;
-//! disaggregated prefill instances hand their KV over a bandwidth-limited
-//! link to round-robin-selected decode instances. This is the "manual
-//! benchmarking on the HPC cluster" substitute (DESIGN.md §Hardware-
-//! Adaptation): same role as the paper's vLLM-Ascend ground truth, driven
-//! by the same latency surface as the simulator but at token granularity.
+//! Cluster-level testbed: role-aware routing over per-instance token-level
+//! engines, for all three architectures. Every deployment is described by
+//! the roles its instances hold — collocated instances own a request end to
+//! end, disaggregated prefill instances hand their KV over a
+//! bandwidth-limited link to decode instances, and the dynamic (`Nf`) pool
+//! flips instance roles at iteration granularity (see [`super::flex`]).
+//! The static families share one router (round-robin within a role group,
+//! engines parameterized by role); the flexible pool routes per iteration.
+//! This is the "manual benchmarking on the HPC cluster" substitute
+//! (DESIGN.md §Hardware-Adaptation): same role as the paper's vLLM-Ascend
+//! ground truth, driven by the same latency surface as the simulator but at
+//! token granularity.
 
 use crate::config::{Architecture, Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::LatencyModel;
 use crate::simulator::{Request, RequestOutcome, SimReport};
 
-use super::engine::{Engine, EngineStats, SeqInput};
+use super::engine::{Engine, EngineStats, SeqInput, SeqOutcome};
 use super::kv::BlockManager;
 
 /// KV capacity configuration for the testbed instances.
@@ -29,8 +34,19 @@ pub struct TestbedConfig {
     /// Tokens per KV block (vLLM default 16).
     pub block_size: u32,
     pub kv_capacity: KvCapacity,
-    /// Charge the prefill→decode KV transfer in disaggregation.
+    /// Charge the prefill→decode KV transfer (disaggregation hand-off and
+    /// dynamic-pool cross-instance hand-offs).
     pub kv_transfer: bool,
+    /// Dynamic (`Nf`) pool: seconds a role switch takes — KV drain plus
+    /// scheduler warm-up dead time. Mirrors `SimParams::switch_latency`.
+    pub switch_latency: f64,
+    /// Dynamic pool up-hysteresis: a decode-role instance flips to prefill
+    /// when the backlog exceeds this many full prefill batches per
+    /// prefill-committed instance. Mirrors `SimParams::switch_up`.
+    pub switch_up: f64,
+    /// Dynamic pool down-hysteresis (same units); must stay below
+    /// `switch_up`. Mirrors `SimParams::switch_down`.
+    pub switch_down: f64,
 }
 
 impl Default for TestbedConfig {
@@ -39,6 +55,9 @@ impl Default for TestbedConfig {
             block_size: 16,
             kv_capacity: KvCapacity::Unbounded,
             kv_transfer: true,
+            switch_latency: 0.03,
+            switch_up: 1.0,
+            switch_down: 0.0,
         }
     }
 }
@@ -48,6 +67,27 @@ impl Default for TestbedConfig {
 pub struct TestbedReport {
     pub report: SimReport,
     pub stats: Vec<EngineStats>,
+    /// Sequences whose decode KV arrived over the interconnect:
+    /// every request in disaggregation; in the dynamic pool, only
+    /// sequences admitted off their prefill instance (or back onto it
+    /// after further role flips drained the pages). Always 0 for
+    /// collocation.
+    pub kv_handoffs: u64,
+}
+
+/// The serving role an engine holds in a *static* deployment. The router
+/// dispatches on this instead of hard-coding per-architecture engine
+/// parameters; the dynamic pool reassigns roles at runtime instead
+/// ([`super::flex`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StaticRole {
+    /// Owns requests end to end (collocation).
+    Collocated,
+    /// Runs prompts only; the prefill emits the first token, the KV is
+    /// handed off.
+    PrefillOnly,
+    /// Receives pre-filled sequences and decodes them.
+    DecodeOnly,
 }
 
 pub struct Testbed<'a> {
@@ -55,6 +95,30 @@ pub struct Testbed<'a> {
     pub platform: &'a Platform,
     pub strategy: Strategy,
     pub config: TestbedConfig,
+}
+
+/// Round-robin router: dispatch a role group's input stream over its `n`
+/// instances in order — §3.4.1's routing, shared by both static
+/// architectures (collocation routes whole requests, disaggregation routes
+/// each stage).
+fn route_round_robin(inputs: impl Iterator<Item = SeqInput>, n: usize) -> Vec<Vec<SeqInput>> {
+    let mut per: Vec<Vec<SeqInput>> = vec![Vec::new(); n];
+    for (k, input) in inputs.enumerate() {
+        per[k % n].push(input);
+    }
+    per
+}
+
+/// Collapse per-request slots into the final report, panicking on any lost
+/// request (an engine invariant, not an input error).
+fn finalize(
+    outcomes: Vec<Option<RequestOutcome>>,
+    stats: Vec<EngineStats>,
+    kv_handoffs: u64,
+) -> Result<TestbedReport> {
+    let outcomes: Vec<RequestOutcome> =
+        outcomes.into_iter().map(|o| o.expect("request lost")).collect();
+    Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats, kv_handoffs })
 }
 
 impl<'a> Testbed<'a> {
@@ -67,20 +131,58 @@ impl<'a> Testbed<'a> {
         Testbed { model, platform, strategy, config }
     }
 
-    fn kv_manager(&self) -> BlockManager {
+    pub(super) fn kv_manager(&self) -> BlockManager {
         match self.config.kv_capacity {
             KvCapacity::Unbounded => BlockManager::unbounded(self.config.block_size),
             KvCapacity::Blocks(n) => BlockManager::new(self.config.block_size, n),
         }
     }
 
-    /// KV transfer latency for a prompt of `s` tokens (disagg hand-off).
+    /// KV transfer latency for a sequence of `s` tokens (disaggregation and
+    /// dynamic-pool hand-offs).
     pub fn kv_transfer_time(&self, s: u32) -> f64 {
         if !self.config.kv_transfer {
             return 0.0;
         }
         let bytes = self.platform.model.kv_bytes_per_token() as f64 * s as f64;
         bytes / (self.platform.eff.decode.eplus * self.platform.hardware.s_plus_bytes)
+    }
+
+    /// Engine for one instance holding `role` — the role decides the
+    /// batching parameters, so every architecture's router builds engines
+    /// the same way.
+    fn engine_for_role(&self, role: StaticRole) -> Engine<'a> {
+        let (bmax_prefill, bmax_decode) = match role {
+            StaticRole::Collocated => (self.strategy.bmax_prefill, self.strategy.bmax_decode),
+            // A prefill instance runs prompts through in batch; its
+            // "decode" capacity is irrelevant (gen_len-0 sequences leave
+            // after the prefill token). Give it the prefill batch size.
+            StaticRole::PrefillOnly => {
+                (self.strategy.bmax_prefill, self.strategy.bmax_prefill.max(1))
+            }
+            // Admission width on a decode instance is its slot count.
+            StaticRole::DecodeOnly => (self.strategy.bmax_decode, self.strategy.bmax_decode),
+        };
+        Engine { model: self.model, bmax_prefill, bmax_decode, kv: self.kv_manager() }
+    }
+
+    /// Run one role group over its routed inputs, appending engine stats
+    /// and feeding every completion to `sink`.
+    fn run_role_group(
+        &self,
+        per_instance: &[Vec<SeqInput>],
+        role: StaticRole,
+        stats: &mut Vec<EngineStats>,
+        mut sink: impl FnMut(SeqOutcome),
+    ) {
+        for inputs in per_instance {
+            let mut engine = self.engine_for_role(role);
+            let (outs, st) = engine.run(inputs);
+            stats.push(st);
+            for o in outs {
+                sink(o);
+            }
+        }
     }
 
     /// Serve the workload; returns per-request outcomes + engine stats.
@@ -93,134 +195,93 @@ impl<'a> Testbed<'a> {
             Architecture::Disaggregation { p, d } => {
                 self.run_disagg(reqs, p as usize, d as usize)
             }
-            Architecture::Dynamic { .. } => Err(Error::config(
-                "the token-level testbed has no dynamic PD-reallocation engine yet; \
-                 validate dynamic (Nf) strategies with the simulator instead",
-            )),
+            Architecture::Dynamic { m } => super::flex::run_dynamic(self, reqs, m as usize),
         }
     }
 
     fn run_colloc(&self, reqs: &[Request], m: usize) -> Result<TestbedReport> {
-        // Round-robin assignment at arrival.
-        let mut per_instance: Vec<Vec<SeqInput>> = vec![Vec::new(); m];
-        for (idx, r) in reqs.iter().enumerate() {
-            per_instance[idx % m].push(SeqInput {
+        let per_instance = route_round_robin(
+            reqs.iter().enumerate().map(|(idx, r)| SeqInput {
                 req: idx,
                 ready: r.arrival,
                 input_len: r.input_len,
                 gen_len: r.gen_len,
                 needs_prefill: true,
-            });
-        }
+            }),
+            m,
+        );
         let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
         let mut stats = Vec::with_capacity(m);
-        for inputs in &per_instance {
-            let mut engine = Engine {
-                model: self.model,
-                bmax_prefill: self.strategy.bmax_prefill,
-                bmax_decode: self.strategy.bmax_decode,
-                kv: self.kv_manager(),
-            };
-            let (outs, st) = engine.run(inputs);
-            stats.push(st);
-            for o in outs {
-                let r = &reqs[o.req];
-                outcomes[o.req] = Some(RequestOutcome {
-                    id: r.id,
-                    arrival: r.arrival,
-                    first_token: o.first_token,
-                    decode_start: o.first_token,
-                    completion: o.completion,
-                    gen_len: r.gen_len,
-                    class: r.class,
-                });
-            }
-        }
-        let outcomes: Vec<RequestOutcome> =
-            outcomes.into_iter().map(|o| o.expect("request lost")).collect();
-        Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats })
+        self.run_role_group(&per_instance, StaticRole::Collocated, &mut stats, |o| {
+            let r = &reqs[o.req];
+            outcomes[o.req] = Some(RequestOutcome {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: o.first_token,
+                decode_start: o.first_token,
+                completion: o.completion,
+                gen_len: r.gen_len,
+                class: r.class,
+            });
+        });
+        finalize(outcomes, stats, 0)
     }
 
     fn run_disagg(&self, reqs: &[Request], p: usize, d: usize) -> Result<TestbedReport> {
-        // Stage 1: prefill instances (gen_len 0 — they only prefill).
-        let mut per_prefill: Vec<Vec<SeqInput>> = vec![Vec::new(); p];
-        for (idx, r) in reqs.iter().enumerate() {
-            per_prefill[idx % p].push(SeqInput {
+        // Stage 1: the prefill role (gen_len 0 — the prefill itself emits
+        // the first token).
+        let per_prefill = route_round_robin(
+            reqs.iter().enumerate().map(|(idx, r)| SeqInput {
                 req: idx,
                 ready: r.arrival,
                 input_len: r.input_len,
-                gen_len: 0, // prefill-only: the prefill emits the first token
+                gen_len: 0,
                 needs_prefill: true,
-            });
-        }
+            }),
+            p,
+        );
         let mut first_token = vec![f64::NAN; reqs.len()];
         let mut stats = Vec::with_capacity(p + d);
-        for inputs in &per_prefill {
-            let mut engine = Engine {
-                model: self.model,
-                bmax_prefill: self.strategy.bmax_prefill,
-                // A prefill instance runs prompts through in batch; its
-                // "decode" capacity is irrelevant (gen_len 1 sequences leave
-                // after the prefill token). Give it the prefill batch size.
-                bmax_decode: self.strategy.bmax_prefill.max(1),
-                kv: self.kv_manager(),
-            };
-            let (outs, st) = engine.run(inputs);
-            stats.push(st);
-            for o in outs {
-                // The single generated token IS the first token; its decode
-                // step is an artifact of modelling gen_len=1 — use the
-                // prefill completion as TTFT.
-                first_token[o.req] = o.first_token;
-            }
-        }
+        self.run_role_group(&per_prefill, StaticRole::PrefillOnly, &mut stats, |o| {
+            first_token[o.req] = o.first_token;
+        });
 
-        // Stage 2: KV transfer, then decode instances.
+        // Stage 2: KV hand-off over the priced link, then the decode role
+        // in readiness order.
         let mut handoffs: Vec<(usize, f64)> = reqs
             .iter()
             .enumerate()
             .map(|(idx, r)| (idx, first_token[idx] + self.kv_transfer_time(r.input_len)))
             .collect();
         handoffs.sort_by(|a, b| a.1.total_cmp(&b.1));
-        let mut per_decode: Vec<Vec<SeqInput>> = vec![Vec::new(); d];
         let mut decode_ready = vec![0.0f64; reqs.len()];
-        for (k, &(idx, ready)) in handoffs.iter().enumerate() {
-            let r = &reqs[idx];
+        for &(idx, ready) in &handoffs {
             decode_ready[idx] = ready;
-            per_decode[k % d].push(SeqInput {
+        }
+        let per_decode = route_round_robin(
+            handoffs.iter().map(|&(idx, ready)| SeqInput {
                 req: idx,
                 ready,
-                input_len: r.input_len,
-                gen_len: r.gen_len,
+                input_len: reqs[idx].input_len,
+                gen_len: reqs[idx].gen_len,
                 needs_prefill: false,
-            });
-        }
+            }),
+            d,
+        );
         let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
-        for inputs in &per_decode {
-            let mut engine = Engine {
-                model: self.model,
-                bmax_prefill: self.strategy.bmax_decode, // admission width
-                bmax_decode: self.strategy.bmax_decode,
-                kv: self.kv_manager(),
-            };
-            let (outs, st) = engine.run(inputs);
-            stats.push(st);
-            for o in outs {
-                let r = &reqs[o.req];
-                outcomes[o.req] = Some(RequestOutcome {
-                    id: r.id,
-                    arrival: r.arrival,
-                    first_token: first_token[o.req],
-                    decode_start: decode_ready[o.req],
-                    completion: o.completion,
-                    gen_len: r.gen_len,
-                    class: r.class,
-                });
-            }
-        }
-        let outcomes: Vec<RequestOutcome> =
-            outcomes.into_iter().map(|o| o.expect("request lost")).collect();
-        Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats })
+        self.run_role_group(&per_decode, StaticRole::DecodeOnly, &mut stats, |o| {
+            let r = &reqs[o.req];
+            outcomes[o.req] = Some(RequestOutcome {
+                id: r.id,
+                arrival: r.arrival,
+                first_token: first_token[o.req],
+                decode_start: decode_ready[o.req],
+                completion: o.completion,
+                gen_len: r.gen_len,
+                class: r.class,
+            });
+        });
+        finalize(outcomes, stats, reqs.len() as u64)
     }
 }
 
@@ -246,9 +307,10 @@ mod tests {
             TestbedConfig::default(),
         );
         let reqs = generate_workload(&Workload::poisson(&Scenario::fixed("t", 256, 16, 500)), 8.0, 11).unwrap();
-        let rep = tb.run(&reqs).unwrap().report;
-        assert_eq!(rep.n, 500);
-        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        let out = tb.run(&reqs).unwrap();
+        assert_eq!(out.report.n, 500);
+        assert!(out.report.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert_eq!(out.kv_handoffs, 0, "collocation never moves KV");
     }
 
     #[test]
@@ -266,6 +328,8 @@ mod tests {
         assert_eq!(out.report.n, 400);
         // Prefill + decode engines all report stats.
         assert_eq!(out.stats.len(), 4);
+        // Every request's KV crossed the link.
+        assert_eq!(out.kv_handoffs, 400);
         // TTFT strictly positive, TPOT finite.
         assert!(out.report.ttft.min > 0.0);
         assert!(out.report.tpot.max.is_finite());

@@ -1,0 +1,747 @@
+//! Flexible-role testbed cluster — the token-level ground-truth engine for
+//! the dynamic PD-reallocation pool (`Nf`).
+//!
+//! A pool of `m` instances, each holding exactly one serving role at any
+//! moment, flipping between prefill and decode at *iteration* granularity.
+//! The reallocation policy mirrors [`crate::simulator::dynamic`] knob for
+//! knob so Figure-11 validation compares like for like:
+//!
+//! * **prefill backlog** — requests arrived but not yet batched, measured
+//!   in full prefill batches per prefill-committed instance — pulls
+//!   decode-role instances up to prefill;
+//! * **decode pressure** — prefill-finished sequences waiting for a slot
+//!   right now — pulls idle prefill-role instances back down;
+//! * a hysteresis dead band ([`TestbedConfig::switch_up`] /
+//!   [`TestbedConfig::switch_down`]) prevents thrashing, every completed
+//!   flip costs [`TestbedConfig::switch_latency`] seconds of dead time, and
+//!   a decode instance with occupied slots *drains* them before switching.
+//!
+//! Unlike the request-level simulator — which treats intra-pool KV movement
+//! as free — this engine models the **KV hand-off**: a prefilled sequence
+//! whose pages are no longer resident where it lands for decode pays the
+//! same bandwidth-priced transfer as the disaggregation tandem
+//! ([`Testbed::kv_transfer_time`]). Pages stay resident across exactly one
+//! prefill→decode flip of the instance that produced them (the flip's
+//! switch latency is the drain that preserves them), so the pool prefers
+//! routing a sequence back to its prefill instance; any other landing —
+//! another instance, or the home instance after further flips — is a
+//! priced hand-off, counted in [`TestbedReport::kv_handoffs`].
+//!
+//! Everything below the routing layer is the existing token-level
+//! machinery: per-instance [`BlockManager`] paged-KV accounting with
+//! recompute preemption (victims re-enter the *global* prefill backlog with
+//! their full context as the new prompt), iteration-granular continuous
+//! batching, and the shared discrete-event loop
+//! ([`crate::simulator::core::drive`]). Scheduling decisions pick the
+//! lowest-index eligible instance and consume no randomness, so runs are
+//! deterministic and `validate` reports are byte-identical for any thread
+//! count.
+
+use std::collections::VecDeque;
+
+use crate::error::Result;
+use crate::estimator::LatencyModel;
+use crate::simulator::core::{drive, EventDriven, NextEvent, ReadyQueue};
+use crate::simulator::{Request, RequestOutcome, RoleOccupancy, SimReport};
+
+use super::cluster::{Testbed, TestbedConfig, TestbedReport};
+use super::engine::EngineStats;
+use super::kv::BlockManager;
+
+/// The two serving roles a pool instance can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Prefill,
+    Decode,
+}
+
+/// Per-instance role state machine — same shape as the simulator's.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Serving prefill batches.
+    Prefill,
+    /// Serving decode slots.
+    Decode,
+    /// Committed to prefill but still holding running decode sequences:
+    /// keeps iterating them, admits nothing new, and begins the switch
+    /// proper the moment they drain.
+    Draining,
+    /// Mid-switch dead time (KV drain / warm-up); assumes `to` at `until`.
+    Switching { to: Role, until: f64 },
+}
+
+/// A decode-running sequence on one instance.
+#[derive(Debug, Clone, Copy)]
+struct Seq {
+    req: usize,
+    /// Current context length (tokens with resident KV).
+    ctx: u32,
+    /// Tokens left to generate.
+    remaining: u32,
+    /// When the KV is resident here (admission time + any hand-off
+    /// transfer); the sequence occupies a slot but does not advance before
+    /// this.
+    ctx_ready: f64,
+}
+
+/// A backlog entry awaiting (re-)prefill. Fresh requests carry their
+/// prompt; recompute-preempted sequences carry their full context as the
+/// new prompt and only the unfinished tail.
+#[derive(Debug, Clone, Copy)]
+struct WaitEntry {
+    req: usize,
+    prompt: u32,
+    remaining: u32,
+}
+
+struct FlexInstance {
+    state: State,
+    /// End of the iteration currently running (prefill batch or decode
+    /// step); the instance takes no scheduling action before this.
+    busy_until: f64,
+    kv: BlockManager,
+    running: Vec<Seq>,
+    stats: EngineStats,
+    /// Occupancy accounting: time attributed to the state held since
+    /// `last_change` (draining counts as decode — the slots are still
+    /// being served).
+    time: RoleOccupancy,
+    last_change: f64,
+    /// Completed role flips. Doubles as the KV-locality token: pages
+    /// prefilled at epoch `e` survive exactly the flip to `e + 1`.
+    epoch: u64,
+}
+
+impl FlexInstance {
+    fn new(kv: BlockManager) -> FlexInstance {
+        FlexInstance {
+            state: State::Decode,
+            busy_until: 0.0,
+            kv,
+            running: Vec::new(),
+            stats: EngineStats::default(),
+            time: RoleOccupancy::default(),
+            last_change: 0.0,
+            epoch: 0,
+        }
+    }
+
+    /// Attribute the elapsed time to the current state's role bucket.
+    fn account(&mut self, t: f64) {
+        let dt = t - self.last_change;
+        if dt > 0.0 {
+            match self.state {
+                State::Prefill => self.time.prefill += dt,
+                State::Decode | State::Draining => self.time.decode += dt,
+                State::Switching { .. } => self.time.switching += dt,
+            }
+        }
+        self.last_change = t;
+    }
+
+    fn set_state(&mut self, t: f64, state: State) {
+        self.account(t);
+        self.state = state;
+    }
+
+    /// Counts towards prefill capacity for the backlog pressure signal?
+    /// Draining and switching-to-prefill instances do — they are already
+    /// committed, so the policy must not over-switch.
+    fn commits_prefill(&self) -> bool {
+        matches!(
+            self.state,
+            State::Prefill | State::Draining | State::Switching { to: Role::Prefill, .. }
+        )
+    }
+}
+
+/// The pool scheduler plugged into the shared event loop. One `step`
+/// performs at most one action, in strict priority order: switch
+/// bookkeeping, prefill launch, decode admission, decode iteration, then
+/// pressure-driven reallocation — mirroring the simulator policy's order.
+struct FlexPolicy<'a> {
+    tb: &'a Testbed<'a>,
+    reqs: &'a [Request],
+    bmax_prefill: usize,
+    bmax_decode: usize,
+    switch_latency: f64,
+    switch_up: f64,
+    switch_down: f64,
+    /// Head of the not-yet-arrived requests.
+    next_arrival: usize,
+    /// Global prefill backlog (arrived, unbatched; recompute victims
+    /// re-enter at the front).
+    waiting: VecDeque<WaitEntry>,
+    /// Prefill-finished sequences waiting for a decode slot, keyed by
+    /// prefill completion time.
+    ready: ReadyQueue,
+    /// Per-request (context, tokens left) as of entering the ready queue.
+    pending: Vec<(u32, u32)>,
+    /// Per-request (instance, epoch) where its KV was produced.
+    kv_home: Vec<(usize, u64)>,
+    first_token: Vec<f64>,
+    decode_start: Vec<f64>,
+    completion: Vec<f64>,
+    instances: Vec<FlexInstance>,
+    completed: usize,
+    /// Sequences whose decode KV arrived over the priced interconnect.
+    kv_handoffs: u64,
+}
+
+impl FlexPolicy<'_> {
+    /// Finish due switches; put drained draining instances into the switch
+    /// dead time.
+    fn bookkeeping(&mut self, t: f64) -> bool {
+        let latency = self.switch_latency;
+        for inst in self.instances.iter_mut() {
+            match inst.state {
+                State::Switching { to, until } if until <= t => {
+                    inst.time.switches += 1;
+                    inst.epoch += 1;
+                    let serving = match to {
+                        Role::Prefill => State::Prefill,
+                        Role::Decode => State::Decode,
+                    };
+                    inst.set_state(t, serving);
+                    return true;
+                }
+                State::Draining if inst.running.is_empty() && inst.busy_until <= t => {
+                    inst.set_state(t, State::Switching { to: Role::Prefill, until: t + latency });
+                    return true;
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+
+    /// Launch one prefill batch on the lowest-index idle prefill-role
+    /// instance: the FIFO prefix of the backlog that fits the KV.
+    fn prefill_launch(&mut self, t: f64) -> bool {
+        if self.waiting.is_empty() {
+            return false;
+        }
+        let Some(i) = self
+            .instances
+            .iter()
+            .position(|inst| matches!(inst.state, State::Prefill) && inst.busy_until <= t)
+        else {
+            return false;
+        };
+        let inst = &mut self.instances[i];
+        let mut batch: Vec<WaitEntry> = Vec::new();
+        let mut blocks = 0u64;
+        while batch.len() < self.bmax_prefill {
+            let Some(head) = self.waiting.front() else { break };
+            let need = inst.kv.blocks_for(head.prompt);
+            // Decoding sequences also need the admission watermark's one
+            // growth block of headroom — a prompt that exactly fills the
+            // cache would pass prefill but wait forever at decode admission.
+            let min_blocks = need + u64::from(head.remaining > 0);
+            assert!(
+                min_blocks <= inst.kv.total_blocks,
+                "sequence of {} tokens can never fit in KV capacity \
+                 (needs {min_blocks} of {} blocks including decode headroom)",
+                head.prompt,
+                inst.kv.total_blocks
+            );
+            if blocks + need > inst.kv.free_blocks() {
+                break; // head-of-line blocking on memory, like vLLM
+            }
+            blocks += need;
+            batch.push(self.waiting.pop_front().unwrap());
+        }
+        if batch.is_empty() {
+            return false;
+        }
+        let b = batch.len() as u32;
+        let s_max = batch.iter().map(|e| e.prompt).max().unwrap();
+        let dt = self.tb.model.prefill_time(b, s_max);
+        let tc = t + dt;
+        // The pages live here only for the duration of the iteration: the
+        // hand-off to the ready queue streams them out (or pins them
+        // locally across the next flip — the epoch check at admission
+        // decides which).
+        for e in &batch {
+            let ok = inst.kv.allocate(e.prompt);
+            debug_assert!(ok, "the batch-assembly loop sized the allocation");
+        }
+        for e in &batch {
+            inst.kv.release(e.prompt);
+        }
+        inst.busy_until = tc;
+        inst.stats.prefill_iterations += 1;
+        inst.stats.busy_time += dt;
+        let epoch = inst.epoch;
+        for e in batch {
+            if self.first_token[e.req].is_nan() {
+                self.first_token[e.req] = tc;
+            }
+            if e.remaining == 0 {
+                // Degenerate gen_len-0 request: the prefill token is the
+                // whole response.
+                self.decode_start[e.req] = tc;
+                self.completion[e.req] = tc;
+                self.completed += 1;
+                continue;
+            }
+            self.pending[e.req] = (e.prompt, e.remaining);
+            self.kv_home[e.req] = (i, epoch);
+            self.ready.push(tc, e.req);
+        }
+        true
+    }
+
+    /// Admit the head of the ready queue into a decode slot, preferring the
+    /// instance whose KV pages are still resident (no hand-off).
+    fn decode_admit(&mut self, t: f64) -> bool {
+        let Some((ready_t, r)) = self.ready.peek() else { return false };
+        if ready_t > t {
+            return false;
+        }
+        let (ctx, remaining) = self.pending[r];
+        let bmax_decode = self.bmax_decode;
+        let eligible = |inst: &FlexInstance| {
+            matches!(inst.state, State::Decode)
+                && inst.busy_until <= t
+                && inst.running.len() < bmax_decode
+                // Admission watermark (vLLM's reserved-blocks rule): keep
+                // one growth block per runner-to-be free.
+                && inst.kv.blocks_for(ctx) + inst.running.len() as u64 + 1
+                    <= inst.kv.free_blocks()
+        };
+        let (home, home_epoch) = self.kv_home[r];
+        let local_possible = self.instances[home].epoch == home_epoch + 1;
+        let target = if local_possible && eligible(&self.instances[home]) {
+            Some(home)
+        } else {
+            self.instances.iter().position(&eligible)
+        };
+        let Some(i) = target else { return false };
+        self.ready.pop();
+        let local = i == home && local_possible;
+        let transfer = if local { 0.0 } else { self.tb.kv_transfer_time(ctx) };
+        if !local {
+            self.kv_handoffs += 1;
+        }
+        let inst = &mut self.instances[i];
+        let ok = inst.kv.allocate(ctx);
+        debug_assert!(ok, "eligibility guaranteed the allocation");
+        inst.running.push(Seq { req: r, ctx, remaining, ctx_ready: t + transfer });
+        // Metrics convention shared with the disaggregation testbed: decode
+        // starts when the sequence first *could* decode (prefill completion
+        // plus transfer) — slot queueing counts into TPOT. Like
+        // `first_token`, the mark is set once: a recompute-preempted
+        // sequence keeps its original decode start, so the recompute detour
+        // lengthens its TPOT instead of erasing already-generated tokens
+        // from the clock.
+        if self.decode_start[r].is_nan() {
+            self.decode_start[r] = ready_t + transfer;
+        }
+        true
+    }
+
+    /// Run one decode iteration on the lowest-index idle decode-role (or
+    /// draining) instance with advanceable work: every resident sequence
+    /// emits one token.
+    fn decode_iterate(&mut self, t: f64) -> bool {
+        let Some(i) = self.instances.iter().position(|inst| {
+            matches!(inst.state, State::Decode | State::Draining)
+                && inst.busy_until <= t
+                && inst.running.iter().any(|s| s.ctx_ready <= t)
+        }) else {
+            return false;
+        };
+
+        // Two-phase KV growth: ensure the advancing set's extra blocks fit,
+        // recompute-preempting the youngest runner until they do (victims
+        // re-enter the global backlog with their full context as the new
+        // prompt), then grow everyone.
+        let extra = |running: &[Seq], kv: &BlockManager| -> u64 {
+            running
+                .iter()
+                .filter(|s| s.ctx_ready <= t)
+                .map(|s| kv.blocks_for(s.ctx + 1) - kv.blocks_for(s.ctx))
+                .sum()
+        };
+        loop {
+            let inst = &mut self.instances[i];
+            if extra(&inst.running, &inst.kv) <= inst.kv.free_blocks() {
+                break;
+            }
+            assert!(
+                inst.running.len() > 1,
+                "KV capacity too small for even a single sequence"
+            );
+            let victim = inst.running.pop().unwrap();
+            inst.kv.release(victim.ctx);
+            inst.stats.preemptions += 1;
+            self.waiting.push_front(WaitEntry {
+                req: victim.req,
+                prompt: victim.ctx,
+                remaining: victim.remaining,
+            });
+        }
+
+        let inst = &mut self.instances[i];
+        let advancing: Vec<usize> = inst
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.ctx_ready <= t)
+            .map(|(j, _)| j)
+            .collect();
+        if advancing.is_empty() {
+            return true; // the preemptions above were the action
+        }
+        for &j in &advancing {
+            let ctx = inst.running[j].ctx;
+            let ok = inst.kv.grow(ctx, ctx + 1);
+            debug_assert!(ok, "two-phase growth reserved the blocks");
+            inst.running[j].ctx += 1;
+        }
+        let b = advancing.len() as u32;
+        // Batch cost at the mean context (PagedAttention reads each
+        // sequence's true KV length; mean captures the aggregate).
+        let ctx_mean =
+            (advancing.iter().map(|&j| inst.running[j].ctx as u64).sum::<u64>() / b as u64) as u32;
+        let dt = self.tb.model.decode_step_time(b, ctx_mean);
+        let tc = t + dt;
+        inst.busy_until = tc;
+        inst.stats.decode_iterations += 1;
+        inst.stats.busy_time += dt;
+        // Completions — walk indices descending so swap-removal never
+        // disturbs an unprocessed slot.
+        for &j in advancing.iter().rev() {
+            inst.running[j].remaining -= 1;
+            if inst.running[j].remaining == 0 {
+                let done = inst.running.swap_remove(j);
+                inst.kv.release(done.ctx);
+                self.completion[done.req] = tc;
+                self.completed += 1;
+            }
+        }
+        true
+    }
+
+    /// Pressure-driven reallocation, evaluated only when no serving action
+    /// was possible at `t`. At most one instance changes state per call;
+    /// both rules pick the lowest-index eligible instance (no randomness).
+    fn reallocate(&mut self, t: f64) -> bool {
+        let backlog = self.waiting.len() as f64;
+        let n_pre = self.instances.iter().filter(|i| i.commits_prefill()).count() as f64;
+        // Thresholds are in full prefill batches per committed instance.
+        let unit = self.bmax_prefill as f64;
+
+        // Up: decode -> prefill past the upper hysteresis edge. Prefer an
+        // already-drained instance (switches immediately); otherwise put
+        // one into draining.
+        if backlog > self.switch_up * n_pre * unit {
+            let drained = self.instances.iter().position(|i| {
+                matches!(i.state, State::Decode) && i.running.is_empty() && i.busy_until <= t
+            });
+            if let Some(i) = drained {
+                let until = t + self.switch_latency;
+                self.instances[i].set_state(t, State::Switching { to: Role::Prefill, until });
+                return true;
+            }
+            let occupied = self.instances.iter().position(|i| matches!(i.state, State::Decode));
+            if let Some(i) = occupied {
+                self.instances[i].set_state(t, State::Draining);
+                return true;
+            }
+        }
+
+        // Down: an idle prefill instance returns to decode when the backlog
+        // sits at the lower hysteresis edge AND sequences are waiting for a
+        // slot right now (the admission rule ran before us, so waiting work
+        // means decode is genuinely under-provisioned).
+        if backlog <= self.switch_down * n_pre * unit && self.ready.count_ready(t) > 0 {
+            let idle = self
+                .instances
+                .iter()
+                .position(|i| matches!(i.state, State::Prefill) && i.busy_until <= t);
+            if let Some(i) = idle {
+                let until = t + self.switch_latency;
+                self.instances[i].set_state(t, State::Switching { to: Role::Decode, until });
+                return true;
+            }
+        }
+
+        false
+    }
+}
+
+impl EventDriven for FlexPolicy<'_> {
+    fn step(&mut self, t: f64) -> bool {
+        // Pull arrivals into the backlog (bookkeeping, not an action).
+        while self.next_arrival < self.reqs.len() && self.reqs[self.next_arrival].arrival <= t {
+            let r = &self.reqs[self.next_arrival];
+            self.waiting.push_back(WaitEntry {
+                req: self.next_arrival,
+                prompt: r.input_len,
+                remaining: r.gen_len,
+            });
+            self.next_arrival += 1;
+        }
+        self.bookkeeping(t)
+            || self.prefill_launch(t)
+            || self.decode_admit(t)
+            || self.decode_iterate(t)
+            || self.reallocate(t)
+    }
+
+    fn next_event(&self, t: f64) -> f64 {
+        let mut ne = NextEvent::after(t);
+        if let Some(r) = self.reqs.get(self.next_arrival) {
+            ne.offer(r.arrival);
+        }
+        if let Some((ready, _)) = self.ready.peek() {
+            ne.offer(ready);
+        }
+        for inst in &self.instances {
+            ne.offer(inst.busy_until);
+            if let State::Switching { until, .. } = inst.state {
+                ne.offer(until);
+            }
+            for s in &inst.running {
+                ne.offer(s.ctx_ready);
+            }
+        }
+        ne.get()
+    }
+
+    fn done(&self) -> bool {
+        self.completed >= self.reqs.len()
+    }
+}
+
+/// Run the flexible pool over an arrival-sorted workload — called from
+/// [`Testbed::run`] for `Nf` strategies.
+pub(super) fn run_dynamic(tb: &Testbed<'_>, reqs: &[Request], m: usize) -> Result<TestbedReport> {
+    let cfg: TestbedConfig = tb.config;
+    // One acceptance rule for both fidelity levels: `validate` mirrors the
+    // simulator's knobs into this config, so the check must be the shared
+    // one, not a drifting copy.
+    crate::simulator::validate_switch_knobs(cfg.switch_latency, cfg.switch_up, cfg.switch_down)?;
+    assert!(m > 0, "dynamic pool needs at least one instance");
+    let n = reqs.len();
+    let mut policy = FlexPolicy {
+        tb,
+        reqs,
+        bmax_prefill: tb.strategy.bmax_prefill.max(1) as usize,
+        bmax_decode: tb.strategy.bmax_decode.max(1) as usize,
+        switch_latency: cfg.switch_latency,
+        switch_up: cfg.switch_up,
+        switch_down: cfg.switch_down,
+        next_arrival: 0,
+        waiting: VecDeque::new(),
+        ready: ReadyQueue::new(),
+        pending: vec![(0, 0); n],
+        kv_home: vec![(0, 0); n],
+        first_token: vec![f64::NAN; n],
+        decode_start: vec![f64::NAN; n],
+        completion: vec![f64::NAN; n],
+        instances: (0..m).map(|_| FlexInstance::new(tb.kv_manager())).collect(),
+        completed: 0,
+        kv_handoffs: 0,
+    };
+    let end = drive(&mut policy, "flex-testbed");
+
+    // Attribute the occupancy tail through the true makespan (the event
+    // loop exits at the last completion *record*; iterations end later).
+    let makespan = policy.completion.iter().copied().fold(end, f64::max);
+    let mut occ = RoleOccupancy::default();
+    let mut stats = Vec::with_capacity(m);
+    for inst in policy.instances.iter_mut() {
+        inst.account(makespan);
+        occ.prefill += inst.time.prefill;
+        occ.decode += inst.time.decode;
+        occ.switching += inst.time.switching;
+        occ.switches += inst.time.switches;
+        stats.push(inst.stats);
+    }
+
+    let outcomes: Vec<RequestOutcome> = reqs
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| RequestOutcome {
+            id: r.id,
+            arrival: r.arrival,
+            first_token: policy.first_token[idx],
+            decode_start: policy.decode_start[idx],
+            completion: policy.completion[idx],
+            gen_len: r.gen_len,
+            class: r.class,
+        })
+        .collect();
+    let mut report = SimReport::from_outcomes(&outcomes);
+    report.role_occupancy = Some(occ);
+    Ok(TestbedReport { report, stats, kv_handoffs: policy.kv_handoffs })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{Platform, Scenario, Strategy, Workload};
+    use crate::simulator::generate_workload;
+    use crate::simulator::testutil::ConstModel;
+    use crate::testbed::{KvCapacity, Testbed, TestbedConfig};
+
+    fn platform() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    #[test]
+    fn single_request_pays_switches_and_stays_local() {
+        // m=1 pool, one request: up-switch, prefill, down-switch, decode —
+        // the KV survives the single flip, so the hand-off is free and the
+        // timings match the request-level simulator exactly.
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let p = platform();
+        let cfg = TestbedConfig::default();
+        let lat = cfg.switch_latency;
+        let tb = Testbed::new(&m, &p, Strategy::dynamic(1, 1), cfg);
+        let reqs = vec![crate::simulator::Request {
+            id: 0,
+            arrival: 1.0,
+            input_len: 128,
+            gen_len: 10,
+            class: 0,
+        }];
+        let out = tb.run(&reqs).unwrap();
+        let rep = &out.report;
+        assert!((rep.ttft.p50 - (lat + 0.5)).abs() < 1e-9, "{}", rep.ttft.p50);
+        assert!((rep.tpot.p50 - (lat + 0.1) / 10.0).abs() < 1e-9, "{}", rep.tpot.p50);
+        assert_eq!(out.kv_handoffs, 0, "KV must stay local across the one flip");
+        let occ = rep.role_occupancy.expect("flex testbed reports occupancy");
+        assert_eq!(occ.switches, 2);
+        assert!(occ.prefill > 0.0 && occ.decode > 0.0 && occ.switching > 0.0);
+    }
+
+    #[test]
+    fn burst_on_pool_pays_cross_instance_handoffs() {
+        // A 2-instance pool with a high up-threshold: only instance 0 ever
+        // flips to prefill, so its prefilled sequences land on instance 1
+        // (still decode-role from the start) and must pay the interconnect
+        // transfer.
+        let m = ConstModel { prefill: 0.2, step: 0.002 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(2, 1),
+            TestbedConfig { switch_up: 100.0, ..TestbedConfig::default() },
+        );
+        let reqs: Vec<crate::simulator::Request> = (0..24)
+            .map(|id| crate::simulator::Request {
+                id,
+                arrival: 0.0,
+                input_len: 2048,
+                gen_len: 32,
+                class: 0,
+            })
+            .collect();
+        let out = tb.run(&reqs).unwrap();
+        assert_eq!(out.report.n, 24);
+        assert!(out.kv_handoffs > 0, "burst must force cross-instance hand-offs");
+        assert!(out.stats.iter().map(|s| s.prefill_iterations).sum::<u64>() >= 6);
+    }
+
+    #[test]
+    fn conservation_and_determinism_under_load() {
+        let m = ConstModel { prefill: 0.05, step: 0.0005 };
+        let p = platform();
+        let tb = Testbed::new(&m, &p, Strategy::dynamic(2, 1), TestbedConfig::default());
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 32, 600));
+        let reqs = generate_workload(&w, 8.0, 6).unwrap();
+        let a = tb.run(&reqs).unwrap();
+        assert_eq!(a.report.n, 600);
+        assert!(a.report.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(a.report.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
+        let b = tb.run(&reqs).unwrap();
+        assert_eq!(a.report.ttfts, b.report.ttfts);
+        assert_eq!(a.report.tpots, b.report.tpots);
+        assert_eq!(a.kv_handoffs, b.kv_handoffs);
+        assert_eq!(a.report.role_occupancy.unwrap(), b.report.role_occupancy.unwrap());
+    }
+
+    #[test]
+    fn occupancy_fractions_account_everything() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        let tb = Testbed::new(&m, &p, Strategy::dynamic(3, 1), TestbedConfig::default());
+        let w = Workload::poisson(&Scenario::fixed("t", 512, 16, 200));
+        let reqs = generate_workload(&w, 6.0, 11).unwrap();
+        let rep = tb.run(&reqs).unwrap().report;
+        let occ = rep.role_occupancy.unwrap();
+        assert!(occ.switches >= 1, "pool never flexed: {} switches", occ.switches);
+        // Every instance-second from t=0 through the makespan lands in
+        // exactly one role bucket (fractions summing to 1 is a tautology;
+        // the total against m × makespan is the real conservation check).
+        assert!(
+            (occ.total() - 3.0 * rep.makespan).abs() < 1e-6,
+            "unaccounted instance-time: {} vs {}",
+            occ.total(),
+            3.0 * rep.makespan
+        );
+    }
+
+    #[test]
+    fn bounded_kv_preempts_and_still_completes() {
+        let m = ConstModel { prefill: 0.02, step: 0.0005 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(1, 1),
+            TestbedConfig {
+                kv_capacity: KvCapacity::Blocks(24), // 384 tokens
+                ..TestbedConfig::default()
+            },
+        );
+        // Peak demand 4 × (100 + 150) = 1000 tokens >> 384: recompute
+        // preemption must kick in, and every request must still finish.
+        let reqs: Vec<crate::simulator::Request> = (0..4)
+            .map(|id| crate::simulator::Request {
+                id,
+                arrival: 0.0,
+                input_len: 100,
+                gen_len: 150,
+                class: 0,
+            })
+            .collect();
+        let out = tb.run(&reqs).unwrap();
+        assert_eq!(out.report.n, 4);
+        assert!(
+            out.stats.iter().map(|s| s.preemptions).sum::<u64>() > 0,
+            "expected recompute preemption under KV pressure"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_switch_knobs() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = platform();
+        let reqs = vec![crate::simulator::Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            gen_len: 4,
+            class: 0,
+        }];
+        let bad_latency = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(2, 1),
+            TestbedConfig { switch_latency: f64::NAN, ..TestbedConfig::default() },
+        );
+        assert!(bad_latency.run(&reqs).is_err());
+        let bad_band = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(2, 1),
+            TestbedConfig { switch_up: 0.0, switch_down: 0.0, ..TestbedConfig::default() },
+        );
+        assert!(bad_band.run(&reqs).is_err());
+    }
+}

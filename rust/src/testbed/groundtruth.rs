@@ -7,6 +7,7 @@ use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 use crate::simulator::generate_workload;
+use crate::util::bisect::{bisect_feasible_rate, RateBracket};
 
 use super::cluster::{Testbed, TestbedConfig};
 
@@ -50,9 +51,11 @@ pub fn testbed_feasible(
     Ok(slo.feasible(rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile)))
 }
 
-/// Maximum feasible rate on the testbed (same bisection scheme as
-/// Algorithm 8, driven by token-level simulation instead of the
-/// request-level Simulator).
+/// Maximum feasible rate on the testbed: the same Algorithm-8 search as
+/// `optimizer::find_goodput` — literally the same loop,
+/// [`bisect_feasible_rate`] — driven by token-level simulation instead of
+/// the request-level Simulator. Covers the full strategy space, dynamic
+/// (`Nf`) pools included.
 pub fn testbed_goodput(
     model: &dyn LatencyModel,
     platform: &Platform,
@@ -74,37 +77,16 @@ pub fn testbed_goodput(
             * strategy.bmax_prefill as f64)
             .max(d as f64 * strategy.bmax_decode as f64),
     };
-    // Bisect in scale units: rate bounds divided by the base rate.
-    let mut lo = cfg.lambda_min / workload.base_rate;
-    let mut hi = cfg.upper_factor * capacity / t_min / workload.base_rate;
-    if hi <= lo {
-        // Degenerate bracket (see `find_goodput`): feasibility-check the
-        // capacity ceiling itself instead of probing above it at lambda_min.
-        let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
-        if !(bound.is_finite() && bound > 0.0) {
-            return Ok(0.0); // infinite T_min (or zero capacity): nothing to probe
-        }
-        return if testbed_feasible(model, platform, strategy, workload, slo, cfg, bound, seed)? {
-            Ok(bound * workload.base_rate)
-        } else {
-            Ok(0.0)
-        };
-    }
-    if !testbed_feasible(model, platform, strategy, workload, slo, cfg, lo, seed)? {
-        return Ok(0.0);
-    }
-    if testbed_feasible(model, platform, strategy, workload, slo, cfg, hi, seed)? {
-        return Ok(hi * workload.base_rate);
-    }
-    while hi - lo > cfg.tolerance / workload.base_rate {
-        let mid = 0.5 * (lo + hi);
-        if testbed_feasible(model, platform, strategy, workload, slo, cfg, mid, seed)? {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    Ok(lo * workload.base_rate)
+    bisect_feasible_rate(
+        RateBracket {
+            // Bisect in scale units: rate bounds divided by the base rate.
+            lo: cfg.lambda_min / workload.base_rate,
+            hi: cfg.upper_factor * capacity / t_min / workload.base_rate,
+            tolerance: cfg.tolerance,
+            base_rate: workload.base_rate,
+        },
+        |scale| testbed_feasible(model, platform, strategy, workload, slo, cfg, scale, seed),
+    )
 }
 
 #[cfg(test)]
@@ -132,6 +114,43 @@ mod tests {
         )
         .unwrap();
         assert!(g > 4.0 && g < 10.9, "goodput {g}");
+    }
+
+    #[test]
+    fn dynamic_pool_has_measurable_goodput() {
+        // The Nf engine closes the ground-truth gap: a flexible pool must
+        // bisect to a positive goodput on the toy model, in the same
+        // ballpark as the equal-size collocation deployment.
+        let m = ConstModel { prefill: 0.1, step: 1e-4 };
+        let platform = Platform::paper_testbed();
+        let w = Workload::poisson(&crate::config::Scenario::fixed("t", 256, 8, 800));
+        let cfg = GroundTruthConfig::default();
+        let slo = Slo::paper_default();
+        let g_dyn = testbed_goodput(
+            &m,
+            &platform,
+            &Strategy::dynamic(2, 1),
+            &w,
+            &slo,
+            &cfg,
+            23,
+        )
+        .unwrap();
+        let g_col = testbed_goodput(
+            &m,
+            &platform,
+            &Strategy::collocation(2, 1),
+            &w,
+            &slo,
+            &cfg,
+            23,
+        )
+        .unwrap();
+        assert!(g_dyn > 0.0, "dynamic ground truth must be measurable");
+        assert!(
+            g_dyn > 0.3 * g_col && g_col > 0.0,
+            "dynamic {g_dyn} vs collocation {g_col} req/s"
+        );
     }
 
     #[test]

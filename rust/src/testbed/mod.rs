@@ -5,14 +5,21 @@
 //! closest synthetic equivalent (DESIGN.md §Hardware-Adaptation): a
 //! token-granular, iteration-level continuous-batching serving system with
 //! vLLM's scheduler semantics (prefill priority, unmixed batches, paged KV
-//! with recompute preemption, round-robin routing, disaggregated KV
+//! with recompute preemption, role-aware routing, disaggregated KV
 //! hand-off), driven by the same latency surface as the Simulator. The gap
 //! between BestServe's request-level heuristics and this token-level
 //! reference is exactly the error source the paper analyzes (§5), so the
 //! Figure 11 comparison preserves the relevant behaviour.
+//!
+//! Engines exist for the **full strategy space**: collocation (`Nm`) and
+//! static disaggregation (`NpMd`) route through the static role groups in
+//! [`cluster`], and the dynamic PD-reallocation pool (`Nf`) runs on the
+//! flexible-role cluster in [`flex`] — so `validation::validate` can
+//! ground-truth every architecture the optimizer ranks (no skip-filter).
 
 pub mod cluster;
 pub mod engine;
+pub mod flex;
 pub mod groundtruth;
 pub mod kv;
 
@@ -20,3 +27,29 @@ pub use cluster::{KvCapacity, Testbed, TestbedConfig, TestbedReport};
 pub use engine::{Engine, EngineStats, SeqInput, SeqOutcome};
 pub use groundtruth::{testbed_feasible, testbed_goodput, GroundTruthConfig};
 pub use kv::BlockManager;
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Strategy;
+    use crate::simulator::testutil::assert_testbed_invariants;
+
+    // The cross-architecture invariant suite (conservation, TTFT/TPOT
+    // causality, NaN-free metrics, seed determinism) over *token-level*
+    // runs — the same suite the request-level simulators pass, so both
+    // fidelity levels answer to one contract.
+
+    #[test]
+    fn testbed_invariants_hold_for_collocation() {
+        assert_testbed_invariants(&Strategy::collocation(2, 1));
+    }
+
+    #[test]
+    fn testbed_invariants_hold_for_disaggregation() {
+        assert_testbed_invariants(&Strategy::disaggregation(1, 1, 1));
+    }
+
+    #[test]
+    fn testbed_invariants_hold_for_dynamic() {
+        assert_testbed_invariants(&Strategy::dynamic(2, 1));
+    }
+}

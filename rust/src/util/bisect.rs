@@ -1,0 +1,137 @@
+//! The Algorithm-8 bisection scheme over an arrival-rate *scale factor*,
+//! shared by the Optimizer's goodput search (`optimizer::find_goodput`) and
+//! the token-level testbed's ground-truth measurement
+//! (`testbed::testbed_goodput`). Both used to carry their own copy of the
+//! loop — including the degenerate-bracket arm — and the two had already
+//! drifted once; one helper keeps prediction and measurement on literally
+//! the same search.
+
+use crate::error::Result;
+
+/// A bisection bracket in *scale units* (rate divided by the workload's
+/// base rate), plus the knobs needed to convert back to requests/second.
+#[derive(Debug, Clone, Copy)]
+pub struct RateBracket {
+    /// Pessimistic lower bound (`lambda_min / base_rate`).
+    pub lo: f64,
+    /// Optimistic capacity ceiling (`upper_factor * capacity / T_min /
+    /// base_rate`).
+    pub hi: f64,
+    /// Bisection tolerance ε in requests/second (Algorithm 8).
+    pub tolerance: f64,
+    /// The workload's base rate — scale × base_rate is the effective rate.
+    pub base_rate: f64,
+}
+
+/// Algorithm 8's search loop: find the highest feasible rate inside the
+/// bracket, in requests/second. `feasible(scale)` answers Algorithm 9's
+/// `FEASIBLE(λ)` question at one rate scale — request-level simulation for
+/// the Optimizer, a token-level testbed run for the ground truth.
+///
+/// The degenerate-bracket arm (`hi <= lo`: slow model, tiny capacity, or
+/// large base rate) feasibility-checks the capacity ceiling itself instead
+/// of probing λ_min *above* the ceiling — probing at `lo` would wrongly
+/// reject (or over-report) such strategies (regression tests live at both
+/// call sites).
+pub fn bisect_feasible_rate(
+    bracket: RateBracket,
+    mut feasible: impl FnMut(f64) -> Result<bool>,
+) -> Result<f64> {
+    let RateBracket { mut lo, mut hi, tolerance, base_rate } = bracket;
+    if hi <= lo {
+        let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
+        if !(bound.is_finite() && bound > 0.0) {
+            return Ok(0.0); // infinite T_min (or zero capacity): nothing to probe
+        }
+        return if feasible(bound)? { Ok(bound * base_rate) } else { Ok(0.0) };
+    }
+    if !feasible(lo)? {
+        return Ok(0.0); // rejected outright (Algorithm 8 line 5)
+    }
+    // If even the optimistic ceiling is feasible, report it (the strategy
+    // is SLO-bound by capacity, not queueing).
+    if feasible(hi)? {
+        return Ok(hi * base_rate);
+    }
+    while hi - lo > tolerance / base_rate {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo * base_rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bracket(lo: f64, hi: f64) -> RateBracket {
+        RateBracket { lo, hi, tolerance: 0.01, base_rate: 1.0 }
+    }
+
+    #[test]
+    fn converges_to_threshold() {
+        let g = bisect_feasible_rate(bracket(0.1, 10.0), |s| Ok(s <= 4.2)).unwrap();
+        assert!((g - 4.2).abs() < 0.011, "{g}");
+    }
+
+    #[test]
+    fn infeasible_floor_returns_zero() {
+        let g = bisect_feasible_rate(bracket(0.1, 10.0), |_| Ok(false)).unwrap();
+        assert_eq!(g, 0.0);
+    }
+
+    #[test]
+    fn feasible_ceiling_short_circuits() {
+        let mut probes = 0;
+        let g = bisect_feasible_rate(bracket(0.1, 10.0), |_| {
+            probes += 1;
+            Ok(true)
+        })
+        .unwrap();
+        assert_eq!(g, 10.0);
+        assert_eq!(probes, 2, "lo + hi checks only");
+    }
+
+    #[test]
+    fn degenerate_bracket_probes_the_ceiling_once() {
+        let mut probed = Vec::new();
+        let g = bisect_feasible_rate(bracket(0.5, 0.2), |s| {
+            probed.push(s);
+            Ok(true)
+        })
+        .unwrap();
+        assert_eq!(probed, vec![0.2], "must probe the ceiling, not lambda_min");
+        assert_eq!(g, 0.2);
+        let g0 = bisect_feasible_rate(bracket(0.5, 0.2), |_| Ok(false)).unwrap();
+        assert_eq!(g0, 0.0);
+        // Nothing to probe when the ceiling itself is degenerate.
+        let gnan = bisect_feasible_rate(bracket(0.5, 0.0), |_| {
+            panic!("must not probe a non-positive ceiling")
+        })
+        .unwrap();
+        assert_eq!(gnan, 0.0);
+    }
+
+    #[test]
+    fn base_rate_converts_scale_to_rate() {
+        let g = bisect_feasible_rate(
+            RateBracket { lo: 0.05, hi: 5.0, tolerance: 0.01, base_rate: 2.0 },
+            |s| Ok(s <= 2.1),
+        )
+        .unwrap();
+        // Scale threshold 2.1 → 4.2 req/s at base rate 2.
+        assert!((g - 4.2).abs() < 0.011, "{g}");
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let r = bisect_feasible_rate(bracket(0.1, 10.0), |_| {
+            Err(crate::error::Error::simulation("boom"))
+        });
+        assert!(r.is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! build environment has no `rand`/`serde`/`proptest`, so these are built
 //! in-repo (see DESIGN.md §6).
 
+pub mod bisect;
 pub mod csv;
 pub mod json;
 pub mod parallel;

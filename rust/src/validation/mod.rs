@@ -1,7 +1,12 @@
 //! §4.3 / Figure 11 — validation of BestServe against the ground truth:
-//! for every strategy in the space, compare the Optimizer's goodput
-//! estimate with the token-level testbed's measured maximum feasible rate,
-//! reporting normalized goodputs and relative errors.
+//! for every strategy in the space — collocation, static disaggregation,
+//! *and* the dynamic (`Nf`) PD-reallocation pool — compare the Optimizer's
+//! goodput estimate with the token-level testbed's measured maximum
+//! feasible rate, reporting normalized goodputs and relative errors. The
+//! dynamic rows compare like for like: [`validate`] mirrors the
+//! simulator's switch knobs (`switch_latency` / `switch_up` /
+//! `switch_down`) into the testbed configuration, so prediction and
+//! measurement run the same reallocation policy.
 //!
 //! Like the optimizer sweep, validation is embarrassingly parallel per
 //! strategy — prediction bisection and testbed ground truth are both
@@ -10,7 +15,7 @@
 //! index, and sorts with the stable NaN-last ranking: reports are
 //! byte-identical for any thread count.
 
-use crate::config::{Platform, Slo, StrategySpace, Workload};
+use crate::config::{Architecture, Platform, Slo, StrategySpace, Workload};
 use crate::error::Result;
 use crate::optimizer::{find_goodput, GoodputConfig, ModelFactory};
 use crate::simulator::SimParams;
@@ -22,6 +27,9 @@ use crate::util::table::{pct, rate, Table};
 #[derive(Debug, Clone)]
 pub struct ValidationRow {
     pub strategy: String,
+    /// Architecture of the strategy — lets callers group rows by family
+    /// without parsing the rendered name.
+    pub arch: Architecture,
     pub cards: u32,
     /// BestServe's goodput estimate (req/s).
     pub predicted: f64,
@@ -178,14 +186,15 @@ pub fn validate(
     cfg: &ValidationConfig,
     threads: usize,
 ) -> Result<ValidationReport> {
-    // Dynamic (Nf) strategies have no token-level ground-truth engine yet,
-    // so there is nothing to validate the simulator against — skip them
-    // rather than erroring mid-sweep.
-    let strategies: Vec<_> = space
-        .enumerate()
-        .into_iter()
-        .filter(|s| !s.arch.is_dynamic())
-        .collect();
+    let strategies = space.enumerate();
+
+    // Predicted and measured runs must agree on the dynamic-pool policy:
+    // mirror the simulator's switch knobs into the testbed configuration so
+    // `Nf` rows compare the same reallocation rule at both fidelity levels.
+    let mut ground_truth = cfg.ground_truth;
+    ground_truth.testbed.switch_latency = cfg.sim_params.switch_latency;
+    ground_truth.testbed.switch_up = cfg.sim_params.switch_up;
+    ground_truth.testbed.switch_down = cfg.sim_params.switch_down;
 
     // Pre-build the per-tp models serially; workers only share the Arcs.
     let mut models: std::collections::HashMap<u32, std::sync::Arc<dyn crate::estimator::LatencyModel>> =
@@ -213,12 +222,13 @@ pub fn validate(
             strategy,
             workload,
             slo,
-            &cfg.ground_truth,
+            &ground_truth,
             cfg.seed,
         )?;
         let cards = strategy.total_cards();
         Ok(ValidationRow {
             strategy: strategy.to_string(),
+            arch: strategy.arch,
             cards,
             predicted,
             measured,
@@ -240,6 +250,7 @@ mod tests {
     fn row(st: &str, pred: f64, meas: f64) -> ValidationRow {
         ValidationRow {
             strategy: st.into(),
+            arch: Architecture::Disaggregation { p: 2, d: 2 },
             cards: 4,
             predicted: pred,
             measured: meas,
@@ -304,9 +315,12 @@ mod tests {
         };
         let serial = run(1);
         assert!(!serial.rows.is_empty());
-        // Dynamic strategies are skipped (no ground-truth engine), never
-        // errored on, even though the default space enumerates them.
-        assert!(serial.rows.iter().all(|r| !r.strategy.contains("f-tp")));
+        // The full space is validated — dynamic (Nf) strategies included,
+        // now that the testbed has a flexible-role engine.
+        assert!(
+            serial.rows.iter().any(|r| r.arch.is_dynamic()),
+            "dynamic strategies missing from the validation sweep"
+        );
         for threads in [2, 4, 8] {
             let par = run(threads);
             assert_eq!(serial.rows.len(), par.rows.len(), "threads={threads}");
@@ -315,6 +329,63 @@ mod tests {
                 assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
                 assert_eq!(a.measured.to_bits(), b.measured.to_bits());
             }
+        }
+    }
+
+    /// Simulator-vs-testbed consistency regression: on a toy `ConstModel`
+    /// preset grid the two fidelity levels must stay within a pinned mean
+    /// absolute relative error, per architecture family. The bounds are a
+    /// drift tripwire, not a precision claim — the paper itself reports
+    /// per-panel errors up to ~30% — so fidelity regressions fail CI
+    /// instead of silently widening.
+    #[test]
+    fn simulator_testbed_fidelity_stays_within_pinned_bounds() {
+        use crate::config::{Scenario, StrategySpace};
+        use crate::estimator::LatencyModel;
+        use crate::simulator::testutil::ConstModel;
+        use std::sync::Arc;
+        struct ConstFactory;
+        impl ModelFactory for ConstFactory {
+            fn model_for_tp(&self, _tp: u32) -> Result<Arc<dyn LatencyModel>> {
+                Ok(Arc::new(ConstModel { prefill: 0.05, step: 0.001 }))
+            }
+        }
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 3,
+            tp_choices: vec![1],
+            ..StrategySpace::default()
+        };
+        let workload = Workload::poisson(&Scenario::fixed("toy-grid", 256, 16, 300));
+        let slo = Slo::paper_default();
+        let mut cfg = ValidationConfig::default();
+        cfg.goodput.tolerance = 0.2;
+        cfg.ground_truth.tolerance = 0.2;
+        let rep = validate(&ConstFactory, &platform, &space, &workload, &slo, &cfg, 4).unwrap();
+
+        // Pinned per-family bounds: static engines mirror the simulator
+        // closely; the dynamic pool adds reallocation-timing divergence.
+        // Generous enough to absorb bisection-tolerance noise, tight enough
+        // that a broken engine (goodput collapsing or doubling) trips them.
+        for (fam, bound) in [("collocation", 0.6), ("disaggregation", 0.6), ("dynamic", 0.75)] {
+            let rows: Vec<&ValidationRow> =
+                rep.rows.iter().filter(|r| r.arch.family() == fam).collect();
+            assert!(!rows.is_empty(), "{fam} family missing from the validated space");
+            for r in &rows {
+                assert!(
+                    r.predicted > 0.0 && r.measured > 0.0,
+                    "{fam} {}: degenerate goodput (pred {}, meas {})",
+                    r.strategy,
+                    r.predicted,
+                    r.measured
+                );
+            }
+            let mare = rows.iter().filter_map(|r| r.rel_error()).map(f64::abs).sum::<f64>()
+                / rows.len() as f64;
+            assert!(
+                mare <= bound,
+                "{fam} fidelity drift: mean |rel err| {mare:.3} exceeds pinned bound {bound}"
+            );
         }
     }
 

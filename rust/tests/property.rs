@@ -11,8 +11,10 @@ use bestserve::config::{
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{find_goodput, GoodputConfig};
+use bestserve::planner::pareto::{dominates, frontier};
+use bestserve::planner::PlanPoint;
 use bestserve::simulator::{generate_workload, simulate, SimParams};
-use bestserve::testbed::{Testbed, TestbedConfig};
+use bestserve::testbed::{BlockManager, Engine, SeqInput, Testbed, TestbedConfig};
 use bestserve::util::quickcheck::{check, Gen};
 
 /// A random but valid LLaMa-shaped model.
@@ -177,6 +179,205 @@ fn prop_testbed_conserves_and_respects_service_floor() {
             return Err(format!("lost requests: {} != {n}", rep.n));
         }
         // TTFT can never beat a single-request prefill.
+        let floor = o.prefill_time(1, s as u32);
+        if rep.ttft.min + 1e-9 < floor {
+            return Err(format!("TTFT {} beats service floor {floor}", rep.ttft.min));
+        }
+        Ok(())
+    });
+}
+
+/// A random plan point: goodput may be zero (infeasible) and the point may
+/// be memory-rejected, to exercise the frontier's exclusion rules.
+fn gen_plan_point(g: &mut Gen) -> PlanPoint {
+    let cards = g.usize_in(1, 32) as u32;
+    let goodput = if g.u64_below(4) == 0 { 0.0 } else { g.f64_in(0.1, 20.0) };
+    let cost_per_hour = cards as f64 * g.f64_in(0.5, 8.0);
+    PlanPoint {
+        hardware: format!("hw{}", g.u64_below(3)),
+        strategy: Strategy::collocation(cards, 1),
+        cards,
+        goodput,
+        normalized: goodput / cards as f64,
+        memory_rejected: g.u64_below(8) == 0,
+        cost_per_mtok: bestserve::planner::cost::per_million_tokens(
+            cost_per_hour,
+            goodput,
+            g.f64_in(8.0, 256.0),
+        ),
+        cost_per_hour,
+    }
+}
+
+#[test]
+fn prop_pareto_frontier_no_dominated_survivor_and_idempotent() {
+    check("pareto frontier", 150, |g| {
+        let n = g.size(40);
+        let mut pts: Vec<PlanPoint> = (0..n).map(|_| gen_plan_point(g)).collect();
+        // Seed duplicates: identical objective vectors must both survive.
+        if !pts.is_empty() && g.bool() {
+            let dup = pts[g.usize_in(0, pts.len() - 1)].clone();
+            pts.push(dup);
+        }
+        let f = frontier(&pts);
+        for s in &f {
+            if s.goodput <= 0.0 || s.memory_rejected {
+                return Err(format!("excluded point survived: {s:?}"));
+            }
+            if let Some(q) =
+                pts.iter().find(|q| !q.memory_rejected && dominates(q, s))
+            {
+                return Err(format!("dominated survivor {s:?} (dominated by {q:?})"));
+            }
+        }
+        // Idempotence: pruning the frontier again must change nothing.
+        let ff = frontier(&f);
+        if ff != f {
+            return Err(format!("frontier not idempotent: {} -> {}", f.len(), ff.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_manager_conserves_blocks() {
+    // Random allocate/grow/release interleavings: the manager must never
+    // go block-negative (free > total or used out of sync with the live
+    // set) and must report allocation failures exactly when the request
+    // exceeds the free pool.
+    check("block manager conservation", 200, |g| {
+        let block_size = *g.choose(&[1u32, 8, 16, 32]);
+        let total = g.usize_in(1, 256) as u64;
+        let mut m = BlockManager::new(block_size, total);
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..g.usize_in(1, 60) {
+            match g.u64_below(3) {
+                0 => {
+                    let t = g.usize_in(1, 4096) as u32;
+                    let free_before = m.free_blocks();
+                    let fits = m.blocks_for(t) <= free_before;
+                    if m.allocate(t) != fits {
+                        return Err(format!("allocate({t}) disagreed with can-fit"));
+                    }
+                    if fits {
+                        live.push(t);
+                    } else if m.free_blocks() != free_before {
+                        return Err("failed allocation changed the free pool".into());
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let t = live[i];
+                    let delta = g.usize_in(1, 64) as u32;
+                    let extra = m.blocks_for(t + delta) - m.blocks_for(t);
+                    let fits = extra <= m.free_blocks();
+                    if m.grow(t, t + delta) != fits {
+                        return Err(format!("grow({t}, {}) disagreed with can-fit", t + delta));
+                    }
+                    if fits {
+                        live[i] = t + delta;
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let t = live.swap_remove(g.usize_in(0, live.len() - 1));
+                    m.release(t);
+                }
+                _ => {}
+            }
+            let used: u64 = live.iter().map(|&t| m.blocks_for(t)).sum();
+            if m.used_blocks() != used {
+                return Err(format!(
+                    "accounting drift: used {} vs live set {}",
+                    m.used_blocks(),
+                    used
+                ));
+            }
+            if m.free_blocks() > total {
+                return Err(format!("free {} exceeds capacity {total}", m.free_blocks()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recompute_preemption_restores_freed_blocks() {
+    // Engine runs under tight KV: recompute preemption must give back
+    // exactly what it evicts — after every sequence completes, the cache is
+    // fully free again (any leak or double-release shows up here) and no
+    // request is lost.
+    struct TinyModel;
+    impl LatencyModel for TinyModel {
+        fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+            0.01
+        }
+        fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+            0.001
+        }
+    }
+    check("preemption restores blocks", 60, |g| {
+        let total = g.usize_in(8, 16) as u64;
+        let n = g.usize_in(2, 6);
+        let mut t = 0.0f64;
+        let inputs: Vec<SeqInput> = (0..n)
+            .map(|req| {
+                t += g.f64_in(0.0, 0.05);
+                SeqInput {
+                    req,
+                    ready: t,
+                    input_len: g.usize_in(16, 48) as u32,
+                    gen_len: g.usize_in(8, 64) as u32,
+                    needs_prefill: true,
+                }
+            })
+            .collect();
+        let model = TinyModel;
+        let mut e = Engine {
+            model: &model,
+            bmax_prefill: g.usize_in(1, 4) as u32,
+            bmax_decode: g.usize_in(2, 8) as u32,
+            kv: BlockManager::new(16, total),
+        };
+        let (out, _stats) = e.run(&inputs);
+        if out.len() != n {
+            return Err(format!("lost sequences: {} of {n} completed", out.len()));
+        }
+        if e.kv.free_blocks() != e.kv.total_blocks {
+            return Err(format!(
+                "KV leak: {} of {} blocks free after all completions",
+                e.kv.free_blocks(),
+                e.kv.total_blocks
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flex_testbed_conserves_requests() {
+    // The flexible-role (Nf) testbed under random pools and loads: every
+    // request completes once with finite, positive metrics — the same
+    // contract as the static engines.
+    check("flex testbed conservation", 10, |g| {
+        let p = Platform::paper_testbed();
+        let o = AnalyticOracle::new(p.clone(), 4);
+        let n = g.usize_in(40, 120);
+        let s = g.usize_in(64, 1024) as u64;
+        let w = Workload::poisson(&Scenario::fixed("prop", s, g.usize_in(4, 32) as u64, n));
+        let strategy = Strategy::dynamic(g.usize_in(1, 3) as u32, 4);
+        let reqs = generate_workload(&w, g.f64_in(0.2, 3.0), g.u64_below(1 << 40))
+            .map_err(|e| e.to_string())?;
+        let tb = Testbed::new(&o, &p, strategy, TestbedConfig::default());
+        let rep = tb.run(&reqs).map_err(|e| e.to_string())?.report;
+        if rep.n != n {
+            return Err(format!("lost requests: {} != {n}", rep.n));
+        }
+        if !rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0) {
+            return Err("non-finite or non-positive TTFT".into());
+        }
+        if !rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0) {
+            return Err("non-finite or non-positive TPOT".into());
+        }
         let floor = o.prefill_time(1, s as u32);
         if rep.ttft.min + 1e-9 < floor {
             return Err(format!("TTFT {} beats service floor {floor}", rep.ttft.min));
