@@ -11,7 +11,7 @@
 //! Run: `cargo run --release --example capacity_plan`
 
 use bestserve::config::{HardwareConfig, Platform, Scenario, Slo, StrategySpace, Workload};
-use bestserve::optimizer::GoodputConfig;
+use bestserve::optimizer::{GoodputConfig, PruneConfig};
 use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
 use bestserve::report;
 use bestserve::simulator::SimParams;
@@ -33,6 +33,7 @@ fn main() -> bestserve::Result<()> {
         goodput: GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() },
         sim_params: SimParams::default(),
         check_memory: true,
+        prune: PruneConfig::default(),
     };
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
@@ -66,10 +67,12 @@ fn main() -> bestserve::Result<()> {
         threads,
     )?;
     println!(
-        "\nswept {} plan points in {:.1}s on {} thread(s)\n",
+        "\nswept {} plan points in {:.1}s on {} thread(s) — {} probed, {} pruned\n",
         rep.points.len(),
         t0.elapsed().as_secs_f64(),
-        threads
+        threads,
+        rep.points_probed,
+        rep.points_pruned
     );
 
     println!(

@@ -82,6 +82,17 @@ impl LengthDist {
         }
     }
 
+    /// A lower bound on sampled values — the analytic pre-filter's
+    /// best-case request shape. `LogNormal` samples clamp to `[1, cap]`,
+    /// so its floor is 1.
+    pub fn lower(&self) -> u64 {
+        match *self {
+            LengthDist::Fixed(v) => v,
+            LengthDist::Uniform { lo, .. } => lo,
+            LengthDist::LogNormal { .. } => 1,
+        }
+    }
+
     pub(crate) fn to_json(&self) -> Json {
         match *self {
             LengthDist::Fixed(v) => Json::obj(vec![
@@ -266,6 +277,13 @@ mod tests {
     fn means() {
         assert_eq!(LengthDist::Fixed(7).mean(), 7.0);
         assert_eq!(LengthDist::Uniform { lo: 0, hi: 10 }.mean(), 5.0);
+    }
+
+    #[test]
+    fn lower_bounds() {
+        assert_eq!(LengthDist::Fixed(7).lower(), 7);
+        assert_eq!(LengthDist::Uniform { lo: 3, hi: 10 }.lower(), 3);
+        assert_eq!(LengthDist::LogNormal { mu: 5.0, sigma: 1.0, cap: 100 }.lower(), 1);
     }
 
     #[test]

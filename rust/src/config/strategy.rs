@@ -172,6 +172,25 @@ impl Strategy {
         self.arch.instances() * self.tp
     }
 
+    /// Aggregate batch-slot capacity of the deployment, in "requests in
+    /// flight": collocation and dynamic pools run every instance at the
+    /// larger of the two batch maxima, while a disaggregated deployment is
+    /// throttled by whichever stage offers more concurrent slots. Used to
+    /// size the goodput bisection bracket and the analytic upper bound
+    /// (`estimator::bound`).
+    pub fn capacity_factor(&self) -> f64 {
+        match self.arch {
+            Architecture::Collocation { m } | Architecture::Dynamic { m } => {
+                m as f64 * self.bmax_decode.max(self.bmax_prefill) as f64
+            }
+            Architecture::Disaggregation { p, d } => {
+                let prefill = p as f64 * self.bmax_prefill as f64;
+                let decode = d as f64 * self.bmax_decode as f64;
+                prefill.max(decode)
+            }
+        }
+    }
+
     pub fn validate(&self) -> Result<(), Error> {
         if self.tp == 0 {
             return Err(Error::config("tp must be >= 1"));
@@ -382,6 +401,17 @@ mod tests {
         let all = dyn_only.enumerate();
         assert!(!all.is_empty());
         assert!(all.iter().all(|s| s.arch.is_dynamic()));
+    }
+
+    #[test]
+    fn capacity_factor_by_family() {
+        // Collocation / dynamic: instances x max(bmax); disagg: stage max.
+        assert_eq!(Strategy::collocation(3, 2).capacity_factor(), 48.0);
+        assert_eq!(Strategy::dynamic(2, 1).capacity_factor(), 32.0);
+        // 3p1d: prefill slots 3*4 = 12, decode slots 1*16 = 16 -> 16.
+        assert_eq!(Strategy::disaggregation(3, 1, 1).capacity_factor(), 16.0);
+        // 1p3d: decode slots 3*16 = 48 dominates.
+        assert_eq!(Strategy::disaggregation(1, 3, 1).capacity_factor(), 48.0);
     }
 
     #[test]

@@ -349,6 +349,17 @@ impl Workload {
         self.classes.iter().map(|c| c.gen_len.upper()).max().unwrap_or(1)
     }
 
+    /// Smallest input-length lower bound over the classes — the best-case
+    /// request the analytic pre-filter must assume when deciding that a
+    /// strategy cannot meet the SLO for *any* request.
+    pub fn min_input(&self) -> u64 {
+        self.classes.iter().map(|c| c.input_len.lower()).min().unwrap_or(1)
+    }
+
+    pub fn min_gen(&self) -> u64 {
+        self.classes.iter().map(|c| c.gen_len.lower()).min().unwrap_or(1)
+    }
+
     /// The per-class SLO budgets of the mix, as (class index, SLO) pairs —
     /// empty when no class declares one. Feasibility (Algorithm 9) then
     /// additionally requires each listed class to meet its own budget,
@@ -483,6 +494,8 @@ mod tests {
         assert!((w.mean_gen() - 20.0).abs() < 1e-9);
         assert_eq!(w.upper_input(), 2000);
         assert_eq!(w.upper_gen(), 50);
+        assert_eq!(w.min_input(), 1000);
+        assert_eq!(w.min_gen(), 10);
         assert_eq!(w.cumulative_weights(), vec![3.0, 4.0]);
     }
 

@@ -1,0 +1,147 @@
+//! Analytic goodput bounds — roofline-derived, simulation-free hooks the
+//! planner and optimizer use to discard grid points *before* paying for a
+//! bisection (each bisection costs dozens of discrete-event simulations).
+//!
+//! Two predicates live here:
+//!
+//! * [`goodput_upper_bound`] — an *unconditional* ceiling on what
+//!   `optimizer::find_goodput` can return for a strategy. It is exactly the
+//!   bisection bracket's upper end (`upper_factor × capacity / T_min`, with
+//!   `T_min` the roofline minimum time to serve one mean-length request and
+//!   `capacity` the deployment's aggregate batch slots), and
+//!   `util::bisect::bisect_feasible_rate` never reports a rate above
+//!   `hi × base_rate` — including its degenerate-bracket arm. A point whose
+//!   ceiling cannot beat an incumbent is therefore safe to drop without
+//!   changing any output.
+//! * [`slo_unattainable`] — a sufficient condition for the bisection to
+//!   return *exactly* `0.0`: if even a lone, shortest request on an
+//!   otherwise idle deployment must violate the relaxed SLO, then every
+//!   request at every arrival rate does, so `FEASIBLE(λ_min)` is false and
+//!   Algorithm 8 exits with zero.
+//!
+//! # Soundness contract
+//!
+//! Both predicates lean on two invariants pinned elsewhere in the suite:
+//!
+//! 1. **Model monotonicity** — latency is non-decreasing in batch size,
+//!    prompt length, and context length
+//!    (`tests/property.rs::prop_estimator_monotone_in_batch_and_length`).
+//!    A lone request of minimum length is thus a lower bound on every
+//!    request's service time.
+//! 2. **Simulator floors** — every simulated request reports
+//!    TTFT ≥ one prefill service and TPOT ≥ one decode step
+//!    (`simulator::testutil`'s cross-stack invariant suite): queueing,
+//!    batching, and pool switching only add latency.
+//!
+//! `slo_unattainable` checks the *aggregate* SLO only; per-class budgets
+//! ([`crate::config::Workload::class_slos`]) add constraints, so an
+//! aggregate-infeasible mix is also infeasible with class budgets. The TPOT
+//! arm is guarded by `min_gen >= 2` because single-token requests can
+//! report a degenerate TPOT that undercuts a decode step.
+
+use crate::config::{Slo, Strategy, Workload};
+
+use super::oracle::LatencyModel;
+
+/// Upper bound (requests/second) on the goodput `optimizer::find_goodput`
+/// can report for `strategy` under `model` and `workload` — the bisection
+/// bracket ceiling itself. May be `NaN`/`inf` for degenerate models; callers
+/// that prune must treat non-finite bounds as "claim nothing"
+/// (see `planner`).
+pub fn goodput_upper_bound(
+    model: &dyn LatencyModel,
+    strategy: &Strategy,
+    workload: &Workload,
+    upper_factor: f64,
+) -> f64 {
+    let s = workload.mean_input().round() as u32;
+    let s_plus = workload.mean_gen().round().max(1.0) as u32;
+    let t_min = model.min_request_time(s, s_plus);
+    upper_factor * strategy.capacity_factor() / t_min
+}
+
+/// `true` when *no* arrival rate can meet the relaxed SLO, i.e. the goodput
+/// bisection is guaranteed to return exactly `0.0` — so the caller can
+/// synthesize that zero without running a single simulation.
+///
+/// The check costs two model evaluations: a batch-1 prefill of the
+/// shortest prompt against the relaxed TTFT budget, and a batch-1 decode
+/// step at minimal context against the relaxed TPOT budget (only when
+/// every request generates at least two tokens).
+pub fn slo_unattainable(model: &dyn LatencyModel, workload: &Workload, slo: &Slo) -> bool {
+    let (ttft_max, tpot_max) = slo.relaxed_bounds();
+    let s_min = workload.min_input().max(1).min(u32::MAX as u64) as u32;
+    if model.prefill_time(1, s_min) > ttft_max {
+        return true;
+    }
+    // First decode step runs at context s_min + 1 (prompt + first token).
+    if workload.min_gen() >= 2 && model.decode_step_time(1, s_min + 1) > tpot_max {
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    struct Const {
+        prefill: f64,
+        step: f64,
+    }
+    impl LatencyModel for Const {
+        fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+            self.prefill
+        }
+        fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+            self.step
+        }
+    }
+
+    fn wl() -> Workload {
+        Workload::poisson(&Scenario::fixed("t", 256, 8, 100))
+    }
+
+    #[test]
+    fn upper_bound_is_the_bracket_ceiling() {
+        let m = Const { prefill: 0.1, step: 1e-3 };
+        let st = Strategy::collocation(2, 1); // capacity 2 * 16 = 32
+        let w = wl();
+        // T_min = prefill(1, 256) + decode_span(1, 256, 8).
+        let t_min = m.min_request_time(256, 8);
+        let ub = goodput_upper_bound(&m, &st, &w, 1.2);
+        assert!((ub - 1.2 * 32.0 / t_min).abs() < 1e-12, "ub {ub}");
+        // More instances, higher ceiling — the monotonicity the planner's
+        // anchor search (bisect over instance count) relies on.
+        let bigger = Strategy::collocation(4, 1);
+        assert!(goodput_upper_bound(&m, &bigger, &w, 1.2) > ub);
+    }
+
+    #[test]
+    fn unattainable_when_prefill_exceeds_relaxed_ttft() {
+        let slo = Slo::paper_default(); // ttft 1.5s, relaxation 0.1 -> 1.65s
+        let fast = Const { prefill: 0.1, step: 1e-3 };
+        assert!(!slo_unattainable(&fast, &wl(), &slo));
+        let slow = Const { prefill: 2.0, step: 1e-3 };
+        assert!(slo_unattainable(&slow, &wl(), &slo));
+    }
+
+    #[test]
+    fn unattainable_when_decode_step_exceeds_relaxed_tpot() {
+        let slo = Slo::paper_default(); // tpot 70ms, relaxation 0.1 -> 77ms
+        let slow = Const { prefill: 0.01, step: 0.2 };
+        assert!(slo_unattainable(&slow, &wl(), &slo));
+        // Single-token requests: the TPOT arm must stand down.
+        let one_tok = Workload::poisson(&Scenario::fixed("t", 256, 1, 100));
+        assert!(!slo_unattainable(&slow, &one_tok, &slo));
+    }
+
+    #[test]
+    fn boundary_latency_is_not_flagged() {
+        // Exactly at the relaxed budget: feasible, so no flag.
+        let slo = Slo { ttft: 1.0, tpot: 1.0, relaxation: 0.0, ..Slo::paper_default() };
+        let edge = Const { prefill: 1.0, step: 1.0 };
+        assert!(!slo_unattainable(&edge, &wl(), &slo));
+    }
+}

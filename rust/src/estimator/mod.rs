@@ -2,13 +2,17 @@
 //! latency prediction from an adapted roofline model (eqs. (3)–(5)), the
 //! LLaMa work/memory-traffic tables (Appendices A–B), CPU→accelerator
 //! dispatch dynamics (§3.3.3), TP communication (eq. (8)), and Algorithm 1
-//! with its functional-argument cache (§3.3.4).
+//! with its functional-argument cache (§3.3.4). The `bound` module exposes
+//! simulation-free goodput bounds derived from the same roofline numbers,
+//! used by the optimizer and planner to prune their sweeps.
 
+pub mod bound;
 pub mod modules;
 pub mod oracle;
 pub mod roofline;
 pub mod workload;
 
+pub use bound::{goodput_upper_bound, slo_unattainable};
 pub use modules::{block_breakdown, Module, ModuleBreakdown, BLOCK_SEQUENCE};
 pub use oracle::{AnalyticOracle, CacheStats, LatencyModel};
 pub use roofline::{achieved_performance, critical_intensity, op_time, ops_time, OpCost};

@@ -22,7 +22,8 @@ use bestserve::config::{
 use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::optimizer::{
-    optimize_parallel, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
+    optimize_parallel_with, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
+    PruneConfig,
 };
 use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
 use bestserve::report;
@@ -50,6 +51,8 @@ COMMANDS
             [--threads N]   (parallel strategy sweep; default: all cores.
                              Output is identical for any thread count)
             [--check-memory] (reject strategies whose weights+KV overflow HBM)
+            [--no-prune]    (probe every point cold; skip the analytic zero
+                             filter and warm-started bisections)
             [--no-colloc] [--no-disagg] [--no-dynamic] (family filters)
   plan      --target-rate R (req/s) | --target-rates lo:hi:step
             [--workload mix.json | --scenario OP]
@@ -58,6 +61,8 @@ COMMANDS
                              each profile priced by its hourly_cost)
             [--max-cards 16] [--tp 1,2,4,8] [--threads N] [--check-memory]
             [--tolerance 0.1] [--repeats 1] [--out DIR]
+            [--no-prune]    (brute-force reference sweep: disable the
+                             output-preserving pruning cuts)
             Sweeps hardware x cluster size x strategy, then reports the
             cheapest feasible plan per target and the Pareto frontier over
             {goodput, cards, $/hr, $/1M output tokens}. Deterministic for
@@ -358,7 +363,12 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", default_threads())?.max(1);
     let factory = factory_for(args, &platform)?;
     let t0 = std::time::Instant::now();
-    let rep = optimize_parallel(
+    let prune = if args.flag("no-prune") {
+        PruneConfig::none()
+    } else {
+        PruneConfig::default()
+    };
+    let rep = optimize_parallel_with(
         factory.as_ref(),
         &platform,
         &space,
@@ -368,6 +378,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         &cfg,
         args.flag("check-memory"),
         threads,
+        prune,
     )?;
     let dt = t0.elapsed();
     let mut t = Table::new(&["#", "strategy", "cards", "goodput", "normalized"]).numeric_body();
@@ -482,6 +493,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         },
         sim_params: sim_params_from(args)?,
         check_memory: args.flag("check-memory"),
+        prune: if args.flag("no-prune") {
+            PruneConfig::none()
+        } else {
+            PruneConfig::default()
+        },
     };
     let threads = args.usize_or("threads", default_threads())?.max(1);
     let t0 = std::time::Instant::now();
@@ -494,6 +510,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         rep.points.len(),
         t0.elapsed().as_secs_f64(),
         threads
+    );
+    println!(
+        "sweep: {} grid points probed, {} settled without simulating \
+         (memory, analytic zero, or dominance)",
+        rep.points_probed, rep.points_pruned
     );
     println!(
         "\nPareto frontier ({} of {} plans survive dominance pruning):",

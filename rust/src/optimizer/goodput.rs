@@ -8,7 +8,7 @@
 
 use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
-use crate::estimator::LatencyModel;
+use crate::estimator::{bound::goodput_upper_bound, LatencyModel};
 use crate::simulator::{repeat_params, simulate, SimParams, SimReport};
 use crate::util::bisect::{bisect_feasible_rate, RateBracket};
 
@@ -23,6 +23,11 @@ pub struct GoodputConfig {
     /// Simulation repeats per feasibility check (1 = one-shot, Figure 10a;
     /// 3 = the averaged protocol of Figure 10b).
     pub repeats: usize,
+    /// Optional warm-start hint in requests/second — typically the measured
+    /// goodput of a neighboring grid point, rescaled. Forwarded to
+    /// [`RateBracket::warm`] (see `util::bisect` for the contract: exact
+    /// under monotone-threshold feasibility, cold fallback otherwise).
+    pub warm_hint: Option<f64>,
 }
 
 impl Default for GoodputConfig {
@@ -32,6 +37,7 @@ impl Default for GoodputConfig {
             lambda_min: 0.1,
             upper_factor: 1.2,
             repeats: 1,
+            warm_hint: None,
         }
     }
 }
@@ -123,34 +129,20 @@ pub fn find_goodput(
     params: SimParams,
     cfg: &GoodputConfig,
 ) -> Result<f64> {
-    let s = workload.mean_input().round() as u32;
-    let s_plus = workload.mean_gen().round().max(1.0) as u32;
-    let t_min = model.min_request_time(s, s_plus);
-    // Parallel capacity factor: how many requests the deployment can hold
-    // concurrently, per stage, bounded by the weaker stage.
-    let capacity = match strategy.arch {
-        crate::config::Architecture::Collocation { m }
-        | crate::config::Architecture::Dynamic { m } => {
-            // Dynamic pools can commit every instance to either phase, so
-            // their optimistic ceiling matches collocation's.
-            m as f64 * strategy.bmax_decode.max(strategy.bmax_prefill) as f64
-        }
-        crate::config::Architecture::Disaggregation { p, d } => {
-            let pre = p as f64 * strategy.bmax_prefill as f64;
-            let dec = d as f64 * strategy.bmax_decode as f64;
-            pre.max(dec)
-        }
-    };
-    // The search loop itself — degenerate-bracket arm included — is the
-    // shared `bisect_feasible_rate`, the exact same code the testbed's
+    // The ceiling is the shared analytic bound (`estimator::bound`), so the
+    // bracket and the planner's pre-filter can never drift apart. The
+    // search loop itself — degenerate-bracket arm included — is the shared
+    // `bisect_feasible_rate`, the exact same code the testbed's
     // ground-truth measurement runs.
+    let ceiling = goodput_upper_bound(model, strategy, workload, cfg.upper_factor);
     bisect_feasible_rate(
         RateBracket {
             // Bisect in scale units: rate bounds divided by the base rate.
             lo: cfg.lambda_min / workload.base_rate,
-            hi: cfg.upper_factor * capacity / t_min / workload.base_rate,
+            hi: ceiling / workload.base_rate,
             tolerance: cfg.tolerance,
             base_rate: workload.base_rate,
+            warm: cfg.warm_hint.map(|g| g / workload.base_rate),
         },
         |scale| feasible(model, platform, strategy, workload, slo, params, scale, cfg.repeats),
     )
@@ -310,6 +302,61 @@ mod tests {
         )
         .unwrap();
         assert_eq!(g0, 0.0);
+    }
+
+    #[test]
+    fn analytic_bound_caps_measured_goodput() {
+        // The estimator-layer bound is the bisection's own bracket ceiling,
+        // so no strategy may ever report a goodput above it. (Presets use
+        // base_rate 1.0, so the scale/rate conversion is exact.)
+        let (platform, workload, slo) = setup();
+        let cfg = GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() };
+        for st in [
+            Strategy::collocation(2, 1),
+            Strategy::disaggregation(1, 1, 1),
+            Strategy::dynamic(2, 1),
+        ] {
+            let g = find_goodput(
+                &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg,
+            )
+            .unwrap();
+            let ub = goodput_upper_bound(&Toy, &st, &workload, cfg.upper_factor);
+            assert!(g <= ub, "{st}: goodput {g} above analytic bound {ub}");
+        }
+    }
+
+    #[test]
+    fn warm_hint_matches_cold_bisection_bit_for_bit() {
+        // Deterministic arrivals + constant service times + bmax_prefill 1:
+        // a D/D/1-style system whose SLO feasibility is monotone in the
+        // arrival rate, i.e. exactly the regime where the warm-start
+        // contract guarantees bit-identical results. Sweep accurate, stale,
+        // and invalid hints.
+        let (platform, workload, slo) = setup();
+        let workload = Workload {
+            arrival: crate::config::ArrivalProcess::Deterministic,
+            ..workload
+        };
+        let mut st = Strategy::disaggregation(1, 1, 1);
+        st.bmax_prefill = 1;
+        let cold_cfg = GoodputConfig { tolerance: 0.1, ..GoodputConfig::default() };
+        let g_cold = find_goodput(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cold_cfg,
+        )
+        .unwrap();
+        assert!(g_cold > 0.0, "setup must be feasible ({g_cold})");
+        for hint in [g_cold, 0.5 * g_cold, 1.5 * g_cold, 0.01] {
+            let warm_cfg = GoodputConfig { warm_hint: Some(hint), ..cold_cfg };
+            let g_warm = find_goodput(
+                &Toy, &platform, &st, &workload, &slo, SimParams::default(), &warm_cfg,
+            )
+            .unwrap();
+            assert_eq!(
+                g_warm.to_bits(),
+                g_cold.to_bits(),
+                "hint {hint}: warm {g_warm} vs cold {g_cold}"
+            );
+        }
     }
 
     #[test]

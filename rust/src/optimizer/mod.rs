@@ -14,6 +14,16 @@
 //! [`ModelFactory`], results are scattered back by enumeration index, and
 //! the final ranking uses a stable NaN-last sort — so the output is
 //! byte-identical for any thread count.
+//!
+//! Two output-preserving cuts (see [`PruneConfig`]) let the same budget
+//! cover a much larger space: an analytic zero pre-filter
+//! ([`crate::estimator::bound::slo_unattainable`]) synthesizes the exact
+//! `0.0` rows the bisection would have returned, and warm-started bisection
+//! seeds each grid point's bracket from its line predecessor's goodput
+//! (see `util::bisect` for the warm-start contract). Every strategy still
+//! gets a row; only the work to produce it changes. Dominance-based
+//! *dropping* of rows is the planner's business (`crate::planner`), not the
+//! optimizer's — a ranking must list the full space.
 
 pub mod goodput;
 pub mod memory;
@@ -26,9 +36,79 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::{Platform, Slo, Strategy, StrategySpace, Workload};
 use crate::error::Result;
-use crate::estimator::{AnalyticOracle, LatencyModel};
+use crate::estimator::{bound, AnalyticOracle, LatencyModel};
 use crate::simulator::SimParams;
 use crate::util::stats::rank_desc;
+
+/// Which output-preserving cuts a sweep applies. All three default to on;
+/// `--no-prune` (CLI) maps to [`PruneConfig::none`] for brute-force
+/// comparison runs and the equivalence property tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PruneConfig {
+    /// Synthesize exact `0.0` rows for (model, workload, SLO) combinations
+    /// where even an idle deployment violates the relaxed SLO
+    /// ([`bound::slo_unattainable`]) instead of bisecting to zero.
+    pub zero_filter: bool,
+    /// Seed each bisection bracket from the previous grid point on the same
+    /// sweep line (same family/tp/split, one instance fewer), rescaled by
+    /// the instance ratio. Bit-identical under monotone-threshold
+    /// feasibility; cold fallback otherwise (`util::bisect`).
+    pub warm_start: bool,
+    /// Planner only: skip probing points whose analytic goodput ceiling
+    /// ([`bound::goodput_upper_bound`]) cannot beat an already-probed
+    /// incumbent that is at least as cheap and as small. The optimizer
+    /// ignores this flag — rankings always list every strategy.
+    pub bound_dominance: bool,
+}
+
+impl PruneConfig {
+    /// Every cut enabled (the default).
+    pub fn all() -> PruneConfig {
+        PruneConfig { zero_filter: true, warm_start: true, bound_dominance: true }
+    }
+
+    /// Brute force: probe every grid point cold.
+    pub fn none() -> PruneConfig {
+        PruneConfig { zero_filter: false, warm_start: false, bound_dominance: false }
+    }
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        PruneConfig::all()
+    }
+}
+
+/// Sweep-line key: strategies that differ *only* in instance count (same
+/// family, same tp, and for disaggregation the same prefill-instance count
+/// `p`). Within a line, `StrategySpace::enumerate` emits ascending instance
+/// counts, so each point's natural warm-start donor is its line
+/// predecessor.
+pub(crate) fn line_key(strategy: &Strategy) -> (u32, u8, u32) {
+    match strategy.arch {
+        crate::config::Architecture::Collocation { .. } => (strategy.tp, 0, 0),
+        crate::config::Architecture::Disaggregation { p, .. } => (strategy.tp, 1, p),
+        crate::config::Architecture::Dynamic { .. } => (strategy.tp, 2, 0),
+    }
+}
+
+/// Group enumeration indices by sweep line, preserving both the lines'
+/// first-appearance order and enumeration order within each line.
+pub(crate) fn line_groups(strategies: &[Strategy]) -> Vec<Vec<usize>> {
+    let mut order: Vec<(u32, u8, u32)> = Vec::new();
+    let mut by_key: HashMap<(u32, u8, u32), Vec<usize>> = HashMap::new();
+    for (i, strategy) in strategies.iter().enumerate() {
+        let key = line_key(strategy);
+        by_key
+            .entry(key)
+            .or_insert_with(|| {
+                order.push(key);
+                Vec::new()
+            })
+            .push(i);
+    }
+    order.into_iter().map(|k| by_key.remove(&k).expect("key recorded")).collect()
+}
 
 /// Builds (and caches) a latency model per tensor-parallel size — the
 /// Optimizer sweeps tp, and both the analytic oracle and the PJRT grid are
@@ -224,7 +304,51 @@ pub fn optimize_parallel(
     check_mem: bool,
     threads: usize,
 ) -> Result<OptimizerReport> {
+    optimize_parallel_with(
+        factory,
+        platform,
+        space,
+        workload,
+        slo,
+        sim_params,
+        cfg,
+        check_mem,
+        threads,
+        PruneConfig::default(),
+    )
+}
+
+/// [`optimize_parallel`] with the pruning cuts exposed — pass
+/// [`PruneConfig::none`] for a brute-force sweep that probes every grid
+/// point cold (the `--no-prune` CLI flag, and the reference side of the
+/// equivalence tests).
+///
+/// Parallelism is over *sweep lines* rather than single strategies: each
+/// line is evaluated sequentially by one worker so warm-start hints can
+/// flow from a point to its successor, and whole lines are independent.
+/// Results still land in enumeration slots, so the report remains
+/// byte-identical for any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_parallel_with(
+    factory: &dyn ModelFactory,
+    platform: &Platform,
+    space: &StrategySpace,
+    workload: &Workload,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+    check_mem: bool,
+    threads: usize,
+    prune: PruneConfig,
+) -> Result<OptimizerReport> {
     let strategies = space.enumerate();
+
+    // Memory verdicts once per strategy (shared by the model pre-build and
+    // the sweep — the probe's own re-check is disabled below).
+    let mem_ok: Vec<bool> = strategies
+        .iter()
+        .map(|s| !check_mem || memory::check_memory(platform, s, workload).fits())
+        .collect();
 
     // Pre-build every latency model the sweep will touch, serially: the
     // workers then only share `Arc<dyn LatencyModel>` (Send + Sync by the
@@ -233,35 +357,84 @@ pub fn optimize_parallel(
     // so their tp values don't force a build (a GridFactory build executes
     // the PJRT artifact — not free).
     let mut models: HashMap<u32, Arc<dyn LatencyModel>> = HashMap::new();
-    for strategy in &strategies {
-        if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
-            continue;
-        }
-        if !models.contains_key(&strategy.tp) {
+    for (strategy, ok) in strategies.iter().zip(&mem_ok) {
+        if *ok && !models.contains_key(&strategy.tp) {
             models.insert(strategy.tp, factory.model_for_tp(strategy.tp)?);
         }
     }
 
-    let eval = |strategy: &Strategy| -> Result<RankedStrategy> {
-        // Rejected strategies never built a model, so pre-filter before
-        // the `models` lookup; survivors then skip the probe's own check
-        // (`check_mem: false` below) — it already ran here.
-        if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
-            return Ok(RankedStrategy::rejected(strategy));
+    // Analytic zero pre-filter, memoized per tp (the verdict depends only
+    // on the model, workload, and SLO — not on instance counts).
+    let mut zero_tp: HashMap<u32, bool> = HashMap::new();
+    if prune.zero_filter {
+        for (strategy, ok) in strategies.iter().zip(&mem_ok) {
+            if *ok && !zero_tp.contains_key(&strategy.tp) {
+                let dead = bound::slo_unattainable(models[&strategy.tp].as_ref(), workload, slo);
+                zero_tp.insert(strategy.tp, dead);
+            }
         }
-        probe_strategy(
-            models[&strategy.tp].as_ref(),
-            platform,
-            strategy,
-            workload,
-            slo,
-            sim_params,
-            cfg,
-            false, // pre-filter already applied above
-        )
+    }
+
+    let groups = line_groups(&strategies);
+    let eval = |group: &Vec<usize>| -> Result<Vec<(usize, RankedStrategy)>> {
+        let mut rows = Vec::with_capacity(group.len());
+        // (goodput, instances) of the last probed line member with g > 0 —
+        // the warm-start donor for the next member.
+        let mut prev: Option<(f64, u32)> = None;
+        for &i in group {
+            let strategy = &strategies[i];
+            if !mem_ok[i] {
+                rows.push((i, RankedStrategy::rejected(strategy)));
+                continue;
+            }
+            if prune.zero_filter && zero_tp.get(&strategy.tp).copied().unwrap_or(false) {
+                // The bisection would find even λ_min infeasible and return
+                // literal 0.0; synthesize that exact row probe-free.
+                rows.push((
+                    i,
+                    RankedStrategy {
+                        strategy: strategy.clone(),
+                        goodput: 0.0,
+                        normalized: 0.0,
+                        memory_rejected: false,
+                    },
+                ));
+                continue;
+            }
+            let instances = strategy.arch.instances();
+            let warm_hint = if prune.warm_start {
+                prev.map(|(g, n)| g * instances as f64 / n as f64)
+            } else {
+                None
+            };
+            let point_cfg = GoodputConfig { warm_hint, ..*cfg };
+            let row = probe_strategy(
+                models[&strategy.tp].as_ref(),
+                platform,
+                strategy,
+                workload,
+                slo,
+                sim_params,
+                &point_cfg,
+                false, // memory verdict already applied above
+            )?;
+            if row.goodput > 0.0 {
+                prev = Some((row.goodput, instances));
+            }
+            rows.push((i, row));
+        }
+        Ok(rows)
     };
 
-    let mut ranked = crate::util::parallel::parallel_map(&strategies, threads, eval)?;
+    let group_rows = crate::util::parallel::parallel_map(&groups, threads, eval)?;
+    let mut slots: Vec<Option<RankedStrategy>> = vec![None; strategies.len()];
+    for rows in group_rows {
+        for (i, row) in rows {
+            slots[i] = Some(row);
+        }
+    }
+    let mut ranked: Vec<RankedStrategy> =
+        slots.into_iter().map(|r| r.expect("sweep fills every enumeration slot")).collect();
 
     rank(&mut ranked);
     Ok(OptimizerReport { workload: workload.name.clone(), ranked })
@@ -270,7 +443,7 @@ pub fn optimize_parallel(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Architecture, Scenario};
+    use crate::config::{Architecture, ArrivalProcess, Scenario};
 
     /// A fast fake factory for optimizer-level tests: constant-time model.
     struct FakeFactory;
@@ -384,6 +557,50 @@ mod tests {
     }
 
     #[test]
+    fn pruned_sweep_matches_unpruned_bit_for_bit() {
+        // Constant service times + deterministic arrivals: the monotone
+        // regime where the warm-start contract guarantees bit-identity
+        // (the zero filter is output-preserving unconditionally).
+        let platform = Platform::paper_testbed();
+        let space = StrategySpace {
+            max_cards: 6,
+            tp_choices: vec![1, 2],
+            ..StrategySpace::default()
+        };
+        let workload = Workload {
+            arrival: ArrivalProcess::Deterministic,
+            ..Workload::poisson(&Scenario::fixed("t", 256, 16, 200))
+        };
+        let slo = Slo::paper_default();
+        let cfg = GoodputConfig { tolerance: 0.2, ..GoodputConfig::default() };
+        let run = |prune: PruneConfig| {
+            optimize_parallel_with(
+                &FakeFactory,
+                &platform,
+                &space,
+                &workload,
+                &slo,
+                SimParams::default(),
+                &cfg,
+                false,
+                4,
+                prune,
+            )
+            .unwrap()
+        };
+        let pruned = run(PruneConfig::default());
+        let brute = run(PruneConfig::none());
+        assert!(pruned.best().unwrap().goodput > 0.0, "setup must be feasible");
+        assert_eq!(pruned.ranked.len(), brute.ranked.len());
+        for (a, b) in pruned.ranked.iter().zip(brute.ranked.iter()) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.goodput.to_bits(), b.goodput.to_bits(), "{}", a.strategy);
+            assert_eq!(a.normalized.to_bits(), b.normalized.to_bits(), "{}", a.strategy);
+            assert_eq!(a.memory_rejected, b.memory_rejected);
+        }
+    }
+
+    #[test]
     fn nan_and_zero_goodput_rank_last_without_panic() {
         // Seed regression: the ranking sort used partial_cmp().unwrap(),
         // which panics the moment any strategy produces a NaN goodput.
@@ -443,5 +660,22 @@ mod tests {
         .unwrap();
         assert!(!report.ranked.is_empty());
         assert!(report.ranked.iter().all(|r| r.goodput == 0.0), "{report:?}");
+        // This setup trips the analytic zero filter (one decode step alone
+        // busts the relaxed TPOT), so the default sweep synthesizes its
+        // rows; they must be bit-identical to the brute-force bisections.
+        let brute = optimize_parallel_with(
+            &SlowFactory,
+            &platform,
+            &space,
+            &workload,
+            &slo,
+            SimParams::default(),
+            &cfg,
+            false,
+            1,
+            PruneConfig::none(),
+        )
+        .unwrap();
+        assert_eq!(report.ranked, brute.ranked);
     }
 }

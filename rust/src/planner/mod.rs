@@ -31,6 +31,50 @@
 //! the frontier/min-cost selections break ties by sweep order, so `plan`
 //! output is byte-identical for any `--threads` value — exactly like
 //! `optimize_parallel`.
+//!
+//! # Pruning: how the sweep skips work without changing its answers
+//!
+//! A naive sweep bisects every (profile × strategy) grid point; each
+//! bisection costs dozens of discrete-event simulations. [`plan`] applies
+//! three output-preserving cuts, toggled by [`PlannerConfig::prune`]
+//! (`--no-prune` on the CLI turns them all off):
+//!
+//! 1. **Analytic zero filter** — per (profile, tp),
+//!    [`crate::estimator::bound::slo_unattainable`] detects combinations
+//!    where even an idle deployment busts the relaxed SLO; every such point
+//!    gets the exact `0.0` row the bisection would have produced, for the
+//!    cost of two latency-model evaluations.
+//! 2. **Warm-started bisection** — points on the same sweep line (same
+//!    profile/family/tp/split, ascending instance count) seed each other's
+//!    brackets (`util::bisect`'s warm-start contract); probes drop from
+//!    `O(log(range/ε))` to a handful when neighbors score similarly.
+//! 3. **Bound dominance** — each line is first anchored by binary-searching
+//!    (`util::bisect::bisect_min_true`) the smallest instance count whose
+//!    analytic ceiling ([`crate::estimator::bound::goodput_upper_bound`])
+//!    reaches the easiest target; anchors are probed first, and later
+//!    points are *dropped* when an already-probed, earlier-in-sweep point
+//!    is at least as cheap and as small and its measured goodput meets the
+//!    candidate's ceiling. Dropped points cannot appear in any min-cost
+//!    plan or on the frontier (the ceiling bounds their goodput), so
+//!    `points` merely loses rows that never mattered;
+//!    [`PlanReport::points_probed`]/[`PlanReport::points_pruned`] account
+//!    for every grid point.
+//!
+//! The cuts are *exact*: with pruning on and off, min-cost plans and the
+//! Pareto frontier are bit-identical (property-tested in
+//! `tests/property.rs`), warm-start being exact under the monotone-
+//! threshold contract documented in `util::bisect`.
+//!
+//! ## Adding a new pre-filter
+//!
+//! A sound pre-filter needs one of two shapes: (a) a proof that the
+//! bisection returns a *specific* value (synthesize that exact row — see
+//! `slo_unattainable`: all infeasibility paths of `bisect_feasible_rate`
+//! return literal `0.0`), or (b) an upper bound on the bisection's result
+//! (only ever *drop* points, and only when a retained, earlier-in-sweep
+//! point dominates the bound — see the wave loop in [`plan`]). Wire it
+//! behind a [`PruneConfig`] flag and extend the brute-force equivalence
+//! property so the exactness claim stays tested.
 
 pub mod cost;
 pub mod pareto;
@@ -45,9 +89,10 @@ use crate::config::{
     Workload,
 };
 use crate::error::{Error, Result};
-use crate::estimator::{AnalyticOracle, LatencyModel};
-use crate::optimizer::{probe_strategy, GoodputConfig};
+use crate::estimator::{bound, AnalyticOracle, LatencyModel};
+use crate::optimizer::{probe_strategy, GoodputConfig, PruneConfig};
 use crate::simulator::SimParams;
+use crate::util::bisect::bisect_min_true;
 use crate::util::csv::Csv;
 use crate::util::parallel::parallel_map;
 
@@ -69,6 +114,10 @@ pub struct PlannerConfig {
     /// Reject plans whose weights + peak KV overflow the profile's HBM
     /// before simulating ([`crate::optimizer::check_memory`]).
     pub check_memory: bool,
+    /// Which output-preserving sweep cuts to apply (all on by default);
+    /// see the module docs. [`PruneConfig::none`] gives the brute-force
+    /// reference sweep.
+    pub prune: PruneConfig,
 }
 
 impl Default for PlannerConfig {
@@ -79,6 +128,7 @@ impl Default for PlannerConfig {
             goodput: GoodputConfig::default(),
             sim_params: SimParams::default(),
             check_memory: false,
+            prune: PruneConfig::default(),
         }
     }
 }
@@ -129,12 +179,21 @@ pub struct PlanReport {
     /// The target rates planned for (same order as [`PlanReport::min_cost`]).
     pub targets: Vec<f64>,
     /// Every swept point, in sweep (profile × strategy enumeration) order.
+    /// With pruning on, dominance-dropped points (provably absent from
+    /// every min-cost plan and the frontier) are omitted; memory-rejected
+    /// and analytically-zero points keep their rows.
     pub points: Vec<PlanPoint>,
     /// The dominance-pruned Pareto frontier, in sweep order.
     pub frontier: Vec<PlanPoint>,
     /// Per target: the cheapest plan whose goodput covers it (`None` when
     /// the target is unreachable within the swept space).
     pub min_cost: Vec<Option<PlanPoint>>,
+    /// Grid points scored by a full goodput bisection.
+    pub points_probed: usize,
+    /// Grid points settled without simulating: memory-rejected,
+    /// analytically zero, or dominance-dropped. Always
+    /// `points_probed + points_pruned == profiles × strategies`.
+    pub points_pruned: usize,
 }
 
 impl PlanReport {
@@ -162,8 +221,11 @@ impl PlanReport {
             "cost_per_mtok",
             "on_frontier",
         ]);
-        for p in &self.points {
-            let on_frontier = self.frontier.contains(p);
+        // One dominance pass marks every row — the old per-row
+        // `frontier.contains(p)` rescanned (and deep-compared) the frontier
+        // for each point, quadratic in the sweep size.
+        let mask = pareto::frontier_mask(&self.points);
+        for (p, on_frontier) in self.points.iter().zip(mask) {
             c.row(&[
                 p.hardware.clone(),
                 p.strategy.to_string(),
@@ -226,7 +288,9 @@ pub fn plan(
         ));
     }
 
-    // Flatten (profile × strategy) into one deterministic work list.
+    // The grid, flattened profile-major: item `i` is (profile `i / n_st`,
+    // strategy `i % n_st`), and `i` itself is the sweep order every
+    // tie-break below refers to.
     let platforms: Vec<Platform> = profiles
         .iter()
         .map(|hw| Platform {
@@ -235,70 +299,271 @@ pub fn plan(
             eff: eff.clone(),
         })
         .collect();
-    let mut items: Vec<(usize, &Strategy)> =
-        Vec::with_capacity(profiles.len() * strategies.len());
-    for hi in 0..profiles.len() {
-        for st in &strategies {
-            items.push((hi, st));
-        }
-    }
+    let n_st = strategies.len();
+    let n = profiles.len() * n_st;
+    let prune = cfg.prune;
+
+    // Memory verdicts once per item, shared by the model pre-build and the
+    // sweep (the old code evaluated `check_memory` twice per point).
+    let mem_ok: Vec<bool> = (0..n)
+        .map(|i| {
+            !cfg.check_memory
+                || crate::optimizer::check_memory(
+                    &platforms[i / n_st],
+                    &strategies[i % n_st],
+                    workload,
+                )
+                .fits()
+        })
+        .collect();
+    let item_cards: Vec<u32> = (0..n).map(|i| strategies[i % n_st].total_cards()).collect();
+    let item_cost: Vec<f64> = (0..n)
+        .map(|i| cost_model.hourly(&platforms[i / n_st].hardware, item_cards[i]))
+        .collect();
 
     // Pre-build every latency model serially, one per (profile, tp): the
     // workers then only share `Arc<dyn LatencyModel>`, exactly like
-    // `optimize_parallel`.
+    // `optimize_parallel`. Memory-rejected items never force a build.
     let mut models: HashMap<(usize, u32), Arc<dyn LatencyModel>> = HashMap::new();
-    for &(hi, st) in &items {
-        if cfg.check_memory
-            && !crate::optimizer::check_memory(&platforms[hi], st, workload).fits()
-        {
-            continue;
+    for i in 0..n {
+        if mem_ok[i] {
+            let (hi, tp) = (i / n_st, strategies[i % n_st].tp);
+            models
+                .entry((hi, tp))
+                .or_insert_with(|| Arc::new(AnalyticOracle::new(platforms[hi].clone(), tp)));
         }
-        models
-            .entry((hi, st.tp))
-            .or_insert_with(|| Arc::new(AnalyticOracle::new(platforms[hi].clone(), st.tp)));
     }
 
-    let mean_gen = workload.mean_gen();
-    let eval = |&(hi, st): &(usize, &Strategy)| -> Result<PlanPoint> {
-        let platform = &platforms[hi];
-        let ranked = if cfg.check_memory
-            && !crate::optimizer::check_memory(platform, st, workload).fits()
-        {
-            // Rejected points never built a latency model (the serial
-            // pre-build above skipped them), so synthesize the zero row
-            // instead of going through the probe.
-            crate::optimizer::RankedStrategy {
-                strategy: st.clone(),
-                goodput: 0.0,
-                normalized: 0.0,
-                memory_rejected: true,
+    // Analytic zero filter, memoized per (profile, tp) — the verdict does
+    // not depend on instance counts.
+    let mut zero_key: HashMap<(usize, u32), bool> = HashMap::new();
+    if prune.zero_filter {
+        for i in 0..n {
+            if mem_ok[i] {
+                let key = (i / n_st, strategies[i % n_st].tp);
+                if !zero_key.contains_key(&key) {
+                    let dead = bound::slo_unattainable(models[&key].as_ref(), workload, slo);
+                    zero_key.insert(key, dead);
+                }
             }
-        } else {
-            probe_strategy(
-                models[&(hi, st.tp)].as_ref(),
-                platform,
-                st,
+        }
+    }
+
+    // Analytic goodput ceiling per item (req/s) — the bisection bracket's
+    // own upper end, so it unconditionally bounds what a probe can return.
+    // NaN (degenerate model) claims nothing: an infinite ceiling never
+    // lets dominance drop the point and never anchors a line.
+    let ub: Vec<f64> = (0..n)
+        .map(|i| {
+            if !mem_ok[i] {
+                return 0.0;
+            }
+            let (hi, si) = (i / n_st, i % n_st);
+            let raw = bound::goodput_upper_bound(
+                models[&(hi, strategies[si].tp)].as_ref(),
+                &strategies[si],
                 workload,
-                slo,
-                cfg.sim_params,
-                &cfg.goodput,
-                false, // pre-filter already applied above
-            )?
-        };
-        let cards = st.total_cards();
-        let cost_per_hour = cost_model.hourly(&platform.hardware, cards);
+                cfg.goodput.upper_factor,
+            );
+            if raw.is_nan() {
+                f64::INFINITY
+            } else {
+                raw
+            }
+        })
+        .collect();
+
+    let mean_gen = workload.mean_gen();
+    // Exactly the row a probe would produce for these points: every
+    // infeasibility path of the bisection returns literal 0.0.
+    let mk_zero = |i: usize, memory_rejected: bool| -> PlanPoint {
+        PlanPoint {
+            hardware: platforms[i / n_st].hardware.name.clone(),
+            strategy: strategies[i % n_st].clone(),
+            cards: item_cards[i],
+            goodput: 0.0,
+            normalized: 0.0,
+            memory_rejected,
+            cost_per_hour: item_cost[i],
+            cost_per_mtok: cost::per_million_tokens(item_cost[i], 0.0, mean_gen),
+        }
+    };
+    let probe_point = |i: usize, warm_hint: Option<f64>| -> Result<PlanPoint> {
+        let (hi, si) = (i / n_st, i % n_st);
+        let st = &strategies[si];
+        let platform = &platforms[hi];
+        let point_cfg = GoodputConfig { warm_hint, ..cfg.goodput };
+        let ranked = probe_strategy(
+            models[&(hi, st.tp)].as_ref(),
+            platform,
+            st,
+            workload,
+            slo,
+            cfg.sim_params,
+            &point_cfg,
+            false, // memory verdict already applied
+        )?;
         Ok(PlanPoint {
             hardware: platform.hardware.name.clone(),
             strategy: ranked.strategy,
-            cards,
+            cards: item_cards[i],
             goodput: ranked.goodput,
             normalized: ranked.normalized,
             memory_rejected: ranked.memory_rejected,
-            cost_per_hour,
-            cost_per_mtok: cost::per_million_tokens(cost_per_hour, ranked.goodput, mean_gen),
+            cost_per_hour: item_cost[i],
+            cost_per_mtok: cost::per_million_tokens(item_cost[i], ranked.goodput, mean_gen),
         })
     };
-    let points = parallel_map(&items, threads, eval)?;
+
+    // Settle every simulation-free row up front.
+    let mut results: Vec<Option<PlanPoint>> = vec![None; n];
+    let mut dropped = vec![false; n];
+    for i in 0..n {
+        if !mem_ok[i] {
+            results[i] = Some(mk_zero(i, true));
+        } else if prune.zero_filter
+            && zero_key
+                .get(&(i / n_st, strategies[i % n_st].tp))
+                .copied()
+                .unwrap_or(false)
+        {
+            results[i] = Some(mk_zero(i, false));
+        }
+    }
+
+    // Sweep lines (strategies differing only in instance count, per
+    // profile): the warm-start donor structure, and the monotone axis the
+    // anchor search bisects. Cards strictly increase along a line, so no
+    // two line members ever share a wave.
+    let strategy_lines = crate::optimizer::line_groups(&strategies);
+    let mut lines: Vec<Vec<usize>> = Vec::with_capacity(profiles.len() * strategy_lines.len());
+    for hi in 0..profiles.len() {
+        for line in &strategy_lines {
+            lines.push(line.iter().map(|si| hi * n_st + si).collect());
+        }
+    }
+    let mut line_of = vec![0usize; n];
+    let mut pos_in_line = vec![0usize; n];
+    for (li, line) in lines.iter().enumerate() {
+        for (pos, &i) in line.iter().enumerate() {
+            line_of[i] = li;
+            pos_in_line[i] = pos;
+        }
+    }
+
+    let mut points_probed = 0usize;
+    // Probed points with measured goodput > 0: the dominance incumbents,
+    // updated serially between waves (thread-count invariant).
+    let mut incumbents: Vec<(usize, u32, f64, f64)> = Vec::new();
+    let integrate = |rows: Vec<(usize, PlanPoint)>,
+                         results: &mut Vec<Option<PlanPoint>>,
+                         points_probed: &mut usize,
+                         incumbents: &mut Vec<(usize, u32, f64, f64)>| {
+        for (i, pt) in rows {
+            if pt.goodput > 0.0 {
+                incumbents.push((i, item_cards[i], item_cost[i], pt.goodput));
+            }
+            results[i] = Some(pt);
+            *points_probed += 1;
+        }
+    };
+
+    // Wave 0 — anchors: per line, binary-search the smallest instance
+    // count whose analytic ceiling reaches the easiest target, and probe
+    // it first so dominance has incumbents before the ascending sweep.
+    if prune.bound_dominance {
+        let min_target = cfg.targets.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut wave0: Vec<(usize, Option<f64>)> = Vec::new();
+        for line in &lines {
+            let live: Vec<usize> =
+                line.iter().copied().filter(|&i| results[i].is_none()).collect();
+            if live.is_empty() {
+                continue;
+            }
+            let found = bisect_min_true(0, (live.len() - 1) as u32, |k| {
+                ub[live[k as usize]] >= min_target
+            });
+            if let Some(k) = found {
+                wave0.push((live[k as usize], None));
+            }
+        }
+        let rows =
+            parallel_map(&wave0, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?;
+        integrate(rows, &mut results, &mut points_probed, &mut incumbents);
+    }
+
+    // Ascending-card waves over everything still unsettled. Skip decisions
+    // and warm hints are computed serially against completed waves only,
+    // then the survivors probe in parallel — deterministic for any thread
+    // count.
+    let mut waves: std::collections::BTreeMap<u32, Vec<usize>> = std::collections::BTreeMap::new();
+    for i in 0..n {
+        if results[i].is_none() {
+            waves.entry(item_cards[i]).or_default().push(i);
+        }
+    }
+    for wave_items in waves.into_values() {
+        let mut batch: Vec<(usize, Option<f64>)> = Vec::with_capacity(wave_items.len());
+        for &i in &wave_items {
+            if prune.bound_dominance {
+                // Drop `i` when an earlier-in-sweep incumbent is at least
+                // as small and as cheap and its *measured* goodput meets
+                // `i`'s ceiling (strictly better on at least one axis):
+                // the incumbent then Pareto-dominates whatever `i` would
+                // have scored, and — being earlier in sweep order with
+                // cost/cards no worse — also wins every min-cost tie-break
+                // `i` could have won.
+                let beaten = incumbents.iter().any(|&(qi, qc, qcost, qg)| {
+                    qi < i
+                        && qc <= item_cards[i]
+                        && qcost <= item_cost[i]
+                        && qg >= ub[i]
+                        && (qc < item_cards[i] || qcost < item_cost[i] || qg > ub[i])
+                });
+                if beaten {
+                    dropped[i] = true;
+                    continue;
+                }
+            }
+            // Warm hint: nearest settled line predecessor with a measured
+            // goodput, rescaled by the instance ratio. Predecessors all
+            // sit in earlier waves, so the lookup is race-free.
+            let mut warm_hint = None;
+            if prune.warm_start {
+                for &j in lines[line_of[i]][..pos_in_line[i]].iter().rev() {
+                    match &results[j] {
+                        Some(q) if q.memory_rejected => continue,
+                        Some(q) => {
+                            if q.goodput > 0.0 {
+                                let inst_i = strategies[i % n_st].arch.instances() as f64;
+                                let inst_j = strategies[j % n_st].arch.instances() as f64;
+                                warm_hint = Some(q.goodput * inst_i / inst_j);
+                            }
+                            break;
+                        }
+                        None => continue, // dominance-dropped: no measurement
+                    }
+                }
+            }
+            batch.push((i, warm_hint));
+        }
+        let rows =
+            parallel_map(&batch, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?;
+        integrate(rows, &mut results, &mut points_probed, &mut incumbents);
+    }
+
+    // Assemble in sweep order; dominance-dropped items contribute no row.
+    let points: Vec<PlanPoint> = results
+        .into_iter()
+        .zip(&dropped)
+        .filter_map(|(r, &was_dropped)| {
+            if was_dropped {
+                None
+            } else {
+                Some(r.expect("every undropped item is settled"))
+            }
+        })
+        .collect();
 
     let frontier = pareto::frontier(&points);
     let min_cost = cfg
@@ -312,6 +577,8 @@ pub fn plan(
         points,
         frontier,
         min_cost,
+        points_probed,
+        points_pruned: n - points_probed,
     })
 }
 
@@ -331,10 +598,11 @@ mod tests {
             goodput: GoodputConfig { tolerance: 0.3, ..GoodputConfig::default() },
             sim_params: SimParams::default(),
             check_memory: false,
+            prune: PruneConfig::default(),
         }
     }
 
-    fn small_plan(targets: Vec<f64>, max_cards: u32, threads: usize) -> PlanReport {
+    fn run_plan(cfg: &PlannerConfig, threads: usize) -> PlanReport {
         let platform = Platform::paper_testbed();
         let profiles = vec![HardwareConfig::ascend_910b3(), HardwareConfig::h100_sxm()];
         let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 150));
@@ -345,18 +613,28 @@ mod tests {
             &workload,
             &Slo::paper_default(),
             &LinearCardCost,
-            &small_cfg(targets, max_cards),
+            cfg,
             threads,
         )
         .unwrap()
     }
 
+    fn small_plan(targets: Vec<f64>, max_cards: u32, threads: usize) -> PlanReport {
+        run_plan(&small_cfg(targets, max_cards), threads)
+    }
+
     #[test]
     fn plan_reports_min_cost_and_pruned_frontier() {
-        let rep = small_plan(vec![0.5, 1e6], 4, 1);
-        // Every (profile × strategy) point is scored.
+        // Brute-force sweep: the structural claims below count every grid
+        // point, so dominance dropping must stay out of the way.
+        let cfg = PlannerConfig { prune: PruneConfig::none(), ..small_cfg(vec![0.5, 1e6], 4) };
+        let rep = run_plan(&cfg, 1);
+        // Every (profile × strategy) point is scored...
         assert_eq!(rep.points.len() % 2, 0);
         assert!(!rep.points.is_empty());
+        // ...and with pruning off every one of them was probed.
+        assert_eq!(rep.points_probed, rep.points.len());
+        assert_eq!(rep.points_pruned, 0);
         assert!(!rep.frontier.is_empty());
         // Frontier ⊆ points, and no survivor is dominated by ANY point.
         for f in &rep.frontier {
@@ -381,16 +659,73 @@ mod tests {
 
     #[test]
     fn plan_is_thread_count_invariant_bit_for_bit() {
-        let serial = small_plan(vec![0.5], 4, 1);
-        for threads in [2, 4, 8] {
-            let par = small_plan(vec![0.5], 4, threads);
-            assert_eq!(serial, par, "threads={threads}");
-            for (a, b) in serial.points.iter().zip(par.points.iter()) {
-                assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
-                assert_eq!(a.cost_per_hour.to_bits(), b.cost_per_hour.to_bits());
-                assert_eq!(a.cost_per_mtok.to_bits(), b.cost_per_mtok.to_bits());
+        // Both with the default cuts (wave scheduling, warm hints, counters)
+        // and brute force, the report must not depend on the thread count.
+        for prune in [PruneConfig::default(), PruneConfig::none()] {
+            let cfg = PlannerConfig { prune, ..small_cfg(vec![0.5], 4) };
+            let serial = run_plan(&cfg, 1);
+            for threads in [2, 4, 8] {
+                let par = run_plan(&cfg, threads);
+                assert_eq!(serial, par, "threads={threads} prune={prune:?}");
+                for (a, b) in serial.points.iter().zip(par.points.iter()) {
+                    assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+                    assert_eq!(a.cost_per_hour.to_bits(), b.cost_per_hour.to_bits());
+                    assert_eq!(a.cost_per_mtok.to_bits(), b.cost_per_mtok.to_bits());
+                }
             }
         }
+    }
+
+    #[test]
+    fn pruned_plan_matches_brute_force_bit_for_bit() {
+        // Deterministic arrivals put the simulator in the monotone-
+        // feasibility regime where the warm-start contract guarantees
+        // bit-identity; the zero filter and dominance drops are exact
+        // unconditionally. The pruned sweep must agree with brute force on
+        // the frontier and every min-cost plan, and its `points` must be a
+        // subsequence of the brute-force rows.
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3(), HardwareConfig::h100_sxm()];
+        let workload = Workload {
+            arrival: crate::config::ArrivalProcess::Deterministic,
+            ..Workload::poisson(&Scenario::fixed("t", 256, 16, 120))
+        };
+        let run = |prune: PruneConfig| {
+            plan(
+                &platform.model,
+                &platform.eff,
+                &profiles,
+                &workload,
+                &Slo::paper_default(),
+                &LinearCardCost,
+                &PlannerConfig { prune, ..small_cfg(vec![0.5, 2.0], 4) },
+                4,
+            )
+            .unwrap()
+        };
+        let pruned = run(PruneConfig::default());
+        let brute = run(PruneConfig::none());
+        assert_eq!(pruned.frontier, brute.frontier);
+        assert_eq!(pruned.min_cost, brute.min_cost);
+        assert!(pruned.min_cost[0].is_some(), "0.5 req/s must be plannable");
+        // points: a (bit-identical) subsequence of the brute-force sweep.
+        let mut brute_iter = brute.points.iter();
+        for p in &pruned.points {
+            assert!(
+                brute_iter.any(|q| q == p),
+                "pruned point missing from brute-force sweep: {p:?}"
+            );
+        }
+        // The counters account for the full grid in both modes.
+        let grid = brute.points.len();
+        assert_eq!(pruned.points_probed + pruned.points_pruned, grid);
+        assert_eq!(brute.points_probed, grid);
+        assert!(
+            pruned.points_probed <= brute.points_probed,
+            "pruning must never probe more ({} vs {})",
+            pruned.points_probed,
+            brute.points_probed
+        );
     }
 
     #[test]

@@ -21,17 +21,31 @@ pub fn dominates(b: &PlanPoint, a: &PlanPoint) -> bool {
     at_least_as_good && strictly_better
 }
 
+/// Frontier membership, one flag per point in sweep order. This is the
+/// backend of [`frontier`], and what `PlanReport::to_csv` uses to mark rows
+/// in O(points) — the old code re-searched the frontier vector per row,
+/// paying a full `PlanPoint` equality scan each time.
+pub fn frontier_mask(points: &[PlanPoint]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|p| {
+            p.goodput > 0.0
+                && !p.memory_rejected
+                && !points.iter().any(|q| !q.memory_rejected && dominates(q, p))
+        })
+        .collect()
+}
+
 /// The Pareto frontier of a plan sweep. Zero-goodput points (SLO-infeasible
 /// at any rate, or memory-rejected) are excluded up front: they serve
 /// nothing, so they are never deployment candidates even where their card
 /// count undercuts every feasible plan. Survivors keep their sweep
 /// (enumeration) order, so the frontier is identical for any thread count.
 pub fn frontier(points: &[PlanPoint]) -> Vec<PlanPoint> {
-    points
-        .iter()
-        .filter(|p| p.goodput > 0.0 && !p.memory_rejected)
-        .filter(|p| !points.iter().any(|q| !q.memory_rejected && dominates(q, p)))
-        .cloned()
+    frontier_mask(points)
+        .into_iter()
+        .zip(points)
+        .filter_map(|(on, p)| on.then(|| p.clone()))
         .collect()
 }
 
@@ -103,5 +117,21 @@ mod tests {
     fn identical_plans_both_survive() {
         let pts = vec![point(4.0, 4, 1.0), point(4.0, 4, 1.0)];
         assert_eq!(frontier(&pts).len(), 2);
+    }
+
+    #[test]
+    fn mask_agrees_with_frontier() {
+        let mut oom = point(100.0, 1, 1.0);
+        oom.memory_rejected = true;
+        let pts = vec![point(4.0, 4, 1.0), point(3.0, 4, 1.0), oom, point(9.0, 8, 1.0)];
+        let mask = frontier_mask(&pts);
+        assert_eq!(mask, vec![true, false, false, true]);
+        let from_mask: Vec<PlanPoint> = mask
+            .iter()
+            .zip(&pts)
+            .filter(|(on, _)| **on)
+            .map(|(_, p)| p.clone())
+            .collect();
+        assert_eq!(frontier(&pts), from_mask);
     }
 }

@@ -586,6 +586,8 @@ mod tests {
             points: vec![point("ascend", 2.0, 2), point("h100", 4.0, 4)],
             frontier: vec![point("ascend", 2.0, 2), point("h100", 4.0, 4)],
             min_cost: vec![Some(point("ascend", 2.0, 2)), None],
+            points_probed: 2,
+            points_pruned: 0,
         };
         let f = frontier_table(&plan).render();
         assert!(f.contains("ascend") && f.contains("h100"), "{f}");

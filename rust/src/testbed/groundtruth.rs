@@ -68,15 +68,7 @@ pub fn testbed_goodput(
     let s = workload.mean_input().round() as u32;
     let s_plus = workload.mean_gen().round().max(1.0) as u32;
     let t_min = model.prefill_time(1, s) + model.decode_span_exact(1, s, s_plus);
-    let capacity = match strategy.arch {
-        crate::config::Architecture::Collocation { m }
-        | crate::config::Architecture::Dynamic { m } => {
-            m as f64 * strategy.bmax_decode.max(strategy.bmax_prefill) as f64
-        }
-        crate::config::Architecture::Disaggregation { p, d } => (p as f64
-            * strategy.bmax_prefill as f64)
-            .max(d as f64 * strategy.bmax_decode as f64),
-    };
+    let capacity = strategy.capacity_factor();
     bisect_feasible_rate(
         RateBracket {
             // Bisect in scale units: rate bounds divided by the base rate.
@@ -84,6 +76,7 @@ pub fn testbed_goodput(
             hi: cfg.upper_factor * capacity / t_min / workload.base_rate,
             tolerance: cfg.tolerance,
             base_rate: workload.base_rate,
+            warm: None,
         },
         |scale| testbed_feasible(model, platform, strategy, workload, slo, cfg, scale, seed),
     )

@@ -5,6 +5,26 @@
 //! loop — including the degenerate-bracket arm — and the two had already
 //! drifted once; one helper keeps prediction and measurement on literally
 //! the same search.
+//!
+//! # Warm-start contract
+//!
+//! [`RateBracket::warm`] optionally carries a goodput *hint* in scale units
+//! (e.g. the neighboring grid point's measured goodput, rescaled). The
+//! search then narrows the bracket toward the hint **numerically** — no
+//! simulation probes — along the exact dyadic midpoint tree the cold search
+//! would walk, stopping while the sub-bracket is still comfortably wider
+//! than the tolerance. Both descended endpoints are then *verified* by real
+//! `feasible` probes; any mismatch (the true threshold is not inside the
+//! descended bracket, e.g. because the hint was stale or `feasible` is not
+//! a monotone threshold) falls back to the full cold search from the
+//! original bracket.
+//!
+//! Guarantee: when `feasible` is a monotone threshold function (feasible
+//! below some cutoff, infeasible above — Algorithm 9's shape), the warm and
+//! cold searches return **bit-identical** results, because a verified
+//! descent is exactly the prefix of the cold search's own midpoint
+//! sequence. Hints that are non-finite or outside `(lo, hi)` are ignored.
+//! The degenerate-bracket arm (`hi <= lo`) never consults the hint.
 
 use crate::error::Result;
 
@@ -21,6 +41,9 @@ pub struct RateBracket {
     pub tolerance: f64,
     /// The workload's base rate — scale × base_rate is the effective rate.
     pub base_rate: f64,
+    /// Optional warm-start hint in scale units (see module docs). `None`
+    /// runs the plain cold search.
+    pub warm: Option<f64>,
 }
 
 /// Algorithm 8's search loop: find the highest feasible rate inside the
@@ -37,7 +60,7 @@ pub fn bisect_feasible_rate(
     bracket: RateBracket,
     mut feasible: impl FnMut(f64) -> Result<bool>,
 ) -> Result<f64> {
-    let RateBracket { mut lo, mut hi, tolerance, base_rate } = bracket;
+    let RateBracket { lo, hi, tolerance, base_rate, warm } = bracket;
     if hi <= lo {
         let bound = hi; // == min(lo, hi): probe exactly the capacity ceiling
         if !(bound.is_finite() && bound > 0.0) {
@@ -45,6 +68,27 @@ pub fn bisect_feasible_rate(
         }
         return if feasible(bound)? { Ok(bound * base_rate) } else { Ok(0.0) };
     }
+    let tol_scale = tolerance / base_rate;
+    if let Some(hint) = warm {
+        if hint.is_finite() && hint > lo && hint < hi {
+            if let Some(goodput) =
+                warm_attempt(lo, hi, tol_scale, base_rate, hint, &mut feasible)?
+            {
+                return Ok(goodput);
+            }
+        }
+    }
+    cold_search(lo, hi, tol_scale, base_rate, &mut feasible)
+}
+
+/// The plain Algorithm-8 loop from an unverified bracket.
+fn cold_search(
+    mut lo: f64,
+    mut hi: f64,
+    tol_scale: f64,
+    base_rate: f64,
+    feasible: &mut impl FnMut(f64) -> Result<bool>,
+) -> Result<f64> {
     if !feasible(lo)? {
         return Ok(0.0); // rejected outright (Algorithm 8 line 5)
     }
@@ -53,7 +97,7 @@ pub fn bisect_feasible_rate(
     if feasible(hi)? {
         return Ok(hi * base_rate);
     }
-    while hi - lo > tolerance / base_rate {
+    while hi - lo > tol_scale {
         let mid = 0.5 * (lo + hi);
         if feasible(mid)? {
             lo = mid;
@@ -64,12 +108,93 @@ pub fn bisect_feasible_rate(
     Ok(lo * base_rate)
 }
 
+/// Dyadic descent toward `hint` plus endpoint verification. Returns
+/// `Ok(Some(goodput))` when the descended bracket verifies (or resolves the
+/// search outright), `Ok(None)` to signal a cold-path fallback.
+fn warm_attempt(
+    lo: f64,
+    hi: f64,
+    tol_scale: f64,
+    base_rate: f64,
+    hint: f64,
+    feasible: &mut impl FnMut(f64) -> Result<bool>,
+) -> Result<Option<f64>> {
+    // Stop the free descent while the bracket is still several tolerances
+    // wide (so verification endpoints stay meaningful) and no narrower than
+    // about the hint itself (so a moderately stale hint still verifies).
+    let floor = (4.0 * tol_scale).max(0.5 * hint);
+    let (mut l, mut h) = (lo, hi);
+    while h - l > floor {
+        let mid = 0.5 * (l + h);
+        if hint >= mid {
+            l = mid;
+        } else {
+            h = mid;
+        }
+    }
+    // Verify the descended endpoints with real probes. A descended lower
+    // endpoint must be feasible and a descended upper endpoint infeasible —
+    // exactly what the cold search would have concluded on its way to this
+    // sub-bracket. Undescended endpoints get the cold search's own
+    // floor/ceiling checks.
+    if l > lo {
+        if !feasible(l)? {
+            return Ok(None); // hint overshot the true threshold: fall back
+        }
+    } else if !feasible(lo)? {
+        return Ok(Some(0.0));
+    }
+    if h < hi {
+        if feasible(h)? {
+            return Ok(None); // hint undershot the true threshold: fall back
+        }
+    } else if feasible(hi)? {
+        return Ok(Some(hi * base_rate));
+    }
+    while h - l > tol_scale {
+        let mid = 0.5 * (l + h);
+        if feasible(mid)? {
+            l = mid;
+        } else {
+            h = mid;
+        }
+    }
+    Ok(Some(l * base_rate))
+}
+
+/// Integer bisection: smallest `n` in `[lo, hi]` with `pred(n)` true, or
+/// `None` when no such `n` exists. Requires `pred` monotone over the range
+/// (false up to some boundary, true from there on); probes O(log(hi-lo))
+/// points.
+pub fn bisect_min_true(lo: u32, hi: u32, mut pred: impl FnMut(u32) -> bool) -> Option<u32> {
+    if lo > hi {
+        return None;
+    }
+    if !pred(hi) {
+        return None; // even the largest candidate fails: nothing to find
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn bracket(lo: f64, hi: f64) -> RateBracket {
-        RateBracket { lo, hi, tolerance: 0.01, base_rate: 1.0 }
+        RateBracket { lo, hi, tolerance: 0.01, base_rate: 1.0, warm: None }
+    }
+
+    fn warm_bracket(lo: f64, hi: f64, warm: f64) -> RateBracket {
+        RateBracket { lo, hi, tolerance: 0.01, base_rate: 1.0, warm: Some(warm) }
     }
 
     #[test]
@@ -114,12 +239,15 @@ mod tests {
         })
         .unwrap();
         assert_eq!(gnan, 0.0);
+        // The degenerate arm never consults the warm hint.
+        let gw = bisect_feasible_rate(warm_bracket(0.5, 0.2, 0.3), |s| Ok(s <= 0.25)).unwrap();
+        assert_eq!(gw, 0.2);
     }
 
     #[test]
     fn base_rate_converts_scale_to_rate() {
         let g = bisect_feasible_rate(
-            RateBracket { lo: 0.05, hi: 5.0, tolerance: 0.01, base_rate: 2.0 },
+            RateBracket { lo: 0.05, hi: 5.0, tolerance: 0.01, base_rate: 2.0, warm: None },
             |s| Ok(s <= 2.1),
         )
         .unwrap();
@@ -128,10 +256,86 @@ mod tests {
     }
 
     #[test]
+    fn warm_start_matches_cold_bit_for_bit_on_monotone_thresholds() {
+        // Every (threshold, hint) pairing — accurate, stale-low, stale-high,
+        // out-of-range, and non-finite hints — must reproduce the cold
+        // search's result exactly on a monotone threshold predicate.
+        let thresholds = [0.15, 0.5, 1.7, 4.2, 8.3, 9.95, 0.05, 12.0];
+        let hints =
+            [0.15, 0.5, 1.7, 4.2, 8.3, 9.95, 0.05, 0.1, 10.0, 11.0, -1.0, f64::NAN, f64::INFINITY];
+        for &thr in &thresholds {
+            let cold = bisect_feasible_rate(bracket(0.1, 10.0), |s| Ok(s <= thr)).unwrap();
+            for &hint in &hints {
+                let warm =
+                    bisect_feasible_rate(warm_bracket(0.1, 10.0, hint), |s| Ok(s <= thr)).unwrap();
+                assert_eq!(
+                    warm.to_bits(),
+                    cold.to_bits(),
+                    "thr={thr} hint={hint}: warm {warm} != cold {cold}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_with_accurate_hint_saves_probes() {
+        let thr = 4.2;
+        let mut cold_probes = 0;
+        let cold = bisect_feasible_rate(bracket(0.1, 10.0), |s| {
+            cold_probes += 1;
+            Ok(s <= thr)
+        })
+        .unwrap();
+        let mut warm_probes = 0;
+        let warm = bisect_feasible_rate(warm_bracket(0.1, 10.0, thr), |s| {
+            warm_probes += 1;
+            Ok(s <= thr)
+        })
+        .unwrap();
+        assert_eq!(warm.to_bits(), cold.to_bits());
+        assert!(
+            warm_probes < cold_probes,
+            "warm {warm_probes} probes should beat cold {cold_probes}"
+        );
+    }
+
+    #[test]
+    fn warm_start_falls_back_on_badly_stale_hint() {
+        // Hint near the floor, threshold near the ceiling: the descended
+        // upper endpoint is feasible, so verification must reject the
+        // bracket and the cold path must still find the threshold.
+        let g = bisect_feasible_rate(warm_bracket(0.1, 10.0, 0.2), |s| Ok(s <= 9.9)).unwrap();
+        let cold = bisect_feasible_rate(bracket(0.1, 10.0), |s| Ok(s <= 9.9)).unwrap();
+        assert_eq!(g.to_bits(), cold.to_bits());
+    }
+
+    #[test]
     fn errors_propagate() {
         let r = bisect_feasible_rate(bracket(0.1, 10.0), |_| {
             Err(crate::error::Error::simulation("boom"))
         });
         assert!(r.is_err());
+        let rw = bisect_feasible_rate(warm_bracket(0.1, 10.0, 5.0), |_| {
+            Err(crate::error::Error::simulation("boom"))
+        });
+        assert!(rw.is_err());
+    }
+
+    #[test]
+    fn bisect_min_true_finds_the_boundary() {
+        assert_eq!(bisect_min_true(1, 32, |n| n >= 7), Some(7));
+        assert_eq!(bisect_min_true(1, 32, |n| n >= 1), Some(1));
+        assert_eq!(bisect_min_true(1, 32, |n| n >= 32), Some(32));
+        assert_eq!(bisect_min_true(1, 32, |_| false), None);
+        assert_eq!(bisect_min_true(5, 5, |n| n == 5), Some(5));
+        assert_eq!(bisect_min_true(6, 5, |_| true), None, "empty range");
+        // Probe count stays logarithmic.
+        let mut probes = 0;
+        let r = bisect_min_true(1, 1024, |n| {
+            probes += 1;
+            n >= 777
+        });
+        assert_eq!(r, Some(777));
+        assert!(probes <= 12, "{probes} probes for a 1024-wide range");
     }
 }

@@ -6,13 +6,13 @@
 use std::sync::Arc;
 
 use bestserve::config::{
-    Architecture, EfficiencyParams, HardwareConfig, ModelConfig, Phase, Platform, Scenario,
-    Slo, Strategy, Workload,
+    Architecture, ArrivalProcess, EfficiencyParams, HardwareConfig, ModelConfig, Phase,
+    Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
-use bestserve::optimizer::{find_goodput, GoodputConfig};
+use bestserve::optimizer::{find_goodput, GoodputConfig, PruneConfig};
 use bestserve::planner::pareto::{dominates, frontier};
-use bestserve::planner::PlanPoint;
+use bestserve::planner::{plan, LinearCardCost, PlanPoint, PlannerConfig};
 use bestserve::simulator::{generate_workload, simulate, SimParams};
 use bestserve::testbed::{BlockManager, Engine, SeqInput, Testbed, TestbedConfig};
 use bestserve::util::quickcheck::{check, Gen};
@@ -428,6 +428,93 @@ fn prop_architecture_parse_display_roundtrip() {
         let back = Architecture::parse(&s).map_err(|e| e.to_string())?;
         if back != arch {
             return Err(format!("{arch:?} -> {s} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruned_plan_equals_brute_force() {
+    // The planner's exactness claim: a pruned sweep (analytic zero filter +
+    // warm-started bisection + bound dominance) must reproduce the
+    // brute-force sweep bit for bit — same Pareto frontier, same min-cost
+    // plan per target, and a point list that is a bit-identical subsequence
+    // of the brute one (dominance may only drop rows that provably decide
+    // nothing, never reorder or alter them). Deterministic arrivals make
+    // every feasibility probe reproducible; the randomized SLO drives grids
+    // through feasible, analytically-zero, and memory-rejected mixes.
+    check("plan prune equivalence", 5, |g| {
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3(), HardwareConfig::h100_sxm()];
+        let scenario = Scenario::fixed(
+            "prop",
+            g.usize_in(64, 512) as u64,
+            g.usize_in(2, 24) as u64,
+            g.usize_in(60, 100),
+        );
+        let workload =
+            Workload { arrival: ArrivalProcess::Deterministic, ..Workload::poisson(&scenario) };
+        let slo =
+            Slo { ttft: g.f64_in(0.05, 2.0), tpot: g.f64_in(0.01, 0.1), ..Slo::paper_default() };
+        let base = PlannerConfig {
+            targets: vec![g.f64_in(0.2, 1.5), g.f64_in(1.5, 20.0)],
+            space: StrategySpace {
+                max_cards: g.usize_in(2, 4) as u32,
+                tp_choices: if g.bool() { vec![1, 2] } else { vec![2] },
+                ..StrategySpace::default()
+            },
+            goodput: GoodputConfig { tolerance: 0.3, ..GoodputConfig::default() },
+            check_memory: g.bool(),
+            ..PlannerConfig::default()
+        };
+        let run = |prune: PruneConfig| {
+            plan(
+                &platform.model,
+                &platform.eff,
+                &profiles,
+                &workload,
+                &slo,
+                &LinearCardCost,
+                &PlannerConfig { prune, ..base.clone() },
+                3,
+            )
+            .map_err(|e| e.to_string())
+        };
+        let pruned = run(PruneConfig::default())?;
+        let brute = run(PruneConfig::none())?;
+        if pruned.frontier != brute.frontier {
+            return Err(format!(
+                "frontier diverged: pruned has {} points, brute {}",
+                pruned.frontier.len(),
+                brute.frontier.len()
+            ));
+        }
+        if pruned.min_cost != brute.min_cost {
+            return Err(format!(
+                "min-cost plans diverged:\n  pruned {:?}\n  brute  {:?}",
+                pruned.min_cost, brute.min_cost
+            ));
+        }
+        let mut brute_iter = brute.points.iter();
+        for p in &pruned.points {
+            if !brute_iter.any(|q| q == p) {
+                return Err(format!("pruned point not a brute-sweep subsequence entry: {p:?}"));
+            }
+        }
+        let grid = profiles.len() * base.space.enumerate().len();
+        for (name, rep) in [("pruned", &pruned), ("brute", &brute)] {
+            if rep.points_probed + rep.points_pruned != grid {
+                return Err(format!(
+                    "{name} counters broken: {} probed + {} pruned != {grid} grid points",
+                    rep.points_probed, rep.points_pruned
+                ));
+            }
+        }
+        if pruned.points_probed > brute.points_probed {
+            return Err(format!(
+                "pruning probed more points ({}) than brute force ({})",
+                pruned.points_probed, brute.points_probed
+            ));
         }
         Ok(())
     });
