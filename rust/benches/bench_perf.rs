@@ -9,13 +9,13 @@ use std::time::Instant;
 use bestserve::config::{
     ArrivalProcess, HardwareConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
 };
-use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::estimator::{front_cache_totals, AnalyticOracle, CacheStats, LatencyModel};
 use bestserve::optimizer::{
-    optimize, optimize_parallel, AnalyticFactory, GoodputConfig, PruneConfig,
+    find_goodput, optimize, optimize_parallel, AnalyticFactory, GoodputConfig, PruneConfig,
 };
 use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
-use bestserve::simulator::{generate_workload, simulate, SimParams};
+use bestserve::simulator::{generate_workload, simulate, SimParams, SpanMode};
 use bestserve::testbed::{Testbed, TestbedConfig};
 
 fn time<F: FnMut()>(mut f: F) -> f64 {
@@ -132,6 +132,61 @@ fn main() -> bestserve::Result<()> {
     assert!(
         per_gen < 0.25 * sim_dt,
         "workload generation ({per_gen:.3}s) should be a small fraction of simulation ({sim_dt:.3}s)"
+    );
+
+    // --- Per-probe fast path -------------------------------------------------
+    // One Algorithm-8 goodput bisection on a preset-shaped workload
+    // (2048/64 fixed lengths), exact span mode, with the output-preserving
+    // per-probe fast paths — the materialized-workload cache and the
+    // latency-model front cache — off vs on. Exact mode is the stress case:
+    // without the front cache every decode-span query re-sums s_+ locked
+    // oracle lookups, and every FEASIBLE(λ) probe regenerates the workload;
+    // with the fast paths a warm span is one direct-mapped probe and a probe
+    // stamps its requests out of the cached skeleton. Same bits either way.
+    let probe_wl = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 4_000));
+    let probe_st = Strategy::disaggregation(1, 1, 4);
+    let probe = |fast: bool| {
+        let p = SimParams {
+            span_mode: SpanMode::Exact,
+            front_cache: fast,
+            ..SimParams::default()
+        };
+        let cfg = GoodputConfig { workload_cache: fast, ..GoodputConfig::default() };
+        find_goodput(&oracle, &platform, &probe_st, &probe_wl, &Slo::paper_default(), p, &cfg)
+            .unwrap()
+    };
+    let mut g_off = 0.0;
+    let dt_off = time(|| g_off = probe(false));
+    let fc_before = front_cache_totals();
+    let mut g_on = 0.0;
+    let dt_on = time(|| g_on = probe(true));
+    let fc_after = front_cache_totals();
+    let fc = CacheStats {
+        hits: fc_after.hits - fc_before.hits,
+        misses: fc_after.misses - fc_before.misses,
+    };
+    let probe_speedup = dt_off / dt_on;
+    println!(
+        "goodput probe fast path   : exact-span bisection {dt_off:.2}s off vs {dt_on:.2}s on \
+         — speedup {probe_speedup:.2}x"
+    );
+    println!(
+        "  front cache             : {:.1}% hit rate ({} hits, {} misses); \
+         oracle memo {:.1}% hit rate",
+        100.0 * fc.hit_rate(),
+        fc.hits,
+        fc.misses,
+        100.0 * oracle.cache_stats().hit_rate()
+    );
+    assert_eq!(
+        g_on.to_bits(),
+        g_off.to_bits(),
+        "fast paths must be output-preserving: {g_on} (on) vs {g_off} (off) req/s"
+    );
+    assert!(
+        probe_speedup >= 3.0,
+        "per-probe fast paths: expected >= 3x on exact-span probes, got {probe_speedup:.2}x \
+         ({dt_off:.2}s off vs {dt_on:.2}s on)"
     );
 
     // --- Testbed -------------------------------------------------------------
@@ -295,6 +350,10 @@ fn main() -> bestserve::Result<()> {
         dt_brute / dt_pruned
     );
     const PLAN_BUDGET_S: f64 = 120.0;
+    // The pruned 10x grid gets a tighter budget than the brute sweep: the
+    // per-probe fast paths (workload cache + front cache) cheapen every
+    // surviving probe on top of the sweep-level cuts.
+    const PLAN_PRUNED_BUDGET_S: f64 = 100.0;
     assert!(
         dt_brute < PLAN_BUDGET_S,
         "brute-force preset-grid plan sweep took {dt_brute:.1}s, budget {PLAN_BUDGET_S}s on one CPU"
@@ -355,8 +414,9 @@ fn main() -> bestserve::Result<()> {
         "big sweep covers {big_grid} grid points, expected >= 10x the {small_grid}-point grid"
     );
     assert!(
-        dt_big < PLAN_BUDGET_S,
-        "pruned {big_grid}-point plan sweep took {dt_big:.1}s, budget {PLAN_BUDGET_S}s on one CPU"
+        dt_big < PLAN_PRUNED_BUDGET_S,
+        "pruned {big_grid}-point plan sweep took {dt_big:.1}s, budget {PLAN_PRUNED_BUDGET_S}s \
+         on one CPU"
     );
     Ok(())
 }

@@ -17,7 +17,7 @@ pub use model::ModelConfig;
 pub use scenario::{LengthDist, Scenario};
 pub use slo::Slo;
 pub use strategy::{Architecture, Strategy, StrategySpace};
-pub use workload::{ArrivalProcess, RequestClass, Workload};
+pub use workload::{ArrivalProcess, ArrivalSkeleton, RequestClass, Workload};
 
 use crate::error::Error;
 use crate::util::json::Json;

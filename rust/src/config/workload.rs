@@ -105,6 +105,35 @@ impl ArrivalProcess {
         }
     }
 
+    /// Sample the *scale-invariant* part of `n` arrivals: the unit-rate
+    /// random variates, without committing to a rate. Consumes the RNG
+    /// exactly like [`ArrivalProcess::sample`] (same draws, same order), so
+    /// [`ArrivalSkeleton::materialize`] reproduces `sample`'s output
+    /// bit-for-bit at any rate — the foundation of the per-probe
+    /// materialized-workload cache. `Replay` arrivals are file-backed, not
+    /// random; they are cached at the `generate_workload` level instead.
+    pub fn sample_skeleton(&self, n: usize, rng: &mut Rng) -> ArrivalSkeleton {
+        match self {
+            ArrivalProcess::Poisson => {
+                ArrivalSkeleton::Exp((0..n).map(|_| rng.exp_unit()).collect())
+            }
+            ArrivalProcess::Deterministic => ArrivalSkeleton::Deterministic { n },
+            ArrivalProcess::Bursty { cv } => {
+                // Same shape as `sample`: k = 1/cv²; θ = 1/(rate·k) is the
+                // only rate-dependent factor and Marsaglia–Tsang acceptance
+                // never looks at it, so (accept, boost) pairs are reusable.
+                let k = 1.0 / (cv * cv);
+                ArrivalSkeleton::Gamma {
+                    k,
+                    parts: (0..n).map(|_| rng.gamma_unit(k)).collect(),
+                }
+            }
+            ArrivalProcess::Replay { path } => {
+                panic!("replay arrivals ({path}) are materialized by generate_workload")
+            }
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             ArrivalProcess::Poisson => {
@@ -144,6 +173,74 @@ impl ArrivalProcess {
         };
         process.validate()?;
         Ok(process)
+    }
+}
+
+/// The scale-invariant random content of a synthetic arrival stream: what
+/// [`ArrivalProcess::sample`] would have drawn from the RNG, divorced from
+/// the rate. Sampled once per `(workload, seed)` by
+/// [`ArrivalProcess::sample_skeleton`]; [`ArrivalSkeleton::materialize`]
+/// then stamps out concrete timestamps for each probed rate with one
+/// divide + prefix walk, performing *exactly* the floating-point operations
+/// `sample` performs — `exp(λ) = exp_unit()/λ`, `gamma(k, θ) =
+/// accept·θ·boost`, deterministic spacing is pure index math — so cached
+/// and direct workloads are bit-identical (pinned by tests here and the
+/// cross-process property suite).
+#[derive(Debug, Clone)]
+pub enum ArrivalSkeleton {
+    /// Unit-rate exponential variates `gₖ = exp_unit()`; arrival `k` is the
+    /// prefix sum of `gⱼ / rate`.
+    Exp(Vec<f64>),
+    /// Marsaglia–Tsang `(accept, boost)` factor pairs at shape `k = 1/cv²`;
+    /// gap `j` materializes as `accept·θ·boost` with `θ = 1/(rate·k)`.
+    Gamma { k: f64, parts: Vec<(f64, f64)> },
+    /// Deterministic spacing has no random content — only the count.
+    Deterministic { n: usize },
+}
+
+impl ArrivalSkeleton {
+    /// Stamp out the arrival timestamps at effective rate `rate` (req/s) —
+    /// bit-identical to [`ArrivalProcess::sample`] at the same rate on the
+    /// same RNG state the skeleton was drawn from.
+    pub fn materialize(&self, rate: f64) -> Vec<f64> {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        match self {
+            ArrivalSkeleton::Exp(gs) => {
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(gs.len());
+                for g in gs {
+                    t += g / rate;
+                    out.push(t);
+                }
+                out
+            }
+            ArrivalSkeleton::Deterministic { n } => {
+                (1..=*n).map(|k| k as f64 / rate).collect()
+            }
+            ArrivalSkeleton::Gamma { k, parts } => {
+                let theta = 1.0 / (rate * k);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(parts.len());
+                for (accept, boost) in parts {
+                    t += accept * theta * boost;
+                    out.push(t);
+                }
+                out
+            }
+        }
+    }
+
+    /// Number of arrivals the skeleton materializes.
+    pub fn len(&self) -> usize {
+        match self {
+            ArrivalSkeleton::Exp(gs) => gs.len(),
+            ArrivalSkeleton::Gamma { parts, .. } => parts.len(),
+            ArrivalSkeleton::Deterministic { n } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -610,6 +707,34 @@ mod tests {
                 "{name}: mean gap {mean_gap} vs {}",
                 1.0 / rate
             );
+        }
+    }
+
+    #[test]
+    fn skeleton_materializes_bit_identical_to_sample() {
+        // Per-process anchor for the materialized-workload cache: drawing a
+        // skeleton and stamping it out at each rate must reproduce `sample`
+        // bit for bit (same RNG consumption, same fp operations). The
+        // cross-stack property suite covers whole workloads; this pins the
+        // arrival layer in isolation.
+        for p in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Bursty { cv: 0.7 },
+            ArrivalProcess::Bursty { cv: 2.5 },
+            ArrivalProcess::Deterministic,
+        ] {
+            for seed in [1u64, 99] {
+                let skeleton = p.sample_skeleton(257, &mut Rng::new(seed));
+                assert_eq!(skeleton.len(), 257);
+                for &rate in &[0.0625, 1.0, 3.7, 150.0] {
+                    let direct = p.sample(rate, 257, &mut Rng::new(seed));
+                    let cached = skeleton.materialize(rate);
+                    assert_eq!(direct.len(), cached.len());
+                    for (d, c) in direct.iter().zip(&cached) {
+                        assert_eq!(d.to_bits(), c.to_bits(), "{p:?} rate={rate}");
+                    }
+                }
+            }
         }
     }
 

@@ -2,8 +2,28 @@
 //! requests — with the functional-argument cache of §3.3.4, plus the
 //! [`LatencyModel`] trait the simulators consume (implemented both here and
 //! by the PJRT-grid runtime so they are interchangeable).
+//!
+//! # The two-level cache fast path
+//!
+//! The simulators query the latency surface millions of times per run with
+//! a small set of distinct argument tuples, so lookup cost — not Algorithm
+//! 1 itself — dominates steady state. Two layers keep it cheap while
+//! `CacheStats` stays exact:
+//!
+//! * [`AnalyticOracle`]'s memo is **lock-striped**: the key hashes (cheap
+//!   multiply [`FoldHasher`], not SipHash) to one of [`ORACLE_SHARDS`]
+//!   independent `RwLock` shards, so the optimizer's worker threads rarely
+//!   contend on the same lock even during warm-up.
+//! * [`FrontCache`] is a **per-simulator, lock-free** direct-mapped memo of
+//!   the full query surface (prefill / step / span / exact-span). It is
+//!   single-threaded by construction (`Cell` state, one per simulator run),
+//!   so steady-state queries touch no lock and no atomic; misses delegate
+//!   to the wrapped model's own methods — including overridden span
+//!   methods, which is what keeps grid-backed models bit-exact.
 
+use std::cell::Cell;
 use std::collections::HashMap;
+use std::hash::BuildHasherDefault;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
@@ -63,21 +83,91 @@ impl CacheStats {
     }
 }
 
+/// Number of lock stripes in the oracle memo. A power of two so the shard
+/// index is a mask of the hash's top bits; 16 comfortably exceeds the
+/// optimizer's worker-thread count on typical CPUs.
+const ORACLE_SHARDS: usize = 16;
+
+/// A multiply-fold hasher for the oracle's small fixed-width keys: each
+/// written word is XOR-folded into the state and multiplied by the golden
+/// ratio, with a SplitMix-style avalanche at the end. Orders of magnitude
+/// cheaper than the default SipHash on a 9-byte key, and the key space
+/// (`(phase, b, s)`) is program-controlled, so HashDoS resistance buys
+/// nothing here.
+#[derive(Default)]
+pub struct FoldHasher {
+    h: u64,
+}
+
+impl std::hash::Hasher for FoldHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        let mut z = self.h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.fold(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.fold(v);
+    }
+}
+
+impl FoldHasher {
+    #[inline]
+    fn fold(&mut self, v: u64) {
+        self.h = (self.h ^ v).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+}
+
+type ShardMap = HashMap<(u8, u32, u32), f64, BuildHasherDefault<FoldHasher>>;
+
 /// Algorithm 1, memoized by functional arguments (phase, b, s).
 ///
 /// The oracle is constructed for a fixed platform and tensor-parallel size;
 /// the per-block dispatch/compute interleaving runs once per distinct
 /// argument tuple and is served from the cache afterwards — the Simulator
 /// invokes it millions of times with a small set of distinct batch sizes.
-/// The cache is an `RwLock` (read-mostly after warm-up) so the optimizer's
-/// parallel strategy sweep can share one oracle across worker threads
-/// without serializing on every lookup.
+/// The memo is **lock-striped**: keys hash (via [`FoldHasher`]) to one of
+/// [`ORACLE_SHARDS`] independent `RwLock`ed maps, so the optimizer's
+/// parallel strategy sweep shares one oracle across worker threads without
+/// serializing on a single lock even while the cache is warming up. Two
+/// threads racing on a cold key may both compute it — benign, Algorithm 1
+/// is deterministic, and `CacheStats` counts exactly what happened.
 pub struct AnalyticOracle {
     platform: Platform,
     tp: u32,
-    cache: RwLock<HashMap<(u8, u32, u32), f64>>,
+    shards: [RwLock<ShardMap>; ORACLE_SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+/// Shard selector: top bits of the [`FoldHasher`] hash, leaving the low
+/// bits for the in-map bucket index so the two never correlate.
+#[inline]
+fn shard_index(key: &(u8, u32, u32)) -> usize {
+    use std::hash::{Hash, Hasher};
+    let mut h = FoldHasher::default();
+    key.hash(&mut h);
+    (h.finish() >> 60) as usize & (ORACLE_SHARDS - 1)
 }
 
 impl AnalyticOracle {
@@ -86,7 +176,7 @@ impl AnalyticOracle {
         AnalyticOracle {
             platform,
             tp,
-            cache: RwLock::new(HashMap::new()),
+            shards: std::array::from_fn(|_| RwLock::new(ShardMap::default())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -142,16 +232,18 @@ impl AnalyticOracle {
         t_compute
     }
 
-    /// `ESTIMATE_TIME` (Algorithm 1): ℓ blocks, cached on (phase, b, s).
+    /// `ESTIMATE_TIME` (Algorithm 1): ℓ blocks, cached on (phase, b, s) in
+    /// the key's lock stripe.
     pub fn estimate(&self, phase: Phase, b: u32, s: u32) -> f64 {
         let key = (phase as u8, b, s);
-        if let Some(&t) = self.cache.read().unwrap().get(&key) {
+        let shard = &self.shards[shard_index(&key)];
+        if let Some(&t) = shard.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let t = self.platform.model.layers as f64 * self.block_time(phase, b, s);
-        self.cache.write().unwrap().insert(key, t);
+        shard.write().unwrap().insert(key, t);
         t
     }
 
@@ -185,6 +277,164 @@ impl LatencyModel for AnalyticOracle {
 
     fn decode_step_time(&self, b: u32, ctx: u32) -> f64 {
         self.estimate(Phase::Decode, b, ctx)
+    }
+}
+
+/// log2 of the front-cache slot count. 1024 slots × 24 bytes ≈ 24 KiB —
+/// well inside L1+L2 for the handful of distinct `(b, s, s_+)` tuples a
+/// single simulation run cycles through.
+const FRONT_CACHE_LOG2: u32 = 10;
+
+/// One direct-mapped entry: the query it answers and the answer.
+#[derive(Debug, Clone, Copy)]
+struct FrontSlot {
+    tag: u64,
+    aux: u64,
+    val: f64,
+}
+
+/// `tag` value no real query produces (kinds keep real tags < 2³⁴).
+const FRONT_EMPTY: FrontSlot = FrontSlot { tag: u64::MAX, aux: 0, val: 0.0 };
+
+/// Process-wide front-cache totals, accumulated once per dropped cache so
+/// the per-lookup path stays atomic-free. `bench_perf` reports these.
+static FRONT_HITS: AtomicU64 = AtomicU64::new(0);
+static FRONT_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Aggregate hit/miss counts over every [`FrontCache`] dropped so far in
+/// this process (plus nothing from still-live caches — simulators drop
+/// theirs at the end of each run).
+pub fn front_cache_totals() -> CacheStats {
+    CacheStats {
+        hits: FRONT_HITS.load(Ordering::Relaxed),
+        misses: FRONT_MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// A per-simulator, lock-free, direct-mapped memo over the full
+/// [`LatencyModel`] query surface — the last-level latency cache in front
+/// of the (sharded, but still locked and atomically counted) oracle memo.
+///
+/// Each simulation run constructs one `FrontCache` around its model and
+/// routes every `prefill_time` / `decode_step_time` / span query through
+/// it. Steady state in a simulator is a small working set of distinct
+/// query tuples repeated millions of times; a direct-mapped table indexed
+/// by a multiply hash answers those from `Cell` state with no lock, no
+/// atomic, and no hashing of composite keys.
+///
+/// **Exactness**: misses delegate to the wrapped model's *own* methods —
+/// crucially including `decode_span` / `decode_span_exact`, which
+/// implementations like the PJRT grid override (its cumulative-sum exact
+/// span is a different floating-point reduction than the default per-step
+/// sum). Caching whole spans both preserves those overridden bits and
+/// collapses exact-mode span cost from `s_+` step lookups to one probe.
+/// A cached value is only ever a previously returned value for the same
+/// query, so outputs are bit-identical with the cache on or off; disabled
+/// caches (`SimParams::front_cache = false`) skip the table entirely and
+/// count nothing.
+///
+/// `Cell` state makes this `!Sync` by design: one cache belongs to one
+/// simulator run on one thread (the optimizer parallelizes *across*
+/// strategies, each worker building its own simulators). Aggregate stats
+/// flush to process-wide counters on drop; see [`front_cache_totals`].
+pub struct FrontCache<'a> {
+    model: &'a dyn LatencyModel,
+    /// Empty when disabled: every call is pure delegation.
+    slots: Vec<Cell<FrontSlot>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl<'a> FrontCache<'a> {
+    pub fn new(model: &'a dyn LatencyModel, enabled: bool) -> FrontCache<'a> {
+        FrontCache {
+            model,
+            slots: if enabled {
+                vec![Cell::new(FRONT_EMPTY); 1 << FRONT_CACHE_LOG2]
+            } else {
+                Vec::new()
+            },
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    /// The wrapped model, for callers that need the raw trait object.
+    pub fn inner(&self) -> &'a dyn LatencyModel {
+        self.model
+    }
+
+    /// Hit/miss counts of this cache instance so far.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
+    }
+
+    /// Direct-mapped slot index: two golden-ratio multiplies folded, top
+    /// bits kept (the well-mixed ones of a multiply hash).
+    #[inline]
+    fn index(tag: u64, aux: u64) -> usize {
+        let h = (tag.wrapping_mul(0x9E3779B97F4A7C15))
+            ^ (aux.wrapping_mul(0xBF58476D1CE4E5B9));
+        (h.wrapping_mul(0x94D049BB133111EB) >> (64 - FRONT_CACHE_LOG2)) as usize
+    }
+
+    #[inline]
+    fn lookup(&self, tag: u64, aux: u64, compute: impl FnOnce() -> f64) -> f64 {
+        if self.slots.is_empty() {
+            return compute();
+        }
+        let idx = Self::index(tag, aux);
+        let slot = self.slots[idx].get();
+        if slot.tag == tag && slot.aux == aux {
+            self.hits.set(self.hits.get() + 1);
+            return slot.val;
+        }
+        self.misses.set(self.misses.get() + 1);
+        let val = compute();
+        self.slots[idx].set(FrontSlot { tag, aux, val });
+        val
+    }
+
+    /// Query-kind discriminant packed with the batch size: tags stay below
+    /// 2³⁴, so [`FRONT_EMPTY`]'s `u64::MAX` can never collide.
+    #[inline]
+    fn tag(kind: u64, b: u32) -> u64 {
+        (kind << 32) | b as u64
+    }
+
+    pub fn prefill_time(&self, b: u32, s: u32) -> f64 {
+        self.lookup(Self::tag(0, b), s as u64, || self.model.prefill_time(b, s))
+    }
+
+    pub fn decode_step_time(&self, b: u32, ctx: u32) -> f64 {
+        self.lookup(Self::tag(1, b), ctx as u64, || {
+            self.model.decode_step_time(b, ctx)
+        })
+    }
+
+    pub fn decode_span(&self, b: u32, s: u32, s_plus: u32) -> f64 {
+        self.lookup(Self::tag(2, b), ((s as u64) << 32) | s_plus as u64, || {
+            self.model.decode_span(b, s, s_plus)
+        })
+    }
+
+    pub fn decode_span_exact(&self, b: u32, s: u32, s_plus: u32) -> f64 {
+        self.lookup(Self::tag(3, b), ((s as u64) << 32) | s_plus as u64, || {
+            self.model.decode_span_exact(b, s, s_plus)
+        })
+    }
+}
+
+impl Drop for FrontCache<'_> {
+    fn drop(&mut self) {
+        // One pair of atomics per simulator run, not per lookup.
+        let (h, m) = (self.hits.get(), self.misses.get());
+        if h > 0 {
+            FRONT_HITS.fetch_add(h, Ordering::Relaxed);
+        }
+        if m > 0 {
+            FRONT_MISSES.fetch_add(m, Ordering::Relaxed);
+        }
     }
 }
 
@@ -277,6 +527,85 @@ mod tests {
         assert!(
             (t - (o.prefill_time(1, 2048) + o.decode_span(1, 2048, 64))).abs() < 1e-12
         );
+    }
+
+    #[test]
+    fn front_cache_is_transparent_and_counts() {
+        let o = oracle();
+        let fc = FrontCache::new(&o, true);
+        // Every query kind returns exactly what the raw model returns,
+        // cold and warm.
+        for _ in 0..2 {
+            assert_eq!(fc.prefill_time(2, 512).to_bits(), o.prefill_time(2, 512).to_bits());
+            assert_eq!(
+                fc.decode_step_time(4, 1024).to_bits(),
+                o.decode_step_time(4, 1024).to_bits()
+            );
+            assert_eq!(
+                fc.decode_span(1, 2048, 64).to_bits(),
+                o.decode_span(1, 2048, 64).to_bits()
+            );
+            assert_eq!(
+                fc.decode_span_exact(1, 256, 16).to_bits(),
+                o.decode_span_exact(1, 256, 16).to_bits()
+            );
+        }
+        let stats = fc.stats();
+        assert_eq!(stats.misses, 4, "4 distinct queries");
+        assert_eq!(stats.hits, 4, "second round served from slots");
+        // A disabled cache is pure delegation and counts nothing.
+        let off = FrontCache::new(&o, false);
+        assert_eq!(off.prefill_time(2, 512).to_bits(), o.prefill_time(2, 512).to_bits());
+        assert_eq!(off.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn front_cache_delegates_overridden_spans() {
+        // Span misses must call the model's own (possibly overridden) span
+        // methods — a grid-backed model's cumsum exact span is a different
+        // fp reduction than the default per-step sum, and the front cache
+        // must preserve its bits rather than re-deriving from steps.
+        struct Overridden;
+        impl LatencyModel for Overridden {
+            fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+                0.1
+            }
+            fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+                0.001
+            }
+            fn decode_span_exact(&self, _b: u32, _s: u32, _s_plus: u32) -> f64 {
+                42.0 // deliberately not the default sum
+            }
+        }
+        let m = Overridden;
+        let fc = FrontCache::new(&m, true);
+        assert_eq!(fc.decode_span_exact(1, 128, 10), 42.0);
+        assert_eq!(fc.decode_span_exact(1, 128, 10), 42.0, "warm hit keeps override");
+        // The heuristic span still uses the default definition.
+        assert!((fc.decode_span(1, 128, 10) - 10.0 * 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn front_cache_distinguishes_query_kinds() {
+        // A span at (b, s, s_plus) and a step at the same numeric values
+        // must not alias to one slot answer.
+        struct Skewed;
+        impl LatencyModel for Skewed {
+            fn prefill_time(&self, b: u32, s: u32) -> f64 {
+                (b + s) as f64
+            }
+            fn decode_step_time(&self, b: u32, ctx: u32) -> f64 {
+                (b * 1000 + ctx) as f64
+            }
+        }
+        let m = Skewed;
+        let fc = FrontCache::new(&m, true);
+        let step = fc.decode_step_time(1, 64);
+        let prefill = fc.prefill_time(1, 64);
+        assert_eq!(step, 1064.0);
+        assert_eq!(prefill, 65.0);
+        assert_eq!(fc.decode_step_time(1, 64), 1064.0);
+        assert_eq!(fc.prefill_time(1, 64), 65.0);
     }
 
     #[test]

@@ -83,6 +83,9 @@ COMMON OPTIONS
   --config   platform JSON file (overrides the two above)
   --grid     use the AOT/PJRT latency artifact instead of the native oracle
   --slo-ttft ms (default 1500)    --slo-tpot ms (default 70)
+  --no-fast-path  disable the output-preserving per-probe fast paths (the
+             materialized-workload cache and the latency-model front cache);
+             results are bit-identical either way — this exists for A/B runs
 
 STRATEGY NOTATION
   5m         collocation: 5 instances serving both phases (vLLM-style)
@@ -178,6 +181,7 @@ fn sim_params_from(args: &Args) -> Result<SimParams> {
         },
         // Dynamic (Nf) role-switch dead time, in ms on the CLI.
         switch_latency: args.f64_or("switch-latency", defaults.switch_latency * 1e3)? / 1e3,
+        front_cache: !args.flag("no-fast-path"),
         ..defaults
     })
 }
@@ -358,6 +362,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let cfg = GoodputConfig {
         tolerance: args.f64_or("tolerance", 0.05)?,
         repeats: args.usize_or("repeats", 1)?,
+        workload_cache: !args.flag("no-fast-path"),
         ..GoodputConfig::default()
     };
     let threads = args.usize_or("threads", default_threads())?.max(1);
@@ -489,6 +494,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         goodput: GoodputConfig {
             tolerance: args.f64_or("tolerance", 0.1)?,
             repeats: args.usize_or("repeats", 1)?,
+            workload_cache: !args.flag("no-fast-path"),
             ..GoodputConfig::default()
         },
         sim_params: sim_params_from(args)?,

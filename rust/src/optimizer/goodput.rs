@@ -9,7 +9,9 @@
 use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::{bound::goodput_upper_bound, LatencyModel};
-use crate::simulator::{repeat_params, simulate, SimParams, SimReport};
+use crate::simulator::{
+    repeat_params, simulate, simulate_requests, MaterializedWorkload, SimParams, SimReport,
+};
 use crate::util::bisect::{bisect_feasible_rate, RateBracket};
 
 #[derive(Debug, Clone, Copy)]
@@ -28,6 +30,13 @@ pub struct GoodputConfig {
     /// [`RateBracket::warm`] (see `util::bisect` for the contract: exact
     /// under monotone-threshold feasibility, cold fallback otherwise).
     pub warm_hint: Option<f64>,
+    /// Sample each repeat's workload once per `find_goodput` call
+    /// ([`MaterializedWorkload`]) and stamp out the bisection midpoints by
+    /// rescaling, instead of re-running the RNG stream per probe.
+    /// Output-preserving — the materialized arrivals are bit-identical to
+    /// direct generation at every scale — so this stays on by default; the
+    /// off switch exists for the bit-equality anchors.
+    pub workload_cache: bool,
 }
 
 impl Default for GoodputConfig {
@@ -38,6 +47,7 @@ impl Default for GoodputConfig {
             upper_factor: 1.2,
             repeats: 1,
             warm_hint: None,
+            workload_cache: true,
         }
     }
 }
@@ -59,27 +69,66 @@ pub fn feasible(
     scale: f64,
     repeats: usize,
 ) -> Result<bool> {
-    let class_slos = workload.class_slos();
+    feasible_reports(slo, &workload.class_slos(), params, repeats, |_k, p| {
+        simulate(model, platform, strategy, workload, scale, p)
+    })
+}
+
+/// The workload-cached twin of [`feasible`]: identical SLO evaluation over
+/// reports produced by rescaling pre-sampled [`MaterializedWorkload`]s
+/// instead of re-running the RNG stream per probe. `mats[k]` must have been
+/// built with repeat `k`'s seed (the raw `params.seed` when `repeats <= 1`,
+/// `repeat_params(params, k).seed` otherwise — [`find_goodput`] does this)
+/// so the stamped-out request vectors are bit-identical to what the direct
+/// path generates.
+#[allow(clippy::too_many_arguments)]
+pub fn feasible_cached(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    workload: &Workload,
+    mats: &[MaterializedWorkload],
+    slo: &Slo,
+    params: SimParams,
+    scale: f64,
+    repeats: usize,
+) -> Result<bool> {
+    debug_assert_eq!(mats.len(), repeats.max(1));
+    feasible_reports(slo, &workload.class_slos(), params, repeats, |k, p| {
+        let reqs = mats[k].at_scale(scale)?;
+        simulate_requests(model, platform, strategy, &reqs, p)
+    })
+}
+
+/// Shared SLO-evaluation core of [`feasible`] / [`feasible_cached`]:
+/// `run(k, params_k)` produces repeat `k`'s report (one-shot runs use the
+/// raw params; averaged runs the Figure-10b `repeat_params` seed scheme —
+/// the same scheme as `simulate_averaged`, evaluated at the SLO's
+/// configured percentile; at the default percentile 90 the two agree bit
+/// for bit). One-shot applies the relaxed-threshold check to the single
+/// report; averaged to percentiles averaged over the repeats. Per-class
+/// budgets are enforced in both modes.
+fn feasible_reports(
+    slo: &Slo,
+    class_slos: &[(u16, Slo)],
+    params: SimParams,
+    repeats: usize,
+    mut run: impl FnMut(usize, SimParams) -> Result<SimReport>,
+) -> Result<bool> {
     if repeats <= 1 {
-        let rep = simulate(model, platform, strategy, workload, scale, params)?;
+        let rep = run(0, params)?;
         return Ok(slo
             .feasible(rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile))
-            && class_budgets_met(&rep, &class_slos));
+            && class_budgets_met(&rep, class_slos));
     }
-    // Figure 10b protocol: average the percentiles over repeated runs —
-    // same seed scheme as `simulate_averaged` (shared `repeat_params`),
-    // but evaluated at the SLO's configured percentile, like the one-shot
-    // path and the per-class budgets below (`simulate_averaged` itself
-    // always reports P90s; at the default percentile 90 the two agree
-    // bit for bit).
     let mut ttft_sum = 0.0;
     let mut tpot_sum = 0.0;
     let mut class_sums = vec![(0.0f64, 0.0f64, 0usize); class_slos.len()];
     for k in 0..repeats {
-        let rep = simulate(model, platform, strategy, workload, scale, repeat_params(params, k))?;
+        let rep = run(k, repeat_params(params, k))?;
         ttft_sum += rep.ttft_pct(slo.percentile);
         tpot_sum += rep.tpot_pct(slo.percentile);
-        for (sums, (class, cslo)) in class_sums.iter_mut().zip(&class_slos) {
+        for (sums, (class, cslo)) in class_sums.iter_mut().zip(class_slos) {
             let t = rep.class_ttft_pct(*class, cslo.percentile);
             if t.is_nan() {
                 continue; // class absent from this run's sample
@@ -93,7 +142,7 @@ pub fn feasible(
     let aggregate_ok = slo.feasible(ttft_sum / n, tpot_sum / n);
     let classes_ok = class_sums
         .iter()
-        .zip(&class_slos)
+        .zip(class_slos)
         .all(|((t, p, k), (_, cslo))| {
             *k == 0 || cslo.feasible(*t / *k as f64, *p / *k as f64)
         });
@@ -135,17 +184,34 @@ pub fn find_goodput(
     // `bisect_feasible_rate`, the exact same code the testbed's
     // ground-truth measurement runs.
     let ceiling = goodput_upper_bound(model, strategy, workload, cfg.upper_factor);
-    bisect_feasible_rate(
-        RateBracket {
-            // Bisect in scale units: rate bounds divided by the base rate.
-            lo: cfg.lambda_min / workload.base_rate,
-            hi: ceiling / workload.base_rate,
-            tolerance: cfg.tolerance,
-            base_rate: workload.base_rate,
-            warm: cfg.warm_hint.map(|g| g / workload.base_rate),
-        },
-        |scale| feasible(model, platform, strategy, workload, slo, params, scale, cfg.repeats),
-    )
+    let bracket = RateBracket {
+        // Bisect in scale units: rate bounds divided by the base rate.
+        lo: cfg.lambda_min / workload.base_rate,
+        hi: ceiling / workload.base_rate,
+        tolerance: cfg.tolerance,
+        base_rate: workload.base_rate,
+        warm: cfg.warm_hint.map(|g| g / workload.base_rate),
+    };
+    if !cfg.workload_cache {
+        return bisect_feasible_rate(bracket, |scale| {
+            feasible(model, platform, strategy, workload, slo, params, scale, cfg.repeats)
+        });
+    }
+    // Sample each repeat's scale-invariant workload skeleton once, up
+    // front; every bisection probe then materializes its rate with a
+    // divide-and-prefix-walk instead of re-running the RNG stream. Seeds
+    // mirror the direct path exactly: one-shot searches simulate with the
+    // raw params, averaged searches with `repeat_params(params, k)`.
+    let mats = (0..cfg.repeats.max(1))
+        .map(|k| {
+            let seed =
+                if cfg.repeats <= 1 { params.seed } else { repeat_params(params, k).seed };
+            MaterializedWorkload::new(workload, seed)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    bisect_feasible_rate(bracket, |scale| {
+        feasible_cached(model, platform, strategy, workload, &mats, slo, params, scale, cfg.repeats)
+    })
 }
 
 #[cfg(test)]

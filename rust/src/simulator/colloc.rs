@@ -12,7 +12,7 @@
 
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
-use crate::estimator::LatencyModel;
+use crate::estimator::{FrontCache, LatencyModel};
 use crate::util::rng::Rng;
 
 use super::core::{
@@ -77,7 +77,7 @@ pub struct CollocSimulator<'a> {
 /// performs at most one action, in strict priority order: prefill launch,
 /// then due resumptions, then decode insertion.
 struct CollocPolicy<'a> {
-    model: &'a dyn LatencyModel,
+    model: FrontCache<'a>,
     params: SimParams,
     reqs: &'a [Request],
     bmax_prefill: u32,
@@ -156,7 +156,7 @@ impl EventDriven for CollocPolicy<'_> {
                     let inst = &mut self.instances[i];
                     let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
                     let span = decode_span_for(
-                        self.model,
+                        &self.model,
                         &self.params,
                         b_eff,
                         req.input_len,
@@ -228,7 +228,7 @@ impl<'a> CollocSimulator<'a> {
         assert!(self.n_instances > 0);
         let n = reqs.len();
         let mut policy = CollocPolicy {
-            model: self.model,
+            model: FrontCache::new(self.model, self.params.front_cache),
             params: self.params,
             reqs,
             bmax_prefill: self.bmax_prefill,

@@ -22,7 +22,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::estimator::LatencyModel;
+use crate::estimator::FrontCache;
 use crate::util::rng::Rng;
 
 use super::params::{SimParams, SpanMode};
@@ -372,9 +372,12 @@ impl VisitOrder {
 // ------------------------------------------------------------ span pricing --
 
 /// Price a request's whole decode phase under the configured span mode —
-/// shared by every policy that inserts into decode slots.
+/// shared by every policy that inserts into decode slots. Takes the
+/// policy's [`FrontCache`] so whole spans memoize as single entries (in
+/// exact mode this collapses `s_+` per-step lookups into one probe); a
+/// disabled cache delegates straight to the model.
 pub fn decode_span_for(
-    model: &dyn LatencyModel,
+    model: &FrontCache,
     params: &SimParams,
     b_eff: u32,
     s: u32,
@@ -590,10 +593,11 @@ mod tests {
         use crate::simulator::testutil::ConstModel;
         let m = ConstModel { prefill: 1.0, step: 0.01 };
         let p = SimParams::default();
-        let h = decode_span_for(&m, &p, 1, 128, 10);
+        let fc = FrontCache::new(&m, p.front_cache);
+        let h = decode_span_for(&fc, &p, 1, 128, 10);
         assert!((h - 0.1).abs() < 1e-12);
         let exact = SimParams { span_mode: SpanMode::Exact, ..p };
-        let e = decode_span_for(&m, &exact, 1, 128, 10);
+        let e = decode_span_for(&fc, &exact, 1, 128, 10);
         assert!((e - 0.1).abs() < 1e-12); // const model: modes agree
     }
 }

@@ -4,7 +4,7 @@
 //! the first free slot, priced per-request with the pseudo-batch-size
 //! heuristic b† = max(⌊(b+1)/τ⌋, 1) (§3.4.2, eq. (9)).
 
-use crate::estimator::LatencyModel;
+use crate::estimator::{FrontCache, LatencyModel};
 use crate::util::rng::Rng;
 
 use super::core::{decode_span_for, drive, EventDriven, NextEvent, SlotPool, VisitOrder};
@@ -42,7 +42,7 @@ pub struct DecodeStage<'a> {
 
 /// The Algorithm-3 insertion rule, plugged into [`drive`].
 struct DecodePolicy<'a, 'r> {
-    model: &'a dyn LatencyModel,
+    model: FrontCache<'a>,
     params: SimParams,
     items: &'a [DecodeItem],
     slots: Vec<SlotPool>,
@@ -68,7 +68,7 @@ impl EventDriven for DecodePolicy<'_, '_> {
             // Batch size at the time of insertion (Alg. 3 line 7).
             let b_eff = self.params.pseudo_batch(self.slots[i].busy(t));
             let span =
-                decode_span_for(self.model, &self.params, b_eff, item.input_len, item.gen_len);
+                decode_span_for(&self.model, &self.params, b_eff, item.input_len, item.gen_len);
             self.slots[i].occupy(j, t + span, item.req);
             self.out.push(DecodeOutcome { req: item.req, inserted: t, completion: t + span });
             self.next += 1;
@@ -107,7 +107,7 @@ impl<'a> DecodeStage<'a> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         debug_assert!(items.windows(2).all(|w| w[0].ready <= w[1].ready));
         let mut policy = DecodePolicy {
-            model: self.model,
+            model: FrontCache::new(self.model, self.params.front_cache),
             params: self.params,
             items,
             slots: (0..self.n_instances).map(|_| SlotPool::new(self.bmax)).collect(),

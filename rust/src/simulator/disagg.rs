@@ -68,6 +68,7 @@ impl<'a> DisaggSimulator<'a> {
             model: self.model,
             n_instances: self.p_instances,
             bmax: self.bmax_prefill,
+            front_cache: self.params.front_cache,
         };
         let mut rng_p = rng.fork(1);
         let d1 = prefill.run(reqs, &mut rng_p);

@@ -49,7 +49,7 @@
 
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
-use crate::estimator::LatencyModel;
+use crate::estimator::{FrontCache, LatencyModel};
 use crate::util::rng::Rng;
 
 use super::core::{
@@ -150,7 +150,7 @@ pub struct DynamicSimulator<'a> {
 /// bookkeeping, prefill launch, decode insertion, then pressure-driven
 /// reallocation.
 struct DynamicPolicy<'a> {
-    model: &'a dyn LatencyModel,
+    model: FrontCache<'a>,
     params: SimParams,
     reqs: &'a [Request],
     bmax_prefill: u32,
@@ -273,7 +273,7 @@ impl EventDriven for DynamicPolicy<'_> {
                     let inst = &mut self.instances[i];
                     let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
                     let span = decode_span_for(
-                        self.model,
+                        &self.model,
                         &self.params,
                         b_eff,
                         req.input_len,
@@ -349,7 +349,7 @@ impl<'a> DynamicSimulator<'a> {
         assert!(self.n_instances > 0);
         let n = reqs.len();
         let mut policy = DynamicPolicy {
-            model: self.model,
+            model: FrontCache::new(self.model, self.params.front_cache),
             params: self.params,
             reqs,
             bmax_prefill: self.bmax_prefill,

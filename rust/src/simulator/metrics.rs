@@ -120,6 +120,22 @@ pub struct SimReport {
     /// Per-role occupancy of a dynamic (`Nf`) pool; `None` for the static
     /// architectures, whose roles are fixed by construction.
     pub role_occupancy: Option<RoleOccupancy>,
+    // ---- finalized percentile caches -------------------------------------
+    // The report is queried for percentiles far more often than it is
+    // built: every `FEASIBLE(λ)` probe takes the aggregate TTFT/TPOT
+    // percentiles plus one pair per class-level SLO. Sorting once here
+    // turns each query into an O(log n)-free `percentile_sorted` read —
+    // bit-identical to sorting inside the query, since `percentile` is
+    // itself defined as clone + `f64::total_cmp` sort + `percentile_sorted`
+    // and sorting is a pure permutation of the sample.
+    /// TTFT sample sorted ascending by `f64::total_cmp`.
+    ttfts_sorted: Vec<f64>,
+    /// TPOT sample sorted ascending by `f64::total_cmp`.
+    tpots_sorted: Vec<f64>,
+    /// `(class, sorted ttfts, sorted tpots)` for every distinct class —
+    /// including the single-class case, where `per_class` stays empty but
+    /// `class_*_pct` must still answer.
+    by_class: Vec<(u16, Vec<f64>, Vec<f64>)>,
 }
 
 impl SimReport {
@@ -133,34 +149,44 @@ impl SimReport {
             .map(|o| o.completion)
             .fold(f64::NEG_INFINITY, f64::max);
         let class_tags: Vec<u16> = outcomes.iter().map(|o| o.class).collect();
-        let mut classes = class_tags.clone();
-        classes.sort_unstable();
-        classes.dedup();
-        let per_class = if classes.len() <= 1 {
+        let mut distinct = class_tags.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let by_class: Vec<(u16, Vec<f64>, Vec<f64>)> = distinct
+            .into_iter()
+            .map(|class| {
+                let (mut t, mut p): (Vec<f64>, Vec<f64>) = class_tags
+                    .iter()
+                    .zip(ttfts.iter().zip(tpots.iter()))
+                    .filter(|(c, _)| **c == class)
+                    .map(|(_, (t, p))| (*t, *p))
+                    .unzip();
+                t.sort_by(f64::total_cmp);
+                p.sort_by(f64::total_cmp);
+                (class, t, p)
+            })
+            .collect();
+        let per_class = if by_class.len() <= 1 {
             Vec::new()
         } else {
-            classes
-                .into_iter()
-                .map(|class| {
-                    let (t, p): (Vec<f64>, Vec<f64>) = outcomes
-                        .iter()
-                        .zip(ttfts.iter().zip(tpots.iter()))
-                        .filter(|(o, _)| o.class == class)
-                        .map(|(_, (t, p))| (*t, *p))
-                        .unzip();
-                    ClassStats {
-                        class,
-                        n: t.len(),
-                        ttft: Summary::from(&t),
-                        tpot: Summary::from(&p),
-                    }
+            by_class
+                .iter()
+                .map(|(class, t, p)| ClassStats {
+                    class: *class,
+                    n: t.len(),
+                    ttft: Summary::from_sorted(t),
+                    tpot: Summary::from_sorted(p),
                 })
                 .collect()
         };
+        let mut ttfts_sorted = ttfts.clone();
+        ttfts_sorted.sort_by(f64::total_cmp);
+        let mut tpots_sorted = tpots.clone();
+        tpots_sorted.sort_by(f64::total_cmp);
         SimReport {
             n: outcomes.len(),
-            ttft: Summary::from(&ttfts),
-            tpot: Summary::from(&tpots),
+            ttft: Summary::from_sorted(&ttfts_sorted),
+            tpot: Summary::from_sorted(&tpots_sorted),
             e2e: Summary::from(&e2es),
             throughput: outcomes.len() as f64 / makespan,
             makespan,
@@ -169,35 +195,37 @@ impl SimReport {
             classes: class_tags,
             per_class,
             role_occupancy: None,
+            ttfts_sorted,
+            tpots_sorted,
+            by_class,
         }
     }
 
     /// TTFT percentile of one class's sample (q in [0, 100]). Returns NaN
-    /// when the class produced no outcomes in this run.
+    /// when the class produced no outcomes in this run. O(1) in the sample
+    /// size: reads the partition sorted at construction.
     pub fn class_ttft_pct(&self, class: u16, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.class_sample(class, &self.ttfts), q)
+        match self.by_class.iter().find(|(c, _, _)| *c == class) {
+            Some((_, t, _)) => crate::util::stats::percentile_sorted(t, q),
+            None => f64::NAN,
+        }
     }
 
     pub fn class_tpot_pct(&self, class: u16, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.class_sample(class, &self.tpots), q)
+        match self.by_class.iter().find(|(c, _, _)| *c == class) {
+            Some((_, _, p)) => crate::util::stats::percentile_sorted(p, q),
+            None => f64::NAN,
+        }
     }
 
-    fn class_sample(&self, class: u16, values: &[f64]) -> Vec<f64> {
-        self.classes
-            .iter()
-            .zip(values)
-            .filter(|(c, _)| **c == class)
-            .map(|(_, v)| *v)
-            .collect()
-    }
-
-    /// Percentile of the TTFT sample (q in [0, 100]).
+    /// Percentile of the TTFT sample (q in [0, 100]). O(1): reads the
+    /// sample sorted at construction.
     pub fn ttft_pct(&self, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.ttfts, q)
+        crate::util::stats::percentile_sorted(&self.ttfts_sorted, q)
     }
 
     pub fn tpot_pct(&self, q: f64) -> f64 {
-        crate::util::stats::percentile(&self.tpots, q)
+        crate::util::stats::percentile_sorted(&self.tpots_sorted, q)
     }
 
     /// The Figure 6/8 histograms (TTFT and TPOT, milliseconds).
@@ -285,6 +313,47 @@ mod tests {
         assert!(r.class_ttft_pct(0, 90.0).is_finite());
         assert!(r.class_tpot_pct(2, 90.0).is_finite());
         assert!(r.class_ttft_pct(7, 90.0).is_nan());
+    }
+
+    #[test]
+    fn finalized_percentiles_match_fresh_sort() {
+        // The sorted-at-construction caches must answer exactly what a
+        // clone-and-sort `percentile` over the raw samples answers — for
+        // the aggregate and for every class partition, at arbitrary q.
+        let mut outs = Vec::new();
+        for i in 0..97 {
+            let t = (i as f64 * 7919.0) % 13.0;
+            let mut o = outcome(i, t, t + 0.01 * (i % 11) as f64, t + 0.2, t + 1.0, 7);
+            o.class = (i % 3) as u16;
+            outs.push(o);
+        }
+        let r = SimReport::from_outcomes(&outs);
+        for q in [0.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
+            let ttft = crate::util::stats::percentile(&r.ttfts, q);
+            let tpot = crate::util::stats::percentile(&r.tpots, q);
+            assert_eq!(r.ttft_pct(q).to_bits(), ttft.to_bits(), "q={q}");
+            assert_eq!(r.tpot_pct(q).to_bits(), tpot.to_bits(), "q={q}");
+            for class in 0u16..3 {
+                let sample: Vec<f64> = r
+                    .classes
+                    .iter()
+                    .zip(&r.ttfts)
+                    .filter(|(c, _)| **c == class)
+                    .map(|(_, v)| *v)
+                    .collect();
+                let direct = crate::util::stats::percentile(&sample, q);
+                assert_eq!(
+                    r.class_ttft_pct(class, q).to_bits(),
+                    direct.to_bits(),
+                    "class {class} q={q}"
+                );
+            }
+        }
+        // Single-class reports still answer per-class queries.
+        let solo = SimReport::from_outcomes(&[outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5]);
+        assert!(solo.per_class.is_empty());
+        assert!((solo.class_ttft_pct(0, 50.0) - 0.1).abs() < 1e-12);
+        assert!(solo.class_ttft_pct(1, 50.0).is_nan());
     }
 
     #[test]

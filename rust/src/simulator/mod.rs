@@ -74,7 +74,7 @@ pub use dynamic::DynamicSimulator;
 pub use metrics::{ClassStats, RequestOutcome, RoleOccupancy, SimReport};
 pub use params::{validate_switch_knobs, SimParams, SpanMode};
 pub use prefill::PrefillStage;
-pub use request::{generate_workload, Request};
+pub use request::{generate_workload, MaterializedWorkload, Request};
 pub use trace::{load_trace, save_trace};
 
 use crate::config::{Architecture, Platform, Strategy, Workload};
@@ -94,15 +94,29 @@ pub fn simulate(
     params: SimParams,
 ) -> Result<SimReport> {
     let reqs = generate_workload(workload, scale, params.seed)?;
+    simulate_requests(model, platform, strategy, &reqs, params)
+}
+
+/// Run one simulation over an already-generated request vector — the
+/// engine-dispatch half of [`simulate`], split out so the goodput hot loop
+/// can feed it requests stamped out by a [`MaterializedWorkload`] instead
+/// of regenerating the RNG stream at every bisection midpoint.
+pub fn simulate_requests(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    reqs: &[Request],
+    params: SimParams,
+) -> Result<SimReport> {
     match strategy.arch {
         Architecture::Collocation { .. } => {
-            Ok(CollocSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+            Ok(CollocSimulator::from_strategy(model, platform, strategy, params)?.run(reqs))
         }
         Architecture::Disaggregation { .. } => {
-            Ok(DisaggSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+            Ok(DisaggSimulator::from_strategy(model, platform, strategy, params)?.run(reqs))
         }
         Architecture::Dynamic { .. } => {
-            Ok(DynamicSimulator::from_strategy(model, platform, strategy, params)?.run(&reqs))
+            Ok(DynamicSimulator::from_strategy(model, platform, strategy, params)?.run(reqs))
         }
     }
 }

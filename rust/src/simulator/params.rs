@@ -40,6 +40,12 @@ pub struct SimParams {
     /// between the two thresholds is the dead band that prevents role
     /// thrashing.
     pub switch_down: f64,
+    /// Route every latency-model query through a per-simulator lock-free
+    /// direct-mapped memo (`estimator::FrontCache`). Output-preserving —
+    /// cached answers are previously returned answers for the same query —
+    /// so this stays on by default; the off switch exists for the
+    /// bit-equality anchors and the `bench_perf` before/after case.
+    pub front_cache: bool,
 }
 
 impl Default for SimParams {
@@ -52,6 +58,7 @@ impl Default for SimParams {
             switch_latency: 0.03,
             switch_up: 1.0,
             switch_down: 0.0,
+            front_cache: true,
         }
     }
 }

@@ -4,7 +4,7 @@
 //! visit order (§3.4.1). The clock, batching and next-event machinery live
 //! in [`super::core`]; this file only encodes the prefill scheduling rule.
 
-use crate::estimator::LatencyModel;
+use crate::estimator::{FrontCache, LatencyModel};
 use crate::util::rng::Rng;
 
 use super::core::{drive, EventDriven, FifoArrivals, NextEvent, VisitOrder};
@@ -15,11 +15,15 @@ pub struct PrefillStage<'a> {
     pub model: &'a dyn LatencyModel,
     pub n_instances: usize,
     pub bmax: u32,
+    /// Wrap the model in a per-run `estimator::FrontCache` (output-
+    /// preserving; see `SimParams::front_cache`, which the composite
+    /// simulators forward here).
+    pub front_cache: bool,
 }
 
 /// The Algorithm-2 scheduling rule, plugged into [`drive`].
 struct PrefillPolicy<'a, 'r> {
-    model: &'a dyn LatencyModel,
+    model: FrontCache<'a>,
     bmax: u32,
     arrivals: FifoArrivals<'a>,
     /// Per-instance time the instance frees.
@@ -82,7 +86,7 @@ impl<'a> PrefillStage<'a> {
     pub fn run(&self, reqs: &[Request], rng: &mut Rng) -> Vec<f64> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         let mut policy = PrefillPolicy {
-            model: self.model,
+            model: FrontCache::new(self.model, self.front_cache),
             bmax: self.bmax,
             arrivals: FifoArrivals::new(reqs),
             when_idle: vec![0.0f64; self.n_instances],
@@ -112,7 +116,7 @@ mod tests {
     fn single_request_departs_after_service() {
         // prefill_time == 2.0 s per batch regardless of size.
         let m = ConstModel { prefill: 2.0, step: 0.1 };
-        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4 };
+        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4, front_cache: true };
         let d = stage.run(&reqs(&[1.0], 128), &mut Rng::new(1));
         assert!((d[0] - 3.0).abs() < 1e-12);
     }
@@ -120,7 +124,7 @@ mod tests {
     #[test]
     fn batching_coalesces_queued_requests() {
         let m = ConstModel { prefill: 2.0, step: 0.1 };
-        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4 };
+        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4, front_cache: true };
         // Four requests arrive while the first batch runs: they form one batch.
         let d = stage.run(&reqs(&[0.0, 0.1, 0.2, 0.3, 0.4], 128), &mut Rng::new(1));
         assert!((d[0] - 2.0).abs() < 1e-12);
@@ -133,7 +137,7 @@ mod tests {
     #[test]
     fn bmax_splits_batches() {
         let m = ConstModel { prefill: 1.0, step: 0.1 };
-        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 2 };
+        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 2, front_cache: true };
         let d = stage.run(&reqs(&[0.0, 0.0, 0.0, 0.0], 128), &mut Rng::new(2));
         // Two batches of 2: departures 1.0, 1.0, 2.0, 2.0.
         assert!((d[0] - 1.0).abs() < 1e-12);
@@ -145,8 +149,8 @@ mod tests {
     #[test]
     fn two_instances_halve_queueing() {
         let m = ConstModel { prefill: 1.0, step: 0.1 };
-        let one = PrefillStage { model: &m, n_instances: 1, bmax: 1 };
-        let two = PrefillStage { model: &m, n_instances: 2, bmax: 1 };
+        let one = PrefillStage { model: &m, n_instances: 1, bmax: 1, front_cache: true };
+        let two = PrefillStage { model: &m, n_instances: 2, bmax: 1, front_cache: true };
         let w = reqs(&[0.0, 0.0, 0.0, 0.0], 128);
         let d1 = one.run(&w, &mut Rng::new(3));
         let d2 = two.run(&w, &mut Rng::new(3));
@@ -159,7 +163,7 @@ mod tests {
     #[test]
     fn all_requests_complete_fifo_order() {
         let m = ConstModel { prefill: 0.5, step: 0.1 };
-        let stage = PrefillStage { model: &m, n_instances: 3, bmax: 4 };
+        let stage = PrefillStage { model: &m, n_instances: 3, bmax: 4, front_cache: true };
         let mut rng = Rng::new(4);
         let arrivals: Vec<f64> = {
             let mut r = Rng::new(9);
@@ -178,7 +182,7 @@ mod tests {
     fn idle_system_tracks_arrival_times() {
         // Sparse arrivals: no queueing, TTFT == service time.
         let m = ConstModel { prefill: 0.1, step: 0.1 };
-        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4 };
+        let stage = PrefillStage { model: &m, n_instances: 1, bmax: 4, front_cache: true };
         let w = reqs(&[0.0, 10.0, 20.0], 128);
         let d = stage.run(&w, &mut Rng::new(5));
         for (r, &dep) in w.iter().zip(d.iter()) {

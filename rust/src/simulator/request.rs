@@ -2,9 +2,24 @@
 //! workload's [`ArrivalProcess`] (the paper's §4.1 Poisson setting is the
 //! preset), per-request class drawn from the weighted mix, and input /
 //! generation lengths from the chosen class's distributions.
+//!
+//! Two equivalent paths produce the request vector:
+//!
+//! * [`generate_workload`] — the direct path: sample everything at one
+//!   concrete rate.
+//! * [`MaterializedWorkload`] — the cached path for the Algorithm-8/9 hot
+//!   loop: pay the RNG / length-sampling / trace-parsing cost once per
+//!   `(workload, seed)`, then stamp out the request vector at each probed
+//!   rate scale with one divide + prefix walk. Output is **bit-identical**
+//!   to the direct path (the arrival variates are scale-invariant — see
+//!   [`crate::config::ArrivalSkeleton`] — and the class/length draws never
+//!   depended on the rate at all), pinned by the cross-process property
+//!   suite in `tests/property.rs`.
 
-use crate::config::{ArrivalProcess, Workload};
-use crate::error::Result;
+use std::sync::Arc;
+
+use crate::config::{ArrivalProcess, ArrivalSkeleton, Workload};
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// One inference request.
@@ -21,25 +36,32 @@ pub struct Request {
     pub class: u16,
 }
 
-/// Generate `workload.n_requests` requests at `scale` times the workload's
-/// base rate. Deterministic in `seed`; for single-class Poisson workloads
-/// the RNG consumption order is identical to the historical
-/// `(scenario, rate)` generator, so preset outputs are unchanged.
-pub fn generate_workload(workload: &Workload, scale: f64, seed: u64) -> Result<Vec<Request>> {
-    assert!(scale > 0.0, "rate scale must be positive");
-    let rate = workload.base_rate * scale;
-    let n = workload.n_requests;
-    let mut rng = Rng::new(seed);
-    let arrivals = match &workload.arrival {
-        ArrivalProcess::Replay { path } => replay_arrivals(path, rate, n)?,
-        synthetic => synthetic.sample(rate, n, &mut rng),
-    };
+/// The effective arrival rate of a workload at a given scale, as a config
+/// error (not a panic) when it is non-positive or non-finite — `--rate 0`
+/// on the CLI reaches this path, so it must fail like the rest of the
+/// config surface.
+fn effective_rate(base_rate: f64, scale: f64) -> Result<f64> {
+    let rate = base_rate * scale;
+    if rate > 0.0 && rate.is_finite() {
+        Ok(rate)
+    } else {
+        Err(Error::config(format!(
+            "effective arrival rate must be positive and finite, got {rate} \
+             (base_rate {base_rate} x scale {scale})"
+        )))
+    }
+}
+
+/// Draw the rate-independent *body* of every request — class tag, input
+/// length, generation length — in arrival order. Shared verbatim by the
+/// direct and materialized paths, so their RNG consumption can never
+/// diverge. Must be called with `rng` positioned exactly after the arrival
+/// draws.
+fn draw_bodies(workload: &Workload, rng: &mut Rng) -> Vec<(u16, u32, u32)> {
     let cum = workload.cumulative_weights();
     let total = *cum.last().expect("validated workloads have classes");
-    let reqs = arrivals
-        .into_iter()
-        .enumerate()
-        .map(|(id, arrival)| {
+    (0..workload.n_requests)
+        .map(|_| {
             // Single-class workloads skip the class draw entirely — this
             // keeps the RNG stream bit-identical to the pre-workload-plane
             // generator for the OP1–OP4 presets.
@@ -50,32 +72,128 @@ pub fn generate_workload(workload: &Workload, scale: f64, seed: u64) -> Result<V
                 cum.iter().position(|&c| x < c).unwrap_or(cum.len() - 1)
             };
             let c = &workload.classes[class];
-            Request {
-                id,
-                arrival,
-                input_len: c.input_len.sample(&mut rng).max(1) as u32,
-                gen_len: c.gen_len.sample(&mut rng).max(1) as u32,
-                class: class as u16,
-            }
+            (
+                class as u16,
+                c.input_len.sample(rng).max(1) as u32,
+                c.gen_len.sample(rng).max(1) as u32,
+            )
         })
-        .collect();
-    Ok(reqs)
+        .collect()
 }
 
-/// Materialize `n` arrival timestamps by replaying a recorded trace:
-/// normalize the trace to its native rate, then rescale time so the
-/// effective rate is `rate` while the arrival *shape* (bursts, lulls) is
-/// preserved. Cycles the trace when `n` exceeds its length.
+/// Zip arrival timestamps with request bodies into the final vector.
+fn assemble(arrivals: Vec<f64>, bodies: &[(u16, u32, u32)]) -> Vec<Request> {
+    arrivals
+        .into_iter()
+        .zip(bodies)
+        .enumerate()
+        .map(|(id, (arrival, &(class, input_len, gen_len)))| Request {
+            id,
+            arrival,
+            input_len,
+            gen_len,
+            class,
+        })
+        .collect()
+}
+
+/// Generate `workload.n_requests` requests at `scale` times the workload's
+/// base rate. Deterministic in `seed`; for single-class Poisson workloads
+/// the RNG consumption order is identical to the historical
+/// `(scenario, rate)` generator, so preset outputs are unchanged.
+pub fn generate_workload(workload: &Workload, scale: f64, seed: u64) -> Result<Vec<Request>> {
+    let rate = effective_rate(workload.base_rate, scale)?;
+    let n = workload.n_requests;
+    let mut rng = Rng::new(seed);
+    let arrivals = match &workload.arrival {
+        ArrivalProcess::Replay { path } => {
+            let (ts, horizon) = replay_base(path)?;
+            scale_cycled(&ts, horizon, rate, n)?
+        }
+        synthetic => synthetic.sample(rate, n, &mut rng),
+    };
+    let bodies = draw_bodies(workload, &mut rng);
+    Ok(assemble(arrivals, &bodies))
+}
+
+/// The rate-independent part of an arrival stream: either a synthetic
+/// skeleton of unit-rate variates or the memoized timestamps of a replay
+/// trace.
+#[derive(Debug, Clone)]
+enum ArrivalBase {
+    Synthetic(ArrivalSkeleton),
+    Replay { ts: Arc<Vec<f64>>, horizon: f64 },
+}
+
+/// A workload with every random draw already made — the per-`(workload,
+/// seed)` cache behind the Algorithm-8/9 hot loop. Construction samples the
+/// scale-invariant arrival skeleton plus all class/length draws once;
+/// [`MaterializedWorkload::at_scale`] then stamps out the request vector
+/// for any probed rate scale with one divide + prefix walk and **no** RNG,
+/// length-sampling, or trace I/O — bit-identical to calling
+/// [`generate_workload`] with the same `(workload, seed, scale)`.
+#[derive(Debug, Clone)]
+pub struct MaterializedWorkload {
+    base: ArrivalBase,
+    /// `(class, input_len, gen_len)` per request, in arrival order.
+    bodies: Vec<(u16, u32, u32)>,
+    base_rate: f64,
+}
+
+impl MaterializedWorkload {
+    /// Pay the full sampling cost once: arrival skeleton (or trace load)
+    /// plus every per-request class and length draw, consuming the RNG in
+    /// exactly the order [`generate_workload`] does.
+    pub fn new(workload: &Workload, seed: u64) -> Result<MaterializedWorkload> {
+        let mut rng = Rng::new(seed);
+        let base = match &workload.arrival {
+            ArrivalProcess::Replay { path } => {
+                let (ts, horizon) = replay_base(path)?;
+                ArrivalBase::Replay { ts, horizon }
+            }
+            synthetic => {
+                ArrivalBase::Synthetic(synthetic.sample_skeleton(workload.n_requests, &mut rng))
+            }
+        };
+        let bodies = draw_bodies(workload, &mut rng);
+        Ok(MaterializedWorkload { base, bodies, base_rate: workload.base_rate })
+    }
+
+    /// Stamp out the request vector at `scale` times the workload's base
+    /// rate — the cheap per-probe call. Same validation and same output,
+    /// bit for bit, as [`generate_workload`].
+    pub fn at_scale(&self, scale: f64) -> Result<Vec<Request>> {
+        let rate = effective_rate(self.base_rate, scale)?;
+        let arrivals = match &self.base {
+            ArrivalBase::Synthetic(skeleton) => skeleton.materialize(rate),
+            ArrivalBase::Replay { ts, horizon } => {
+                scale_cycled(ts, *horizon, rate, self.bodies.len())?
+            }
+        };
+        Ok(assemble(arrivals, &self.bodies))
+    }
+
+    /// Number of requests each materialization yields.
+    pub fn n_requests(&self) -> usize {
+        self.bodies.len()
+    }
+}
+
+/// Load the rate-independent base of a replay trace — its timestamps and
+/// horizon — memoized per path for the life of the process. Both the direct
+/// path ([`generate_workload`]) and [`MaterializedWorkload`] call this and
+/// then time-scale via [`scale_cycled`], so replay arrivals were already
+/// "materialized" in the cache's sense; the memo keeps the hot-loop win
+/// when many `(workload, seed)` materializations share one trace file.
 ///
-/// The parsed timestamps are memoized per path for the life of the
-/// process: `generate_workload` sits inside the goodput-bisection hot loop
-/// (every `FEASIBLE(λ)` probe of every strategy regenerates the workload),
-/// and the trace file is immutable for the duration of a sweep — without
-/// the cache a replay workload would re-read, re-parse and re-sort the
-/// same CSV thousands of times per `optimize` run.
-fn replay_arrivals(path: &str, rate: f64, n: usize) -> Result<Vec<f64>> {
+/// Memoization matters because `generate_workload` sits inside the
+/// goodput-bisection hot loop (every `FEASIBLE(λ)` probe of every strategy
+/// regenerates the workload), and the trace file is immutable for the
+/// duration of a sweep — without the cache a replay workload would re-read,
+/// re-parse and re-sort the same CSV thousands of times per `optimize` run.
+fn replay_base(path: &str) -> Result<(Arc<Vec<f64>>, f64)> {
     use std::collections::HashMap;
-    use std::sync::{Arc, Mutex, OnceLock};
+    use std::sync::{Mutex, OnceLock};
     use std::time::SystemTime;
     type Key = (String, u64, Option<SystemTime>, u64);
     static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Vec<f64>>>>> = OnceLock::new();
@@ -105,7 +223,7 @@ fn replay_arrivals(path: &str, rate: f64, n: usize) -> Result<Vec<f64>> {
         }
     };
     let horizon = *ts.last().expect("load_trace rejects empty traces");
-    scale_cycled(&ts, horizon, rate, n)
+    Ok((ts, horizon))
 }
 
 /// Cheap content fingerprint for the replay cache key: FNV-1a over the
@@ -380,6 +498,46 @@ mod tests {
             "rewritten trace must not replay stale cached arrivals"
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_positive_scale_is_clean_error_not_panic() {
+        // Regression: `bestserve run --rate 0` used to reach an
+        // `assert!(scale > 0.0)` panic; CLI-reachable input must surface as
+        // a config error like the rest of the surface.
+        let w = wl(&Scenario::fixed("z", 64, 8, 10));
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = generate_workload(&w, bad, 1);
+            assert!(err.is_err(), "scale {bad} must be Err");
+            let msg = format!("{}", err.unwrap_err());
+            assert!(msg.contains("arrival rate"), "unhelpful message: {msg}");
+            let mat = MaterializedWorkload::new(&w, 1).unwrap();
+            assert!(mat.at_scale(bad).is_err(), "at_scale({bad}) must be Err");
+        }
+        // And a valid scale still works.
+        assert!(generate_workload(&w, 0.5, 1).is_ok());
+    }
+
+    #[test]
+    fn materialized_workload_matches_direct_generation() {
+        // Local anchor for the materialized cache (the cross-process sweep
+        // lives in tests/property.rs): one materialization serves many
+        // scales, each bit-identical to the direct path.
+        let w = Workload::example_mix(400);
+        let mat = MaterializedWorkload::new(&w, 77).unwrap();
+        assert_eq!(mat.n_requests(), 400);
+        for &scale in &[0.125, 1.0, 2.9, 40.0] {
+            let direct = generate_workload(&w, scale, 77).unwrap();
+            let cached = mat.at_scale(scale).unwrap();
+            assert_eq!(direct.len(), cached.len());
+            for (d, c) in direct.iter().zip(&cached) {
+                assert_eq!(d.arrival.to_bits(), c.arrival.to_bits(), "scale {scale}");
+                assert_eq!(
+                    (d.id, d.input_len, d.gen_len, d.class),
+                    (c.id, c.input_len, c.gen_len, c.class)
+                );
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
-use crate::simulator::generate_workload;
+use crate::simulator::{generate_workload, MaterializedWorkload, Request};
 use crate::util::bisect::{bisect_feasible_rate, RateBracket};
 
 use super::cluster::{Testbed, TestbedConfig};
@@ -46,8 +46,22 @@ pub fn testbed_feasible(
     seed: u64,
 ) -> Result<bool> {
     let reqs = generate_workload(workload, scale, seed)?;
+    testbed_feasible_requests(model, platform, strategy, &reqs, slo, cfg)
+}
+
+/// The engine half of [`testbed_feasible`], over an already-generated
+/// request vector — so the goodput bisection can stamp its probes out of a
+/// [`MaterializedWorkload`] instead of regenerating the RNG stream.
+fn testbed_feasible_requests(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    reqs: &[Request],
+    slo: &Slo,
+    cfg: &GroundTruthConfig,
+) -> Result<bool> {
     let tb = Testbed::new(model, platform, strategy.clone(), cfg.testbed);
-    let rep = tb.run(&reqs)?.report;
+    let rep = tb.run(reqs)?.report;
     Ok(slo.feasible(rep.ttft_pct(slo.percentile), rep.tpot_pct(slo.percentile)))
 }
 
@@ -69,6 +83,9 @@ pub fn testbed_goodput(
     let s_plus = workload.mean_gen().round().max(1.0) as u32;
     let t_min = model.prefill_time(1, s) + model.decode_span_exact(1, s, s_plus);
     let capacity = strategy.capacity_factor();
+    // One workload skeleton for the whole search: every probe materializes
+    // its rate from it, bit-identically to direct generation at that rate.
+    let mat = MaterializedWorkload::new(workload, seed)?;
     bisect_feasible_rate(
         RateBracket {
             // Bisect in scale units: rate bounds divided by the base rate.
@@ -78,7 +95,10 @@ pub fn testbed_goodput(
             base_rate: workload.base_rate,
             warm: None,
         },
-        |scale| testbed_feasible(model, platform, strategy, workload, slo, cfg, scale, seed),
+        |scale| {
+            let reqs = mat.at_scale(scale)?;
+            testbed_feasible_requests(model, platform, strategy, &reqs, slo, cfg)
+        },
     )
 }
 

@@ -95,12 +95,24 @@ impl Rng {
         self.below(n as u64) as usize
     }
 
+    /// Unit-rate exponential variate `g = -ln(1 - U)`. This is the
+    /// scale-invariant part of [`Rng::exp`]: `exp(λ)` is exactly
+    /// `exp_unit() / λ`, performing the same floating-point operations in
+    /// the same order — which is what lets the materialized-workload cache
+    /// store unit variates once and rescale per probed rate bit-for-bit.
+    #[inline]
+    pub fn exp_unit(&mut self) -> f64 {
+        // 1 - f64() is in (0, 1], so ln is finite.
+        -(1.0 - self.f64()).ln()
+    }
+
     /// Exponential with rate `lambda` (mean 1/lambda). Inverse-CDF sampling.
+    /// Defined through [`Rng::exp_unit`] so the direct and cached workload
+    /// paths share one source of truth.
     #[inline]
     pub fn exp(&mut self, lambda: f64) -> f64 {
         debug_assert!(lambda > 0.0);
-        // 1 - f64() is in (0, 1], so ln is finite.
-        -(1.0 - self.f64()).ln() / lambda
+        self.exp_unit() / lambda
     }
 
     /// Standard normal via Box–Muller (we only need one at a time; the
@@ -137,16 +149,27 @@ impl Rng {
         out
     }
 
-    /// Gamma(shape, scale) via Marsaglia–Tsang squeeze (2000), with the
-    /// standard `U^{1/shape}` boost for shape < 1. Used by the bursty
-    /// (Gamma-renewal) arrival process: shape k < 1 gives inter-arrival
-    /// CV = 1/sqrt(k) > 1, i.e. clustered, bursty traffic.
-    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
-        debug_assert!(shape > 0.0 && scale > 0.0);
+    /// Unit-scale Gamma(shape) variate, split into the factors
+    /// `(accept, boost)` such that `Gamma(shape, scale) = accept * scale *
+    /// boost`. `accept` is the Marsaglia–Tsang `d·v³` acceptance value and
+    /// `boost` is the `U^{1/shape}` correction for shape < 1 (exactly `1.0`
+    /// for shape ≥ 1, where `x * 1.0` is a bitwise no-op on finite values).
+    ///
+    /// The squeeze's acceptance test never looks at `scale`, so the RNG
+    /// consumption — and both returned factors — are scale-invariant. The
+    /// materialized-workload cache stores `(accept, boost)` per inter-arrival
+    /// gap and replays `accept * scale * boost` at each probed rate,
+    /// reproducing [`Rng::gamma`]'s `d * v3 * scale` (shape ≥ 1) and
+    /// `(d * v3 * scale) * boost` (shape < 1) operation-for-operation.
+    pub fn gamma_unit(&mut self, shape: f64) -> (f64, f64) {
+        debug_assert!(shape > 0.0);
         if shape < 1.0 {
-            // Gamma(a) =d Gamma(a+1) * U^(1/a).
+            // Gamma(a) =d Gamma(a+1) * U^(1/a). Draw the boost *before* the
+            // recursion, matching the historical stream order.
             let u = 1.0 - self.f64(); // (0, 1]: ln/powf stay finite
-            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+            let boost = u.powf(1.0 / shape);
+            let (accept, _) = self.gamma_unit(shape + 1.0);
+            return (accept, boost);
         }
         let d = shape - 1.0 / 3.0;
         let c = 1.0 / (9.0 * d).sqrt();
@@ -159,9 +182,21 @@ impl Rng {
             let v3 = v * v * v;
             let u = 1.0 - self.f64(); // (0, 1]
             if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
-                return d * v3 * scale;
+                return (d * v3, 1.0);
             }
         }
+    }
+
+    /// Gamma(shape, scale) via Marsaglia–Tsang squeeze (2000), with the
+    /// standard `U^{1/shape}` boost for shape < 1. Used by the bursty
+    /// (Gamma-renewal) arrival process: shape k < 1 gives inter-arrival
+    /// CV = 1/sqrt(k) > 1, i.e. clustered, bursty traffic. Defined through
+    /// [`Rng::gamma_unit`] so the direct and cached workload paths share
+    /// one source of truth.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        let (accept, boost) = self.gamma_unit(shape);
+        accept * scale * boost
     }
 
     /// Poisson-distributed count with mean `mu` (Knuth for small mu,
@@ -300,6 +335,43 @@ mod tests {
             let (m0, v0) = (k * theta, k * theta * theta);
             assert!((mean - m0).abs() / m0 < 0.05, "k={k} mean {mean} vs {m0}");
             assert!((var - v0).abs() / v0 < 0.15, "k={k} var {var} vs {v0}");
+        }
+    }
+
+    #[test]
+    fn exp_unit_rescale_is_bit_identical_to_exp() {
+        // The materialized-workload cache depends on `exp_unit()/λ`
+        // reproducing `exp(λ)` exactly, not just approximately.
+        for seed in [3u64, 141, 592] {
+            for &lambda in &[0.1, 1.0, 2.5, 17.0] {
+                let mut direct = Rng::new(seed);
+                let mut cached = Rng::new(seed);
+                for _ in 0..1000 {
+                    let d = direct.exp(lambda);
+                    let c = cached.exp_unit() / lambda;
+                    assert_eq!(d.to_bits(), c.to_bits(), "lambda={lambda}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_unit_rescale_is_bit_identical_to_gamma() {
+        // Both the shape < 1 (boosted) and shape ≥ 1 (boost = 1.0)
+        // branches must materialize bit-for-bit.
+        for seed in [5u64, 358, 979] {
+            for &shape in &[0.25, 0.9, 1.0, 4.0] {
+                for &scale in &[0.05, 1.0, 3.7] {
+                    let mut direct = Rng::new(seed);
+                    let mut cached = Rng::new(seed);
+                    for _ in 0..500 {
+                        let d = direct.gamma(shape, scale);
+                        let (accept, boost) = cached.gamma_unit(shape);
+                        let c = accept * scale * boost;
+                        assert_eq!(d.to_bits(), c.to_bits(), "k={shape} θ={scale}");
+                    }
+                }
+            }
         }
     }
 

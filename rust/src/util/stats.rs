@@ -98,14 +98,24 @@ impl Summary {
     pub fn from(xs: &[f64]) -> Summary {
         let mut v: Vec<f64> = xs.to_vec();
         v.sort_by(f64::total_cmp);
+        Summary::from_sorted(&v)
+    }
+
+    /// Summarize a sample that is already sorted ascending (by
+    /// `f64::total_cmp`). The hot path for callers that keep sorted samples
+    /// around — e.g. the finalized `SimReport` — since every field here is
+    /// an O(1) or single-pass read off the sorted data; `Summary::from` is
+    /// the clone-and-sort convenience wrapper over this.
+    pub fn from_sorted(v: &[f64]) -> Summary {
+        debug_assert!(v.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()));
         Summary {
             n: v.len(),
-            mean: mean(&v),
-            std: stddev(&v),
+            mean: mean(v),
+            std: stddev(v),
             min: v.first().copied().unwrap_or(f64::NAN),
-            p50: percentile_sorted(&v, 50.0),
-            p90: percentile_sorted(&v, 90.0),
-            p99: percentile_sorted(&v, 99.0),
+            p50: percentile_sorted(v, 50.0),
+            p90: percentile_sorted(v, 90.0),
+            p99: percentile_sorted(v, 99.0),
             max: v.last().copied().unwrap_or(f64::NAN),
         }
     }
@@ -286,6 +296,14 @@ mod tests {
         assert_eq!(s.max, 10.0);
         assert!(s.p90 > s.p50);
         assert!(s.p99 >= s.p90);
+    }
+
+    #[test]
+    fn summary_from_sorted_matches_from() {
+        let xs = vec![9.0, 2.0, 7.0, 2.0, 5.0, 11.5, 0.25];
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(Summary::from(&xs), Summary::from_sorted(&sorted));
     }
 
     #[test]

@@ -6,14 +6,19 @@
 use std::sync::Arc;
 
 use bestserve::config::{
-    Architecture, ArrivalProcess, EfficiencyParams, HardwareConfig, ModelConfig, Phase,
-    Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
+    Architecture, ArrivalProcess, EfficiencyParams, HardwareConfig, LengthDist,
+    ModelConfig, Phase, Platform, RequestClass, Scenario, Slo, Strategy, StrategySpace,
+    Workload,
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
-use bestserve::optimizer::{find_goodput, GoodputConfig, PruneConfig};
+use bestserve::optimizer::{
+    find_goodput, optimize_parallel, AnalyticFactory, GoodputConfig, PruneConfig,
+};
 use bestserve::planner::pareto::{dominates, frontier};
 use bestserve::planner::{plan, LinearCardCost, PlanPoint, PlannerConfig};
-use bestserve::simulator::{generate_workload, simulate, SimParams};
+use bestserve::simulator::{
+    generate_workload, save_trace, simulate, MaterializedWorkload, SimParams,
+};
 use bestserve::testbed::{BlockManager, Engine, SeqInput, Testbed, TestbedConfig};
 use bestserve::util::quickcheck::{check, Gen};
 
@@ -518,6 +523,224 @@ fn prop_pruned_plan_equals_brute_force() {
         }
         Ok(())
     });
+}
+
+/// A random but valid request-length distribution, spanning all three
+/// families so class/length draws of every shape hit the cache path.
+fn gen_len_dist(g: &mut Gen) -> LengthDist {
+    match g.u64_below(3) {
+        0 => LengthDist::Fixed(g.usize_in(8, 2048) as u64),
+        1 => {
+            let lo = g.usize_in(8, 512) as u64;
+            LengthDist::Uniform { lo, hi: lo + g.usize_in(0, 1024) as u64 }
+        }
+        _ => LengthDist::LogNormal {
+            mu: g.f64_in(3.0, 7.0),
+            sigma: g.f64_in(0.2, 1.2),
+            cap: g.usize_in(64, 4096) as u64,
+        },
+    }
+}
+
+#[test]
+fn prop_materialized_workload_matches_direct_generation() {
+    // The tentpole exactness claim of the per-probe fast path: sampling a
+    // workload skeleton once and stamping it out per probed scale
+    // (`MaterializedWorkload::at_scale`) must reproduce direct
+    // `generate_workload` *bit for bit* — every arrival timestamp, length,
+    // and class — across all four arrival processes (Replay included),
+    // single- and multi-class mixes, and random seeds/base rates/scales.
+    let trace_path = std::env::temp_dir()
+        .join(format!("bestserve_prop_replay_{}.csv", std::process::id()));
+    let trace_src = Workload::poisson(&Scenario::fixed("trace", 256, 16, 60));
+    let trace_reqs = generate_workload(&trace_src, 2.0, 7).unwrap();
+    save_trace(&trace_reqs, &trace_path).unwrap();
+    let replay_path = trace_path.to_str().unwrap().to_string();
+    check("materialized workload bit-identity", 30, |g| {
+        let arrival = match g.u64_below(4) {
+            0 => ArrivalProcess::Poisson,
+            1 => ArrivalProcess::Bursty { cv: g.f64_in(0.4, 3.0) },
+            2 => ArrivalProcess::Deterministic,
+            _ => ArrivalProcess::Replay { path: replay_path.clone() },
+        };
+        let classes: Vec<RequestClass> = (0..g.usize_in(1, 3))
+            .map(|i| RequestClass {
+                name: format!("c{i}"),
+                weight: g.f64_in(0.1, 5.0),
+                input_len: gen_len_dist(g),
+                gen_len: gen_len_dist(g),
+                slo: None,
+            })
+            .collect();
+        let w = Workload {
+            name: "prop".into(),
+            arrival,
+            classes,
+            base_rate: g.f64_in(0.2, 4.0),
+            n_requests: g.usize_in(20, 150),
+        };
+        w.validate().map_err(|e| e.to_string())?;
+        let seed = g.u64_below(1 << 40);
+        let mat = MaterializedWorkload::new(&w, seed).map_err(|e| e.to_string())?;
+        for _ in 0..3 {
+            let scale = g.f64_in(0.05, 40.0);
+            let direct = generate_workload(&w, scale, seed).map_err(|e| e.to_string())?;
+            let cached = mat.at_scale(scale).map_err(|e| e.to_string())?;
+            if direct.len() != cached.len() {
+                return Err(format!(
+                    "length diverged at scale {scale}: {} vs {}",
+                    direct.len(),
+                    cached.len()
+                ));
+            }
+            for (d, c) in direct.iter().zip(&cached) {
+                if d.id != c.id
+                    || d.input_len != c.input_len
+                    || d.gen_len != c.gen_len
+                    || d.class != c.class
+                    || d.arrival.to_bits() != c.arrival.to_bits()
+                {
+                    return Err(format!(
+                        "request diverged at scale {scale} ({:?}): {d:?} vs {c:?}",
+                        w.arrival
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// A bursty two-class mix with moderate lengths: multi-class and
+/// non-Poisson (so both cache layers see the interesting paths) while
+/// staying comfortably feasible under the paper-default SLO at tp 4 —
+/// the fast-path anchors must not be vacuous.
+fn anchor_mix(n_requests: usize) -> Workload {
+    Workload {
+        name: "anchor-mix".into(),
+        arrival: ArrivalProcess::Bursty { cv: 2.0 },
+        classes: vec![
+            RequestClass {
+                name: "chat".into(),
+                weight: 0.7,
+                input_len: LengthDist::Uniform { lo: 128, hi: 1024 },
+                gen_len: LengthDist::Uniform { lo: 16, hi: 128 },
+                slo: None,
+            },
+            RequestClass {
+                name: "batch".into(),
+                weight: 0.3,
+                input_len: LengthDist::Fixed(2048),
+                gen_len: LengthDist::Fixed(64),
+                slo: None,
+            },
+        ],
+        base_rate: 1.0,
+        n_requests,
+    }
+}
+
+#[test]
+fn fast_paths_preserve_optimizer_rankings_bit_for_bit() {
+    // Acceptance anchor: the full optimizer sweep — bursty multi-class mix,
+    // memory pre-filter on, serial and threaded — must produce bit-identical
+    // rankings with the per-probe fast paths (workload cache + latency-model
+    // front cache) enabled and disabled.
+    let platform = Platform::paper_testbed();
+    let factory = AnalyticFactory::new(platform.clone());
+    let w = anchor_mix(250);
+    let slo = Slo::paper_default();
+    let space = StrategySpace {
+        max_cards: 8,
+        tp_choices: vec![4],
+        ..StrategySpace::default()
+    };
+    let run = |fast: bool, threads: usize| {
+        let params = SimParams { front_cache: fast, ..SimParams::default() };
+        let cfg = GoodputConfig {
+            tolerance: 0.25,
+            workload_cache: fast,
+            ..GoodputConfig::default()
+        };
+        optimize_parallel(
+            &factory, &platform, &space, &w, &slo, params, &cfg, true, threads,
+        )
+        .unwrap()
+    };
+    let reference = run(true, 1);
+    assert!(
+        reference.ranked.iter().any(|r| r.goodput > 0.0),
+        "anchor sweep is vacuous: every strategy scored zero"
+    );
+    for (fast, threads) in [(false, 1), (true, 4), (false, 4)] {
+        let rep = run(fast, threads);
+        assert_eq!(rep, reference, "diverged at fast={fast} threads={threads}");
+    }
+}
+
+#[test]
+fn fast_paths_preserve_goodput_with_repeats_bit_for_bit() {
+    // The averaged (repeats > 1) bisection draws one skeleton per repeat
+    // with the exact per-repeat seeds of the direct path; the cached and
+    // direct goodputs must agree to the bit. A (loose) per-class SLO pulls
+    // the per-class percentile accumulation into the averaged path too.
+    let p = Platform::paper_testbed();
+    let o = AnalyticOracle::new(p.clone(), 4);
+    let mut w = anchor_mix(150);
+    w.classes[0].slo = Some(Slo { ttft: 3.0, tpot: 0.15, ..Slo::paper_default() });
+    let slo = Slo::paper_default();
+    let strategy = Strategy::disaggregation(1, 1, 4);
+    let run = |fast: bool| {
+        let params = SimParams { front_cache: fast, ..SimParams::default() };
+        let cfg = GoodputConfig {
+            tolerance: 0.25,
+            repeats: 3,
+            workload_cache: fast,
+            ..GoodputConfig::default()
+        };
+        find_goodput(&o, &p, &strategy, &w, &slo, params, &cfg).unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert!(on > 0.0, "anchor bisection is vacuous: goodput zero");
+    assert_eq!(on.to_bits(), off.to_bits(), "cached {on} vs direct {off}");
+}
+
+#[test]
+fn fast_paths_preserve_plan_report_bit_for_bit() {
+    // Acceptance anchor for the planner: frontier, min-cost plans, and the
+    // rendered CSV must be byte-identical with the fast paths on and off.
+    let platform = Platform::paper_testbed();
+    let profiles = vec![HardwareConfig::ascend_910b3()];
+    let w = anchor_mix(200);
+    let slo = Slo::paper_default();
+    let run = |fast: bool| {
+        let cfg = PlannerConfig {
+            targets: vec![0.5, 4.0],
+            space: StrategySpace {
+                max_cards: 8,
+                tp_choices: vec![4],
+                ..StrategySpace::default()
+            },
+            goodput: GoodputConfig {
+                tolerance: 0.3,
+                workload_cache: fast,
+                ..GoodputConfig::default()
+            },
+            sim_params: SimParams { front_cache: fast, ..SimParams::default() },
+            check_memory: true,
+            ..PlannerConfig::default()
+        };
+        plan(&platform.model, &platform.eff, &profiles, &w, &slo, &LinearCardCost, &cfg, 2)
+            .unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.frontier, off.frontier);
+    assert_eq!(on.min_cost, off.min_cost);
+    assert_eq!(on.to_csv().render(), off.to_csv().render());
+    assert_eq!(on, off);
 }
 
 #[test]
