@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo bench --bench bench_ablations`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
@@ -25,7 +25,7 @@ fn main() -> bestserve::Result<()> {
     let workload = Workload::poisson(&scenario);
     let strategy = Strategy::disaggregation(1, 1, 4);
     let cfg = GoodputConfig { tolerance: 0.05, ..GoodputConfig::default() };
-    let t_start = Instant::now();
+    let t_start = stopwatch();
     let dir = bestserve::report::results_dir();
 
     // --- A1: pseudo-batch scalar τ ------------------------------------------
@@ -58,7 +58,7 @@ fn main() -> bestserve::Result<()> {
     println!("=== A2: decode-span pricing — request-level heuristic vs exact ===");
     for mode in [SpanMode::PaperHeuristic, SpanMode::Exact] {
         let params = SimParams { span_mode: mode, tau: 1.0, ..SimParams::default() };
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let g = find_goodput(&oracle, &platform, &strategy, &workload, &slo, params, &cfg)?;
         println!(
             "  {:?}: goodput {:.3} req/s  (optimizer wall {:.2}s)",

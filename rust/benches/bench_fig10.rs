@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench bench_fig10`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Platform, Scenario, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
@@ -20,7 +20,7 @@ fn main() -> bestserve::Result<()> {
     let counts = [500usize, 1_000, 2_000, 4_000, 8_000, 16_000, 32_000];
     let seeds = 8;
 
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     let vs = variance_study(
         &oracle,
         &platform,

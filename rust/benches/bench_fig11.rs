@@ -18,7 +18,7 @@
 //!
 //! Run: `cargo bench --bench bench_fig11`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Platform, Scenario, Slo, StrategySpace, Workload};
 use bestserve::optimizer::AnalyticFactory;
@@ -53,7 +53,7 @@ fn main() -> bestserve::Result<()> {
     let slo = Slo::paper_default();
     let op1_slo = Slo { ttft: 3.0, tpot: 0.120, ..slo };
     let dir = results_dir();
-    let t0 = Instant::now();
+    let t0 = stopwatch();
 
     let panels: Vec<(Scenario, Slo, usize, &str)> = vec![
         (Scenario::op1(), op1_slo, 500, "OP1 (SLO relaxed to 3s/120ms — see header)"),

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench bench_fig7_9`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Platform, Scenario, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
@@ -21,7 +21,7 @@ fn main() -> bestserve::Result<()> {
     let dir = results_dir();
 
     println!("=== Figure 7: P90 TTFT/TPOT vs arrival rate — 1p1d-tp4 ===");
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     let f7 = rate_sweep(
         &oracle,
         &platform,

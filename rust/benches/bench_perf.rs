@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench bench_perf`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{
     ArrivalProcess, HardwareConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
@@ -19,7 +19,7 @@ use bestserve::simulator::{generate_workload, simulate, SimParams, SpanMode};
 use bestserve::testbed::{Testbed, TestbedConfig};
 
 fn time<F: FnMut()>(mut f: F) -> f64 {
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     f();
     t0.elapsed().as_secs_f64()
 }
@@ -49,7 +49,7 @@ fn main() -> bestserve::Result<()> {
     // --- PJRT grid ----------------------------------------------------------
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let grid = GridLatencyModel::from_artifacts(&dir, &platform, 4)?;
         println!("PJRT grid build (compile+exec+cumsum): {:>6.2} s", t0.elapsed().as_secs_f64());
         let n = 2_000_000u32;

@@ -4,7 +4,7 @@
 //! Paper reference: prefill total 265.123 ms, decode step 33.573 ms.
 //! Run: `cargo bench --bench bench_table3`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Phase, Platform};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
@@ -38,14 +38,14 @@ fn main() -> bestserve::Result<()> {
     // --- micro-bench: oracle latency, cold vs cached ------------------------
     let fresh = AnalyticOracle::new(platform.clone(), 4);
     let n_cold = 2_000u32;
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     for b in 0..n_cold {
         // distinct args -> every call misses the cache
         std::hint::black_box(fresh.prefill_time(1 + (b % 64), 16 + b));
     }
     let cold = t0.elapsed().as_secs_f64() / n_cold as f64;
     let n_hot = 2_000_000u32;
-    let t1 = Instant::now();
+    let t1 = stopwatch();
     for _ in 0..n_hot {
         std::hint::black_box(fresh.prefill_time(1, 2048));
     }

@@ -9,7 +9,7 @@
 //!                              P90 TPOT 4360.659, P99 4656.043.
 //! Run: `cargo bench --bench bench_tables45`
 
-use std::time::Instant;
+use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{Platform, Scenario, Slo, Strategy, Workload};
 use bestserve::estimator::AnalyticOracle;
@@ -26,7 +26,7 @@ fn main() -> bestserve::Result<()> {
 
     println!("=== Table 4: 1p1d-tp4, bmax 4/16, lambda=3.5, n=10000 ===");
     let st4 = Strategy::disaggregation(1, 1, 4);
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     let t4 = table_slo(&oracle, &platform, &st4, &workload, 3.5, &slo, params)?;
     let dt4 = t0.elapsed().as_secs_f64();
     print!("{}", t4.to_table().render());
@@ -35,7 +35,7 @@ fn main() -> bestserve::Result<()> {
     println!("=== Table 5: 2m-tp4, bmax 4, lambda=3.5, n=10000 ===");
     let mut st5 = Strategy::collocation(2, 4);
     st5.bmax_decode = 4; // Table 5a: maximum batch size 4
-    let t1 = Instant::now();
+    let t1 = stopwatch();
     let t5 = table_slo(&oracle, &platform, &st5, &workload, 3.5, &slo, params)?;
     let dt5 = t1.elapsed().as_secs_f64();
     print!("{}", t5.to_table().render());

@@ -55,7 +55,7 @@ fn main() -> bestserve::Result<()> {
             .join(", ")
     );
 
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let rep = plan(
         &platform.model,
         &platform.eff,

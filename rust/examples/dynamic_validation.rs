@@ -32,7 +32,7 @@ fn main() -> bestserve::Result<()> {
     cfg.ground_truth.tolerance = 0.25;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let rep = validate(&factory, &platform, &space, &workload, &slo, &cfg, threads)?;
     println!(
         "predicted vs token-level measured goodput, {} strategies in {:.1}s on {} thread(s):\n",

@@ -38,7 +38,7 @@ fn main() -> bestserve::Result<()> {
         workload.classes.len(),
         workload.n_requests
     );
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let rep = optimize_parallel(
         &factory, &platform, &space, &workload, &slo, params, &cfg, false, threads,
     )?;

@@ -367,7 +367,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     };
     let threads = args.usize_or("threads", default_threads())?.max(1);
     let factory = factory_for(args, &platform)?;
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let prune = if args.flag("no-prune") {
         PruneConfig::none()
     } else {
@@ -506,7 +506,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         },
     };
     let threads = args.usize_or("threads", default_threads())?.max(1);
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let rep = plan(&model, &eff, &profiles, &workload, &slo, &LinearCardCost, &cfg, threads)?;
     println!(
         "capacity plan | {} on {} profile(s) | workload {} | {} plan points in {:.1}s on {} thread(s)",
@@ -570,7 +570,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
         )?,
     };
     let tb = Testbed::new(model.as_ref(), &platform, strategy.clone(), config);
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let out = tb.run(&reqs)?;
     let dt = t0.elapsed();
     println!(
@@ -639,7 +639,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     cfg.ground_truth.tolerance = args.f64_or("tolerance", 0.1)?;
     let threads = args.usize_or("threads", default_threads())?.max(1);
     let factory = factory_for(args, &platform)?;
-    let t0 = std::time::Instant::now();
+    let t0 = bestserve::util::walltime::stopwatch();
     let rep = validate(factory.as_ref(), &platform, &space, &workload, &slo, &cfg, threads)?;
     println!(
         "Figure-11 panel for {} ({} strategies, {:.1}s on {} thread(s)):",

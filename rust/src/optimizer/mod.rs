@@ -31,7 +31,7 @@ pub mod memory;
 pub use goodput::{find_goodput, GoodputConfig};
 pub use memory::{check_memory, MemoryCheck};
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Platform, Slo, Strategy, StrategySpace, Workload};
@@ -96,7 +96,7 @@ pub(crate) fn line_key(strategy: &Strategy) -> (u32, u8, u32) {
 /// first-appearance order and enumeration order within each line.
 pub(crate) fn line_groups(strategies: &[Strategy]) -> Vec<Vec<usize>> {
     let mut order: Vec<(u32, u8, u32)> = Vec::new();
-    let mut by_key: HashMap<(u32, u8, u32), Vec<usize>> = HashMap::new();
+    let mut by_key: BTreeMap<(u32, u8, u32), Vec<usize>> = BTreeMap::new();
     for (i, strategy) in strategies.iter().enumerate() {
         let key = line_key(strategy);
         by_key
@@ -121,12 +121,12 @@ pub trait ModelFactory {
 /// Native Algorithm-1 oracle factory.
 pub struct AnalyticFactory {
     platform: Platform,
-    cache: Mutex<HashMap<u32, Arc<dyn LatencyModel>>>,
+    cache: Mutex<BTreeMap<u32, Arc<dyn LatencyModel>>>,
 }
 
 impl AnalyticFactory {
     pub fn new(platform: Platform) -> AnalyticFactory {
-        AnalyticFactory { platform, cache: Mutex::new(HashMap::new()) }
+        AnalyticFactory { platform, cache: Mutex::new(BTreeMap::new()) }
     }
 }
 
@@ -145,14 +145,14 @@ pub struct GridFactory {
     platform: Platform,
     exe: crate::runtime::PjrtExecutable,
     manifest: crate::runtime::GridManifest,
-    cache: Mutex<HashMap<u32, Arc<dyn LatencyModel>>>,
+    cache: Mutex<BTreeMap<u32, Arc<dyn LatencyModel>>>,
 }
 
 impl GridFactory {
     pub fn new(artifacts_dir: &std::path::Path, platform: Platform) -> Result<GridFactory> {
         let manifest = crate::runtime::GridManifest::load(artifacts_dir)?;
         let exe = crate::runtime::PjrtExecutable::load(artifacts_dir.join(&manifest.file))?;
-        Ok(GridFactory { platform, exe, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(GridFactory { platform, exe, manifest, cache: Mutex::new(BTreeMap::new()) })
     }
 }
 
@@ -356,7 +356,7 @@ pub fn optimize_parallel_with(
     // Strategies the memory pre-filter rejects are scored without a model,
     // so their tp values don't force a build (a GridFactory build executes
     // the PJRT artifact — not free).
-    let mut models: HashMap<u32, Arc<dyn LatencyModel>> = HashMap::new();
+    let mut models: BTreeMap<u32, Arc<dyn LatencyModel>> = BTreeMap::new();
     for (strategy, ok) in strategies.iter().zip(&mem_ok) {
         if *ok && !models.contains_key(&strategy.tp) {
             models.insert(strategy.tp, factory.model_for_tp(strategy.tp)?);
@@ -365,7 +365,7 @@ pub fn optimize_parallel_with(
 
     // Analytic zero pre-filter, memoized per tp (the verdict depends only
     // on the model, workload, and SLO — not on instance counts).
-    let mut zero_tp: HashMap<u32, bool> = HashMap::new();
+    let mut zero_tp: BTreeMap<u32, bool> = BTreeMap::new();
     if prune.zero_filter {
         for (strategy, ok) in strategies.iter().zip(&mem_ok) {
             if *ok && !zero_tp.contains_key(&strategy.tp) {

@@ -81,7 +81,7 @@ pub mod pareto;
 
 pub use cost::{CostModel, LinearCardCost};
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::{
@@ -324,7 +324,7 @@ pub fn plan(
     // Pre-build every latency model serially, one per (profile, tp): the
     // workers then only share `Arc<dyn LatencyModel>`, exactly like
     // `optimize_parallel`. Memory-rejected items never force a build.
-    let mut models: HashMap<(usize, u32), Arc<dyn LatencyModel>> = HashMap::new();
+    let mut models: BTreeMap<(usize, u32), Arc<dyn LatencyModel>> = BTreeMap::new();
     for i in 0..n {
         if mem_ok[i] {
             let (hi, tp) = (i / n_st, strategies[i % n_st].tp);
@@ -336,7 +336,7 @@ pub fn plan(
 
     // Analytic zero filter, memoized per (profile, tp) — the verdict does
     // not depend on instance counts.
-    let mut zero_key: HashMap<(usize, u32), bool> = HashMap::new();
+    let mut zero_key: BTreeMap<(usize, u32), bool> = BTreeMap::new();
     if prune.zero_filter {
         for i in 0..n {
             if mem_ok[i] {

@@ -192,11 +192,13 @@ impl MaterializedWorkload {
 /// duration of a sweep — without the cache a replay workload would re-read,
 /// re-parse and re-sort the same CSV thousands of times per `optimize` run.
 fn replay_base(path: &str) -> Result<(Arc<Vec<f64>>, f64)> {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::sync::{Mutex, OnceLock};
+    // simlint: allow(D2, mtime is a cache-key component for file-staleness detection, never simulated time)
     use std::time::SystemTime;
+    // simlint: allow(D2, SystemTime here is the trace file's mtime, not a clock read)
     type Key = (String, u64, Option<SystemTime>, u64);
-    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Vec<f64>>>>> = OnceLock::new();
+    static CACHE: OnceLock<Mutex<BTreeMap<Key, Arc<Vec<f64>>>>> = OnceLock::new();
     // Keying on (path, len, mtime, content fingerprint) keeps the hot-loop
     // win while staying correct when a trace file is rewritten in place
     // mid-process — including a rewrite to the *same byte length* within
@@ -211,7 +213,7 @@ fn replay_base(path: &str) -> Result<(Arc<Vec<f64>>, f64)> {
         meta.modified().ok(),
         content_fingerprint(path)?,
     );
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
     let cached = cache.lock().unwrap().get(&key).cloned();
     let ts: Arc<Vec<f64>> = match cached {
         Some(ts) => ts,

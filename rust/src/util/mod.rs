@@ -11,3 +11,4 @@ pub mod quickcheck;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod walltime;

@@ -1,0 +1,17 @@
+//! The one sanctioned wall-clock read in the tree.
+//!
+//! Simulated time flows from the event clock (`simulator::core`); the only
+//! legitimate use of the host's clock is *harness self-timing* — the CLI
+//! reporting how long a sweep took, benches measuring speedups. Routing
+//! those reads through [`stopwatch`] keeps the determinism lint's rule D2
+//! (and clippy's `disallowed-methods` mirror of it) meaningful: any other
+//! `Instant::now()` in the tree is a bug, not a judgment call.
+
+use std::time::Instant;
+
+/// Start a stopwatch for harness self-timing. The returned [`Instant`] is
+/// consumed with `.elapsed()` as usual.
+#[allow(clippy::disallowed_methods)] // the single sanctioned wall-clock read
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}

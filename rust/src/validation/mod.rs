@@ -197,8 +197,8 @@ pub fn validate(
     ground_truth.testbed.switch_down = cfg.sim_params.switch_down;
 
     // Pre-build the per-tp models serially; workers only share the Arcs.
-    let mut models: std::collections::HashMap<u32, std::sync::Arc<dyn crate::estimator::LatencyModel>> =
-        std::collections::HashMap::new();
+    let mut models: std::collections::BTreeMap<u32, std::sync::Arc<dyn crate::estimator::LatencyModel>> =
+        std::collections::BTreeMap::new();
     for strategy in &strategies {
         if !models.contains_key(&strategy.tp) {
             models.insert(strategy.tp, factory.model_for_tp(strategy.tp)?);

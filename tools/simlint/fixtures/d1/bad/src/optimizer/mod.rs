@@ -1,0 +1,10 @@
+//! D1 bad fixture: unordered maps in an ordering-sensitive module.
+use std::collections::HashMap;
+
+pub fn line_groups(xs: &[(u32, f64)]) -> HashMap<u32, Vec<f64>> {
+    let mut by_key: HashMap<u32, Vec<f64>> = HashMap::new();
+    for (k, v) in xs {
+        by_key.entry(*k).or_default().push(*v);
+    }
+    by_key
+}

@@ -1,0 +1,14 @@
+//! D1 good fixture: the escape hatch — a sharded memo whose maps are only
+//! ever keyed into, never iterated, carries a reasoned allow directive.
+use std::sync::Mutex;
+
+// simlint: allow(D1, sharded memo: keyed lookups only, never iterated)
+use std::collections::HashMap;
+
+// simlint: allow(D1, sharded memo shard type; keyed lookups only)
+pub type Memo = Vec<Mutex<HashMap<(u8, u32), f64>>>;
+
+pub fn lookup(memo: &Memo, key: (u8, u32)) -> Option<f64> {
+    let shard = (key.0 as usize) % memo.len();
+    memo[shard].lock().unwrap().get(&key).copied()
+}

@@ -1,0 +1,10 @@
+//! D1 good fixture: ordered maps keep iteration order out of hasher state.
+use std::collections::BTreeMap;
+
+pub fn line_groups(xs: &[(u32, f64)]) -> BTreeMap<u32, Vec<f64>> {
+    let mut by_key: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+    for (k, v) in xs {
+        by_key.entry(*k).or_default().push(*v);
+    }
+    by_key
+}

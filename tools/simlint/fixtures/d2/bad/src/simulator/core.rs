@@ -1,0 +1,12 @@
+//! D2 bad fixture: wall-clock reads inside simulation code.
+use std::time::Instant;
+
+pub fn step_duration() -> f64 {
+    let t0 = Instant::now();
+    let mut acc = 0.0_f64;
+    for i in 0..1000 {
+        acc += f64::from(i);
+    }
+    let _ = acc;
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,24 @@
+//! D2 good fixture: simulated time flows from the event clock.
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { now: 0.0 }
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        self.now += dt;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::new()
+    }
+}

@@ -1,0 +1,7 @@
+//! D2 good fixture: util/walltime.rs is the one sanctioned stopwatch —
+//! harness self-timing lives here and nowhere else.
+use std::time::Instant;
+
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}

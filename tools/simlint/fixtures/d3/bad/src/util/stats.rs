@@ -1,0 +1,12 @@
+//! D3 bad fixture: raw-float `partial_cmp` sort — the NaN-panic class.
+pub fn sort_desc(xs: &mut [f64]) {
+    xs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}
+
+pub struct Row {
+    pub score: f64,
+}
+
+pub fn rank(rows: &mut [Row]) {
+    rows.sort_by_key(|r| (r.score * 1000.0) as i64);
+}

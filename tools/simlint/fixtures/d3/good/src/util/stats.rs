@@ -1,0 +1,23 @@
+//! D3 good fixture: total orders only — `total_cmp` for raw floats, and
+//! the canonical `PartialOrd`-delegates-to-`Ord` impl (which the lint
+//! recognizes and exempts).
+use std::cmp::Ordering;
+
+pub fn sort_desc(xs: &mut [f64]) {
+    xs.sort_by(|a, b| b.total_cmp(a));
+}
+
+#[derive(PartialEq, Eq)]
+pub struct Bits(pub u64);
+
+impl Ord for Bits {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.cmp(&other.0)
+    }
+}
+
+impl PartialOrd for Bits {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}

@@ -1,0 +1,9 @@
+//! D4 bad fixture: hash-derived entropy outside `util::rng`.
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+pub fn jitter(seed: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    seed.hash(&mut h);
+    h.finish()
+}

@@ -1,0 +1,7 @@
+//! D4 good fixture: consumers draw from the seeded stream, never from
+//! ambient or hash-derived entropy.
+use crate::util::rng::Rng;
+
+pub fn jitter(rng: &mut Rng) -> u64 {
+    rng.next_u64()
+}

@@ -1,0 +1,12 @@
+//! D5 bad fixture: a gate field with no on/off equivalence-test anchor —
+//! there is no tests tree and no `#[cfg(test)]` module referencing it.
+#[derive(Debug, Clone, Copy)]
+pub struct PruneConfig {
+    pub zero_filter: bool,
+}
+
+impl PruneConfig {
+    pub fn all() -> Self {
+        PruneConfig { zero_filter: true }
+    }
+}

@@ -1,0 +1,16 @@
+//! D5 good fixture: gate fields anchored via a named non-default
+//! constructor that the test inventory references (`PruneConfig::none()`).
+#[derive(Debug, Clone, Copy)]
+pub struct PruneConfig {
+    pub zero_filter: bool,
+}
+
+impl PruneConfig {
+    pub fn all() -> Self {
+        PruneConfig { zero_filter: true }
+    }
+
+    pub fn none() -> Self {
+        PruneConfig { zero_filter: false }
+    }
+}

@@ -1,0 +1,14 @@
+//! D5 good fixture: one gate anchored by a direct toggle in a test, one
+//! diagnostics-only flag carrying a reasoned allow directive.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    pub front_cache: bool,
+    // simlint: allow(D5, diagnostics-only toggle; output equivalence is not defined for it)
+    pub trace_events: bool,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { front_cache: true, trace_events: false }
+    }
+}

@@ -1,0 +1,17 @@
+//! The rule-D5 anchor inventory for the good fixture: every gate field is
+//! either toggled directly or reached through a named constructor.
+
+#[test]
+fn pruned_plan_equals_brute_force() {
+    let brute = PruneConfig::none();
+    let pruned = PruneConfig::all();
+    let _ = (brute, pruned);
+}
+
+#[test]
+fn front_cache_preserves_outputs() {
+    for fast in [false, true] {
+        let params = SimParams { front_cache: fast, ..SimParams::default() };
+        let _ = params;
+    }
+}

@@ -1,0 +1,8 @@
+#![allow(dead_code)]
+//! D6 bad fixture: a blanket inner allow, plus a stale
+//! `#[allow(clippy::too_many_arguments)]` on a two-parameter fn.
+
+#[allow(clippy::too_many_arguments)]
+pub fn combine(a: u32, b: u32) -> u32 {
+    a + b
+}

@@ -1,0 +1,6 @@
+//! D6 good fixture: the suppression is live — clippy's
+//! `too_many_arguments` fires at 8+ parameters and this fn has 8.
+#[allow(clippy::too_many_arguments)]
+pub fn combine(a: u32, b: u32, c: u32, d: u32, e: u32, f: u32, g: u32, h: u32) -> u32 {
+    a + b + c + d + e + f + g + h
+}

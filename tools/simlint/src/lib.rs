@@ -1,0 +1,1025 @@
+//! `simlint` — the repo's determinism & bit-exactness static-analysis pass.
+//!
+//! BestServe's strongest guarantee is that rankings, `PlanReport`s and
+//! validation rows are byte-identical across `--threads`, prune flags and
+//! fast-path gates. The *dynamic* side of that contract lives in the
+//! equivalence tests (`prop_pruned_plan_equals_brute_force`, the
+//! `fast_paths_preserve_*` anchors, the thread-invariance suites); this
+//! crate is the *static* side: a dependency-light token scan over
+//! `rust/src` that proves the absence of whole nondeterminism classes
+//! instead of sampling for their symptoms.
+//!
+//! # Rule catalog
+//!
+//! * **D1** — no `HashMap`/`HashSet` in the ordering-sensitive modules
+//!   (`simulator`, `estimator`, `optimizer`, `planner`, `report`,
+//!   `validation`): unordered iteration is how hasher state leaks into
+//!   output bytes. Use `BTreeMap`/`BTreeSet` or a sorted drain; genuinely
+//!   keyed-only cache internals (the sharded oracle memo) take a reasoned
+//!   allow directive.
+//! * **D2** — no wall-clock reads in simulation/estimation code
+//!   (`Instant`, `SystemTime`): simulated time flows from the event clock
+//!   (`simulator::core::Clock`). `Instant::now`/`SystemTime::now` are
+//!   banned *everywhere* in the tree except `util/walltime.rs`, the one
+//!   sanctioned stopwatch for self-timing harnesses.
+//! * **D3** — no `partial_cmp` sorts on raw floats (the NaN-panic /
+//!   partial-order class PR 1 fixed must stay fixed): use `total_cmp` or
+//!   `util::stats::rank_desc`. The canonical `PartialOrd`-delegates-to-
+//!   `Ord` impl (`Some(self.cmp(other))`) is recognized and exempt.
+//!   `sort_by_key` with a float-derived key is flagged by heuristic.
+//! * **D4** — all randomness through `util::rng`: no `rand` crate, no
+//!   hash-derived entropy (`RandomState`, `DefaultHasher`), no
+//!   `thread_rng`/`from_entropy`-style ambient seeding.
+//! * **D5** — every gate field of the gate structs (`PruneConfig`,
+//!   `GoodputConfig`, `SimParams`) must be cross-referenced by the test
+//!   inventory: either toggled directly in a test (`front_cache: fast`),
+//!   or set by a named non-`default` constructor some test calls
+//!   (`PruneConfig::none()`). A new fast path therefore cannot land
+//!   ungated or unanchored.
+//! * **D6** — stale suppressions: `#[allow(clippy::too_many_arguments)]`
+//!   on a fn with ≤ 7 parameters, blanket `#![allow(...)]` inner
+//!   attributes, and `simlint: allow` directives that suppress nothing.
+//!
+//! # The escape hatch
+//!
+//! A finding is suppressed by a reasoned directive on the same line or the
+//! line directly above it:
+//!
+//! ```text
+//! // simlint: allow(D1, sharded memo; keyed lookups only, never iterated)
+//! use std::collections::HashMap;
+//! ```
+//!
+//! The reason is mandatory (a directive without one is a **D0** finding),
+//! and a directive that suppresses nothing is itself a D6 finding — the
+//! allowlist cannot rot silently.
+//!
+//! # What this is (and is not)
+//!
+//! The scanner strips comments and string/char literals before matching
+//! (directives are read from the raw text), so prose never trips a rule.
+//! It is a token scan, not a type checker: rules are written to be
+//! conservative on this repo's idioms, `clippy.toml` mirrors D2/D4 where
+//! clippy can express them, and the equivalence tests remain the ground
+//! truth the lint merely hardens.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Modules where unordered-map iteration can reach output bytes (rule D1).
+const D1_MODULES: &[&str] =
+    &["simulator", "estimator", "optimizer", "planner", "report", "validation"];
+
+/// Modules that constitute simulation/estimation code (rule D2): any
+/// wall-clock *type* is suspect here, not just `::now` calls.
+const D2_MODULES: &[&str] =
+    &["simulator", "estimator", "optimizer", "planner", "testbed", "validation"];
+
+/// The structs whose `bool` fields gate output-preserving cuts (rule D5).
+/// Extend this list when a new gate struct is introduced (see the
+/// add-a-lint-rule recipe in ROADMAP.md).
+const GATE_STRUCTS: &[&str] = &["PruneConfig", "GoodputConfig", "SimParams"];
+
+/// The one file allowed to read the wall clock (rule D2).
+const WALLCLOCK_HOME: &str = "util/walltime.rs";
+
+/// The one module allowed to implement/own randomness (rule D4).
+const RNG_HOME: &str = "util/rng.rs";
+
+/// Tokens rule D4 bans outside [`RNG_HOME`].
+const D4_TOKENS: &[&str] = &[
+    "thread_rng",
+    "ThreadRng",
+    "StdRng",
+    "SmallRng",
+    "RandomState",
+    "DefaultHasher",
+    "from_entropy",
+    "getrandom",
+    "fastrand",
+];
+
+/// A lint rule identifier. `D0` is reserved for malformed directives (a
+/// broken escape hatch must fail loudly, not silently allow nothing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    D0,
+    D1,
+    D2,
+    D3,
+    D4,
+    D5,
+    D6,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::D0 => "D0",
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::D4 => "D4",
+            Rule::D5 => "D5",
+            Rule::D6 => "D6",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Rule> {
+        match s.trim() {
+            "D0" => Some(Rule::D0),
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "D4" => Some(Rule::D4),
+            "D5" => Some(Rule::D5),
+            "D6" => Some(Rule::D6),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One violation. Ordered by (file, line, rule) so reports are
+/// deterministic regardless of scan order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Path relative to the linted source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One gate field discovered by rule D5, with its anchoring verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GateField {
+    pub struct_name: String,
+    pub field: String,
+    /// Defining file (relative to the source root) and 1-based line.
+    pub file: String,
+    pub line: usize,
+    /// Whether the test inventory exercises this gate.
+    pub anchored: bool,
+    /// Human-readable explanation of the anchor (empty when unanchored).
+    pub how: String,
+}
+
+/// Full lint output: the (directive-filtered) findings plus the D5 gate
+/// inventory, so callers can assert "every gate is anchored" positively
+/// rather than only by absence of findings.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub gates: Vec<GateField>,
+}
+
+// ------------------------------------------------------------- directives --
+
+#[derive(Debug)]
+struct Directive {
+    rule: Rule,
+    /// 1-based line the directive comment sits on. It suppresses findings
+    /// on this line and the line directly below.
+    line: usize,
+    used: bool,
+}
+
+/// Parse `simlint: allow(Dx, reason)` directives out of the raw (unstripped)
+/// text; malformed directives become D0 findings.
+fn parse_directives(rel: &str, raw: &str, findings: &mut Vec<Finding>) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (i, line) in raw.lines().enumerate() {
+        let Some(pos) = line.find("simlint:") else { continue };
+        let ln = i + 1;
+        let rest = line[pos + "simlint:".len()..].trim_start();
+        let mut malformed = |why: &str| {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: ln,
+                rule: Rule::D0,
+                message: format!("malformed simlint directive ({why}); \
+                     expected `simlint: allow(D<n>, reason)`"),
+            });
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            malformed("not an allow(...)");
+            continue;
+        };
+        let Some(close) = inner.rfind(')') else {
+            malformed("missing closing parenthesis");
+            continue;
+        };
+        let body = &inner[..close];
+        let Some((rule_s, reason)) = body.split_once(',') else {
+            malformed("missing the mandatory reason");
+            continue;
+        };
+        let Some(rule) = Rule::parse(rule_s) else {
+            malformed("unknown rule");
+            continue;
+        };
+        if reason.trim().is_empty() {
+            malformed("empty reason");
+            continue;
+        }
+        out.push(Directive { rule, line: ln, used: false });
+    }
+    out
+}
+
+// ---------------------------------------------------------------- scanner --
+
+/// Replace comment bodies and string/char-literal contents with spaces,
+/// preserving every newline (so line numbers survive), so token rules never
+/// fire inside prose or data. Handles nested block comments, raw strings
+/// (`r"…"`, `r#"…"#`), escapes, and tells lifetimes (`'a`) from char
+/// literals (`'a'`).
+pub fn strip_code(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"…" / r#"…"# (the repo has no byte-raw `br` strings).
+        if c == 'r' && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                // Blank from the opening r to the closing quote+hashes.
+                for &c in &b[i..=j] {
+                    out.push(blank(c));
+                }
+                i = j + 1;
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut m = 0usize;
+                        while m < hashes && i + 1 + m < n && b[i + 1 + m] == '#' {
+                            m += 1;
+                        }
+                        if m == hashes {
+                            for &c in &b[i..=(i + hashes)] {
+                                out.push(blank(c));
+                            }
+                            i += hashes + 1;
+                            break 'raw;
+                        }
+                    }
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Normal (or byte) string literal.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(b[i + 1]));
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(blank(b[i]));
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: consume to the closing quote.
+                out.push(' ');
+                i += 1;
+                while i < n && b[i] != '\'' {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push(' ');
+                        out.push(blank(b[i + 1]));
+                        i += 2;
+                        continue;
+                    }
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // Plain char literal 'x'.
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep the tick, scan on.
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of `word` in `line` occurring as a whole identifier.
+fn ident_positions(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let end = p + word.len();
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + word.len();
+    }
+    out
+}
+
+fn has_ident(line: &str, word: &str) -> bool {
+    !ident_positions(line, word).is_empty()
+}
+
+/// `field :` (struct-literal or struct-definition assignment), rejecting
+/// `field::path` uses.
+fn has_field_assign(line: &str, field: &str) -> bool {
+    for p in ident_positions(line, field) {
+        let rest = line[p + field.len()..].trim_start();
+        if rest.starts_with(':') && !rest.starts_with("::") {
+            return true;
+        }
+    }
+    false
+}
+
+/// `root::` path use (e.g. the `rand` crate), as opposed to a bare ident.
+fn has_path_root(line: &str, root: &str) -> bool {
+    for p in ident_positions(line, root) {
+        if line[p + root.len()..].trim_start().starts_with("::") {
+            return true;
+        }
+    }
+    false
+}
+
+/// First path component with any `.rs` suffix stripped: the top-level
+/// module a file belongs to (`optimizer/mod.rs` → `optimizer`).
+fn top_module(rel: &str) -> &str {
+    let first = rel.split('/').next().unwrap_or(rel);
+    first.strip_suffix(".rs").unwrap_or(first)
+}
+
+/// Count the parameters of the fn whose signature starts in `sig` (text
+/// beginning at the line containing the `fn` keyword). `None` when the
+/// signature cannot be delimited (never flag what we cannot parse).
+/// `self` counts as a parameter, which makes the D6 staleness check
+/// conservative (clippy's threshold is 8+ either way).
+fn count_fn_params(sig: &str) -> Option<usize> {
+    let cs: Vec<char> = sig.chars().collect();
+    let n = cs.len();
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    // Locate the `fn` keyword.
+    let mut fn_pos = None;
+    let mut k = 0;
+    while k + 1 < n {
+        if cs[k] == 'f'
+            && cs[k + 1] == 'n'
+            && (k == 0 || !is_ident(cs[k - 1]))
+            && (k + 2 >= n || !is_ident(cs[k + 2]))
+        {
+            fn_pos = Some(k);
+            break;
+        }
+        k += 1;
+    }
+    let mut i = fn_pos? + 2;
+    // Find the parameter list's opening paren, skipping generic params
+    // (which may themselves contain parens, e.g. `F: Fn(u32) -> u32`).
+    let mut angle: i32 = 0;
+    let mut prev = ' ';
+    while i < n {
+        let c = cs[i];
+        match c {
+            '<' => angle += 1,
+            '>' if prev != '-' => angle -= 1,
+            '(' if angle <= 0 => break,
+            _ => {}
+        }
+        prev = c;
+        i += 1;
+    }
+    if i >= n {
+        return None;
+    }
+    // Count top-level commas inside the list; a trailing comma (rustfmt's
+    // vertical layout) separates nothing.
+    let mut depth: i32 = 1;
+    let mut commas = 0usize;
+    let mut any = false;
+    let mut last = ' ';
+    angle = 0;
+    prev = ' ';
+    i += 1;
+    while i < n && depth > 0 {
+        let c = cs[i];
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            '<' => angle += 1,
+            '>' if prev != '-' => angle = (angle - 1).max(0),
+            ',' if depth == 1 && angle == 0 => commas += 1,
+            _ => {}
+        }
+        if depth > 0 && !c.is_whitespace() {
+            any = true;
+            last = c;
+        }
+        prev = c;
+        i += 1;
+    }
+    if depth != 0 {
+        return None;
+    }
+    if !any {
+        return Some(0);
+    }
+    Some(if last == ',' { commas } else { commas + 1 })
+}
+
+// -------------------------------------------------------- per-file rules --
+
+struct SourceFile {
+    rel: String,
+    raw: String,
+    code: String,
+}
+
+impl SourceFile {
+    fn code_lines(&self) -> Vec<&str> {
+        self.code.lines().collect()
+    }
+
+    /// 0-based index of the `#[cfg(test)]` boundary (convention in this
+    /// repo: the tests module closes the file), or `len` when absent.
+    fn test_region_start(&self) -> usize {
+        let lines = self.code_lines();
+        lines
+            .iter()
+            .position(|l| l.contains("#[cfg(test)]"))
+            .unwrap_or(lines.len())
+    }
+}
+
+fn push(out: &mut Vec<Finding>, rel: &str, line: usize, rule: Rule, message: String) {
+    out.push(Finding { file: rel.to_string(), line, rule, message });
+}
+
+/// Rules D1–D4 and the per-file half of D6.
+fn file_findings(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let module = top_module(&sf.rel);
+    let d1 = D1_MODULES.contains(&module);
+    let d2 = D2_MODULES.contains(&module);
+    let rng_home = sf.rel == RNG_HOME;
+    let wallclock_home = sf.rel == WALLCLOCK_HOME;
+    let lines = sf.code_lines();
+
+    for (i, line) in lines.iter().enumerate() {
+        let ln = i + 1;
+
+        if d1 {
+            for w in ["HashMap", "HashSet"] {
+                if has_ident(line, w) {
+                    push(
+                        &mut out,
+                        &sf.rel,
+                        ln,
+                        Rule::D1,
+                        format!(
+                            "`{w}` in ordering-sensitive module `{module}` — iteration order \
+                             is hasher state; use BTreeMap/BTreeSet or a sorted drain"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        if d2 {
+            for w in ["Instant", "SystemTime"] {
+                if has_ident(line, w) {
+                    push(
+                        &mut out,
+                        &sf.rel,
+                        ln,
+                        Rule::D2,
+                        format!(
+                            "wall-clock type `{w}` in simulation/estimation module `{module}` — \
+                             simulated time must flow from the event clock"
+                        ),
+                    );
+                    break;
+                }
+            }
+        } else if !wallclock_home
+            && (line.contains("Instant::now") || line.contains("SystemTime::now"))
+        {
+            push(
+                &mut out,
+                &sf.rel,
+                ln,
+                Rule::D2,
+                "wall-clock read outside util/walltime.rs — use \
+                 `util::walltime::stopwatch()` for harness timing"
+                    .to_string(),
+            );
+        }
+
+        if has_ident(line, "partial_cmp") {
+            // The canonical PartialOrd-delegates-to-Ord impl is the
+            // approved pattern; everything else risks the NaN class.
+            let window_end = (i + 3).min(lines.len());
+            let canonical = lines[i..window_end].iter().any(|l| l.contains("self.cmp(other)"));
+            if !canonical {
+                push(
+                    &mut out,
+                    &sf.rel,
+                    ln,
+                    Rule::D3,
+                    "`partial_cmp` on floats is a partial order (NaN panics / unstable \
+                     rankings) — use `total_cmp` or `util::stats::rank_desc`"
+                        .to_string(),
+                );
+            }
+        }
+        if has_ident(line, "sort_by_key")
+            && (line.contains("f64")
+                || line.contains("f32")
+                || line.contains(" as i")
+                || line.contains(" as u"))
+        {
+            push(
+                &mut out,
+                &sf.rel,
+                ln,
+                Rule::D3,
+                "`sort_by_key` over a float-derived key collapses distinct floats — \
+                 sort with `total_cmp` on the float itself"
+                    .to_string(),
+            );
+        }
+
+        if !rng_home {
+            if has_path_root(line, "rand") {
+                push(
+                    &mut out,
+                    &sf.rel,
+                    ln,
+                    Rule::D4,
+                    "the `rand` crate is banned — all randomness flows through `util::rng` \
+                     so streams are seed-deterministic"
+                        .to_string(),
+                );
+            }
+            for w in D4_TOKENS {
+                if has_ident(line, w) {
+                    push(
+                        &mut out,
+                        &sf.rel,
+                        ln,
+                        Rule::D4,
+                        format!(
+                            "`{w}` is hash-derived/ambient entropy — all randomness flows \
+                             through `util::rng`"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // D6(a): stale #[allow(clippy::too_many_arguments)].
+        if line.contains("#[allow") && line.contains("too_many_arguments") {
+            let horizon = (i + 16).min(lines.len());
+            if let Some(j) = (i + 1..horizon).find(|&j| has_ident(lines[j], "fn")) {
+                let sig_end = (j + 60).min(lines.len());
+                let sig = lines[j..sig_end].join("\n");
+                if let Some(nargs) = count_fn_params(&sig) {
+                    if nargs <= 7 {
+                        push(
+                            &mut out,
+                            &sf.rel,
+                            ln,
+                            Rule::D6,
+                            format!(
+                                "stale `#[allow(clippy::too_many_arguments)]`: the fn takes \
+                                 {nargs} parameter(s), clippy fires at 8+"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        // D6(b): blanket inner allows hide violations file-wide.
+        if line.trim_start().starts_with("#![allow(") {
+            push(
+                &mut out,
+                &sf.rel,
+                ln,
+                Rule::D6,
+                "blanket `#![allow(...)]` — scope the suppression to the item it \
+                 justifies"
+                    .to_string(),
+            );
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------- rule D5 ---
+
+struct StructDef {
+    name: String,
+    /// 0-based line range [start, end] of the definition, inclusive.
+    start: usize,
+    end: usize,
+    /// (field, 0-based line) of each `pub <field>: bool`.
+    bool_fields: Vec<(String, usize)>,
+}
+
+/// Extract a gate struct's definition from stripped lines.
+fn find_struct(lines: &[&str], name: &str) -> Option<StructDef> {
+    let start = lines
+        .iter()
+        .position(|l| has_ident(l, "struct") && has_ident(l, name))?;
+    // Brace-match from the first `{` at or after the header line.
+    let mut depth = 0i32;
+    let mut opened = false;
+    let mut end = start;
+    'outer: for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        end = j;
+                        break 'outer;
+                    }
+                }
+                ';' if !opened => return None, // unit/tuple struct
+                _ => {}
+            }
+        }
+        end = j;
+    }
+    let mut bool_fields = Vec::new();
+    for (j, line) in lines.iter().enumerate().take(end + 1).skip(start) {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("pub ") else { continue };
+        let Some(colon) = rest.find(':') else { continue };
+        let field = rest[..colon].trim();
+        if field.is_empty() || !field.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            continue;
+        }
+        let ty = rest[colon + 1..].trim().trim_end_matches(',').trim();
+        if ty == "bool" {
+            bool_fields.push((field.to_string(), j));
+        }
+    }
+    Some(StructDef { name: name.to_string(), start, end, bool_fields })
+}
+
+/// Name of the nearest enclosing fn above `line_idx` (simple upward scan —
+/// closures have no `fn` keyword, so this lands on the real item).
+fn enclosing_fn(lines: &[&str], line_idx: usize) -> Option<String> {
+    for j in (0..=line_idx).rev() {
+        let line = lines[j];
+        if let Some(p) = ident_positions(line, "fn").first().copied() {
+            let rest = line[p + 2..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// Rule D5: parse the gate structs, then require each bool gate field to be
+/// exercised by the test inventory — directly (`field: <expr>` in a test)
+/// or via a non-`default` constructor that sets it (`Struct::ctor(`
+/// referenced in a test).
+fn gate_findings(
+    sources: &[SourceFile],
+    inventory: &[String],
+    findings: &mut Vec<Finding>,
+) -> Vec<GateField> {
+    let mut gates = Vec::new();
+    for sf in sources {
+        let lines = sf.code_lines();
+        let test_start = sf.test_region_start();
+        for &gate in GATE_STRUCTS {
+            let Some(def) = find_struct(&lines, gate) else { continue };
+            for (field, field_line) in &def.bool_fields {
+                // Constructors in the defining file that set this field
+                // (outside the struct def, outside the tests module).
+                let mut ctors: Vec<String> = Vec::new();
+                for (j, line) in lines.iter().enumerate().take(test_start) {
+                    if j >= def.start && j <= def.end {
+                        continue;
+                    }
+                    if has_field_assign(line, field) {
+                        if let Some(f) = enclosing_fn(&lines, j) {
+                            if f != "default" && !ctors.contains(&f) {
+                                ctors.push(f);
+                            }
+                        }
+                    }
+                }
+                let direct = inventory
+                    .iter()
+                    .any(|text| text.lines().any(|l| has_field_assign(l, field)));
+                let ctor_hit = ctors.iter().find(|c| {
+                    let call = format!("{}::{}(", def.name, c);
+                    inventory.iter().any(|text| text.contains(&call))
+                });
+                let (anchored, how) = if direct {
+                    (true, "toggled directly in the test inventory".to_string())
+                } else if let Some(c) = ctor_hit {
+                    (true, format!("via {}::{}() referenced in tests", def.name, c))
+                } else {
+                    (false, String::new())
+                };
+                if !anchored {
+                    push(
+                        findings,
+                        &sf.rel,
+                        field_line + 1,
+                        Rule::D5,
+                        format!(
+                            "gate field `{}::{}` has no on/off equivalence-test anchor — \
+                             toggle it in a test, or reference a non-default constructor \
+                             that sets it",
+                            def.name, field
+                        ),
+                    );
+                }
+                gates.push(GateField {
+                    struct_name: def.name.clone(),
+                    field: field.clone(),
+                    file: sf.rel.clone(),
+                    line: field_line + 1,
+                    anchored,
+                    how,
+                });
+            }
+        }
+    }
+    gates
+}
+
+// ------------------------------------------------------------ tree walk ---
+
+fn collect_rs(root: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(root)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        let child_rel = if rel.is_empty() { name.clone() } else { format!("{rel}/{name}") };
+        if path.is_dir() {
+            collect_rs(&path, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((child_rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Lint a source tree. `src_root` is scanned recursively with all rules;
+/// `tests_root` (plus the `#[cfg(test)]` tails of the source files) forms
+/// the test inventory rule D5 greps for anchors.
+pub fn lint_tree(src_root: &Path, tests_root: Option<&Path>) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, "", &mut files)?;
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut sources: Vec<SourceFile> = Vec::with_capacity(files.len());
+    for (rel, abs) in files {
+        let raw = fs::read_to_string(&abs)?;
+        let code = strip_code(&raw);
+        sources.push(SourceFile { rel, raw, code });
+    }
+
+    // Test inventory: integration-test files + in-module test regions, all
+    // stripped so prose cannot anchor a gate.
+    let mut inventory: Vec<String> = Vec::new();
+    if let Some(tr) = tests_root {
+        let mut tfiles = Vec::new();
+        collect_rs(tr, "", &mut tfiles)?;
+        for (_, abs) in tfiles {
+            inventory.push(strip_code(&fs::read_to_string(&abs)?));
+        }
+    }
+    for sf in &sources {
+        let lines = sf.code_lines();
+        let start = sf.test_region_start();
+        if start < lines.len() {
+            inventory.push(lines[start..].join("\n"));
+        }
+    }
+
+    // Per-file rules, then D5 across the tree.
+    let mut raw_findings: Vec<Finding> = Vec::new();
+    for sf in &sources {
+        raw_findings.extend(file_findings(sf));
+    }
+    let gates = gate_findings(&sources, &inventory, &mut raw_findings);
+
+    // Apply allow directives: a directive suppresses matching-rule findings
+    // on its own line or the line directly below.
+    for sf in &sources {
+        let mut directives = parse_directives(&sf.rel, &sf.raw, &mut findings);
+        raw_findings.retain(|f| {
+            if f.file != sf.rel {
+                return true;
+            }
+            for d in directives.iter_mut() {
+                if d.rule == f.rule && (f.line == d.line || f.line == d.line + 1) {
+                    d.used = true;
+                    return false;
+                }
+            }
+            true
+        });
+        for d in directives {
+            if !d.used {
+                push(
+                    &mut findings,
+                    &sf.rel,
+                    d.line,
+                    Rule::D6,
+                    format!(
+                        "unused `simlint: allow({})` directive — it suppresses nothing; \
+                         remove it or move it onto the violating line",
+                        d.rule
+                    ),
+                );
+            }
+        }
+    }
+    findings.extend(raw_findings);
+
+    findings.sort();
+    findings.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule);
+    Ok(LintReport { findings, gates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_removes_comments_strings_and_char_literals() {
+        let src = "let x = \"HashMap\"; // HashMap\nlet c = 'H'; /* HashMap */ let l: &'a str = s;";
+        let out = strip_code(src);
+        assert!(!out.contains("HashMap"), "{out}");
+        // Line structure survives.
+        assert_eq!(out.lines().count(), src.lines().count());
+        // Lifetimes survive (they are not char literals).
+        assert!(out.contains("&'a str"));
+    }
+
+    #[test]
+    fn strip_handles_raw_and_escaped_strings() {
+        let src = "let a = r#\"Instant::now\"#; let b = \"\\\"SystemTime\\\"\";";
+        let out = strip_code(src);
+        assert!(!out.contains("Instant"));
+        assert!(!out.contains("SystemTime"));
+    }
+
+    #[test]
+    fn ident_matching_respects_word_boundaries() {
+        assert!(has_ident("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_ident("let not_a_hash_map_token = 1;", "HashMap"));
+        assert!(!has_ident("randomize()", "rand"));
+        assert!(has_path_root("rand::random()", "rand"));
+        assert!(!has_path_root("operand::x", "rand"));
+        assert!(has_field_assign("    front_cache: fast,", "front_cache"));
+        assert!(!has_field_assign("    FrontCache::new()", "front_cache"));
+    }
+
+    #[test]
+    fn fn_param_counting_handles_generics_nested_types_and_trailing_commas() {
+        assert_eq!(count_fn_params("fn f() {}"), Some(0));
+        assert_eq!(count_fn_params("fn f(a: u32, b: u32) {}"), Some(2));
+        assert_eq!(count_fn_params("fn f(m: &HashMap<(usize, u32), Arc<dyn X>>) {}"), Some(1));
+        assert_eq!(
+            count_fn_params("fn f<F: Fn(u32) -> u32>(x: F, run: impl FnMut(usize, u8) -> u8) {}"),
+            Some(2)
+        );
+        let vertical = "pub fn g(\n    a: u32,\n    b: u32,\n    c: u32,\n) -> u32 {";
+        assert_eq!(count_fn_params(vertical), Some(3));
+    }
+
+    #[test]
+    fn malformed_directives_are_d0_findings() {
+        let mut findings = Vec::new();
+        let raw = "// simlint: allow(D1)\n// simlint: allow(D9, reason)\n// simlint: allow(D1, ok)\n";
+        let ds = parse_directives("x.rs", raw, &mut findings);
+        assert_eq!(ds.len(), 1, "only the well-formed directive parses");
+        assert_eq!(findings.len(), 2);
+        assert!(findings.iter().all(|f| f.rule == Rule::D0));
+    }
+
+    #[test]
+    fn canonical_partial_ord_delegation_is_exempt() {
+        let sf = SourceFile {
+            rel: "util/order.rs".into(),
+            raw: String::new(),
+            code: strip_code(
+                "impl PartialOrd for T {\n    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n        Some(self.cmp(other))\n    }\n}\n",
+            ),
+        };
+        assert!(file_findings(&sf).is_empty());
+    }
+}

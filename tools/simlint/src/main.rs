@@ -1,0 +1,98 @@
+//! CLI for the determinism lint. Default invocation (from the workspace
+//! root, as CI runs it):
+//!
+//! ```text
+//! cargo run -q -p simlint --
+//! ```
+//!
+//! lints `rust/src` against rules D1–D6 with `rust/tests` as the test
+//! inventory for rule D5. Exit codes: 0 clean, 1 findings, 2 usage/IO
+//! error. `--src`/`--tests` override the roots (used by the fixture suite
+//! and by the CI step that asserts each bad fixture trips).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use simlint::lint_tree;
+
+fn main() -> ExitCode {
+    let mut src = PathBuf::from("rust/src");
+    let mut tests: Option<PathBuf> = Some(PathBuf::from("rust/tests"));
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--src" => match args.next() {
+                Some(v) => src = PathBuf::from(v),
+                None => return usage("--src needs a path"),
+            },
+            "--tests" => match args.next() {
+                Some(v) => tests = Some(PathBuf::from(v)),
+                None => return usage("--tests needs a path"),
+            },
+            "--no-tests" => tests = None,
+            "--help" | "-h" => {
+                print_usage();
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    if !src.is_dir() {
+        eprintln!("simlint: source root `{}` is not a directory", src.display());
+        return ExitCode::from(2);
+    }
+    // A missing tests root is fine (fixture trees without one): D5 then
+    // simply has an empty inventory.
+    let tests = tests.filter(|t| t.is_dir());
+
+    let report = match lint_tree(&src, tests.as_deref()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for g in &report.gates {
+        let verdict = if g.anchored {
+            format!("anchored ({})", g.how)
+        } else {
+            "UNANCHORED".to_string()
+        };
+        println!(
+            "simlint: gate {}::{} ({}:{}) — {}",
+            g.struct_name, g.field, g.file, g.line, verdict
+        );
+    }
+
+    if report.findings.is_empty() {
+        println!("simlint: {} clean (rules D1–D6)", src.display());
+        return ExitCode::SUCCESS;
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "simlint: {} finding(s) in {} — fix, or annotate with `// simlint: allow(Dx, reason)`",
+        report.findings.len(),
+        src.display()
+    );
+    ExitCode::FAILURE
+}
+
+fn print_usage() {
+    println!(
+        "usage: simlint [--src DIR] [--tests DIR | --no-tests]\n\
+         \n\
+         Lints DIR (default rust/src) against the determinism rules D1–D6;\n\
+         the tests DIR (default rust/tests) is the rule-D5 anchor inventory.\n\
+         Exit codes: 0 clean, 1 findings, 2 usage/IO error."
+    );
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("simlint: {msg}");
+    print_usage();
+    ExitCode::from(2)
+}

@@ -1,0 +1,129 @@
+//! Fixture-based self-tests for the determinism lint, plus the self-check
+//! that the real tree (`rust/src`) is clean and every gate field is
+//! anchored. These run under plain `cargo test -p simlint` — the fixtures
+//! are data, never compiled.
+
+use std::path::PathBuf;
+
+use simlint::{lint_tree, LintReport, Rule};
+
+fn crate_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_root() -> PathBuf {
+    crate_dir()
+        .parent()
+        .and_then(|p| p.parent())
+        .expect("tools/simlint sits two levels below the repo root")
+        .to_path_buf()
+}
+
+fn lint_fixture(rule: &str, kind: &str) -> LintReport {
+    let root = crate_dir().join("fixtures").join(rule).join(kind);
+    let src = root.join("src");
+    let tests = root.join("tests");
+    let tests = tests.is_dir().then_some(tests);
+    lint_tree(&src, tests.as_deref())
+        .unwrap_or_else(|e| panic!("scanning fixture {rule}/{kind} failed: {e}"))
+}
+
+const RULES: [(&str, Rule); 6] = [
+    ("d1", Rule::D1),
+    ("d2", Rule::D2),
+    ("d3", Rule::D3),
+    ("d4", Rule::D4),
+    ("d5", Rule::D5),
+    ("d6", Rule::D6),
+];
+
+#[test]
+fn bad_fixtures_trip_exactly_their_rule() {
+    for (name, rule) in RULES {
+        let report = lint_fixture(name, "bad");
+        assert!(
+            !report.findings.is_empty(),
+            "fixture {name}/bad should trip rule {rule:?} but linted clean"
+        );
+        for f in &report.findings {
+            assert_eq!(
+                f.rule, rule,
+                "fixture {name}/bad tripped an unexpected rule: {f}"
+            );
+        }
+    }
+}
+
+#[test]
+fn good_fixtures_lint_clean() {
+    for (name, _) in RULES {
+        let report = lint_fixture(name, "good");
+        assert!(
+            report.findings.is_empty(),
+            "fixture {name}/good should be clean, got:\n{}",
+            report
+                .findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
+
+#[test]
+fn rust_src_is_simlint_clean() {
+    let src = repo_root().join("rust").join("src");
+    let tests = repo_root().join("rust").join("tests");
+    let report = lint_tree(&src, Some(&tests)).expect("scanning rust/src failed");
+    assert!(
+        report.findings.is_empty(),
+        "rust/src must lint clean (fix, or annotate with a reasoned \
+         `// simlint: allow(Dx, reason)`), got:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The positive half of rule D5: the gate structs were actually discovered
+/// (a silently-empty scan would make `rust_src_is_simlint_clean`
+/// meaningless for D5) and every gate field has a test anchor.
+#[test]
+fn gate_fields_are_anchored_by_equivalence_tests() {
+    let src = repo_root().join("rust").join("src");
+    let tests = repo_root().join("rust").join("tests");
+    let report = lint_tree(&src, Some(&tests)).expect("scanning rust/src failed");
+
+    let expected = [
+        ("PruneConfig", "zero_filter"),
+        ("PruneConfig", "warm_start"),
+        ("PruneConfig", "bound_dominance"),
+        ("GoodputConfig", "workload_cache"),
+        ("SimParams", "kv_transfer"),
+        ("SimParams", "front_cache"),
+    ];
+    for (s, f) in expected {
+        let gate = report
+            .gates
+            .iter()
+            .find(|g| g.struct_name == s && g.field == f)
+            .unwrap_or_else(|| panic!("gate {s}::{f} was not discovered by rule D5"));
+        assert!(
+            gate.anchored,
+            "gate {s}::{f} ({}:{}) has no equivalence-test anchor",
+            gate.file, gate.line
+        );
+    }
+    for g in &report.gates {
+        assert!(
+            g.anchored,
+            "gate {}::{} ({}:{}) has no equivalence-test anchor — add an on/off \
+             equivalence test per the add-a-fast-path recipe",
+            g.struct_name, g.field, g.file, g.line
+        );
+    }
+}
