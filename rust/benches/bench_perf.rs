@@ -9,14 +9,18 @@ use bestserve::util::walltime::stopwatch;
 use bestserve::config::{
     ArrivalProcess, HardwareConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
 };
-use bestserve::estimator::{front_cache_totals, AnalyticOracle, CacheStats, LatencyModel};
+use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::obs::{FrontCacheScope, Profiler, TraceSink};
 use bestserve::optimizer::{
     find_goodput, optimize, optimize_parallel, AnalyticFactory, GoodputConfig, PruneConfig,
 };
-use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
+use bestserve::planner::{plan, plan_with_profiler, LinearCardCost, PlannerConfig};
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
-use bestserve::simulator::{generate_workload, simulate, SimParams, SpanMode};
+use bestserve::simulator::{
+    generate_workload, simulate, simulate_traced, SimParams, SimReport, SpanMode,
+};
 use bestserve::testbed::{Testbed, TestbedConfig};
+use bestserve::util::json::Json;
 
 fn time<F: FnMut()>(mut f: F) -> f64 {
     let t0 = stopwatch();
@@ -157,14 +161,10 @@ fn main() -> bestserve::Result<()> {
     };
     let mut g_off = 0.0;
     let dt_off = time(|| g_off = probe(false));
-    let fc_before = front_cache_totals();
+    let fc_scope = FrontCacheScope::begin();
     let mut g_on = 0.0;
     let dt_on = time(|| g_on = probe(true));
-    let fc_after = front_cache_totals();
-    let fc = CacheStats {
-        hits: fc_after.hits - fc_before.hits,
-        misses: fc_after.misses - fc_before.misses,
-    };
+    let fc = fc_scope.delta();
     let probe_speedup = dt_off / dt_on;
     println!(
         "goodput probe fast path   : exact-span bisection {dt_off:.2}s off vs {dt_on:.2}s on \
@@ -417,6 +417,124 @@ fn main() -> bestserve::Result<()> {
         dt_big < PLAN_PRUNED_BUDGET_S,
         "pruned {big_grid}-point plan sweep took {dt_big:.1}s, budget {PLAN_PRUNED_BUDGET_S}s \
          on one CPU"
+    );
+
+    // --- Observability plane -------------------------------------------------
+    // The obs instruments are off by default and must cost essentially
+    // nothing when off: `simulate_traced` with the `sim_trace` gate down is
+    // one branch before delegating to the untraced path. Interleaved
+    // min-of-rounds timing keeps the <2% bound robust to scheduler noise.
+    let report_key = |r: &SimReport| {
+        (
+            r.n,
+            r.ttft.p90.to_bits(),
+            r.tpot.p90.to_bits(),
+            r.e2e.p90.to_bits(),
+            r.throughput.to_bits(),
+            r.makespan.to_bits(),
+        )
+    };
+    let obs_wl = Workload::poisson(&Scenario::fixed("perf", 2048, 64, 20_000));
+    let off_sink = TraceSink::new();
+    let mut dt_plain = f64::INFINITY;
+    let mut dt_gated = f64::INFINITY;
+    let mut rep_plain = None;
+    let mut rep_gated = None;
+    for _ in 0..3 {
+        dt_plain = dt_plain.min(time(|| {
+            rep_plain = Some(simulate(&oracle, &platform, &st, &obs_wl, 3.0, params).unwrap());
+        }));
+        dt_gated = dt_gated.min(time(|| {
+            rep_gated = Some(
+                simulate_traced(&oracle, &platform, &st, &obs_wl, 3.0, params, &off_sink)
+                    .unwrap(),
+            );
+        }));
+    }
+    let (rep_plain, rep_gated) = (rep_plain.unwrap(), rep_gated.unwrap());
+    let overhead = dt_gated / dt_plain - 1.0;
+    println!(
+        "disabled sim-trace hooks  : plain {dt_plain:.3}s vs gated {dt_gated:.3}s — \
+         {:+.2}% overhead",
+        100.0 * overhead
+    );
+    assert!(off_sink.is_empty(), "sim-trace gate down must record nothing");
+    assert_eq!(
+        report_key(&rep_plain),
+        report_key(&rep_gated),
+        "traced entry point with the gate down must reproduce the report bit for bit"
+    );
+    assert!(
+        dt_gated <= dt_plain * 1.02 + 0.005,
+        "disabled sim-trace hooks cost {:.2}% (> 2%): {dt_gated:.3}s gated vs \
+         {dt_plain:.3}s plain",
+        100.0 * overhead
+    );
+
+    // Gate up: same report bits, and the sink's export is valid Chrome
+    // `trace_event` JSON (one entry per recorded event).
+    let on_sink = TraceSink::new();
+    let traced = SimParams { sim_trace: true, ..params };
+    let rep_on =
+        simulate_traced(&oracle, &platform, &st, &obs_wl, 3.0, traced, &on_sink).unwrap();
+    assert_eq!(
+        report_key(&rep_plain),
+        report_key(&rep_on),
+        "recording the sim trace must not change the report"
+    );
+    let chrome = Json::parse(&on_sink.to_chrome_json().dump())
+        .expect("sim trace must serialize to valid JSON");
+    let n_events = chrome.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len);
+    assert_eq!(n_events, Some(on_sink.len()), "one trace entry per recorded event");
+    println!(
+        "  sim trace               : {} events, valid Chrome trace_event JSON",
+        on_sink.len()
+    );
+
+    // Profiled planner sweep: identical PlanReport to the unprofiled pruned
+    // run above, and the span trace is the `--profile` payload CI keeps as
+    // an artifact (openable in Perfetto).
+    let prof = Profiler::on();
+    let mut prof_rep = None;
+    let dt_prof = time(|| {
+        prof_rep = Some(
+            plan_with_profiler(
+                &platform.model,
+                &platform.eff,
+                &profiles,
+                &plan_wl,
+                &Slo::paper_default(),
+                &LinearCardCost,
+                &plan_cfg,
+                1,
+                &prof,
+            )
+            .unwrap(),
+        );
+    });
+    let prof_rep = prof_rep.unwrap();
+    assert_eq!(
+        prof_rep.frontier, pruned.frontier,
+        "profiling must not change the Pareto frontier"
+    );
+    assert_eq!(
+        prof_rep.min_cost, pruned.min_cost,
+        "profiling must not change the min-cost plans"
+    );
+    let spans = prof.spans();
+    assert!(!spans.is_empty(), "a profiled sweep must record spans");
+    Json::parse(&prof.to_chrome_json().dump())
+        .expect("sweep profile must serialize to valid JSON");
+    let profile_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("bench manifest dir sits below the workspace root")
+        .join("target")
+        .join("bench_perf_profile.json");
+    prof.write_json(&profile_path)?;
+    println!(
+        "sweep profiler            : {} spans over a {dt_prof:.2}s profiled plan — wrote {}",
+        spans.len(),
+        profile_path.display()
     );
     Ok(())
 }

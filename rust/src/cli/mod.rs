@@ -23,6 +23,7 @@ pub const VALUE_OPTIONS: &[&str] = &[
     "n",
     "out",
     "phase",
+    "profile",
     "rate",
     "rates",
     "repeats",
@@ -30,6 +31,7 @@ pub const VALUE_OPTIONS: &[&str] = &[
     "save-trace",
     "scenario",
     "seed",
+    "sim-trace",
     "slo-relax",
     "slo-tpot",
     "slo-ttft",

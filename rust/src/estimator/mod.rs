@@ -14,5 +14,7 @@ pub mod workload;
 
 pub use bound::{goodput_upper_bound, slo_unattainable};
 pub use modules::{block_breakdown, Module, ModuleBreakdown, BLOCK_SEQUENCE};
-pub use oracle::{front_cache_totals, AnalyticOracle, CacheStats, FrontCache, LatencyModel};
+pub use oracle::{
+    front_cache_reset, front_cache_totals, AnalyticOracle, CacheStats, FrontCache, LatencyModel,
+};
 pub use roofline::{achieved_performance, critical_intensity, op_time, ops_time, OpCost};

@@ -313,6 +313,17 @@ pub fn front_cache_totals() -> CacheStats {
     }
 }
 
+/// Zero the process-wide front-cache totals. Observability hygiene for
+/// sequential runs that want absolute (not delta) totals — each CLI
+/// command resets before work or, preferably, uses
+/// `obs::FrontCacheScope` delta semantics, which tolerate concurrent
+/// library users. Tests that assert on totals should prefer the scope:
+/// reset is inherently racy under the parallel test harness.
+pub fn front_cache_reset() {
+    FRONT_HITS.store(0, Ordering::Relaxed);
+    FRONT_MISSES.store(0, Ordering::Relaxed);
+}
+
 /// A per-simulator, lock-free, direct-mapped memo over the full
 /// [`LatencyModel`] query surface — the last-level latency cache in front
 /// of the (sharded, but still locked and atomically counted) oracle memo.

@@ -48,10 +48,14 @@
 //! * [`validation`] — the Figure 11 experiment: BestServe vs ground truth
 //!   across strategies and operating scenarios, covering the full
 //!   `Nm`/`NpMd`/`Nf` space.
+//! * [`obs`] — the observability plane: sim-time event tracing with Chrome
+//!   `trace_event`/CSV export, a unified metrics registry, and wall-time
+//!   sweep profiling — all off by default and bit-exactness-preserving.
 //! * [`util`] — RNG, stats, JSON, tables, property-testing harness.
 pub mod cli;
 pub mod config;
 pub mod estimator;
+pub mod obs;
 pub mod runtime;
 pub mod optimizer;
 pub mod planner;

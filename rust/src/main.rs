@@ -21,11 +21,12 @@ use bestserve::config::{
 };
 use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
+use bestserve::obs::{FrontCacheScope, Profiler, Registry, TraceSink};
 use bestserve::optimizer::{
     optimize_parallel_with, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
     PruneConfig,
 };
-use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
+use bestserve::planner::{plan_with_profiler, LinearCardCost, PlannerConfig};
 use bestserve::report;
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, SimParams, SpanMode};
@@ -45,6 +46,10 @@ COMMANDS
   simulate  --strategy 3p2d-tp4 --scenario op2 --rate 3.5 [--n N] [--hist]
             [--grid] [--tau X] [--seed K] [--exact-span]
             [--save-trace F] (write the generated workload as a CSV trace)
+            [--sim-trace F] (export the simulated event timeline — arrivals,
+                             batches, prefill/decode spans, preemptions, role
+                             switches, KV hand-offs — as Chrome trace_event
+                             JSON openable in Perfetto, or CSV if F ends .csv)
   sweep     --strategy S --scenario OP --rates lo:hi:step [--grid] [--out DIR]
   optimize  --scenario OP [--max-cards 8] [--tp 1,2,4,8] [--grid]
             [--bmax-prefill 4] [--bmax-decode 16] [--repeats 1]
@@ -63,6 +68,10 @@ COMMANDS
             [--tolerance 0.1] [--repeats 1] [--out DIR]
             [--no-prune]    (brute-force reference sweep: disable the
                              output-preserving pruning cuts)
+            [--profile F]   (record wall-time spans — planner waves, per-point
+                             probes, bisection iterations — as Chrome-trace
+                             JSON; the sweep's outputs are bit-identical with
+                             profiling on or off)
             Sweeps hardware x cluster size x strategy, then reports the
             cheapest feasible plan per target and the Pareto frontier over
             {goodput, cards, $/hr, $/1M output tokens}. Deterministic for
@@ -86,6 +95,11 @@ COMMON OPTIONS
   --no-fast-path  disable the output-preserving per-probe fast paths (the
              materialized-workload cache and the latency-model front cache);
              results are bit-identical either way — this exists for A/B runs
+  --stats    (simulate / plan / testbed) append a run-stats table — counters
+             and gauges from the obs registry: request counts, throughput,
+             role occupancy, planner probe/prune counters, KV hand-offs, and
+             this run's front-cache hits/misses (delta-scoped, not the
+             process totals)
 
 STRATEGY NOTATION
   5m         collocation: 5 instances serving both phases (vLLM-style)
@@ -182,6 +196,8 @@ fn sim_params_from(args: &Args) -> Result<SimParams> {
         // Dynamic (Nf) role-switch dead time, in ms on the CLI.
         switch_latency: args.f64_or("switch-latency", defaults.switch_latency * 1e3)? / 1e3,
         front_cache: !args.flag("no-fast-path"),
+        // `--sim-trace F` both opens the gate and names the output file.
+        sim_trace: args.get("sim-trace").is_some(),
         ..defaults
     })
 }
@@ -276,6 +292,9 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    // Delta scope over the process-global front-cache totals, so --stats
+    // reports this command's run only.
+    let cache_scope = FrontCacheScope::begin();
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
     let workload = workload_from(args)?;
@@ -316,6 +335,33 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let reqs = generate_workload(&workload, scale, params.seed)?;
         bestserve::simulator::save_trace(&reqs, path)?;
         println!("wrote trace to {path}");
+    }
+    if let Some(path) = args.get("sim-trace") {
+        // Re-run with the tracer attached (same seed, so the same events
+        // the table above summarized) and export the event timeline.
+        let sink = TraceSink::new();
+        bestserve::simulator::simulate_traced(
+            model.as_ref(),
+            &platform,
+            &strategy,
+            &workload,
+            scale,
+            params,
+            &sink,
+        )?;
+        if path.ends_with(".csv") {
+            sink.to_csv().save(path)?;
+        } else {
+            std::fs::write(path, sink.to_chrome_json().dump())?;
+        }
+        println!("wrote {} sim-trace events to {path}", sink.len());
+    }
+    if args.flag("stats") {
+        let mut reg = Registry::new();
+        reg.absorb_sim_report(&t.report);
+        reg.absorb_cache("front_cache", &cache_scope.delta());
+        println!("run stats:");
+        print!("{}", report::run_stats_table(&reg.snapshot()).render());
     }
     Ok(())
 }
@@ -460,6 +506,7 @@ fn hardware_profiles_from(args: &Args) -> Result<Vec<HardwareConfig>> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
+    let cache_scope = FrontCacheScope::begin();
     // Model + efficiency come from --config (its hardware entry is ignored:
     // the planner sweeps its own hardware axis) or the --model preset.
     let (model, eff) = match args.get("config") {
@@ -506,8 +553,22 @@ fn cmd_plan(args: &Args) -> Result<()> {
         },
     };
     let threads = args.usize_or("threads", default_threads())?.max(1);
+    // `--profile F` records wave/probe/bisection wall-time spans; the
+    // disabled profiler is a branch per span site and the report is
+    // bit-identical either way.
+    let prof = if args.get("profile").is_some() { Profiler::on() } else { Profiler::off() };
     let t0 = bestserve::util::walltime::stopwatch();
-    let rep = plan(&model, &eff, &profiles, &workload, &slo, &LinearCardCost, &cfg, threads)?;
+    let rep = plan_with_profiler(
+        &model,
+        &eff,
+        &profiles,
+        &workload,
+        &slo,
+        &LinearCardCost,
+        &cfg,
+        threads,
+        &prof,
+    )?;
     println!(
         "capacity plan | {} on {} profile(s) | workload {} | {} plan points in {:.1}s on {} thread(s)",
         model.name,
@@ -535,10 +596,22 @@ fn cmd_plan(args: &Args) -> Result<()> {
         rep.to_csv().save(&path)?;
         println!("wrote {}", path.display());
     }
+    if let Some(path) = args.get("profile") {
+        prof.write_json(std::path::Path::new(path))?;
+        println!("wrote sweep profile ({} spans) to {path}", prof.spans().len());
+    }
+    if args.flag("stats") {
+        let mut reg = Registry::new();
+        reg.absorb_plan_counters(rep.points_probed as u64, rep.points_pruned as u64);
+        reg.absorb_cache("front_cache", &cache_scope.delta());
+        println!("run stats:");
+        print!("{}", report::run_stats_table(&reg.snapshot()).render());
+    }
     Ok(())
 }
 
 fn cmd_testbed(args: &Args) -> Result<()> {
+    let cache_scope = FrontCacheScope::begin();
     let platform = platform_from(args)?;
     let strategy = strategy_from(args)?;
     let workload = workload_from(args)?;
@@ -613,6 +686,14 @@ fn cmd_testbed(args: &Args) -> Result<()> {
             "  engine {i}: {} prefill iters, {} decode iters, {} preemptions, busy {:.1}s",
             st.prefill_iterations, st.decode_iterations, st.preemptions, st.busy_time
         );
+    }
+    if args.flag("stats") {
+        let mut reg = Registry::new();
+        reg.absorb_sim_report(rep);
+        reg.absorb_kv_handoffs(out.kv_handoffs);
+        reg.absorb_cache("front_cache", &cache_scope.delta());
+        println!("run stats:");
+        print!("{}", report::run_stats_table(&reg.snapshot()).render());
     }
     Ok(())
 }

@@ -1,0 +1,38 @@
+//! The observability plane: sim-time tracing, a unified metrics registry,
+//! and wall-time sweep profiling.
+//!
+//! Three instruments, all **off by default** and all output-preserving —
+//! rankings, `PlanReport`s and validation rows are bit-identical with every
+//! instrument on or off (the on/off equivalence suites pin this, the same
+//! way the `fast_paths_preserve_*` anchors pin the fast-path gates):
+//!
+//! * [`trace`] — a [`TraceSink`]/[`SimTracer`] pair hooked into the
+//!   simulator policies, recording typed events (arrival, batch formation,
+//!   prefill/decode start+end, preemption, role switch, KV hand-off) in
+//!   **simulated** time, exportable as Chrome `trace_event` JSON (one track
+//!   per instance; Perfetto/`chrome://tracing`) and CSV. Gated by
+//!   `SimParams::sim_trace` (CLI `--sim-trace out.json`).
+//! * [`registry`] — [`Registry`], deterministic named counters/gauges that
+//!   absorb the scattered run statistics (`CacheStats`, front-cache totals,
+//!   planner `points_probed`/`points_pruned`, `kv_handoffs`, role
+//!   occupancy) behind one snapshot rendered by `report::run_stats_table`;
+//!   plus [`FrontCacheScope`], delta semantics over the process-global
+//!   front-cache totals so each run reports only itself.
+//! * [`profile`] — [`Profiler`], wall-time spans around planner waves,
+//!   per-strategy probes and bisection iterations, emitted as a
+//!   flame-style Chrome trace (CLI `--profile out.json`). The only `obs`
+//!   submodule allowed to hold a wall-clock type (lint rule D2), and only
+//!   via `util::walltime::stopwatch`.
+//!
+//! Determinism contract: `trace` and `registry` are simulation-side and
+//! read no clocks; `profile` observes the host but never feeds back into
+//! results. Adding an instrument to a new subsystem follows the
+//! add-an-instrument recipe in ROADMAP.md.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use profile::{Profiler, Span, SpanGuard};
+pub use registry::{FrontCacheScope, Registry, Snapshot};
+pub use trace::{EventKind, SimTracer, TraceEvent, TraceSink};

@@ -1,0 +1,203 @@
+//! The sweep profiler: named wall-time spans around planner waves,
+//! per-strategy probes and bisection iterations.
+//!
+//! This is the one `obs` submodule that touches wall time, and it does so
+//! only through the sanctioned [`crate::util::walltime::stopwatch`] (lint
+//! rule D2 names this file, alongside `util/walltime.rs`, as the places a
+//! wall-clock *type* may live — `Instant::now` itself remains banned here
+//! too). Profiling never feeds back into simulation results: spans are
+//! observations about the host, and the equivalence suites pin that
+//! rankings and `PlanReport`s are bit-identical with the profiler on or
+//! off.
+//!
+//! A [`Profiler`] is `Sync` (mutex-guarded span list) so planner workers
+//! can share one across `parallel_map`. Disabled ([`Profiler::off`], the
+//! default everywhere) a span open/close is one branch — no clock read, no
+//! allocation, no lock.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::walltime::stopwatch;
+
+/// One closed wall-time span, relative to the profiler's epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    /// Seconds since the profiler was created.
+    pub start_s: f64,
+    pub dur_s: f64,
+    /// Concurrency lane: 0 when nothing else was open, distinct per
+    /// concurrently-open span — the flame layout's track index.
+    pub lane: u32,
+}
+
+/// Wall-time span recorder, off by default. The `enabled` gate follows the
+/// `SimParams`/`GoodputConfig` gate convention: it must stay anchored by an
+/// on/off equivalence test (lint rule D5 covers `Profiler` like the other
+/// gate structs), and the named constructors [`Profiler::on`] /
+/// [`Profiler::off`] are the anchor points.
+#[derive(Debug)]
+pub struct Profiler {
+    /// Whether spans are recorded. Off: open/close is a branch.
+    pub enabled: bool,
+    /// Epoch; `None` when disabled so construction reads no clock.
+    t0: Option<Instant>,
+    spans: Mutex<Vec<Span>>,
+    /// Currently-open span count, for lane assignment.
+    active: AtomicU32,
+}
+
+impl Profiler {
+    /// A recording profiler (reads the stopwatch once, for its epoch).
+    pub fn on() -> Profiler {
+        Profiler {
+            enabled: true,
+            t0: Some(stopwatch()),
+            spans: Mutex::new(Vec::new()),
+            active: AtomicU32::new(0),
+        }
+    }
+
+    /// The disabled profiler: no clock read at construction, every span a
+    /// no-op. This is what the non-`_profiled` entry points pass.
+    pub fn off() -> Profiler {
+        Profiler {
+            enabled: false,
+            t0: None,
+            spans: Mutex::new(Vec::new()),
+            active: AtomicU32::new(0),
+        }
+    }
+
+    /// Open a span; it records itself when the guard drops.
+    pub fn span(&self, name: impl Into<String>) -> SpanGuard<'_> {
+        if !self.enabled {
+            return SpanGuard { prof: self, name: None, start: None, lane: 0 };
+        }
+        let lane = self.active.fetch_add(1, Ordering::Relaxed);
+        SpanGuard {
+            prof: self,
+            name: Some(name.into()),
+            start: Some(stopwatch()),
+            lane,
+        }
+    }
+
+    /// Closed spans so far, sorted by start time (then name, for spans the
+    /// clock cannot tell apart).
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = self.spans.lock().expect("profiler span list poisoned").clone();
+        out.sort_by(|a, b| a.start_s.total_cmp(&b.start_s).then_with(|| a.name.cmp(&b.name)));
+        out
+    }
+
+    /// Chrome `trace_event` JSON of the recorded spans (`ts`/`dur` in
+    /// microseconds, `pid` 0, `tid` = concurrency lane) — the
+    /// `--profile out.json` payload, openable in Perfetto.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .spans()
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("cat", Json::Str("sweep".to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::Num(s.start_s * 1e6)),
+                    ("dur", Json::Num(s.dur_s * 1e6)),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(f64::from(s.lane))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    /// Write the Chrome-trace JSON to `path`, creating parent directories.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_chrome_json().dump())
+    }
+}
+
+/// RAII guard: the span closes (and records) on drop.
+pub struct SpanGuard<'a> {
+    prof: &'a Profiler,
+    name: Option<String>,
+    start: Option<Instant>,
+    lane: u32,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let (Some(name), Some(start)) = (self.name.take(), self.start) else {
+            return;
+        };
+        let end = stopwatch();
+        let t0 = self.prof.t0.expect("enabled profiler has an epoch");
+        let span = Span {
+            name,
+            start_s: start.duration_since(t0).as_secs_f64(),
+            dur_s: end.duration_since(start).as_secs_f64(),
+            lane: self.lane,
+        };
+        self.prof.active.fetch_sub(1, Ordering::Relaxed);
+        self.prof
+            .spans
+            .lock()
+            .expect("profiler span list poisoned")
+            .push(span);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let p = Profiler::off();
+        {
+            let _a = p.span("outer");
+            let _b = p.span("inner");
+        }
+        assert!(p.spans().is_empty());
+        assert!(!p.enabled);
+    }
+
+    #[test]
+    fn enabled_profiler_records_nested_spans_on_lanes() {
+        let p = Profiler::on();
+        {
+            let _outer = p.span("outer");
+            let _inner = p.span("inner");
+        }
+        let spans = p.spans();
+        assert_eq!(spans.len(), 2);
+        let outer = spans.iter().find(|s| s.name == "outer").unwrap();
+        let inner = spans.iter().find(|s| s.name == "inner").unwrap();
+        assert_eq!(outer.lane, 0);
+        assert_eq!(inner.lane, 1);
+        assert!(outer.start_s >= 0.0 && outer.dur_s >= 0.0);
+        assert!(inner.start_s >= outer.start_s);
+        // Lanes free up once spans close.
+        drop(p.span("later"));
+        assert_eq!(p.spans().iter().find(|s| s.name == "later").unwrap().lane, 0);
+    }
+
+    #[test]
+    fn chrome_json_round_trips() {
+        let p = Profiler::on();
+        drop(p.span("wave 0"));
+        let parsed = Json::parse(&p.to_chrome_json().dump()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("wave 0"));
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+    }
+}

@@ -1,0 +1,185 @@
+//! The unified metrics registry: named deterministic counters and gauges.
+//!
+//! Today's run statistics are scattered — `estimator::CacheStats` prints in
+//! `bench_perf`, `PlanReport::points_probed`/`points_pruned` in the planner,
+//! `TestbedReport::kv_handoffs` and role occupancy in their own tables. A
+//! [`Registry`] absorbs them all behind one snapshotable interface
+//! ([`Registry::snapshot`]) rendered by a single table
+//! (`report::run_stats_table`).
+//!
+//! Everything here is deterministic by construction: `BTreeMap` storage, no
+//! clocks, no iteration-order dependence. A registry belongs to one run (a
+//! CLI command, a bench case) — it is not a process-global.
+//!
+//! [`FrontCacheScope`] is the hygiene fix for the one process-global that
+//! does exist: `estimator::front_cache_totals()` accumulates across every
+//! library call in the process, so a CLI command that reports the raw
+//! totals reports every *earlier* run too. A scope captures the totals at
+//! construction and reports only its own delta.
+
+use std::collections::BTreeMap;
+
+use crate::estimator::{front_cache_totals, CacheStats};
+use crate::simulator::{RoleOccupancy, SimReport};
+
+/// Deterministic named counters (monotone `u64`) and gauges (`f64`).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+/// A point-in-time view of a registry, sorted by name (the `BTreeMap`
+/// order), ready for rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Bump counter `name` by `delta` (created at zero on first touch).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set gauge `name` (last write wins).
+    pub fn set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Absorb a cache's hit/miss counters under `prefix` (e.g.
+    /// `front_cache`, `oracle_memo`), plus its hit rate as a gauge.
+    pub fn absorb_cache(&mut self, prefix: &str, s: &CacheStats) {
+        self.add(&format!("{prefix}.hits"), s.hits);
+        self.add(&format!("{prefix}.misses"), s.misses);
+        self.set(&format!("{prefix}.hit_rate"), s.hit_rate());
+    }
+
+    /// Absorb a dynamic (`Nf`) pool's role-occupancy accounting.
+    pub fn absorb_role_occupancy(&mut self, occ: &RoleOccupancy) {
+        self.add("roles.switches", occ.switches);
+        self.set("roles.prefill_s", occ.prefill);
+        self.set("roles.decode_s", occ.decode);
+        self.set("roles.switching_s", occ.switching);
+    }
+
+    /// Absorb the planner sweep's grid accounting.
+    pub fn absorb_plan_counters(&mut self, points_probed: u64, points_pruned: u64) {
+        self.add("plan.points_probed", points_probed);
+        self.add("plan.points_pruned", points_pruned);
+    }
+
+    /// Absorb a simulation report's run-level aggregates (including the
+    /// role occupancy when the run was a dynamic pool).
+    pub fn absorb_sim_report(&mut self, rep: &SimReport) {
+        self.add("sim.requests", rep.n as u64);
+        self.set("sim.throughput_rps", rep.throughput);
+        self.set("sim.makespan_s", rep.makespan);
+        if let Some(occ) = &rep.role_occupancy {
+            self.absorb_role_occupancy(occ);
+        }
+    }
+
+    /// Absorb a testbed run's KV hand-off count.
+    pub fn absorb_kv_handoffs(&mut self, n: u64) {
+        self.add("kv.handoffs", n);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: self.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        }
+    }
+}
+
+/// Delta semantics over the process-global front-cache totals: capture the
+/// totals at construction, report only what accumulated since. This is what
+/// lets each CLI command (and each bench case) report *its own* run even
+/// though the underlying counters live for the whole process.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontCacheScope {
+    base: CacheStats,
+}
+
+impl FrontCacheScope {
+    /// Open a scope at the current totals.
+    pub fn begin() -> FrontCacheScope {
+        FrontCacheScope { base: front_cache_totals() }
+    }
+
+    /// Hits/misses accumulated since [`FrontCacheScope::begin`].
+    pub fn delta(&self) -> CacheStats {
+        let now = front_cache_totals();
+        CacheStats {
+            hits: now.hits - self.base.hits,
+            misses: now.misses - self.base.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = Registry::new();
+        r.add("x.hits", 2);
+        r.add("x.hits", 3);
+        r.set("g", 1.0);
+        r.set("g", 2.5);
+        assert_eq!(r.counter("x.hits"), 5);
+        assert_eq!(r.counter("absent"), 0);
+        assert_eq!(r.gauge("g"), Some(2.5));
+        assert_eq!(r.gauge("absent"), None);
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted_and_complete() {
+        let mut r = Registry::new();
+        r.add("z.count", 1);
+        r.add("a.count", 2);
+        r.set("m.rate", 0.5);
+        let s = r.snapshot();
+        assert_eq!(
+            s.counters,
+            vec![("a.count".to_string(), 2), ("z.count".to_string(), 1)]
+        );
+        assert_eq!(s.gauges, vec![("m.rate".to_string(), 0.5)]);
+    }
+
+    #[test]
+    fn absorbs_cache_and_occupancy_and_plan_counters() {
+        let mut r = Registry::new();
+        r.absorb_cache("front_cache", &CacheStats { hits: 9, misses: 1 });
+        r.absorb_role_occupancy(&RoleOccupancy {
+            prefill: 1.0,
+            decode: 2.0,
+            switching: 0.5,
+            switches: 3,
+        });
+        r.absorb_plan_counters(10, 4);
+        r.absorb_kv_handoffs(7);
+        assert_eq!(r.counter("front_cache.hits"), 9);
+        assert_eq!(r.gauge("front_cache.hit_rate"), Some(0.9));
+        assert_eq!(r.counter("roles.switches"), 3);
+        assert_eq!(r.gauge("roles.decode_s"), Some(2.0));
+        assert_eq!(r.counter("plan.points_probed"), 10);
+        assert_eq!(r.counter("plan.points_pruned"), 4);
+        assert_eq!(r.counter("kv.handoffs"), 7);
+    }
+}

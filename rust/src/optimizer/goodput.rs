@@ -9,6 +9,7 @@
 use crate::config::{Platform, Slo, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::{bound::goodput_upper_bound, LatencyModel};
+use crate::obs::Profiler;
 use crate::simulator::{
     repeat_params, simulate, simulate_requests, MaterializedWorkload, SimParams, SimReport,
 };
@@ -178,6 +179,36 @@ pub fn find_goodput(
     params: SimParams,
     cfg: &GoodputConfig,
 ) -> Result<f64> {
+    find_goodput_profiled(
+        model,
+        platform,
+        strategy,
+        workload,
+        slo,
+        params,
+        cfg,
+        &Profiler::off(),
+    )
+}
+
+/// [`find_goodput`] with a wall-time [`Profiler`] attached: one span per
+/// bisection iteration (named with the probed scale), so a `--profile`
+/// trace shows where a sweep's simulation time actually went. The profiler
+/// observes the host clock only and never feeds back into the search —
+/// results are bit-identical with it on or off
+/// (`profiled_goodput_matches_unprofiled_bit_for_bit`). Disabled
+/// ([`Profiler::off`]), each probe pays one branch.
+#[allow(clippy::too_many_arguments)]
+pub fn find_goodput_profiled(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    workload: &Workload,
+    slo: &Slo,
+    params: SimParams,
+    cfg: &GoodputConfig,
+    prof: &Profiler,
+) -> Result<f64> {
     // The ceiling is the shared analytic bound (`estimator::bound`), so the
     // bracket and the planner's pre-filter can never drift apart. The
     // search loop itself — degenerate-bracket arm included — is the shared
@@ -192,8 +223,13 @@ pub fn find_goodput(
         base_rate: workload.base_rate,
         warm: cfg.warm_hint.map(|g| g / workload.base_rate),
     };
+    let mut iter = 0u32;
     if !cfg.workload_cache {
         return bisect_feasible_rate(bracket, |scale| {
+            iter += 1;
+            let _probe = prof
+                .enabled
+                .then(|| prof.span(format!("bisect iter {iter} (scale {scale:.3})")));
             feasible(model, platform, strategy, workload, slo, params, scale, cfg.repeats)
         });
     }
@@ -210,6 +246,10 @@ pub fn find_goodput(
         })
         .collect::<Result<Vec<_>>>()?;
     bisect_feasible_rate(bracket, |scale| {
+        iter += 1;
+        let _probe = prof
+            .enabled
+            .then(|| prof.span(format!("bisect iter {iter} (scale {scale:.3})")));
         feasible_cached(model, platform, strategy, workload, &mats, slo, params, scale, cfg.repeats)
     })
 }
@@ -423,6 +463,39 @@ mod tests {
                 "hint {hint}: warm {g_warm} vs cold {g_cold}"
             );
         }
+    }
+
+    #[test]
+    fn profiled_goodput_matches_unprofiled_bit_for_bit() {
+        // The profiler observes wall time only; attaching it must not
+        // change one bit of the search result, and the gate follows the
+        // on/off convention: `Profiler::off()` records nothing through the
+        // same code path, `Profiler::on()` records one span per bisection
+        // iteration.
+        let (platform, workload, slo) = setup();
+        let mut st = Strategy::disaggregation(1, 1, 1);
+        st.bmax_prefill = 1;
+        let cfg = GoodputConfig::default();
+        let g = find_goodput(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg,
+        )
+        .unwrap();
+        let on = Profiler::on();
+        let g_on = find_goodput_profiled(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg, &on,
+        )
+        .unwrap();
+        assert_eq!(g.to_bits(), g_on.to_bits());
+        let spans = on.spans();
+        assert!(!spans.is_empty(), "every probe opens a span");
+        assert!(spans.iter().all(|s| s.name.starts_with("bisect iter ")), "{spans:?}");
+        let off = Profiler::off();
+        let g_off = find_goodput_profiled(
+            &Toy, &platform, &st, &workload, &slo, SimParams::default(), &cfg, &off,
+        )
+        .unwrap();
+        assert_eq!(g.to_bits(), g_off.to_bits());
+        assert!(off.spans().is_empty());
     }
 
     #[test]

@@ -28,7 +28,7 @@
 pub mod goodput;
 pub mod memory;
 
-pub use goodput::{find_goodput, GoodputConfig};
+pub use goodput::{find_goodput, find_goodput_profiled, GoodputConfig};
 pub use memory::{check_memory, MemoryCheck};
 
 use std::collections::BTreeMap;
@@ -37,6 +37,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::{Platform, Slo, Strategy, StrategySpace, Workload};
 use crate::error::Result;
 use crate::estimator::{bound, AnalyticOracle, LatencyModel};
+use crate::obs::Profiler;
 use crate::simulator::SimParams;
 use crate::util::stats::rank_desc;
 
@@ -236,10 +237,40 @@ pub fn probe_strategy(
     cfg: &GoodputConfig,
     check_mem: bool,
 ) -> Result<RankedStrategy> {
+    probe_strategy_profiled(
+        model,
+        platform,
+        strategy,
+        workload,
+        slo,
+        sim_params,
+        cfg,
+        check_mem,
+        &Profiler::off(),
+    )
+}
+
+/// [`probe_strategy`] with a wall-time [`Profiler`] attached — the probe's
+/// bisection iterations record spans through
+/// [`goodput::find_goodput_profiled`]. The planner's `--profile` path calls
+/// this so a sweep trace nests probe spans under wave spans; the profiler
+/// never feeds back into the score.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_strategy_profiled(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    workload: &Workload,
+    slo: &Slo,
+    sim_params: SimParams,
+    cfg: &GoodputConfig,
+    check_mem: bool,
+    prof: &Profiler,
+) -> Result<RankedStrategy> {
     if check_mem && !memory::check_memory(platform, strategy, workload).fits() {
         return Ok(RankedStrategy::rejected(strategy));
     }
-    let g = find_goodput(model, platform, strategy, workload, slo, sim_params, cfg)?;
+    let g = find_goodput_profiled(model, platform, strategy, workload, slo, sim_params, cfg, prof)?;
     let cards = strategy.total_cards() as f64;
     Ok(RankedStrategy {
         strategy: strategy.clone(),

@@ -90,7 +90,8 @@ use crate::config::{
 };
 use crate::error::{Error, Result};
 use crate::estimator::{bound, AnalyticOracle, LatencyModel};
-use crate::optimizer::{probe_strategy, GoodputConfig, PruneConfig};
+use crate::obs::Profiler;
+use crate::optimizer::{probe_strategy_profiled, GoodputConfig, PruneConfig};
 use crate::simulator::SimParams;
 use crate::util::bisect::bisect_min_true;
 use crate::util::csv::Csv;
@@ -270,6 +271,39 @@ pub fn plan(
     cfg: &PlannerConfig,
     threads: usize,
 ) -> Result<PlanReport> {
+    plan_with_profiler(
+        model,
+        eff,
+        profiles,
+        workload,
+        slo,
+        cost_model,
+        cfg,
+        threads,
+        &Profiler::off(),
+    )
+}
+
+/// [`plan`] with a wall-time [`crate::obs::Profiler`] attached (the CLI's
+/// `--profile out.json`). Spans cover the wave-0 anchor batch, every
+/// ascending-card wave, each per-point goodput probe, and — through
+/// [`crate::optimizer::find_goodput_profiled`] — every bisection iteration
+/// inside a probe. The profiler observes the host clock only and never
+/// feeds back into the sweep, so the report is bit-identical with
+/// profiling on or off (`profiled_plan_matches_unprofiled_bit_for_bit`);
+/// disabled ([`Profiler::off`]), each span site costs one branch.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_with_profiler(
+    model: &ModelConfig,
+    eff: &EfficiencyParams,
+    profiles: &[HardwareConfig],
+    workload: &Workload,
+    slo: &Slo,
+    cost_model: &dyn CostModel,
+    cfg: &PlannerConfig,
+    threads: usize,
+    prof: &Profiler,
+) -> Result<PlanReport> {
     if profiles.is_empty() {
         return Err(Error::config("planner needs at least one hardware profile"));
     }
@@ -392,8 +426,13 @@ pub fn plan(
         let (hi, si) = (i / n_st, i % n_st);
         let st = &strategies[si];
         let platform = &platforms[hi];
+        // `enabled.then` keeps the disabled path allocation-free: the span
+        // name is only formatted when a trace is actually being recorded.
+        let _probe = prof
+            .enabled
+            .then(|| prof.span(format!("probe {} {}", platform.hardware.name, st)));
         let point_cfg = GoodputConfig { warm_hint, ..cfg.goodput };
-        let ranked = probe_strategy(
+        let ranked = probe_strategy_profiled(
             models[&(hi, st.tp)].as_ref(),
             platform,
             st,
@@ -402,6 +441,7 @@ pub fn plan(
             cfg.sim_params,
             &point_cfg,
             false, // memory verdict already applied
+            prof,
         )?;
         Ok(PlanPoint {
             hardware: platform.hardware.name.clone(),
@@ -487,8 +527,10 @@ pub fn plan(
                 wave0.push((live[k as usize], None));
             }
         }
-        let rows =
-            parallel_map(&wave0, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?;
+        let rows = {
+            let _wave = prof.span("wave 0 anchors");
+            parallel_map(&wave0, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?
+        };
         integrate(rows, &mut results, &mut points_probed, &mut incumbents);
     }
 
@@ -502,7 +544,7 @@ pub fn plan(
             waves.entry(item_cards[i]).or_default().push(i);
         }
     }
-    for wave_items in waves.into_values() {
+    for (cards, wave_items) in waves {
         let mut batch: Vec<(usize, Option<f64>)> = Vec::with_capacity(wave_items.len());
         for &i in &wave_items {
             if prune.bound_dominance {
@@ -547,8 +589,12 @@ pub fn plan(
             }
             batch.push((i, warm_hint));
         }
-        let rows =
-            parallel_map(&batch, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?;
+        let rows = {
+            let _wave = prof
+                .enabled
+                .then(|| prof.span(format!("wave {cards} cards ({} probes)", batch.len())));
+            parallel_map(&batch, threads, |&(i, hint)| probe_point(i, hint).map(|p| (i, p)))?
+        };
         integrate(rows, &mut results, &mut points_probed, &mut incumbents);
     }
 
@@ -726,6 +772,51 @@ mod tests {
             pruned.points_probed,
             brute.points_probed
         );
+    }
+
+    #[test]
+    fn profiled_plan_matches_unprofiled_bit_for_bit() {
+        // The profiler observes wall time only; attaching it must not
+        // change one output bit. The gate follows the on/off convention:
+        // `Profiler::off()` records nothing through the same code path,
+        // `Profiler::on()` records wave, probe, and bisection-iteration
+        // spans that render as a valid Chrome trace.
+        let platform = Platform::paper_testbed();
+        let profiles = vec![HardwareConfig::ascend_910b3(), HardwareConfig::h100_sxm()];
+        let workload = Workload::poisson(&Scenario::fixed("t", 256, 16, 150));
+        let cfg = small_cfg(vec![0.5], 4);
+        let run = |prof: &Profiler| {
+            plan_with_profiler(
+                &platform.model,
+                &platform.eff,
+                &profiles,
+                &workload,
+                &Slo::paper_default(),
+                &LinearCardCost,
+                &cfg,
+                2,
+                prof,
+            )
+            .unwrap()
+        };
+        let off = Profiler::off();
+        let on = Profiler::on();
+        let rep_off = run(&off);
+        let rep_on = run(&on);
+        assert_eq!(rep_off, rep_on);
+        for (a, b) in rep_off.points.iter().zip(rep_on.points.iter()) {
+            assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+            assert_eq!(a.cost_per_hour.to_bits(), b.cost_per_hour.to_bits());
+            assert_eq!(a.cost_per_mtok.to_bits(), b.cost_per_mtok.to_bits());
+        }
+        assert!(off.spans().is_empty(), "disabled profiler must record nothing");
+        let spans = on.spans();
+        assert!(spans.iter().any(|s| s.name.starts_with("wave ")), "{spans:?}");
+        assert!(spans.iter().any(|s| s.name.starts_with("probe ")), "{spans:?}");
+        assert!(spans.iter().any(|s| s.name.starts_with("bisect iter ")), "{spans:?}");
+        let parsed = crate::util::json::Json::parse(&on.to_chrome_json().dump()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), spans.len());
     }
 
     #[test]

@@ -167,9 +167,11 @@ impl TableSlo {
     }
 }
 
-/// Per-class TTFT/TPOT percentile breakdown of a multi-class simulation —
-/// the workload-plane extension of the Tables 4/5 panels. Class indices
-/// are resolved to names through the workload's mix.
+/// Per-class TTFT/TPOT/E2E percentile breakdown of a multi-class
+/// simulation — the workload-plane extension of the Tables 4/5 panels.
+/// Class indices are resolved to names through the workload's mix. E2E is
+/// reported in seconds (it spans the whole request, where milliseconds
+/// stop being the natural unit).
 pub fn per_class_table(report: &SimReport, workload: &Workload) -> Table {
     let mut t = Table::new(&[
         "class",
@@ -180,6 +182,8 @@ pub fn per_class_table(report: &SimReport, workload: &Workload) -> Table {
         "TPOT P50 (ms)",
         "TPOT P90 (ms)",
         "TPOT P99 (ms)",
+        "E2E P50 (s)",
+        "E2E P90 (s)",
     ])
     .numeric_body();
     for c in &report.per_class {
@@ -197,7 +201,25 @@ pub fn per_class_table(report: &SimReport, workload: &Workload) -> Table {
             ms(c.tpot.p50 * 1e3),
             ms(c.tpot.p90 * 1e3),
             ms(c.tpot.p99 * 1e3),
+            format!("{:.3}", c.e2e.p50),
+            format!("{:.3}", c.e2e.p90),
         ]);
+    }
+    t
+}
+
+/// The run-statistics panel: one row per named counter/gauge of an
+/// [`crate::obs::Registry`] snapshot — the single rendering point for the
+/// statistics that used to be scattered across ad-hoc `println!`s
+/// (front-cache totals, planner probe/prune counts, KV hand-offs, role
+/// occupancy).
+pub fn run_stats_table(snapshot: &crate::obs::Snapshot) -> Table {
+    let mut t = Table::new(&["stat", "value"]).numeric_body();
+    for (name, v) in &snapshot.counters {
+        t.row(&[name.clone(), v.to_string()]);
+    }
+    for (name, v) in &snapshot.gauges {
+        t.row(&[name.clone(), format!("{v:.4}")]);
     }
     t
 }
@@ -537,6 +559,18 @@ mod tests {
         let rendered = per_class_table(&rep, &w).render();
         assert!(rendered.contains("chat") && rendered.contains("code"), "{rendered}");
         assert!(rendered.contains("TTFT P90"));
+        assert!(rendered.contains("E2E P90"), "{rendered}");
+    }
+
+    #[test]
+    fn run_stats_table_renders_counters_and_gauges() {
+        let mut reg = crate::obs::Registry::new();
+        reg.add("plan.points_probed", 42);
+        reg.set("sim.throughput_rps", 3.25);
+        let rendered = run_stats_table(&reg.snapshot()).render();
+        assert!(rendered.contains("plan.points_probed"), "{rendered}");
+        assert!(rendered.contains("42"), "{rendered}");
+        assert!(rendered.contains("3.2500"), "{rendered}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::{FrontCache, LatencyModel};
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::core::{
@@ -90,6 +91,10 @@ struct CollocPolicy<'a> {
     d1: Vec<f64>,
     completion: Vec<f64>,
     inserted: usize,
+    tracer: SimTracer<'a>,
+    /// Which instance served each request's decode — only populated (and
+    /// only allocated) when tracing, for the end-of-run DecodeEnd events.
+    decode_inst: Vec<u32>,
 }
 
 impl EventDriven for CollocPolicy<'_> {
@@ -104,15 +109,22 @@ impl EventDriven for CollocPolicy<'_> {
             if let Some(i) = found {
                 let batch = self.arrivals.take_batch(t, self.bmax_prefill);
                 let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+                self.tracer.emit(t, 0.0, EventKind::BatchFormed, Some(i as u32), None);
                 for r in batch.range() {
                     self.d1[r] = t + t_b;
                     self.decode_q.push(t + t_b, r);
+                    self.tracer.span(t, t_b, EventKind::PrefillStart, i, r);
+                    self.tracer.instant(t + t_b, EventKind::PrefillEnd, i, r);
                 }
                 // Suspend (status decode) or further delay (status prefill)
                 // the ongoing decodes — Alg. 6 lines 13–18.
                 let completion = &mut self.completion;
+                let tracer = self.tracer;
                 let inst = &mut self.instances[i];
-                inst.slots.shift_busy(t, t_b, |r| completion[r] += t_b);
+                inst.slots.shift_busy(t, t_b, |r| {
+                    completion[r] += t_b;
+                    tracer.instant(t, EventKind::Preemption, i, r);
+                });
                 match inst.status {
                     Status::Decode => {
                         inst.status = Status::Prefill;
@@ -173,6 +185,14 @@ impl EventDriven for CollocPolicy<'_> {
                     }
                     self.completion[r] = t + span;
                     self.inserted += 1;
+                    // The span is the *scheduled* decode; later prefill
+                    // launches may preempt it (Preemption events) and push
+                    // the completion — DecodeEnd is emitted at the true
+                    // completion once the run finishes.
+                    self.tracer.span(t, span, EventKind::DecodeStart, i, r);
+                    if !self.decode_inst.is_empty() {
+                        self.decode_inst[r] = i as u32;
+                    }
                     return true;
                 }
             }
@@ -224,6 +244,15 @@ impl<'a> CollocSimulator<'a> {
 
     /// Run Algorithms 4–7 over a workload sorted by arrival.
     pub fn run(&self, reqs: &[Request]) -> SimReport {
+        self.run_with(reqs, SimTracer::off())
+    }
+
+    /// [`CollocSimulator::run`] with sim-time events recorded into `sink`.
+    pub fn run_traced(&self, reqs: &[Request], sink: &TraceSink) -> SimReport {
+        self.run_with(reqs, SimTracer::on(sink))
+    }
+
+    fn run_with(&self, reqs: &[Request], tracer: SimTracer<'_>) -> SimReport {
         assert!(!reqs.is_empty());
         assert!(self.n_instances > 0);
         let n = reqs.len();
@@ -242,8 +271,20 @@ impl<'a> CollocSimulator<'a> {
             d1: vec![f64::INFINITY; n],
             completion: vec![f64::INFINITY; n],
             inserted: 0,
+            tracer,
+            decode_inst: if tracer.is_on() { vec![0; n] } else { Vec::new() },
         };
         drive(&mut policy, "collocation");
+        if tracer.is_on() {
+            for idx in 0..n {
+                tracer.instant(
+                    policy.completion[idx],
+                    EventKind::DecodeEnd,
+                    policy.decode_inst[idx] as usize,
+                    idx,
+                );
+            }
+        }
 
         let outcomes: Vec<RequestOutcome> = reqs
             .iter()

@@ -5,6 +5,7 @@
 //! heuristic b† = max(⌊(b+1)/τ⌋, 1) (§3.4.2, eq. (9)).
 
 use crate::estimator::{FrontCache, LatencyModel};
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::core::{decode_span_for, drive, EventDriven, NextEvent, SlotPool, VisitOrder};
@@ -50,6 +51,7 @@ struct DecodePolicy<'a, 'r> {
     rng: &'r mut Rng,
     next: usize,
     out: Vec<DecodeOutcome>,
+    tracer: SimTracer<'a>,
 }
 
 impl EventDriven for DecodePolicy<'_, '_> {
@@ -71,6 +73,10 @@ impl EventDriven for DecodePolicy<'_, '_> {
                 decode_span_for(&self.model, &self.params, b_eff, item.input_len, item.gen_len);
             self.slots[i].occupy(j, t + span, item.req);
             self.out.push(DecodeOutcome { req: item.req, inserted: t, completion: t + span });
+            // Decode-stage spans are final (no preemption shifts them), so
+            // the end event can be emitted eagerly.
+            self.tracer.span(t, span, EventKind::DecodeStart, i, item.req);
+            self.tracer.instant(t + span, EventKind::DecodeEnd, i, item.req);
             self.next += 1;
             return true;
         }
@@ -104,6 +110,29 @@ impl<'a> DecodeStage<'a> {
     /// them over in prefill-departure order). Returns outcomes in the same
     /// order.
     pub fn run(&self, items: &[DecodeItem], rng: &mut Rng) -> Vec<DecodeOutcome> {
+        self.run_with(items, rng, SimTracer::off())
+    }
+
+    /// [`DecodeStage::run`] with sim-time events recorded into `sink`
+    /// (one track per decode instance).
+    pub fn run_traced(
+        &self,
+        items: &[DecodeItem],
+        rng: &mut Rng,
+        sink: &TraceSink,
+    ) -> Vec<DecodeOutcome> {
+        self.run_with(items, rng, SimTracer::on(sink))
+    }
+
+    /// Tracer-threading entry used by the disaggregation tandem, which
+    /// hands us a [`SimTracer::with_base`]-offset tracer so decode tracks
+    /// land after the prefill stage's.
+    pub(super) fn run_with(
+        &self,
+        items: &[DecodeItem],
+        rng: &mut Rng,
+        tracer: SimTracer<'_>,
+    ) -> Vec<DecodeOutcome> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         debug_assert!(items.windows(2).all(|w| w[0].ready <= w[1].ready));
         let mut policy = DecodePolicy {
@@ -115,6 +144,7 @@ impl<'a> DecodeStage<'a> {
             rng,
             next: 0,
             out: Vec::with_capacity(items.len()),
+            tracer,
         };
         drive(&mut policy, "decode");
         policy.out

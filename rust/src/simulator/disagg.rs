@@ -8,6 +8,7 @@
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::LatencyModel;
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::decode::{DecodeItem, DecodeStage};
@@ -62,6 +63,17 @@ impl<'a> DisaggSimulator<'a> {
 
     /// Run the tandem simulation over a workload sorted by arrival.
     pub fn run(&self, reqs: &[Request]) -> SimReport {
+        self.run_with(reqs, SimTracer::off())
+    }
+
+    /// [`DisaggSimulator::run`] with sim-time events recorded into `sink`:
+    /// prefill instances on tracks `0..p`, decode instances on tracks
+    /// `p..p+d`, KV hand-offs on the overflow track.
+    pub fn run_traced(&self, reqs: &[Request], sink: &TraceSink) -> SimReport {
+        self.run_with(reqs, SimTracer::on(sink))
+    }
+
+    fn run_with(&self, reqs: &[Request], tracer: SimTracer<'_>) -> SimReport {
         assert!(!reqs.is_empty());
         let mut rng = Rng::new(self.params.seed);
         let prefill = PrefillStage {
@@ -71,7 +83,7 @@ impl<'a> DisaggSimulator<'a> {
             front_cache: self.params.front_cache,
         };
         let mut rng_p = rng.fork(1);
-        let d1 = prefill.run(reqs, &mut rng_p);
+        let d1 = prefill.run_with(reqs, &mut rng_p, tracer);
 
         // Tandem hand-off: decode arrivals = prefill departures + transfer,
         // processed FIFO in hand-off order.
@@ -87,6 +99,13 @@ impl<'a> DisaggSimulator<'a> {
             .collect();
         items.sort_by(|a, b| a.ready.total_cmp(&b.ready));
 
+        if tracer.is_on() {
+            for (idx, r) in reqs.iter().enumerate() {
+                let dt = self.kv_transfer_time(r.input_len);
+                tracer.emit(d1[idx], dt, EventKind::KvHandoff, None, Some(idx as u32));
+            }
+        }
+
         let decode = DecodeStage {
             model: self.model,
             n_instances: self.d_instances,
@@ -94,7 +113,7 @@ impl<'a> DisaggSimulator<'a> {
             params: self.params,
         };
         let mut rng_d = rng.fork(2);
-        let outs = decode.run(&items, &mut rng_d);
+        let outs = decode.run_with(&items, &mut rng_d, tracer.with_base(self.p_instances as u32));
 
         let mut outcomes = Vec::with_capacity(reqs.len());
         for (item, o) in items.iter().zip(outs.iter()) {

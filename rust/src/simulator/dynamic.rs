@@ -50,6 +50,7 @@
 use crate::config::{Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::{FrontCache, LatencyModel};
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::core::{
@@ -163,6 +164,7 @@ struct DynamicPolicy<'a> {
     d1: Vec<f64>,
     completion: Vec<f64>,
     inserted: usize,
+    tracer: SimTracer<'a>,
 }
 
 impl DynamicPolicy<'_> {
@@ -185,6 +187,7 @@ impl DynamicPolicy<'_> {
                 .position(|i| matches!(i.state, State::Decode) && i.slots.busy(t) == 0);
             if let Some(i) = drained {
                 let until = t + self.params.switch_latency;
+                self.tracer.emit(t, until - t, EventKind::RoleSwitch, Some(i as u32), None);
                 self.instances[i].set_state(t, State::Switching { to: Role::Prefill, until });
                 return true;
             }
@@ -208,6 +211,7 @@ impl DynamicPolicy<'_> {
                 .position(|i| matches!(i.state, State::Prefill) && i.prefill_until <= t);
             if let Some(i) = idle {
                 let until = t + self.params.switch_latency;
+                self.tracer.emit(t, until - t, EventKind::RoleSwitch, Some(i as u32), None);
                 self.instances[i].set_state(t, State::Switching { to: Role::Decode, until });
                 return true;
             }
@@ -220,7 +224,8 @@ impl DynamicPolicy<'_> {
 impl EventDriven for DynamicPolicy<'_> {
     fn step(&mut self, t: f64) -> bool {
         // --- bookkeeping: finish due switches, start drained switches ----
-        for inst in self.instances.iter_mut() {
+        let tracer = self.tracer;
+        for (i, inst) in self.instances.iter_mut().enumerate() {
             match inst.state {
                 State::Switching { to, until } if until <= t => {
                     inst.time.switches += 1;
@@ -233,6 +238,7 @@ impl EventDriven for DynamicPolicy<'_> {
                 }
                 State::Draining if inst.slots.busy(t) == 0 => {
                     let until = t + self.params.switch_latency;
+                    tracer.emit(t, until - t, EventKind::RoleSwitch, Some(i as u32), None);
                     inst.set_state(t, State::Switching { to: Role::Prefill, until });
                     return true;
                 }
@@ -250,9 +256,12 @@ impl EventDriven for DynamicPolicy<'_> {
             if let Some(i) = found {
                 let batch = self.arrivals.take_batch(t, self.bmax_prefill);
                 let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+                self.tracer.emit(t, 0.0, EventKind::BatchFormed, Some(i as u32), None);
                 for r in batch.range() {
                     self.d1[r] = t + t_b;
                     self.decode_q.push(t + t_b, r);
+                    self.tracer.span(t, t_b, EventKind::PrefillStart, i, r);
+                    self.tracer.instant(t + t_b, EventKind::PrefillEnd, i, r);
                 }
                 self.instances[i].prefill_until = t + t_b;
                 return true;
@@ -286,6 +295,10 @@ impl EventDriven for DynamicPolicy<'_> {
                     inst.slots.occupy(j, t + span, r);
                     self.completion[r] = t + span;
                     self.inserted += 1;
+                    // Dynamic-pool decodes never get preempted (roles are
+                    // exclusive), so the end event is final here.
+                    tracer.span(t, span, EventKind::DecodeStart, i, r);
+                    tracer.instant(t + span, EventKind::DecodeEnd, i, r);
                     return true;
                 }
             }
@@ -345,6 +358,16 @@ impl<'a> DynamicSimulator<'a> {
 
     /// Run the reallocation policy over a workload sorted by arrival.
     pub fn run(&self, reqs: &[Request]) -> SimReport {
+        self.run_with(reqs, SimTracer::off())
+    }
+
+    /// [`DynamicSimulator::run`] with sim-time events recorded into `sink`
+    /// (one track per pool instance; role switches appear as spans).
+    pub fn run_traced(&self, reqs: &[Request], sink: &TraceSink) -> SimReport {
+        self.run_with(reqs, SimTracer::on(sink))
+    }
+
+    fn run_with(&self, reqs: &[Request], tracer: SimTracer<'_>) -> SimReport {
         assert!(!reqs.is_empty());
         assert!(self.n_instances > 0);
         let n = reqs.len();
@@ -363,6 +386,7 @@ impl<'a> DynamicSimulator<'a> {
             d1: vec![f64::INFINITY; n],
             completion: vec![f64::INFINITY; n],
             inserted: 0,
+            tracer,
         };
         let end = drive(&mut policy, "dynamic");
 

@@ -86,8 +86,8 @@ impl RoleOccupancy {
     }
 }
 
-/// TTFT/TPOT percentile summaries for one workload class — the per-class
-/// panels of a multi-class (mix) simulation report.
+/// TTFT/TPOT/E2E percentile summaries for one workload class — the
+/// per-class panels of a multi-class (mix) simulation report.
 #[derive(Debug, Clone)]
 pub struct ClassStats {
     /// Class index into the workload's mix.
@@ -95,6 +95,8 @@ pub struct ClassStats {
     pub n: usize,
     pub ttft: Summary,
     pub tpot: Summary,
+    /// End-to-end (arrival → completion) latency summary.
+    pub e2e: Summary,
 }
 
 /// Aggregated simulation report.
@@ -111,6 +113,8 @@ pub struct SimReport {
     pub makespan: f64,
     pub ttfts: Vec<f64>,
     pub tpots: Vec<f64>,
+    /// Per-request end-to-end latencies, parallel to `ttfts`/`tpots`.
+    pub e2es: Vec<f64>,
     /// Per-outcome class tags, parallel to `ttfts`/`tpots` — lets callers
     /// take per-class percentiles at arbitrary q (the per-class SLO check).
     pub classes: Vec<u16>,
@@ -132,10 +136,12 @@ pub struct SimReport {
     ttfts_sorted: Vec<f64>,
     /// TPOT sample sorted ascending by `f64::total_cmp`.
     tpots_sorted: Vec<f64>,
-    /// `(class, sorted ttfts, sorted tpots)` for every distinct class —
-    /// including the single-class case, where `per_class` stays empty but
-    /// `class_*_pct` must still answer.
-    by_class: Vec<(u16, Vec<f64>, Vec<f64>)>,
+    /// E2E sample sorted ascending by `f64::total_cmp`.
+    e2es_sorted: Vec<f64>,
+    /// `(class, sorted ttfts, sorted tpots, sorted e2es)` for every
+    /// distinct class — including the single-class case, where `per_class`
+    /// stays empty but `class_*_pct` must still answer.
+    by_class: Vec<(u16, Vec<f64>, Vec<f64>, Vec<f64>)>,
 }
 
 impl SimReport {
@@ -152,18 +158,23 @@ impl SimReport {
         let mut distinct = class_tags.clone();
         distinct.sort_unstable();
         distinct.dedup();
-        let by_class: Vec<(u16, Vec<f64>, Vec<f64>)> = distinct
+        let by_class: Vec<(u16, Vec<f64>, Vec<f64>, Vec<f64>)> = distinct
             .into_iter()
             .map(|class| {
-                let (mut t, mut p): (Vec<f64>, Vec<f64>) = class_tags
-                    .iter()
-                    .zip(ttfts.iter().zip(tpots.iter()))
-                    .filter(|(c, _)| **c == class)
-                    .map(|(_, (t, p))| (*t, *p))
-                    .unzip();
+                let mut t = Vec::new();
+                let mut p = Vec::new();
+                let mut e = Vec::new();
+                for (i, c) in class_tags.iter().enumerate() {
+                    if *c == class {
+                        t.push(ttfts[i]);
+                        p.push(tpots[i]);
+                        e.push(e2es[i]);
+                    }
+                }
                 t.sort_by(f64::total_cmp);
                 p.sort_by(f64::total_cmp);
-                (class, t, p)
+                e.sort_by(f64::total_cmp);
+                (class, t, p, e)
             })
             .collect();
         let per_class = if by_class.len() <= 1 {
@@ -171,11 +182,12 @@ impl SimReport {
         } else {
             by_class
                 .iter()
-                .map(|(class, t, p)| ClassStats {
+                .map(|(class, t, p, e)| ClassStats {
                     class: *class,
                     n: t.len(),
                     ttft: Summary::from_sorted(t),
                     tpot: Summary::from_sorted(p),
+                    e2e: Summary::from_sorted(e),
                 })
                 .collect()
         };
@@ -183,20 +195,27 @@ impl SimReport {
         ttfts_sorted.sort_by(f64::total_cmp);
         let mut tpots_sorted = tpots.clone();
         tpots_sorted.sort_by(f64::total_cmp);
+        let mut e2es_sorted = e2es.clone();
+        e2es_sorted.sort_by(f64::total_cmp);
         SimReport {
             n: outcomes.len(),
             ttft: Summary::from_sorted(&ttfts_sorted),
             tpot: Summary::from_sorted(&tpots_sorted),
-            e2e: Summary::from(&e2es),
+            // `Summary::from` is defined as clone + total_cmp sort +
+            // `from_sorted`, so reading the cache here is bit-identical to
+            // the pre-cache `Summary::from(&e2es)`.
+            e2e: Summary::from_sorted(&e2es_sorted),
             throughput: outcomes.len() as f64 / makespan,
             makespan,
             ttfts,
             tpots,
+            e2es,
             classes: class_tags,
             per_class,
             role_occupancy: None,
             ttfts_sorted,
             tpots_sorted,
+            e2es_sorted,
             by_class,
         }
     }
@@ -205,15 +224,25 @@ impl SimReport {
     /// when the class produced no outcomes in this run. O(1) in the sample
     /// size: reads the partition sorted at construction.
     pub fn class_ttft_pct(&self, class: u16, q: f64) -> f64 {
-        match self.by_class.iter().find(|(c, _, _)| *c == class) {
-            Some((_, t, _)) => crate::util::stats::percentile_sorted(t, q),
+        match self.by_class.iter().find(|(c, ..)| *c == class) {
+            Some((_, t, _, _)) => crate::util::stats::percentile_sorted(t, q),
             None => f64::NAN,
         }
     }
 
     pub fn class_tpot_pct(&self, class: u16, q: f64) -> f64 {
-        match self.by_class.iter().find(|(c, _, _)| *c == class) {
-            Some((_, _, p)) => crate::util::stats::percentile_sorted(p, q),
+        match self.by_class.iter().find(|(c, ..)| *c == class) {
+            Some((_, _, p, _)) => crate::util::stats::percentile_sorted(p, q),
+            None => f64::NAN,
+        }
+    }
+
+    /// End-to-end latency percentile of one class's sample (q in
+    /// [0, 100]). NaN when the class produced no outcomes. O(1) like the
+    /// TTFT/TPOT accessors: reads the partition sorted at construction.
+    pub fn class_e2e_pct(&self, class: u16, q: f64) -> f64 {
+        match self.by_class.iter().find(|(c, ..)| *c == class) {
+            Some((_, _, _, e)) => crate::util::stats::percentile_sorted(e, q),
             None => f64::NAN,
         }
     }
@@ -226,6 +255,12 @@ impl SimReport {
 
     pub fn tpot_pct(&self, q: f64) -> f64 {
         crate::util::stats::percentile_sorted(&self.tpots_sorted, q)
+    }
+
+    /// Percentile of the end-to-end latency sample (q in [0, 100]). O(1):
+    /// reads the sample sorted at construction.
+    pub fn e2e_pct(&self, q: f64) -> f64 {
+        crate::util::stats::percentile_sorted(&self.e2es_sorted, q)
     }
 
     /// The Figure 6/8 histograms (TTFT and TPOT, milliseconds).
@@ -331,28 +366,42 @@ mod tests {
         for q in [0.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
             let ttft = crate::util::stats::percentile(&r.ttfts, q);
             let tpot = crate::util::stats::percentile(&r.tpots, q);
+            let e2e = crate::util::stats::percentile(&r.e2es, q);
             assert_eq!(r.ttft_pct(q).to_bits(), ttft.to_bits(), "q={q}");
             assert_eq!(r.tpot_pct(q).to_bits(), tpot.to_bits(), "q={q}");
+            assert_eq!(r.e2e_pct(q).to_bits(), e2e.to_bits(), "q={q}");
             for class in 0u16..3 {
-                let sample: Vec<f64> = r
-                    .classes
-                    .iter()
-                    .zip(&r.ttfts)
-                    .filter(|(c, _)| **c == class)
-                    .map(|(_, v)| *v)
-                    .collect();
-                let direct = crate::util::stats::percentile(&sample, q);
+                let pick = |xs: &[f64]| -> Vec<f64> {
+                    r.classes
+                        .iter()
+                        .zip(xs)
+                        .filter(|(c, _)| **c == class)
+                        .map(|(_, v)| *v)
+                        .collect()
+                };
+                let direct_t = crate::util::stats::percentile(&pick(&r.ttfts), q);
                 assert_eq!(
                     r.class_ttft_pct(class, q).to_bits(),
-                    direct.to_bits(),
+                    direct_t.to_bits(),
                     "class {class} q={q}"
+                );
+                let direct_e = crate::util::stats::percentile(&pick(&r.e2es), q);
+                assert_eq!(
+                    r.class_e2e_pct(class, q).to_bits(),
+                    direct_e.to_bits(),
+                    "class {class} e2e q={q}"
                 );
             }
         }
+        // The e2e Summary panel matches the unsorted-construction
+        // definition bit for bit.
+        let fresh = crate::util::stats::Summary::from(&r.e2es);
+        assert_eq!(r.e2e.p90.to_bits(), fresh.p90.to_bits());
         // Single-class reports still answer per-class queries.
         let solo = SimReport::from_outcomes(&[outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5]);
         assert!(solo.per_class.is_empty());
         assert!((solo.class_ttft_pct(0, 50.0) - 0.1).abs() < 1e-12);
+        assert!((solo.class_e2e_pct(0, 50.0) - 0.3).abs() < 1e-12);
         assert!(solo.class_ttft_pct(1, 50.0).is_nan());
     }
 

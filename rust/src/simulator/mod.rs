@@ -80,6 +80,7 @@ pub use trace::{load_trace, save_trace};
 use crate::config::{Architecture, Platform, Strategy, Workload};
 use crate::error::Result;
 use crate::estimator::LatencyModel;
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 
 /// Simulate one strategy at one rate scale — the `SIMULATE(λ)` call of
 /// Algorithm 9, generalized to any workload: the effective arrival rate is
@@ -118,6 +119,59 @@ pub fn simulate_requests(
         Architecture::Dynamic { .. } => {
             Ok(DynamicSimulator::from_strategy(model, platform, strategy, params)?.run(reqs))
         }
+    }
+}
+
+/// [`simulate`] with sim-time events recorded into `sink` — the tracing
+/// entry point behind the [`SimParams::sim_trace`] gate: when the gate is
+/// off this is exactly [`simulate`] and the sink stays empty, so reports
+/// are bit-identical either way (`sim_trace_preserves_reports_bit_for_bit`
+/// pins this). When on, each request contributes an `arrival` instant plus
+/// the policy's per-phase events, exportable via
+/// [`crate::obs::TraceSink::to_chrome_json`].
+pub fn simulate_traced(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    workload: &Workload,
+    scale: f64,
+    params: SimParams,
+    sink: &TraceSink,
+) -> Result<SimReport> {
+    let reqs = generate_workload(workload, scale, params.seed)?;
+    simulate_requests_traced(model, platform, strategy, &reqs, params, sink)
+}
+
+/// The request-vector half of [`simulate_traced`], mirroring
+/// [`simulate_requests`].
+pub fn simulate_requests_traced(
+    model: &dyn LatencyModel,
+    platform: &Platform,
+    strategy: &Strategy,
+    reqs: &[Request],
+    params: SimParams,
+    sink: &TraceSink,
+) -> Result<SimReport> {
+    if !params.sim_trace {
+        return simulate_requests(model, platform, strategy, reqs, params);
+    }
+    let tracer = SimTracer::on(sink);
+    for (idx, r) in reqs.iter().enumerate() {
+        tracer.emit(r.arrival, 0.0, EventKind::Arrival, None, Some(idx as u32));
+    }
+    match strategy.arch {
+        Architecture::Collocation { .. } => Ok(CollocSimulator::from_strategy(
+            model, platform, strategy, params,
+        )?
+        .run_traced(reqs, sink)),
+        Architecture::Disaggregation { .. } => Ok(DisaggSimulator::from_strategy(
+            model, platform, strategy, params,
+        )?
+        .run_traced(reqs, sink)),
+        Architecture::Dynamic { .. } => Ok(DynamicSimulator::from_strategy(
+            model, platform, strategy, params,
+        )?
+        .run_traced(reqs, sink)),
     }
 }
 
@@ -291,6 +345,63 @@ mod tests {
             assert_eq!(rep.per_class.len(), 2, "{st}");
             assert_eq!(rep.per_class[0].n + rep.per_class[1].n, rep.n);
             assert!(rep.per_class.iter().all(|c| c.ttft.p90.is_finite()));
+        }
+    }
+
+    #[test]
+    fn sim_trace_preserves_reports_bit_for_bit() {
+        // The equivalence anchor for the `sim_trace` gate: tracing is
+        // observation only. With the gate off, [`simulate_traced`] is
+        // literally [`simulate`] and the sink stays empty; with it on, the
+        // report must still be bit-identical — events are emitted beside
+        // the simulation, never into it.
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 120));
+        for st in [
+            Strategy::collocation(2, 1),
+            Strategy::disaggregation(1, 1, 1),
+            Strategy::dynamic(2, 1),
+        ] {
+            let base = simulate(&m, &p, &st, &w, 2.0, SimParams::default()).unwrap();
+            let off_sink = TraceSink::new();
+            let off =
+                simulate_traced(&m, &p, &st, &w, 2.0, SimParams::default(), &off_sink).unwrap();
+            assert!(off_sink.is_empty(), "{st}: gate off must record nothing");
+            let on_sink = TraceSink::new();
+            let on = simulate_traced(
+                &m,
+                &p,
+                &st,
+                &w,
+                2.0,
+                SimParams { sim_trace: true, ..SimParams::default() },
+                &on_sink,
+            )
+            .unwrap();
+            assert!(!on_sink.is_empty(), "{st}: gate on must record events");
+            let bits = |r: &SimReport| {
+                (
+                    r.n,
+                    r.ttft.p90.to_bits(),
+                    r.tpot.p90.to_bits(),
+                    r.e2e.p90.to_bits(),
+                    r.throughput.to_bits(),
+                    r.makespan.to_bits(),
+                )
+            };
+            assert_eq!(bits(&base), bits(&off), "{st}");
+            assert_eq!(bits(&base), bits(&on), "{st}");
+            assert_eq!(base.ttfts.len(), on.ttfts.len(), "{st}");
+            for ((x, y), (a, b)) in base
+                .ttfts
+                .iter()
+                .zip(on.ttfts.iter())
+                .zip(base.e2es.iter().zip(on.e2es.iter()))
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{st}");
+                assert_eq!(a.to_bits(), b.to_bits(), "{st}");
+            }
         }
     }
 

@@ -46,6 +46,13 @@ pub struct SimParams {
     /// so this stays on by default; the off switch exists for the
     /// bit-equality anchors and the `bench_perf` before/after case.
     pub front_cache: bool,
+    /// Record typed sim-time events (arrival, batch formation,
+    /// prefill/decode start+end, preemption, role switch, KV hand-off)
+    /// into the `obs::TraceSink` the caller passes to
+    /// `simulator::simulate_traced`. Off by default; tracing is purely
+    /// observational — reports are bit-identical either way (pinned by
+    /// `sim_trace_preserves_reports_bit_for_bit`). CLI: `--sim-trace F`.
+    pub sim_trace: bool,
 }
 
 impl Default for SimParams {
@@ -59,6 +66,7 @@ impl Default for SimParams {
             switch_up: 1.0,
             switch_down: 0.0,
             front_cache: true,
+            sim_trace: false,
         }
     }
 }

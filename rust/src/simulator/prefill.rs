@@ -5,6 +5,7 @@
 //! in [`super::core`]; this file only encodes the prefill scheduling rule.
 
 use crate::estimator::{FrontCache, LatencyModel};
+use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::core::{drive, EventDriven, FifoArrivals, NextEvent, VisitOrder};
@@ -32,6 +33,7 @@ struct PrefillPolicy<'a, 'r> {
     rng: &'r mut Rng,
     /// Per-request departure (first-token) times, indexed like the workload.
     departures: Vec<f64>,
+    tracer: SimTracer<'a>,
 }
 
 impl EventDriven for PrefillPolicy<'_, '_> {
@@ -50,8 +52,11 @@ impl EventDriven for PrefillPolicy<'_, '_> {
             // (standard batching semantics; fixed-length scenarios are
             // unaffected).
             let t_b = self.model.prefill_time(batch.len(), batch.s_max);
+            self.tracer.emit(t, 0.0, EventKind::BatchFormed, Some(i as u32), None);
             for r in batch.range() {
                 self.departures[r] = t + t_b;
+                self.tracer.span(t, t_b, EventKind::PrefillStart, i, r);
+                self.tracer.instant(t + t_b, EventKind::PrefillEnd, i, r);
             }
             self.when_idle[i] = t + t_b;
             progressed = true;
@@ -84,6 +89,24 @@ impl<'a> PrefillStage<'a> {
     /// Simulate; returns per-request departure times (first-token times),
     /// indexed like `reqs`. `reqs` must be sorted by arrival (FIFO).
     pub fn run(&self, reqs: &[Request], rng: &mut Rng) -> Vec<f64> {
+        self.run_with(reqs, rng, SimTracer::off())
+    }
+
+    /// [`PrefillStage::run`] with sim-time events recorded into `sink`
+    /// (one track per prefill instance).
+    pub fn run_traced(&self, reqs: &[Request], rng: &mut Rng, sink: &TraceSink) -> Vec<f64> {
+        self.run_with(reqs, rng, SimTracer::on(sink))
+    }
+
+    /// Tracer-threading entry used by the disaggregation tandem, which
+    /// offsets the decode stage's tracks past ours via
+    /// [`SimTracer::with_base`].
+    pub(super) fn run_with(
+        &self,
+        reqs: &[Request],
+        rng: &mut Rng,
+        tracer: SimTracer<'_>,
+    ) -> Vec<f64> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         let mut policy = PrefillPolicy {
             model: FrontCache::new(self.model, self.front_cache),
@@ -93,6 +116,7 @@ impl<'a> PrefillStage<'a> {
             order: VisitOrder::new(self.n_instances),
             rng,
             departures: vec![f64::INFINITY; reqs.len()],
+            tracer,
         };
         drive(&mut policy, "prefill");
         policy.departures

@@ -1,0 +1,74 @@
+//! Regression test for front-cache observability hygiene.
+//!
+//! `estimator::front_cache_totals()` is process-global: it accumulates
+//! across every simulation in the process, so a CLI command that printed
+//! the raw totals used to report every earlier run too. The fix is
+//! `obs::FrontCacheScope` delta semantics (each run reports only itself)
+//! plus `front_cache_reset` for sequential callers that want absolute
+//! numbers.
+//!
+//! This file deliberately holds a SINGLE test: the totals are process-wide
+//! atomics, and cargo runs the tests *within* a binary on parallel
+//! threads. One test in its own integration binary gets a whole process to
+//! itself, so the absolute-value assertions below are race-free.
+
+use bestserve::config::{Platform, Scenario, Strategy, Workload};
+use bestserve::estimator::{front_cache_reset, front_cache_totals, LatencyModel};
+use bestserve::obs::FrontCacheScope;
+use bestserve::simulator::{simulate, SimParams};
+
+struct Flat;
+
+impl LatencyModel for Flat {
+    fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+        0.1
+    }
+    fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+        0.01
+    }
+}
+
+fn run_once() {
+    let workload = Workload::poisson(&Scenario::fixed("fc", 128, 8, 60));
+    simulate(
+        &Flat,
+        &Platform::paper_testbed(),
+        &Strategy::collocation(2, 1),
+        &workload,
+        2.0,
+        SimParams::default(),
+    )
+    .unwrap();
+}
+
+#[test]
+fn scope_reports_per_run_deltas_not_process_totals() {
+    front_cache_reset();
+    let zero = front_cache_totals();
+    assert_eq!((zero.hits, zero.misses), (0, 0));
+
+    // First run: the scope's delta is exactly what the run contributed.
+    let scope = FrontCacheScope::begin();
+    run_once();
+    let first = scope.delta();
+    assert!(
+        first.hits + first.misses > 0,
+        "front cache saw no traffic — is SimParams::front_cache still on by default?"
+    );
+
+    // Second identical run: its own scope sees the same delta even though
+    // the process totals have doubled — the accumulation bug the scope
+    // fixes. (The cache is per-simulator, so no state leaks across runs.)
+    let scope2 = FrontCacheScope::begin();
+    run_once();
+    let second = scope2.delta();
+    assert_eq!((second.hits, second.misses), (first.hits, first.misses));
+
+    let totals = front_cache_totals();
+    assert_eq!((totals.hits, totals.misses), (2 * first.hits, 2 * first.misses));
+
+    // Reset restores a clean slate; an idle scope then reports zero.
+    front_cache_reset();
+    let idle = FrontCacheScope::begin().delta();
+    assert_eq!((idle.hits, idle.misses), (0, 0));
+}

@@ -1,0 +1,141 @@
+//! Golden and property tests for the sim-time tracing plane.
+//!
+//! The golden test pins the Chrome `trace_event` export of a tiny
+//! deterministic collocation run: deterministic arrivals land exactly on
+//! the `k / rate` grid, every request contributes one event of each
+//! lifecycle kind, and two identical runs serialize to byte-identical
+//! JSON. The property test checks the invariants every architecture must
+//! uphold: events come out sorted by sim time and request count is
+//! conserved (every arrival eventually produces a `decode_end`).
+
+use bestserve::config::{ArrivalProcess, Platform, Scenario, Strategy, Workload};
+use bestserve::estimator::LatencyModel;
+use bestserve::obs::{EventKind, TraceSink};
+use bestserve::simulator::{simulate_traced, SimParams, SimReport};
+use bestserve::util::json::Json;
+
+/// Constant-time latency oracle: service times independent of batch shape,
+/// so the traced timeline is trivially reproducible by hand.
+struct Flat;
+
+impl LatencyModel for Flat {
+    fn prefill_time(&self, _b: u32, _s: u32) -> f64 {
+        0.1
+    }
+    fn decode_step_time(&self, _b: u32, _ctx: u32) -> f64 {
+        0.01
+    }
+}
+
+fn traced_run(strategy: &Strategy, n: usize) -> (SimReport, TraceSink) {
+    // Deterministic arrivals: request k arrives exactly at k / base_rate =
+    // k seconds. One second apart vs ~0.14 s of service, so requests are
+    // served in isolation — singleton batches, no preemption.
+    let workload = Workload {
+        arrival: ArrivalProcess::Deterministic,
+        ..Workload::poisson(&Scenario::fixed("tiny", 64, 4, n))
+    };
+    let params = SimParams { sim_trace: true, ..SimParams::default() };
+    let sink = TraceSink::new();
+    let rep = simulate_traced(
+        &Flat,
+        &Platform::paper_testbed(),
+        strategy,
+        &workload,
+        1.0,
+        params,
+        &sink,
+    )
+    .unwrap();
+    (rep, sink)
+}
+
+#[test]
+fn chrome_trace_golden_for_tiny_colloc_run() {
+    let st = Strategy::collocation(1, 1);
+    let (rep, sink) = traced_run(&st, 3);
+    assert_eq!(rep.n, 3);
+    // 5 lifecycle events per request + 1 batch_formed per singleton batch.
+    assert_eq!(sink.len(), 18);
+
+    let dump = sink.to_chrome_json().dump();
+    // Byte-identical across identical runs — the determinism "golden file".
+    let (_, again) = traced_run(&st, 3);
+    assert_eq!(dump, again.to_chrome_json().dump());
+
+    let parsed = Json::parse(&dump).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 18);
+    let by = |name: &str| -> Vec<&Json> {
+        events
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some(name))
+            .collect()
+    };
+
+    // Arrivals are instants pinned to the deterministic k-second grid
+    // (Chrome ts is microseconds).
+    let arrivals = by("arrival");
+    assert_eq!(arrivals.len(), 3);
+    for (k, a) in arrivals.iter().enumerate() {
+        assert_eq!(a.get("ph").unwrap().as_str(), Some("i"));
+        let ts = a.get("ts").unwrap().as_f64().unwrap();
+        assert!((ts - (k + 1) as f64 * 1e6).abs() < 0.5, "arrival ts {ts}");
+    }
+
+    // One event of each lifecycle kind per request; isolated requests
+    // never preempt each other.
+    for kind in ["batch_formed", "prefill", "prefill_end", "decode", "decode_end"] {
+        assert_eq!(by(kind).len(), 3, "{kind}");
+    }
+    assert!(by("preemption").is_empty());
+
+    // Prefill spans are complete events lasting the Flat batch time.
+    for p in by("prefill") {
+        assert_eq!(p.get("ph").unwrap().as_str(), Some("X"));
+        let dur = p.get("dur").unwrap().as_f64().unwrap();
+        assert!((dur - 0.1e6).abs() < 1.0, "prefill dur {dur}");
+    }
+
+    // Track layout: the single collocated instance is tid 0; instance-less
+    // arrivals go on the overflow track (max instance + 1 = 1).
+    for e in events {
+        let tid = e.get("tid").unwrap().as_f64().unwrap();
+        let expect = if e.get("name").unwrap().as_str() == Some("arrival") { 1.0 } else { 0.0 };
+        assert_eq!(tid, expect);
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(0.0));
+    }
+}
+
+#[test]
+fn trace_events_sorted_and_request_count_conserved() {
+    let n = 24;
+    for st in [
+        Strategy::collocation(2, 1),
+        Strategy::disaggregation(1, 1, 1),
+        Strategy::dynamic(2, 1),
+    ] {
+        let (rep, sink) = traced_run(&st, n);
+        assert_eq!(rep.n, n, "{st}");
+        let events = sink.events();
+        assert!(!events.is_empty(), "{st}");
+
+        // events() yields a timeline sorted by sim time.
+        for w in events.windows(2) {
+            assert!(w[0].t <= w[1].t, "{st}: out of order at t={}", w[1].t);
+        }
+
+        // Conservation: each of the n requests arrives exactly once and
+        // finishes decoding exactly once, and ids stay in range.
+        let count = |k: EventKind| events.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(EventKind::Arrival), n, "{st}");
+        assert_eq!(count(EventKind::PrefillEnd), n, "{st}");
+        assert_eq!(count(EventKind::DecodeEnd), n, "{st}");
+        for e in &events {
+            if let Some(r) = e.request {
+                assert!((r as usize) < n, "{st}: request id {r}");
+            }
+            assert!(e.t.is_finite() && e.dur >= 0.0, "{st}");
+        }
+    }
+}

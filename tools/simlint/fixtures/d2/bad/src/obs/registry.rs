@@ -1,0 +1,19 @@
+//! D2 bad fixture: a wall-clock type in the observability plane. Only
+//! `obs/profile.rs` may hold stopwatch-issued `Instant`s; counters and
+//! gauges must stay clock-free so snapshots are deterministic.
+use std::time::SystemTime;
+
+pub struct Registry {
+    started: SystemTime,
+    count: u64,
+}
+
+impl Registry {
+    pub fn bump(&mut self) {
+        self.count += 1;
+    }
+
+    pub fn age(&self) -> SystemTime {
+        self.started
+    }
+}

@@ -1,0 +1,10 @@
+//! Rule-D5 anchors for the d2 good fixture: the fixture `Profiler` is a
+//! gate struct, so its `enabled` gate needs the same on/off constructor
+//! anchor the real tree has.
+
+#[test]
+fn profiled_sweep_matches_unprofiled() {
+    let on = Profiler::on();
+    let off = Profiler::off();
+    let _ = (on, off);
+}

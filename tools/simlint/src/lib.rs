@@ -21,7 +21,9 @@
 //!   (`Instant`, `SystemTime`): simulated time flows from the event clock
 //!   (`simulator::core::Clock`). `Instant::now`/`SystemTime::now` are
 //!   banned *everywhere* in the tree except `util/walltime.rs`, the one
-//!   sanctioned stopwatch for self-timing harnesses.
+//!   sanctioned stopwatch for self-timing harnesses. `obs/profile.rs`
+//!   (the sweep profiler) may *hold* stopwatch-issued `Instant`s, but the
+//!   `::now` calls stay banned there too — reads go through the stopwatch.
 //! * **D3** — no `partial_cmp` sorts on raw floats (the NaN-panic /
 //!   partial-order class PR 1 fixed must stay fixed): use `total_cmp` or
 //!   `util::stats::rank_desc`. The canonical `PartialOrd`-delegates-to-
@@ -75,15 +77,21 @@ const D1_MODULES: &[&str] =
 /// Modules that constitute simulation/estimation code (rule D2): any
 /// wall-clock *type* is suspect here, not just `::now` calls.
 const D2_MODULES: &[&str] =
-    &["simulator", "estimator", "optimizer", "planner", "testbed", "validation"];
+    &["simulator", "estimator", "obs", "optimizer", "planner", "testbed", "validation"];
 
 /// The structs whose `bool` fields gate output-preserving cuts (rule D5).
 /// Extend this list when a new gate struct is introduced (see the
 /// add-a-lint-rule recipe in ROADMAP.md).
-const GATE_STRUCTS: &[&str] = &["PruneConfig", "GoodputConfig", "SimParams"];
+const GATE_STRUCTS: &[&str] = &["PruneConfig", "GoodputConfig", "SimParams", "Profiler"];
 
 /// The one file allowed to read the wall clock (rule D2).
 const WALLCLOCK_HOME: &str = "util/walltime.rs";
+
+/// The one other file allowed to *hold* a wall-clock type (rule D2): the
+/// sweep profiler stores stopwatch-issued `Instant`s for its spans.
+/// `Instant::now`/`SystemTime::now` remain banned there — every read goes
+/// through `util::walltime::stopwatch()`.
+const PROFILE_HOME: &str = "obs/profile.rs";
 
 /// The one module allowed to implement/own randomness (rule D4).
 const RNG_HOME: &str = "util/rng.rs";
@@ -554,6 +562,7 @@ fn file_findings(sf: &SourceFile) -> Vec<Finding> {
     let d2 = D2_MODULES.contains(&module);
     let rng_home = sf.rel == RNG_HOME;
     let wallclock_home = sf.rel == WALLCLOCK_HOME;
+    let profile_home = sf.rel == PROFILE_HOME;
     let lines = sf.code_lines();
 
     for (i, line) in lines.iter().enumerate() {
@@ -577,7 +586,7 @@ fn file_findings(sf: &SourceFile) -> Vec<Finding> {
             }
         }
 
-        if d2 {
+        if d2 && !profile_home {
             for w in ["Instant", "SystemTime"] {
                 if has_ident(line, w) {
                     push(

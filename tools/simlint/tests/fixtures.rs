@@ -105,6 +105,8 @@ fn gate_fields_are_anchored_by_equivalence_tests() {
         ("GoodputConfig", "workload_cache"),
         ("SimParams", "kv_transfer"),
         ("SimParams", "front_cache"),
+        ("SimParams", "sim_trace"),
+        ("Profiler", "enabled"),
     ];
     for (s, f) in expected {
         let gate = report
