@@ -7,7 +7,8 @@
 use bestserve::util::walltime::stopwatch;
 
 use bestserve::config::{
-    ArrivalProcess, HardwareConfig, Platform, Scenario, Slo, Strategy, StrategySpace, Workload,
+    ArrivalProcess, FailureProcess, HardwareConfig, Platform, Scenario, Slo, Strategy,
+    StrategySpace, Workload,
 };
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
 use bestserve::obs::{FrontCacheScope, Profiler, TraceSink};
@@ -535,6 +536,63 @@ fn main() -> bestserve::Result<()> {
         "sweep profiler            : {} spans over a {dt_prof:.2}s profiled plan — wrote {}",
         spans.len(),
         profile_path.display()
+    );
+
+    // --- Failure plane -------------------------------------------------------
+    // The churn gate (`SimParams::failures`) is off by default and the off
+    // path must stay free: no plane is built, no RNG is drawn, and the
+    // report is bit-identical to a run that never configured the feature —
+    // even when an (unread) outage process is set. Same interleaved
+    // min-of-rounds discipline as the obs case above.
+    let churn_off = SimParams {
+        failures: false,
+        failure: FailureProcess { mtbf: 30.0, mttr: 1.0 },
+        ..params
+    };
+    let mut dt_base = f64::INFINITY;
+    let mut dt_off = f64::INFINITY;
+    let mut rep_base = None;
+    let mut rep_off = None;
+    for _ in 0..3 {
+        dt_base = dt_base.min(time(|| {
+            rep_base = Some(simulate(&oracle, &platform, &st, &obs_wl, 3.0, params).unwrap());
+        }));
+        dt_off = dt_off.min(time(|| {
+            rep_off = Some(simulate(&oracle, &platform, &st, &obs_wl, 3.0, churn_off).unwrap());
+        }));
+    }
+    let (rep_base, rep_off) = (rep_base.unwrap(), rep_off.unwrap());
+    let churn_overhead = dt_off / dt_base - 1.0;
+    println!(
+        "disabled failure plane    : base {dt_base:.3}s vs gate-off {dt_off:.3}s — \
+         {:+.2}% overhead",
+        100.0 * churn_overhead
+    );
+    assert!(rep_off.churn.is_none(), "failure gate down must report no churn");
+    assert_eq!(
+        report_key(&rep_base),
+        report_key(&rep_off),
+        "the failure gate down must reproduce the report bit for bit"
+    );
+    assert!(
+        dt_off <= dt_base * 1.02 + 0.005,
+        "disabled failure plane costs {:.2}% (> 2%): {dt_off:.3}s gate-off vs \
+         {dt_base:.3}s base",
+        100.0 * churn_overhead
+    );
+
+    // Gate up on the same run: the plane injects outages and the report
+    // carries the tallies. Not a perf assertion — churn legitimately slows
+    // and reshapes the run.
+    let churn_on = SimParams { failures: true, ..churn_off };
+    let rep_churn = simulate(&oracle, &platform, &st, &obs_wl, 3.0, churn_on).unwrap();
+    let churn = rep_churn.churn.expect("failure gate up must report churn");
+    assert!(churn.failures > 0, "a 30 s MTBF over this makespan must fail at least once");
+    assert!(churn.failures >= churn.recoveries, "recoveries cannot outnumber failures");
+    println!(
+        "  enabled churn           : {} failures, {} recoveries, {} lost-KV re-prefills, \
+         {:.1} s downtime",
+        churn.failures, churn.recoveries, churn.lost_kv_reprefills, churn.downtime
     );
     Ok(())
 }

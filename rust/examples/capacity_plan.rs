@@ -10,9 +10,11 @@
 //!
 //! Run: `cargo run --release --example capacity_plan`
 
-use bestserve::config::{HardwareConfig, Platform, Scenario, Slo, StrategySpace, Workload};
+use bestserve::config::{
+    FailureProcess, HardwareConfig, Platform, Scenario, Slo, StrategySpace, Workload,
+};
 use bestserve::optimizer::{GoodputConfig, PruneConfig};
-use bestserve::planner::{plan, LinearCardCost, PlannerConfig};
+use bestserve::planner::{plan, LinearCardCost, PlannerConfig, SpotCost};
 use bestserve::report;
 use bestserve::simulator::SimParams;
 
@@ -84,6 +86,62 @@ fn main() -> bestserve::Result<()> {
 
     println!("\nmin-cost plan per target rate:");
     print!("{}", report::min_cost_table(&rep).render());
+
+    // Spot vs on-demand: the same sweep with the failure plane on — spot
+    // capacity bills at a deep discount but gets preempted, and the
+    // churn-enabled goodput search carries that penalty (evicted requests
+    // lose their KV pages and re-prefill), so the two columns compare
+    // honestly under the same SLOs. This is `bestserve plan --failures`.
+    let spot_model = SpotCost::typical();
+    let spot_process = FailureProcess { mtbf: 1800.0, mttr: 20.0 };
+    let spot_cfg = PlannerConfig {
+        sim_params: SimParams {
+            failures: true,
+            failure: spot_process,
+            ..cfg.sim_params
+        },
+        ..cfg.clone()
+    };
+    let spot = plan(
+        &platform.model,
+        &platform.eff,
+        &profiles,
+        &workload,
+        &slo,
+        &spot_model,
+        &spot_cfg,
+        threads,
+    )?;
+    println!(
+        "\nspot vs on-demand (spot at {:.0}% of on-demand $/hr; churn-enabled \
+         goodput, MTBF {:.0} s, MTTR {:.0} s):",
+        (1.0 - spot_model.discount) * 100.0,
+        spot_process.mtbf,
+        spot_process.mttr
+    );
+    for (k, target) in rep.targets.iter().enumerate() {
+        match (rep.min_cost[k].as_ref(), spot.min_cost[k].as_ref()) {
+            (Some(o), Some(s)) => {
+                let verdict =
+                    if s.cost_per_hour < o.cost_per_hour { "spot wins" } else { "on-demand wins" };
+                println!(
+                    "  target {target} req/s: on-demand {} on {} at ${:.2}/hr vs \
+                     spot {} on {} at ${:.2}/hr → {verdict}",
+                    o.strategy, o.hardware, o.cost_per_hour, s.strategy, s.hardware, s.cost_per_hour
+                );
+            }
+            (Some(o), None) => println!(
+                "  target {target} req/s: only on-demand feasible ({} on {} at \
+                 ${:.2}/hr) — churn sinks every spot plan",
+                o.strategy, o.hardware, o.cost_per_hour
+            ),
+            (None, Some(s)) => println!(
+                "  target {target} req/s: only spot feasible ({} on {} at ${:.2}/hr)",
+                s.strategy, s.hardware, s.cost_per_hour
+            ),
+            (None, None) => println!("  target {target} req/s: unreachable in the swept space"),
+        }
+    }
 
     println!(
         "\n(Every point reuses the optimizer's Algorithm-8 bisection; the\n\

@@ -20,6 +20,8 @@ pub const VALUE_OPTIONS: &[&str] = &[
     "kv-blocks",
     "max-cards",
     "model",
+    "mtbf",
+    "mttr",
     "n",
     "out",
     "phase",
@@ -163,8 +165,20 @@ impl Args {
                         hi.parse().map_err(|_| Error::config("bad rate hi"))?,
                         step.parse().map_err(|_| Error::config("bad rate step"))?,
                     );
+                    // Non-finite bounds must hard-error BEFORE the ordering
+                    // checks: NaN fails both `step <= 0.0` and `hi < lo`
+                    // (producing a silent empty sweep), lo = -inf never
+                    // terminates the fill loop, and hi = +inf fills memory.
+                    if !lo.is_finite() || !hi.is_finite() || !step.is_finite() {
+                        return Err(Error::config(format!(
+                            "--{name} range bounds must be finite, got {lo}:{hi}:{step}"
+                        )));
+                    }
                     if step <= 0.0 || hi < lo {
-                        return Err(Error::config("rate range must have step>0, hi>=lo"));
+                        return Err(Error::config(format!(
+                            "--{name} range must have step > 0 and hi >= lo, \
+                             got {lo}:{hi}:{step}"
+                        )));
                     }
                     let mut out = Vec::new();
                     let mut r = lo;
@@ -176,9 +190,15 @@ impl Args {
                 } else {
                     v.split(',')
                         .map(|x| {
-                            x.trim()
-                                .parse()
-                                .map_err(|_| Error::config(format!("bad rate '{x}'")))
+                            let r: f64 = x.trim().parse().map_err(|_| {
+                                Error::config(format!("bad rate '{x}'"))
+                            })?;
+                            if !r.is_finite() {
+                                return Err(Error::config(format!(
+                                    "--{name} rates must be finite, got '{x}'"
+                                )));
+                            }
+                            Ok(r)
                         })
                         .collect()
                 }
@@ -231,6 +251,40 @@ mod tests {
 
     fn try_parse(s: &str) -> Result<Args> {
         Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn degenerate_rate_ranges_are_hard_errors() {
+        // Regression: zero/negative step and inverted bounds used to be the
+        // only rejected shapes; non-finite bounds slipped through — NaN
+        // fails both ordering comparisons (silent empty sweep), lo = -inf
+        // never reaches hi (infinite loop), hi = +inf never stops pushing.
+        for bad in [
+            "--target-rates 1:10:0",
+            "--target-rates 1:10:-0.5",
+            "--target-rates 10:1:1",
+            "--target-rates inf:10:1",
+            "--target-rates -inf:5:1",
+            "--target-rates 1:inf:1",
+            "--target-rates 1:10:nan",
+            "--target-rates nan:10:1",
+            "--target-rates 1:nan:1",
+        ] {
+            let a = try_parse(bad).unwrap();
+            let err = a.rates_or("target-rates", &[]).unwrap_err();
+            assert!(
+                err.to_string().contains("--target-rates"),
+                "{bad}: unhelpful message {err}"
+            );
+        }
+        // Comma lists reject non-finite entries the same way.
+        for bad in ["--target-rates 1,inf,3", "--target-rates nan", "--target-rates 2,-inf"] {
+            let a = try_parse(bad).unwrap();
+            assert!(a.rates_or("target-rates", &[]).is_err(), "{bad}");
+        }
+        // Finite well-ordered inputs still parse (hi == lo is one point).
+        let a = try_parse("--target-rates 2:2:1").unwrap();
+        assert_eq!(a.rates_or("target-rates", &[]).unwrap(), vec![2.0]);
     }
 
     #[test]

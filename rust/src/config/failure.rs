@@ -1,0 +1,123 @@
+//! Instance failure/recovery process: per-instance MTBF/MTTR outage
+//! windows, sampled through `util::rng` exactly like an arrival process.
+//! The simulator's failure plane (`simulator::failure`) draws alternating
+//! up/down durations from independent exponential streams — the classic
+//! alternating-renewal availability model, whose steady-state availability
+//! is MTBF / (MTBF + MTTR).
+//!
+//! To add a new failure process (e.g. Weibull wear-out, correlated rack
+//! failures): add fields or a variant here, extend `validate` and
+//! `to_json`/`from_json`, and teach `simulator::failure::FailurePlane` to
+//! sample it. Everything downstream — policy exclusion, KV-loss re-queueing,
+//! churn metrics, the planner's spot sweep — works unchanged, because it
+//! only sees the sampled outage boundaries.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Per-instance MTBF/MTTR failure process. Off by default everywhere: the
+/// simulator and testbed only consult it when their `failures` gate is on,
+/// so existing outputs stay byte-identical (pinned by
+/// `failure_process_off_preserves_reports_bit_for_bit`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureProcess {
+    /// Mean time between failures: the mean UP duration of one instance,
+    /// in seconds. Must be finite and > 0.
+    pub mtbf: f64,
+    /// Mean time to repair: the mean DOWN duration of one instance, in
+    /// seconds. Must be finite and > 0.
+    pub mttr: f64,
+}
+
+impl Default for FailureProcess {
+    /// One failure per hour with a 30 s recovery — a deliberately harsh
+    /// spot-instance-like default so enabling `--failures` without tuning
+    /// visibly exercises the churn path.
+    fn default() -> Self {
+        FailureProcess { mtbf: 3600.0, mttr: 30.0 }
+    }
+}
+
+impl FailureProcess {
+    /// Steady-state availability MTBF / (MTBF + MTTR) of one instance.
+    pub fn availability(&self) -> f64 {
+        self.mtbf / (self.mtbf + self.mttr)
+    }
+
+    /// Expected failures per hour of one instance (1 / MTBF in hours) —
+    /// the unit `HardwareConfig::failure_rate` is quoted in.
+    pub fn failures_per_hour(&self) -> f64 {
+        3600.0 / self.mtbf
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("mtbf", self.mtbf), ("mttr", self.mttr)] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::config(format!(
+                    "failure process {name} must be finite and > 0, got {v}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mtbf", Json::Num(self.mtbf)),
+            ("mttr", Json::Num(self.mttr)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FailureProcess> {
+        let d = FailureProcess::default();
+        let p = FailureProcess {
+            mtbf: j.f64_or("mtbf", d.mtbf),
+            mttr: j.f64_or("mttr", d.mttr),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_harsh() {
+        let p = FailureProcess::default();
+        p.validate().unwrap();
+        assert_eq!(p.mtbf, 3600.0);
+        assert_eq!(p.mttr, 30.0);
+        assert!((p.availability() - 3600.0 / 3630.0).abs() < 1e-12);
+        assert!((p.failures_per_hour() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_processes() {
+        for bad in [
+            FailureProcess { mtbf: 0.0, mttr: 30.0 },
+            FailureProcess { mtbf: -1.0, mttr: 30.0 },
+            FailureProcess { mtbf: f64::NAN, mttr: 30.0 },
+            FailureProcess { mtbf: f64::INFINITY, mttr: 30.0 },
+            FailureProcess { mtbf: 3600.0, mttr: 0.0 },
+            FailureProcess { mtbf: 3600.0, mttr: f64::NAN },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should not validate");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_partial_defaults() {
+        let p = FailureProcess { mtbf: 120.0, mttr: 5.0 };
+        assert_eq!(FailureProcess::from_json(&p.to_json()).unwrap(), p);
+        // Missing fields fall back to the defaults (back-compat idiom).
+        let j = Json::parse(r#"{"mtbf": 900}"#).unwrap();
+        let q = FailureProcess::from_json(&j).unwrap();
+        assert_eq!(q.mtbf, 900.0);
+        assert_eq!(q.mttr, FailureProcess::default().mttr);
+        // Degenerate JSON is rejected at load time.
+        let bad = Json::parse(r#"{"mtbf": 0}"#).unwrap();
+        assert!(FailureProcess::from_json(&bad).is_err());
+    }
+}

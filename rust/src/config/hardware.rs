@@ -60,6 +60,12 @@ pub struct HardwareConfig {
     /// Defaults to 1.0 (normalized cost units) when absent from JSON, which
     /// reduces $/hr rankings to card count.
     pub hourly_cost: f64,
+    /// Expected instance failures per hour on this offering — 0.0 (the
+    /// preset default, and the JSON fallback for older files) models
+    /// reliable on-demand capacity; spot/preemptible profiles set it > 0.
+    /// `planner::cost::SpotCost` folds it into $/hr rankings and
+    /// `bestserve plan --failures` derives the sweep's MTBF from it.
+    pub failure_rate: f64,
 }
 
 impl HardwareConfig {
@@ -86,6 +92,7 @@ impl HardwareConfig {
             comm_latency_floor: 100e-6,
             hbm_bytes: 64 << 30,
             hourly_cost: 1.20,
+            failure_rate: 0.0,
         }
     }
 
@@ -110,6 +117,7 @@ impl HardwareConfig {
             comm_latency_floor: 60e-6,
             hbm_bytes: 80 << 30,
             hourly_cost: 2.00,
+            failure_rate: 0.0,
         }
     }
 
@@ -132,6 +140,7 @@ impl HardwareConfig {
             comm_latency_floor: 50e-6,
             hbm_bytes: 80 << 30,
             hourly_cost: 3.90,
+            failure_rate: 0.0,
         }
     }
 
@@ -177,6 +186,7 @@ impl HardwareConfig {
             ("comm_latency_floor", Json::Num(self.comm_latency_floor)),
             ("hbm_bytes", Json::Num(self.hbm_bytes as f64)),
             ("hourly_cost", Json::Num(self.hourly_cost)),
+            ("failure_rate", Json::Num(self.failure_rate)),
         ])
     }
 
@@ -209,6 +219,7 @@ impl HardwareConfig {
             comm_latency_floor: j.f64_or("comm_latency_floor", 100e-6),
             hbm_bytes: j.f64_or("hbm_bytes", (64u64 << 30) as f64) as u64,
             hourly_cost: j.f64_or("hourly_cost", 1.0),
+            failure_rate: j.f64_or("failure_rate", 0.0),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -291,6 +302,9 @@ impl HardwareConfig {
         if !(self.hourly_cost.is_finite() && self.hourly_cost > 0.0) {
             return Err(Error::config("hourly_cost must be finite and > 0"));
         }
+        if !(self.failure_rate.is_finite() && self.failure_rate >= 0.0) {
+            return Err(Error::config("failure_rate must be finite and >= 0"));
+        }
         Ok(())
     }
 }
@@ -348,6 +362,27 @@ mod tests {
         let h = HardwareConfig::from_json(&j).unwrap();
         assert_eq!(h.hourly_cost, 1.0);
         assert_eq!(h.sm_bytes, 2.04e12);
+    }
+
+    #[test]
+    fn json_without_failure_rate_still_loads() {
+        // Pre-churn hardware JSON (no failure_rate key) must keep loading:
+        // the field defaults to 0.0 — reliable on-demand capacity.
+        let mut j = HardwareConfig::h100_sxm().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("failure_rate");
+        }
+        let h = HardwareConfig::from_json(&j).unwrap();
+        assert_eq!(h.failure_rate, 0.0);
+        // Spot-style profiles carry it through a round-trip, and NaN /
+        // negative rates are rejected.
+        let mut spot = HardwareConfig::a100_80g();
+        spot.failure_rate = 0.5;
+        assert_eq!(HardwareConfig::from_json(&spot.to_json()).unwrap().failure_rate, 0.5);
+        spot.failure_rate = -1.0;
+        assert!(spot.validate().is_err());
+        spot.failure_rate = f64::NAN;
+        assert!(spot.validate().is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! matching §4.1 and JSON file loading.
 
 pub mod efficiency;
+pub mod failure;
 pub mod hardware;
 pub mod model;
 pub mod scenario;
@@ -12,6 +13,7 @@ pub mod strategy;
 pub mod workload;
 
 pub use efficiency::{Efficiency, EfficiencyParams};
+pub use failure::FailureProcess;
 pub use hardware::{DispatchTimes, HardwareConfig};
 pub use model::ModelConfig;
 pub use scenario::{LengthDist, Scenario};

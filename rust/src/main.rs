@@ -16,8 +16,8 @@ use std::sync::Arc;
 
 use bestserve::cli::Args;
 use bestserve::config::{
-    EfficiencyParams, HardwareConfig, ModelConfig, Phase, Platform, Scenario, Slo, Strategy,
-    StrategySpace, Workload,
+    EfficiencyParams, FailureProcess, HardwareConfig, ModelConfig, Phase, Platform, Scenario,
+    Slo, Strategy, StrategySpace, Workload,
 };
 use bestserve::error::{Error, Result};
 use bestserve::estimator::{AnalyticOracle, LatencyModel};
@@ -26,7 +26,7 @@ use bestserve::optimizer::{
     optimize_parallel_with, AnalyticFactory, GoodputConfig, GridFactory, ModelFactory,
     PruneConfig,
 };
-use bestserve::planner::{plan_with_profiler, LinearCardCost, PlannerConfig};
+use bestserve::planner::{plan_with_profiler, LinearCardCost, PlannerConfig, SpotCost};
 use bestserve::report;
 use bestserve::runtime::{default_artifacts_dir, GridLatencyModel};
 use bestserve::simulator::{generate_workload, SimParams, SpanMode};
@@ -48,8 +48,14 @@ COMMANDS
             [--save-trace F] (write the generated workload as a CSV trace)
             [--sim-trace F] (export the simulated event timeline — arrivals,
                              batches, prefill/decode spans, preemptions, role
-                             switches, KV hand-offs — as Chrome trace_event
-                             JSON openable in Perfetto, or CSV if F ends .csv)
+                             switches, KV hand-offs, failures/recoveries — as
+                             Chrome trace_event JSON openable in Perfetto, or
+                             CSV if F ends .csv)
+            [--failures]    (enable the instance failure plane: per-instance
+                             MTBF/MTTR outages; down instances leave routing,
+                             their in-flight decodes lose KV pages and re-queue
+                             for re-prefill. Prints churn tallies plus tail
+                             inflation vs the no-failure baseline)
   sweep     --strategy S --scenario OP --rates lo:hi:step [--grid] [--out DIR]
   optimize  --scenario OP [--max-cards 8] [--tp 1,2,4,8] [--grid]
             [--bmax-prefill 4] [--bmax-decode 16] [--repeats 1]
@@ -72,6 +78,10 @@ COMMANDS
                              probes, bisection iterations — as Chrome-trace
                              JSON; the sweep's outputs are bit-identical with
                              profiling on or off)
+            [--failures]    (spot-vs-on-demand: a second sweep with the
+                             failure plane on, priced at the spot discount;
+                             MTBF from --mtbf or the harshest profile
+                             failure_rate. Compares min-cost plans per target)
             Sweeps hardware x cluster size x strategy, then reports the
             cheapest feasible plan per target and the Pareto frontier over
             {goodput, cards, $/hr, $/1M output tokens}. Deterministic for
@@ -97,9 +107,13 @@ COMMON OPTIONS
              results are bit-identical either way — this exists for A/B runs
   --stats    (simulate / plan / testbed) append a run-stats table — counters
              and gauges from the obs registry: request counts, throughput,
-             role occupancy, planner probe/prune counters, KV hand-offs, and
+             role occupancy, planner probe/prune counters, KV hand-offs,
+             churn counters (failures, lost-KV re-prefills, downtime), and
              this run's front-cache hits/misses (delta-scoped, not the
              process totals)
+  --failures enable the instance failure plane (simulate / testbed / plan)
+  --mtbf S   mean time between failures per instance, seconds (default 3600)
+  --mttr S   mean time to recovery per outage, seconds (default 30)
 
 STRATEGY NOTATION
   5m         collocation: 5 instances serving both phases (vLLM-style)
@@ -198,6 +212,13 @@ fn sim_params_from(args: &Args) -> Result<SimParams> {
         front_cache: !args.flag("no-fast-path"),
         // `--sim-trace F` both opens the gate and names the output file.
         sim_trace: args.get("sim-trace").is_some(),
+        // The failure plane: off unless --failures; --mtbf/--mttr are in
+        // seconds and only matter while the gate is on.
+        failures: args.flag("failures"),
+        failure: FailureProcess {
+            mtbf: args.f64_or("mtbf", defaults.failure.mtbf)?,
+            mttr: args.f64_or("mttr", defaults.failure.mttr)?,
+        },
         ..defaults
     })
 }
@@ -328,6 +349,33 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "throughput {:.3} req/s | makespan {:.1} s",
         t.report.throughput, t.report.makespan
     );
+    if let Some(churn) = t.report.churn {
+        // Goodput under churn: re-run the identical operating point with
+        // the failure plane off and report how much the outages inflate
+        // the tails (the plane's RNG is independent of the scheduling
+        // streams, so the baseline is the exact same workload).
+        let baseline = bestserve::simulator::simulate(
+            model.as_ref(),
+            &platform,
+            &strategy,
+            &workload,
+            scale,
+            SimParams { failures: false, ..params },
+        )?;
+        println!(
+            "churn: {} failures | {} recoveries | {} lost-KV re-prefills | {:.1} s instance downtime",
+            churn.failures, churn.recoveries, churn.lost_kv_reprefills, churn.downtime
+        );
+        let inflation = |with: f64, without: f64| {
+            if without > 0.0 { with / without } else { f64::INFINITY }
+        };
+        println!(
+            "tail inflation vs no-failure baseline: TTFT p99 ×{:.2} | TPOT p99 ×{:.2} | E2E p99 ×{:.2}",
+            inflation(t.report.ttft.p99, baseline.ttft.p99),
+            inflation(t.report.tpot.p99, baseline.tpot.p99),
+            inflation(t.report.e2e.p99, baseline.e2e.p99),
+        );
+    }
     if args.flag("hist") {
         println!("\n{}", t.render_histograms(24, 48));
     }
@@ -544,7 +592,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
             workload_cache: !args.flag("no-fast-path"),
             ..GoodputConfig::default()
         },
-        sim_params: sim_params_from(args)?,
+        // The main sweep is always the reliable on-demand arm; under
+        // --failures a second churn-enabled spot arm runs below.
+        sim_params: SimParams { failures: false, ..sim_params_from(args)? },
         check_memory: args.flag("check-memory"),
         prune: if args.flag("no-prune") {
             PruneConfig::none()
@@ -591,6 +641,89 @@ fn cmd_plan(args: &Args) -> Result<()> {
     print!("{}", report::frontier_table(&rep).render());
     println!("\nmin-cost plan per target rate:");
     print!("{}", report::min_cost_table(&rep).render());
+    if args.flag("failures") {
+        // Spot vs on-demand: re-sweep the same space with the failure
+        // plane on — goodput now carries the churn penalty — priced at the
+        // spot discount. MTBF comes from --mtbf, or is implied by the
+        // harshest profile `failure_rate` when one is set.
+        let spot_model = SpotCost::typical();
+        let implied = profiles
+            .iter()
+            .filter_map(SpotCost::mtbf_seconds)
+            .fold(f64::INFINITY, f64::min);
+        let base = cfg.sim_params;
+        let mtbf = if args.get("mtbf").is_some() || !implied.is_finite() {
+            base.failure.mtbf
+        } else {
+            implied
+        };
+        let spot_cfg = PlannerConfig {
+            sim_params: SimParams {
+                failures: true,
+                failure: FailureProcess { mtbf, ..base.failure },
+                ..base
+            },
+            ..cfg.clone()
+        };
+        let spot = plan_with_profiler(
+            &model,
+            &eff,
+            &profiles,
+            &workload,
+            &slo,
+            &spot_model,
+            &spot_cfg,
+            threads,
+            &Profiler::off(),
+        )?;
+        println!(
+            "\nspot vs on-demand (spot at {:.0}% of on-demand $/hr; churn-enabled goodput, \
+             MTBF {:.0} s, MTTR {:.1} s):",
+            (1.0 - spot_model.discount) * 100.0,
+            mtbf,
+            spot_cfg.sim_params.failure.mttr
+        );
+        for (k, target) in rep.targets.iter().enumerate() {
+            match (rep.min_cost[k].as_ref(), spot.min_cost[k].as_ref()) {
+                (Some(o), Some(s)) => {
+                    let verdict = if s.cost_per_hour < o.cost_per_hour {
+                        "spot wins"
+                    } else {
+                        "on-demand wins"
+                    };
+                    println!(
+                        "  target {} req/s: on-demand {} on {} at ${:.2}/hr vs \
+                         spot {} on {} at ${:.2}/hr → {verdict}",
+                        fr(*target),
+                        o.strategy,
+                        o.hardware,
+                        o.cost_per_hour,
+                        s.strategy,
+                        s.hardware,
+                        s.cost_per_hour
+                    );
+                }
+                (Some(o), None) => println!(
+                    "  target {} req/s: only on-demand feasible ({} on {} at ${:.2}/hr) — \
+                     churn sinks every spot plan",
+                    fr(*target),
+                    o.strategy,
+                    o.hardware,
+                    o.cost_per_hour
+                ),
+                (None, Some(s)) => println!(
+                    "  target {} req/s: only spot feasible ({} on {} at ${:.2}/hr)",
+                    fr(*target),
+                    s.strategy,
+                    s.hardware,
+                    s.cost_per_hour
+                ),
+                (None, None) => {
+                    println!("  target {} req/s: unreachable in the swept space", fr(*target))
+                }
+            }
+        }
+    }
     if let Some(out) = args.get("out") {
         let path = std::path::Path::new(out).join(format!("plan_{}.csv", rep.workload));
         rep.to_csv().save(&path)?;
@@ -622,6 +755,14 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     let mut config = TestbedConfig {
         // Dynamic (Nf) pools honor the same switch knob as the simulator.
         switch_latency: args.f64_or("switch-latency", defaults.switch_latency * 1e3)? / 1e3,
+        // The failure plane mirrors `simulate`: off unless --failures, and
+        // keyed to the workload seed so churn replays with the run.
+        failures: args.flag("failures"),
+        failure: FailureProcess {
+            mtbf: args.f64_or("mtbf", defaults.failure.mtbf)?,
+            mttr: args.f64_or("mttr", defaults.failure.mttr)?,
+        },
+        failure_seed: args.u64_or("seed", 0xBE57)?,
         ..defaults
     };
     if let Some(b) = args.get("kv-blocks") {
@@ -678,6 +819,12 @@ fn cmd_testbed(args: &Args) -> Result<()> {
         print!("{}", occ.render());
     }
     println!("throughput {:.3} req/s", rep.throughput);
+    if let Some(churn) = rep.churn {
+        println!(
+            "churn: {} failures | {} recoveries | {} lost-KV re-prefills | {:.1} s instance downtime",
+            churn.failures, churn.recoveries, churn.lost_kv_reprefills, churn.downtime
+        );
+    }
     if out.kv_handoffs > 0 {
         println!("KV hand-offs over the interconnect: {}", out.kv_handoffs);
     }

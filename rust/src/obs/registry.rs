@@ -20,7 +20,7 @@
 use std::collections::BTreeMap;
 
 use crate::estimator::{front_cache_totals, CacheStats};
-use crate::simulator::{RoleOccupancy, SimReport};
+use crate::simulator::{ChurnStats, RoleOccupancy, SimReport};
 
 /// Deterministic named counters (monotone `u64`) and gauges (`f64`).
 #[derive(Debug, Clone, Default)]
@@ -82,6 +82,14 @@ impl Registry {
         self.add("plan.points_pruned", points_pruned);
     }
 
+    /// Absorb a failure plane's churn tallies (`simulator::failure`).
+    pub fn absorb_churn(&mut self, churn: &ChurnStats) {
+        self.add("churn.failures", churn.failures);
+        self.add("churn.recoveries", churn.recoveries);
+        self.add("churn.lost_kv_reprefills", churn.lost_kv_reprefills);
+        self.set("churn.downtime_s", churn.downtime);
+    }
+
     /// Absorb a simulation report's run-level aggregates (including the
     /// role occupancy when the run was a dynamic pool).
     pub fn absorb_sim_report(&mut self, rep: &SimReport) {
@@ -90,6 +98,9 @@ impl Registry {
         self.set("sim.makespan_s", rep.makespan);
         if let Some(occ) = &rep.role_occupancy {
             self.absorb_role_occupancy(occ);
+        }
+        if let Some(churn) = &rep.churn {
+            self.absorb_churn(churn);
         }
     }
 
@@ -174,6 +185,16 @@ mod tests {
         });
         r.absorb_plan_counters(10, 4);
         r.absorb_kv_handoffs(7);
+        r.absorb_churn(&ChurnStats {
+            failures: 4,
+            recoveries: 3,
+            lost_kv_reprefills: 2,
+            downtime: 1.5,
+        });
+        assert_eq!(r.counter("churn.failures"), 4);
+        assert_eq!(r.counter("churn.recoveries"), 3);
+        assert_eq!(r.counter("churn.lost_kv_reprefills"), 2);
+        assert_eq!(r.gauge("churn.downtime_s"), Some(1.5));
         assert_eq!(r.counter("front_cache.hits"), 9);
         assert_eq!(r.gauge("front_cache.hit_rate"), Some(0.9));
         assert_eq!(r.counter("roles.switches"), 3);

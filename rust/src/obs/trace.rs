@@ -42,6 +42,12 @@ pub enum EventKind {
     /// KV pages crossed the prefill→decode boundary; `dur` is the priced
     /// transfer time.
     KvHandoff,
+    /// An instance entered an outage window (failure plane,
+    /// `simulator::failure`): it is excluded from routing and its resident
+    /// decodes lose their KV pages (each also emits a `Preemption`).
+    Failure,
+    /// An instance recovered from an outage and rejoined routing.
+    Recovery,
 }
 
 impl EventKind {
@@ -56,6 +62,8 @@ impl EventKind {
             EventKind::Preemption => "preemption",
             EventKind::RoleSwitch => "role_switch",
             EventKind::KvHandoff => "kv_handoff",
+            EventKind::Failure => "failure",
+            EventKind::Recovery => "recovery",
         }
     }
 }

@@ -25,6 +25,37 @@ impl CostModel for LinearCardCost {
     }
 }
 
+/// Spot/preemptible pricing: the on-demand rate discounted by `discount`
+/// (e.g. 0.7 = pay 30%). The *bill* is cheap; the *capacity* fails at
+/// `HardwareConfig::failure_rate` per hour, so `bestserve plan --failures`
+/// pairs this model with a churn-enabled goodput sweep (MTBF derived from
+/// the same rate) — the spot row's goodput already carries the reliability
+/// penalty that the discount buys.
+pub struct SpotCost {
+    /// Fraction of the on-demand rate waived; must be in `[0, 1)`.
+    pub discount: f64,
+}
+
+impl SpotCost {
+    /// AWS-style ballpark default: spot at ~35% of on-demand.
+    pub fn typical() -> SpotCost {
+        SpotCost { discount: 0.65 }
+    }
+
+    /// MTBF (seconds) implied by a profile's `failure_rate`; `None` for
+    /// reliable (rate 0) capacity, where a churn sweep would be pointless.
+    pub fn mtbf_seconds(hw: &HardwareConfig) -> Option<f64> {
+        (hw.failure_rate > 0.0).then(|| 3600.0 / hw.failure_rate)
+    }
+}
+
+impl CostModel for SpotCost {
+    fn hourly(&self, hw: &HardwareConfig, cards: u32) -> f64 {
+        debug_assert!((0.0..1.0).contains(&self.discount));
+        LinearCardCost.hourly(hw, cards) * (1.0 - self.discount)
+    }
+}
+
 /// $ per 1M generated tokens at a goodput operating point: the hourly bill
 /// spread over `goodput · mean_gen · 3600` tokens. Infinite when the point
 /// serves nothing (zero goodput) — such plans can never be cost-optimal
@@ -58,6 +89,19 @@ mod tests {
         assert!((c - 2.0).abs() < 1e-9, "{c}");
         // Zero goodput: infinite $/token, not NaN or a divide-by-zero panic.
         assert_eq!(per_million_tokens(7.2, 0.0, 100.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn spot_cost_discounts_and_derives_mtbf() {
+        let mut hw = HardwareConfig::a100_80g();
+        let on_demand = LinearCardCost.hourly(&hw, 8);
+        let spot = SpotCost::typical().hourly(&hw, 8);
+        assert!((spot - 0.35 * on_demand).abs() < 1e-12, "{spot} vs {on_demand}");
+        // Reliable capacity has no implied MTBF; a spot profile at 0.25
+        // failures/hr implies MTBF = 4 h.
+        assert_eq!(SpotCost::mtbf_seconds(&hw), None);
+        hw.failure_rate = 0.25;
+        assert_eq!(SpotCost::mtbf_seconds(&hw), Some(14400.0));
     }
 
     #[test]

@@ -79,7 +79,7 @@
 pub mod cost;
 pub mod pareto;
 
-pub use cost::{CostModel, LinearCardCost};
+pub use cost::{CostModel, LinearCardCost, SpotCost};
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

@@ -20,6 +20,7 @@ use super::core::{
     decode_span_for, drive, EventDriven, FifoArrivals, NextEvent, ReadyQueue, SlotPool,
     VisitOrder,
 };
+use super::failure::{FailurePlane, PlaneEvent};
 use super::metrics::{RequestOutcome, SimReport};
 use super::params::SimParams;
 use super::request::Request;
@@ -95,17 +96,69 @@ struct CollocPolicy<'a> {
     /// Which instance served each request's decode — only populated (and
     /// only allocated) when tracing, for the end-of-run DecodeEnd events.
     decode_inst: Vec<u32>,
+    /// Failure plane (`None` when `params.failures` is off — the disabled
+    /// path holds no plane and stays bit-identical).
+    plane: Option<FailurePlane>,
+    /// Remaining decode span of a request evicted by a failure, indexed by
+    /// request; `INFINITY` = no pending resume. Only allocated with the
+    /// plane.
+    resume_span: Vec<f64>,
+}
+
+impl CollocPolicy<'_> {
+    /// Instance `i` crashed at `t`: its resident decodes lose their KV
+    /// pages and re-queue for re-prefill (priced as a single-request
+    /// prefill charged to each request's own timeline — see
+    /// `simulator::failure`), resuming their remaining span on
+    /// re-insertion.
+    fn on_failure(&mut self, i: usize, t: f64) {
+        let mut evicted = Vec::new();
+        self.instances[i].slots.evict_busy(t, |r| evicted.push(r));
+        for &r in &evicted {
+            // Slot release time and completion are kept equal by
+            // occupy/shift_busy, so the remainder comes off `completion`.
+            self.resume_span[r] = self.completion[r] - t;
+            self.completion[r] = f64::INFINITY;
+            self.inserted -= 1;
+            let penalty = self.model.prefill_time(1, self.reqs[r].input_len);
+            self.decode_q.push(t + penalty, r);
+            self.tracer.instant(t, EventKind::Preemption, i, r);
+        }
+        if let Some(p) = self.plane.as_mut() {
+            p.note_reprefills(evicted.len());
+        }
+    }
 }
 
 impl EventDriven for CollocPolicy<'_> {
     fn step(&mut self, t: f64) -> bool {
+        // --- failure plane: drain due outage boundaries first --------------
+        if let Some(plane) = self.plane.as_mut() {
+            match plane.poll(t) {
+                Some(PlaneEvent::Failed(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Failure, Some(i as u32), None);
+                    self.on_failure(i, t);
+                    return true;
+                }
+                Some(PlaneEvent::Recovered(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Recovery, Some(i as u32), None);
+                    return true;
+                }
+                None => {}
+            }
+        }
+
         // --- Algorithm 6: prefill processing (highest priority) -----------
         if self.arrivals.head_arrived(t) {
+            let plane = &self.plane;
             let order = self.order.shuffled(&mut self.rng);
             let found = order
                 .iter()
                 .copied()
-                .find(|&i| self.instances[i].idle_for_prefill(t));
+                .find(|&i| {
+                    self.instances[i].idle_for_prefill(t)
+                        && !matches!(plane, Some(p) if p.is_down(i))
+                });
             if let Some(i) = found {
                 let batch = self.arrivals.take_batch(t, self.bmax_prefill);
                 let t_b = self.model.prefill_time(batch.len(), batch.s_max);
@@ -157,23 +210,38 @@ impl EventDriven for CollocPolicy<'_> {
         // --- Algorithm 7: decode processing --------------------------------
         if let Some((ready, r)) = self.decode_q.peek() {
             if ready <= t {
+                let plane = &self.plane;
                 let order = self.order.shuffled(&mut self.rng);
                 let found = order
                     .iter()
                     .copied()
-                    .find(|&i| self.instances[i].idle_for_decode(t));
+                    .find(|&i| {
+                        self.instances[i].idle_for_decode(t)
+                            && !matches!(plane, Some(p) if p.is_down(i))
+                    });
                 if let Some(i) = found {
                     self.decode_q.pop();
                     let req = self.reqs[r];
                     let inst = &mut self.instances[i];
                     let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
-                    let span = decode_span_for(
-                        &self.model,
-                        &self.params,
-                        b_eff,
-                        req.input_len,
-                        req.gen_len,
-                    );
+                    // A failure-evicted request resumes its remaining span
+                    // at its original pricing; fresh requests are priced by
+                    // the span rule.
+                    let span = if !self.resume_span.is_empty()
+                        && self.resume_span[r].is_finite()
+                    {
+                        let s = self.resume_span[r];
+                        self.resume_span[r] = f64::INFINITY;
+                        s
+                    } else {
+                        decode_span_for(
+                            &self.model,
+                            &self.params,
+                            b_eff,
+                            req.input_len,
+                            req.gen_len,
+                        )
+                    };
                     let j = inst
                         .slots
                         .free_slot(t)
@@ -213,6 +281,9 @@ impl EventDriven for CollocPolicy<'_> {
             ne.offer(inst.prefill_until);
             ne.offer(inst.resume_at);
             inst.slots.offer_releases(&mut ne);
+        }
+        if let Some(p) = &self.plane {
+            p.offer_boundaries(&mut ne);
         }
         ne.get()
     }
@@ -273,6 +344,12 @@ impl<'a> CollocSimulator<'a> {
             inserted: 0,
             tracer,
             decode_inst: if tracer.is_on() { vec![0; n] } else { Vec::new() },
+            plane: FailurePlane::from_params(&self.params, self.n_instances),
+            resume_span: if self.params.failures {
+                vec![f64::INFINITY; n]
+            } else {
+                Vec::new()
+            },
         };
         drive(&mut policy, "collocation");
         if tracer.is_on() {
@@ -299,7 +376,9 @@ impl<'a> CollocSimulator<'a> {
                 class: r.class,
             })
             .collect();
-        SimReport::from_outcomes(&outcomes)
+        let mut report = SimReport::from_outcomes(&outcomes);
+        report.churn = policy.plane.map(|p| p.churn);
+        report
     }
 }
 
@@ -426,6 +505,43 @@ mod tests {
             colloc.tpot.p90,
             disagg.tpot.p90
         );
+    }
+
+    #[test]
+    fn churn_conserves_requests_and_tallies() {
+        // Aggressive churn (MTBF 2 s, MTTR 0.1 s over a ~20 s run) on a
+        // loaded pool: every request still completes with finite metrics,
+        // the plane tallies outages and KV-loss re-queues, and replaying
+        // the seed reproduces the report bit for bit.
+        use crate::config::FailureProcess;
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let mut s = sim(&m, &p, 2);
+        s.params = SimParams {
+            failures: true,
+            failure: FailureProcess { mtbf: 2.0, mttr: 0.1 },
+            ..SimParams::default()
+        };
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 32, 200));
+        let reqs = generate_workload(&w, 8.0, 11).unwrap();
+        let rep = s.run(&reqs);
+        assert_eq!(rep.n, 200);
+        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(rep.e2es.iter().all(|x| x.is_finite() && *x > 0.0));
+        let churn = rep.churn.expect("failures on => churn tallies");
+        assert!(churn.failures >= 1, "{churn:?}");
+        assert!(churn.lost_kv_reprefills >= 1, "{churn:?}");
+        assert!(churn.downtime >= 0.0 && churn.downtime.is_finite());
+        // Seed-deterministic: bit-identical replay.
+        let again = s.run(&reqs);
+        assert_eq!(rep.churn, again.churn);
+        for (a, b) in rep.e2es.iter().zip(&again.e2es) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Gate off: no churn surface at all.
+        let base = sim(&m, &p, 2).run(&reqs);
+        assert!(base.churn.is_none());
     }
 
     #[test]

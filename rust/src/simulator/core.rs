@@ -248,6 +248,22 @@ impl SlotPool {
         }
     }
 
+    /// Evict every request still resident at `t`, reporting each occupant,
+    /// and free the slot immediately — the failure plane's KV-loss eviction
+    /// (`simulator::failure`): when an instance crashes, its slots' KV
+    /// pages are gone and the occupants must re-queue for re-prefill.
+    pub fn evict_busy(&mut self, t: f64, mut on_evict: impl FnMut(usize)) {
+        for (u, r) in self.until.iter_mut().zip(self.req.iter_mut()) {
+            if *u > t {
+                if *r != NO_REQ {
+                    on_evict(*r);
+                }
+                *u = 0.0;
+                *r = NO_REQ;
+            }
+        }
+    }
+
     /// Offer every release time to a next-event accumulator (strictly-past
     /// releases are filtered by the accumulator itself).
     pub fn offer_releases(&self, ne: &mut NextEvent) {
@@ -464,6 +480,21 @@ mod tests {
         p.shift_busy(1.0, 4.0, |r| shifted.push(r));
         assert_eq!(shifted, vec![10]);
         assert_eq!(p.earliest_release(1.0), 6.0);
+    }
+
+    #[test]
+    fn slot_pool_evicts_residents_on_failure() {
+        let mut p = SlotPool::new(3);
+        p.occupy(0, 2.0, 10);
+        p.occupy(1, 0.5, 11); // already released at t=1: not evicted
+        p.occupy(2, 9.0, 12);
+        let mut evicted = Vec::new();
+        p.evict_busy(1.0, |r| evicted.push(r));
+        assert_eq!(evicted, vec![10, 12]);
+        // All slots are free immediately after the eviction.
+        assert_eq!(p.busy(1.0), 0);
+        assert!(p.has_free(1.0));
+        assert_eq!(p.earliest_release(1.0), f64::INFINITY);
     }
 
     #[test]

@@ -8,7 +8,8 @@ use crate::estimator::{FrontCache, LatencyModel};
 use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
-use super::core::{decode_span_for, drive, EventDriven, NextEvent, SlotPool, VisitOrder};
+use super::core::{decode_span_for, drive, EventDriven, NextEvent, ReadyQueue, SlotPool, VisitOrder};
+use super::failure::{FailurePlane, PlaneEvent};
 use super::params::SimParams;
 
 /// One item entering the decode stage.
@@ -52,18 +53,104 @@ struct DecodePolicy<'a, 'r> {
     next: usize,
     out: Vec<DecodeOutcome>,
     tracer: SimTracer<'a>,
+    /// Failure plane threaded in by the disaggregation tandem (`None` when
+    /// churn is off).
+    plane: Option<&'r mut FailurePlane>,
+    /// KV-loss re-queues: (re-prefill completion, req) pairs waiting for a
+    /// slot on an up instance. Only ever fed by failures.
+    retry: ReadyQueue,
+    /// Remaining decode span frozen at eviction, indexed by req
+    /// (`INFINITY` = not evicted). Empty when churn is off.
+    resume: Vec<f64>,
+    /// req → index into `items`/`out`, so a resume can rewrite the evicted
+    /// item's completion in place (outcomes stay parallel to `items`).
+    /// Empty when churn is off.
+    item_of: Vec<usize>,
+}
+
+impl DecodePolicy<'_, '_> {
+    /// Instance `i` failed: its residents lose their KV pages. Each freezes
+    /// its remaining span, re-queues behind a single-request re-prefill
+    /// charged to its own timeline (see [`super::failure`]), and its
+    /// outcome completion goes to `INFINITY` until it resumes.
+    fn on_failure(&mut self, i: usize, t: f64) {
+        let mut evicted = Vec::new();
+        self.slots[i].evict_busy(t, |r| evicted.push(r));
+        for &r in &evicted {
+            let k = self.item_of[r];
+            self.resume[r] = self.out[k].completion - t;
+            self.out[k].completion = f64::INFINITY;
+            let penalty = self.model.prefill_time(1, self.items[k].input_len);
+            self.retry.push(t + penalty, r);
+            self.tracer.instant(t, EventKind::Preemption, i, r);
+        }
+        if let Some(p) = self.plane.as_deref_mut() {
+            p.note_reprefills(evicted.len());
+        }
+    }
+
+    /// Try to place an evicted request (the retry head) back into a slot on
+    /// an up instance; its frozen remaining span resumes unchanged.
+    fn insert_resumed(&mut self, t: f64, r: usize) -> bool {
+        let plane = &self.plane;
+        let slots = &self.slots;
+        let order = self.order.shuffled(self.rng);
+        let Some((i, j)) = order.iter().find_map(|&i| {
+            if matches!(plane, Some(p) if p.is_down(i)) {
+                return None;
+            }
+            slots[i].free_slot(t).map(|j| (i, j))
+        }) else {
+            return false;
+        };
+        let remaining = self.resume[r];
+        debug_assert!(remaining.is_finite(), "resume span for req {r} not frozen");
+        self.slots[i].occupy(j, t + remaining, r);
+        self.resume[r] = f64::INFINITY;
+        self.out[self.item_of[r]].completion = t + remaining;
+        self.retry.pop();
+        self.tracer.span(t, remaining, EventKind::DecodeStart, i, r);
+        self.tracer.instant(t + remaining, EventKind::DecodeEnd, i, r);
+        true
+    }
 }
 
 impl EventDriven for DecodePolicy<'_, '_> {
     fn step(&mut self, t: f64) -> bool {
+        // Due outage boundaries are actions, processed before any
+        // insertion at the same instant.
+        if let Some(plane) = self.plane.as_deref_mut() {
+            match plane.poll(t) {
+                Some(PlaneEvent::Failed(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Failure, Some(i as u32), None);
+                    self.on_failure(i, t);
+                    return true;
+                }
+                Some(PlaneEvent::Recovered(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Recovery, Some(i as u32), None);
+                    return true;
+                }
+                None => {}
+            }
+        }
+        // Evicted work resumes ahead of the head item (it is older).
+        if let Some((ready, r)) = self.retry.peek() {
+            if ready <= t && self.insert_resumed(t, r) {
+                return true;
+            }
+        }
         let Some(item) = self.items.get(self.next).copied() else {
             return false;
         };
         if item.ready > t {
             return false;
         }
+        let plane = &self.plane;
         let order = self.order.shuffled(self.rng);
         for &i in order {
+            if matches!(plane, Some(p) if p.is_down(i)) {
+                continue;
+            }
             let Some(j) = self.slots[i].free_slot(t) else {
                 continue;
             };
@@ -73,8 +160,10 @@ impl EventDriven for DecodePolicy<'_, '_> {
                 decode_span_for(&self.model, &self.params, b_eff, item.input_len, item.gen_len);
             self.slots[i].occupy(j, t + span, item.req);
             self.out.push(DecodeOutcome { req: item.req, inserted: t, completion: t + span });
-            // Decode-stage spans are final (no preemption shifts them), so
-            // the end event can be emitted eagerly.
+            // Decode-stage spans are final unless a failure evicts the
+            // request (which emits a `Preemption` plus a fresh start/end
+            // pair on resume), so the end event is emitted eagerly; a
+            // superseded end is an accepted trace artifact under churn.
             self.tracer.span(t, span, EventKind::DecodeStart, i, item.req);
             self.tracer.instant(t + span, EventKind::DecodeEnd, i, item.req);
             self.next += 1;
@@ -84,16 +173,37 @@ impl EventDriven for DecodePolicy<'_, '_> {
     }
 
     fn next_event(&self, t: f64) -> f64 {
-        let Some(item) = self.items.get(self.next) else {
-            return f64::INFINITY;
-        };
-        if item.ready > t {
-            // The tandem hands items over in ready order: jump straight to
-            // the head item's readiness.
-            return item.ready;
+        if self.plane.is_none() {
+            // The no-churn fast path — bit-identical to the pre-failure-
+            // plane behavior (`retry` is only ever fed by failures).
+            let Some(item) = self.items.get(self.next) else {
+                return f64::INFINITY;
+            };
+            if item.ready > t {
+                // The tandem hands items over in ready order: jump straight
+                // to the head item's readiness.
+                return item.ready;
+            }
+            // Every slot busy: wake at the earliest release.
+            let mut ne = NextEvent::after(t);
+            for pool in &self.slots {
+                pool.offer_releases(&mut ne);
+            }
+            return ne.get();
         }
-        // Every slot busy: wake at the earliest release.
+        // Under churn: the clock must land on every outage boundary, every
+        // retry readiness, the head item, and every release (a resumable
+        // request may be waiting on any of them).
         let mut ne = NextEvent::after(t);
+        if let Some(p) = self.plane.as_deref() {
+            p.offer_boundaries(&mut ne);
+        }
+        if let Some((ready, _)) = self.retry.peek() {
+            ne.offer(ready);
+        }
+        if let Some(item) = self.items.get(self.next) {
+            ne.offer(item.ready);
+        }
         for pool in &self.slots {
             pool.offer_releases(&mut ne);
         }
@@ -101,7 +211,7 @@ impl EventDriven for DecodePolicy<'_, '_> {
     }
 
     fn done(&self) -> bool {
-        self.next >= self.items.len()
+        self.next >= self.items.len() && self.retry.is_empty()
     }
 }
 
@@ -110,7 +220,7 @@ impl<'a> DecodeStage<'a> {
     /// them over in prefill-departure order). Returns outcomes in the same
     /// order.
     pub fn run(&self, items: &[DecodeItem], rng: &mut Rng) -> Vec<DecodeOutcome> {
-        self.run_with(items, rng, SimTracer::off())
+        self.run_with(items, rng, SimTracer::off(), None)
     }
 
     /// [`DecodeStage::run`] with sim-time events recorded into `sink`
@@ -121,20 +231,34 @@ impl<'a> DecodeStage<'a> {
         rng: &mut Rng,
         sink: &TraceSink,
     ) -> Vec<DecodeOutcome> {
-        self.run_with(items, rng, SimTracer::on(sink))
+        self.run_with(items, rng, SimTracer::on(sink), None)
     }
 
-    /// Tracer-threading entry used by the disaggregation tandem, which
-    /// hands us a [`SimTracer::with_base`]-offset tracer so decode tracks
-    /// land after the prefill stage's.
+    /// Tracer- and plane-threading entry used by the disaggregation tandem,
+    /// which hands us a [`SimTracer::with_base`]-offset tracer so decode
+    /// tracks land after the prefill stage's, and owns the stage failure
+    /// planes so it can collect churn tallies afterwards. `items` must
+    /// carry distinct `req` values (the tandem's are indices into one
+    /// request array) for the eviction bookkeeping to be well-defined.
     pub(super) fn run_with(
         &self,
         items: &[DecodeItem],
         rng: &mut Rng,
         tracer: SimTracer<'_>,
+        plane: Option<&mut FailurePlane>,
     ) -> Vec<DecodeOutcome> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         debug_assert!(items.windows(2).all(|w| w[0].ready <= w[1].ready));
+        let (resume, item_of) = if plane.is_some() {
+            let cap = items.iter().map(|it| it.req + 1).max().unwrap_or(0);
+            let mut item_of = vec![usize::MAX; cap];
+            for (k, it) in items.iter().enumerate() {
+                item_of[it.req] = k;
+            }
+            (vec![f64::INFINITY; cap], item_of)
+        } else {
+            (Vec::new(), Vec::new())
+        };
         let mut policy = DecodePolicy {
             model: FrontCache::new(self.model, self.params.front_cache),
             params: self.params,
@@ -145,6 +269,10 @@ impl<'a> DecodeStage<'a> {
             next: 0,
             out: Vec::with_capacity(items.len()),
             tracer,
+            plane,
+            retry: ReadyQueue::new(),
+            resume,
+            item_of,
         };
         drive(&mut policy, "decode");
         policy.out

@@ -57,6 +57,7 @@ use super::core::{
     decode_span_for, drive, EventDriven, FifoArrivals, NextEvent, ReadyQueue, SlotPool,
     VisitOrder,
 };
+use super::failure::{FailurePlane, PlaneEvent};
 use super::metrics::{RequestOutcome, RoleOccupancy, SimReport};
 use super::params::SimParams;
 use super::request::Request;
@@ -165,14 +166,58 @@ struct DynamicPolicy<'a> {
     completion: Vec<f64>,
     inserted: usize,
     tracer: SimTracer<'a>,
+    /// Failure plane (`None` when `params.failures` is off — the disabled
+    /// path holds no plane and stays bit-identical).
+    plane: Option<FailurePlane>,
+    /// Remaining decode span of a request evicted by a failure, indexed by
+    /// request; `INFINITY` = no pending resume. Only allocated with the
+    /// plane.
+    resume_span: Vec<f64>,
 }
 
 impl DynamicPolicy<'_> {
+    /// Is instance `i` inside an outage window?
+    fn down(&self, i: usize) -> bool {
+        matches!(&self.plane, Some(p) if p.is_down(i))
+    }
+
+    /// Instance `i` crashed at `t`: evict its resident decodes (KV pages
+    /// lost — they re-queue for re-prefill and resume their remaining span
+    /// on re-insertion, see `simulator::failure`), abort any pending role
+    /// switch, and park the instance in the decode role; it rejoins
+    /// routing on recovery.
+    fn on_failure(&mut self, i: usize, t: f64) {
+        let mut evicted = Vec::new();
+        self.instances[i].slots.evict_busy(t, |r| evicted.push(r));
+        for &r in &evicted {
+            self.resume_span[r] = self.completion[r] - t;
+            self.completion[r] = f64::INFINITY;
+            self.inserted -= 1;
+            let penalty = self.model.prefill_time(1, self.reqs[r].input_len);
+            self.decode_q.push(t + penalty, r);
+            self.tracer.instant(t, EventKind::Preemption, i, r);
+        }
+        if let Some(p) = self.plane.as_mut() {
+            p.note_reprefills(evicted.len());
+        }
+        // A mid-switch or draining instance loses its pending flip along
+        // with its state; occupancy keeps attributing its downtime to the
+        // (decode) role it will hold on recovery.
+        self.instances[i].set_state(t, State::Decode);
+    }
+
     /// Pressure-driven reallocation, evaluated only when no serving action
     /// was possible at `t`. At most one instance changes state per call.
+    /// Down instances neither count towards prefill capacity nor qualify
+    /// for any switch.
     fn reallocate(&mut self, t: f64) -> bool {
         let backlog = self.arrivals.pending(t) as f64;
-        let n_pre = self.instances.iter().filter(|i| i.commits_prefill()).count() as f64;
+        let n_pre = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(i, inst)| inst.commits_prefill() && !self.down(*i))
+            .count() as f64;
         // Backlog thresholds are in full prefill batches per committed
         // prefill instance.
         let unit = self.bmax_prefill as f64;
@@ -181,19 +226,45 @@ impl DynamicPolicy<'_> {
         // hysteresis edge. Prefer an already-drained instance (switches
         // immediately); otherwise put one into draining.
         if backlog > self.params.switch_up * n_pre * unit {
-            let drained = self
-                .instances
-                .iter()
-                .position(|i| matches!(i.state, State::Decode) && i.slots.busy(t) == 0);
+            let drained = self.instances.iter().enumerate().position(|(i, inst)| {
+                matches!(inst.state, State::Decode)
+                    && inst.slots.busy(t) == 0
+                    && !self.down(i)
+            });
             if let Some(i) = drained {
                 let until = t + self.params.switch_latency;
                 self.tracer.emit(t, until - t, EventKind::RoleSwitch, Some(i as u32), None);
                 self.instances[i].set_state(t, State::Switching { to: Role::Prefill, until });
                 return true;
             }
-            let occupied = self.instances.iter().position(|i| matches!(i.state, State::Decode));
+            let occupied = self
+                .instances
+                .iter()
+                .enumerate()
+                .position(|(i, inst)| matches!(inst.state, State::Decode) && !self.down(i));
             if let Some(i) = occupied {
                 self.instances[i].set_state(t, State::Draining);
+                return true;
+            }
+        }
+
+        // Reversal: the pressure signal dropped back to the lower edge
+        // while an instance was still draining towards prefill — return it
+        // straight to decode. Its slots never stopped serving, so no
+        // switch latency is paid and no switch is counted; without this
+        // the instance would finish draining, pay the switch to prefill,
+        // find no backlog, and pay a second switch straight back —
+        // double-paying the dead time and stranding its slots in between.
+        // The edge is evaluated against the pool as it looks after the
+        // reversal (`n_pre - 1`) so the up rule cannot re-trigger at the
+        // same instant and ping-pong the instance.
+        if self.decode_q.count_ready(t) > 0
+            && backlog <= self.params.switch_down * (n_pre - 1.0) * unit
+        {
+            if let Some(i) =
+                self.instances.iter().position(|i| matches!(i.state, State::Draining))
+            {
+                self.instances[i].set_state(t, State::Decode);
                 return true;
             }
         }
@@ -205,10 +276,11 @@ impl DynamicPolicy<'_> {
         if backlog <= self.params.switch_down * n_pre * unit
             && self.decode_q.count_ready(t) > 0
         {
-            let idle = self
-                .instances
-                .iter()
-                .position(|i| matches!(i.state, State::Prefill) && i.prefill_until <= t);
+            let idle = self.instances.iter().enumerate().position(|(i, inst)| {
+                matches!(inst.state, State::Prefill)
+                    && inst.prefill_until <= t
+                    && !self.down(i)
+            });
             if let Some(i) = idle {
                 let until = t + self.params.switch_latency;
                 self.tracer.emit(t, until - t, EventKind::RoleSwitch, Some(i as u32), None);
@@ -223,6 +295,22 @@ impl DynamicPolicy<'_> {
 
 impl EventDriven for DynamicPolicy<'_> {
     fn step(&mut self, t: f64) -> bool {
+        // --- failure plane: drain due outage boundaries first --------------
+        if let Some(plane) = self.plane.as_mut() {
+            match plane.poll(t) {
+                Some(PlaneEvent::Failed(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Failure, Some(i as u32), None);
+                    self.on_failure(i, t);
+                    return true;
+                }
+                Some(PlaneEvent::Recovered(i)) => {
+                    self.tracer.emit(t, 0.0, EventKind::Recovery, Some(i as u32), None);
+                    return true;
+                }
+                None => {}
+            }
+        }
+
         // --- bookkeeping: finish due switches, start drained switches ----
         let tracer = self.tracer;
         for (i, inst) in self.instances.iter_mut().enumerate() {
@@ -248,10 +336,12 @@ impl EventDriven for DynamicPolicy<'_> {
 
         // --- prefill launch (highest serving priority) -------------------
         if self.arrivals.head_arrived(t) {
+            let plane = &self.plane;
             let order = self.order.shuffled(&mut self.rng);
             let found = order.iter().copied().find(|&i| {
                 matches!(self.instances[i].state, State::Prefill)
                     && self.instances[i].prefill_until <= t
+                    && !matches!(plane, Some(p) if p.is_down(i))
             });
             if let Some(i) = found {
                 let batch = self.arrivals.take_batch(t, self.bmax_prefill);
@@ -271,23 +361,35 @@ impl EventDriven for DynamicPolicy<'_> {
         // --- decode insertion --------------------------------------------
         if let Some((ready, r)) = self.decode_q.peek() {
             if ready <= t {
+                let plane = &self.plane;
                 let order = self.order.shuffled(&mut self.rng);
                 let found = order.iter().copied().find(|&i| {
                     matches!(self.instances[i].state, State::Decode)
                         && self.instances[i].slots.has_free(t)
+                        && !matches!(plane, Some(p) if p.is_down(i))
                 });
                 if let Some(i) = found {
                     self.decode_q.pop();
                     let req = self.reqs[r];
                     let inst = &mut self.instances[i];
                     let b_eff = self.params.pseudo_batch(inst.slots.busy(t));
-                    let span = decode_span_for(
-                        &self.model,
-                        &self.params,
-                        b_eff,
-                        req.input_len,
-                        req.gen_len,
-                    );
+                    // A failure-evicted request resumes its remaining span
+                    // at its original pricing (see `simulator::failure`).
+                    let span = if !self.resume_span.is_empty()
+                        && self.resume_span[r].is_finite()
+                    {
+                        let s = self.resume_span[r];
+                        self.resume_span[r] = f64::INFINITY;
+                        s
+                    } else {
+                        decode_span_for(
+                            &self.model,
+                            &self.params,
+                            b_eff,
+                            req.input_len,
+                            req.gen_len,
+                        )
+                    };
                     let j = inst
                         .slots
                         .free_slot(t)
@@ -295,8 +397,10 @@ impl EventDriven for DynamicPolicy<'_> {
                     inst.slots.occupy(j, t + span, r);
                     self.completion[r] = t + span;
                     self.inserted += 1;
-                    // Dynamic-pool decodes never get preempted (roles are
-                    // exclusive), so the end event is final here.
+                    // Dynamic-pool decodes are never preempted by prefills
+                    // (roles are exclusive); only a failure eviction can
+                    // supersede this end event, and it emits a Preemption
+                    // plus a fresh start/end pair on re-insertion.
                     tracer.span(t, span, EventKind::DecodeStart, i, r);
                     tracer.instant(t + span, EventKind::DecodeEnd, i, r);
                     return true;
@@ -322,6 +426,9 @@ impl EventDriven for DynamicPolicy<'_> {
                 ne.offer(until);
             }
             inst.slots.offer_releases(&mut ne);
+        }
+        if let Some(p) = &self.plane {
+            p.offer_boundaries(&mut ne);
         }
         ne.get()
     }
@@ -387,6 +494,12 @@ impl<'a> DynamicSimulator<'a> {
             completion: vec![f64::INFINITY; n],
             inserted: 0,
             tracer,
+            plane: FailurePlane::from_params(&self.params, self.n_instances),
+            resume_span: if self.params.failures {
+                vec![f64::INFINITY; n]
+            } else {
+                Vec::new()
+            },
         };
         let end = drive(&mut policy, "dynamic");
 
@@ -417,6 +530,7 @@ impl<'a> DynamicSimulator<'a> {
             .collect();
         let mut report = SimReport::from_outcomes(&outcomes);
         report.role_occupancy = Some(occ);
+        report.churn = policy.plane.map(|p| p.churn);
         report
     }
 }
@@ -464,6 +578,41 @@ mod tests {
         let occ = rep.role_occupancy.expect("dynamic reports occupancy");
         assert_eq!(occ.switches, 2);
         assert!(occ.prefill > 0.0 && occ.decode > 0.0 && occ.switching > 0.0);
+    }
+
+    #[test]
+    fn hysteresis_reversal_skips_double_switch() {
+        // Instance 0 flips to prefill for the opening request; instance 1
+        // decodes it (a long 500-token tail keeps its slot busy). A
+        // 12-request burst then pushes the backlog over the up edge even
+        // after the first batch launches, putting instance 1 into
+        // Draining. Instance 0 clears the backlog while the drain is
+        // still in progress, so the pressure reverses inside the dead
+        // band: instance 1 must revert straight to decode — no switch
+        // latency, no stranded slots — and absorb the burst's decode work.
+        // Before the fix it stayed Draining, forcing an extra down-switch
+        // on instance 0 and delaying every insertion behind it (worst
+        // TPOT 0.0315, two completed switches).
+        let m = ConstModel { prefill: 0.2, step: 0.01 };
+        let p = platform();
+        let s = sim(&m, &p, 2);
+        let mut reqs =
+            vec![Request { id: 0, arrival: 0.0, input_len: 128, gen_len: 500, class: 0 }];
+        for id in 1..13 {
+            reqs.push(Request { id, arrival: 1.0, input_len: 128, gen_len: 20, class: 0 });
+        }
+        let rep = s.run(&reqs);
+        assert_eq!(rep.n, 13);
+        // Only the burst's first batch waits (one prefill cycle, until the
+        // backlog clears and the reversal fires): its TPOT is
+        // (0.2 + 0.2)/20 = 0.02; every other request decodes the instant
+        // its prefill departs (TPOT = one step = 0.01).
+        assert!((rep.tpot.p50 - 0.01).abs() < 1e-9, "{}", rep.tpot.p50);
+        assert!(rep.tpots.iter().all(|x| *x <= 0.02 + 1e-9), "{:?}", rep.tpots);
+        // Only instance 0's initial up-switch completes; the reversal of
+        // instance 1 costs nothing and counts nothing.
+        let occ = rep.role_occupancy.unwrap();
+        assert_eq!(occ.switches, 1, "reversal must not pay or count switches");
     }
 
     #[test]
@@ -530,6 +679,39 @@ mod tests {
         assert_eq!(a.ttfts, b.ttfts);
         assert_eq!(a.tpots, b.tpots);
         assert_eq!(a.role_occupancy.unwrap(), b.role_occupancy.unwrap());
+    }
+
+    #[test]
+    fn churn_excludes_down_instances_and_conserves_requests() {
+        // Aggressive churn over a flexing pool: every request still
+        // completes finite, the plane tallies, role-switch bookkeeping
+        // survives mid-switch failures, and the seed replays bit for bit.
+        use crate::config::FailureProcess;
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let mut s = sim(&m, &p, 3);
+        s.params = SimParams {
+            failures: true,
+            failure: FailureProcess { mtbf: 2.0, mttr: 0.1 },
+            ..SimParams::default()
+        };
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 32, 200));
+        let reqs = generate_workload(&w, 8.0, 11).unwrap();
+        let rep = s.run(&reqs);
+        assert_eq!(rep.n, 200);
+        assert!(rep.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(rep.e2es.iter().all(|x| x.is_finite() && *x > 0.0));
+        let churn = rep.churn.expect("failures on => churn tallies");
+        assert!(churn.failures >= 1, "{churn:?}");
+        assert!(churn.downtime >= 0.0 && churn.downtime.is_finite());
+        // Occupancy accounting still closes over the makespan.
+        let occ = rep.role_occupancy.unwrap();
+        assert!(occ.total().is_finite() && occ.total() > 0.0);
+        let again = s.run(&reqs);
+        assert_eq!(rep.churn, again.churn);
+        for (a, b) in rep.e2es.iter().zip(&again.e2es) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! The failure plane: per-instance MTBF/MTTR outage processes injected
+//! into the shared event-driven core (`simulator::core`).
+//!
+//! Each instance draws an independent alternating-renewal sequence of
+//! exponential up/down windows (`config::FailureProcess`) from its own
+//! forked RNG stream. Policies consult the plane at three points:
+//!
+//! 1. **`poll` first in `step`** — due outage boundaries are processed as
+//!    actions, before any scheduling at the same instant, so the down flag
+//!    is always current when routing decisions are made. On a failure the
+//!    policy evicts the instance's resident decode requests
+//!    ([`super::core::SlotPool::evict_busy`]): their KV pages are lost and
+//!    they re-queue for re-prefill.
+//! 2. **`is_down` in every routing scan** — a down instance takes no new
+//!    prefill batches, no decode insertions, and no role switches until it
+//!    recovers.
+//! 3. **`offer_boundaries` in `next_event`** — the clock lands exactly on
+//!    every outage boundary, so windows are never skipped.
+//!
+//! Modeling approximations (request-level, matching the simulator's
+//! granularity): a prefill batch already committed to a failing instance
+//! completes with its committed timing (prefill batches are short relative
+//! to MTTR); an evicted decode request's re-prefill is priced as a
+//! single-request prefill batch charged to the request's own timeline —
+//! like the disaggregation KV-transfer charge, it does not occupy an
+//! instance — and its remaining decode span resumes at its original
+//! pricing.
+//!
+//! The plane's RNG is salted ([`FAILURE_SEED_SALT`]) and forked per
+//! instance, fully separate from the policy's scheduling stream: enabling
+//! failures never perturbs arrival sampling or visit-order shuffles, and
+//! with the gate off the plane is simply `None` — the disabled path is
+//! bit-identical (pinned by
+//! `failure_process_off_preserves_reports_bit_for_bit`) and allocates
+//! nothing.
+
+use crate::config::FailureProcess;
+use crate::util::rng::Rng;
+
+use super::core::NextEvent;
+use super::metrics::ChurnStats;
+use super::params::SimParams;
+
+/// Salt XORed into the simulation seed before forking the plane's
+/// per-instance streams, keeping them disjoint from every scheduling
+/// stream derived from the raw seed.
+pub const FAILURE_SEED_SALT: u64 = 0xFA17_ED0E_5EED_CA5E;
+
+/// One instance's alternating up/down renewal process.
+#[derive(Debug, Clone)]
+struct InstanceFailure {
+    rng: Rng,
+    mtbf: f64,
+    mttr: f64,
+    /// Start of the current (if `down`) or next outage window.
+    down_at: f64,
+    /// End of that outage window.
+    up_at: f64,
+    /// Window start processed by the policy; cleared on recovery.
+    down: bool,
+}
+
+impl InstanceFailure {
+    fn new(mut rng: Rng, p: FailureProcess) -> InstanceFailure {
+        let down_at = rng.exp(1.0 / p.mtbf);
+        let up_at = down_at + rng.exp(1.0 / p.mttr);
+        InstanceFailure { rng, mtbf: p.mtbf, mttr: p.mttr, down_at, up_at, down: false }
+    }
+
+    /// Roll the next outage window after a recovery.
+    fn roll(&mut self) {
+        self.down_at = self.up_at + self.rng.exp(1.0 / self.mtbf);
+        self.up_at = self.down_at + self.rng.exp(1.0 / self.mttr);
+    }
+}
+
+/// A due plane transition, reported by [`FailurePlane::poll`] one at a
+/// time (matching the one-action-per-`step` discipline of the policies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaneEvent {
+    /// Instance entered an outage: evict its resident decode work.
+    Failed(usize),
+    /// Instance recovered: it may take new work again.
+    Recovered(usize),
+}
+
+/// Per-instance failure processes plus the run's churn tallies.
+#[derive(Debug, Clone)]
+pub struct FailurePlane {
+    insts: Vec<InstanceFailure>,
+    /// Outage/re-queue tallies, surfaced on `SimReport::churn`.
+    pub churn: ChurnStats,
+}
+
+impl FailurePlane {
+    /// Plane for `n` instances, streams `base_stream..base_stream + n` of
+    /// the salted seed. `base_stream` separates coexisting planes (e.g.
+    /// the disaggregation prefill and decode stages) so no two instances
+    /// anywhere share a stream.
+    pub fn with_streams(n: usize, base_stream: u64, seed: u64, p: FailureProcess) -> FailurePlane {
+        debug_assert!(p.validate().is_ok(), "invalid failure process {p:?}");
+        let mut base = Rng::new(seed ^ FAILURE_SEED_SALT);
+        let insts = (0..n)
+            .map(|i| InstanceFailure::new(base.fork(base_stream + i as u64 + 1), p))
+            .collect();
+        FailurePlane { insts, churn: ChurnStats::default() }
+    }
+
+    pub fn new(n: usize, seed: u64, p: FailureProcess) -> FailurePlane {
+        FailurePlane::with_streams(n, 0, seed, p)
+    }
+
+    /// `Some(plane)` when the params gate is on, `None` otherwise — the
+    /// disabled path holds no plane and touches no RNG.
+    pub fn from_params(params: &SimParams, n: usize) -> Option<FailurePlane> {
+        params
+            .failures
+            .then(|| FailurePlane::new(n, params.seed, params.failure))
+    }
+
+    /// Like [`from_params`](FailurePlane::from_params) with a stream
+    /// offset, for simulators that run several planes off one seed.
+    pub fn from_params_with_streams(
+        params: &SimParams,
+        n: usize,
+        base_stream: u64,
+    ) -> Option<FailurePlane> {
+        params
+            .failures
+            .then(|| FailurePlane::with_streams(n, base_stream, params.seed, params.failure))
+    }
+
+    /// Is instance `i` inside a processed outage window?
+    pub fn is_down(&self, i: usize) -> bool {
+        self.insts[i].down
+    }
+
+    /// Process the earliest due transition at `t`, if any: the first
+    /// instance (in index order) with a due failure or recovery. Policies
+    /// call this at the top of `step` and treat `Some` as an action, so
+    /// all due boundaries drain before scheduling runs at the same `t`.
+    pub fn poll(&mut self, t: f64) -> Option<PlaneEvent> {
+        for (i, f) in self.insts.iter_mut().enumerate() {
+            if !f.down && f.down_at <= t {
+                f.down = true;
+                self.churn.failures += 1;
+                return Some(PlaneEvent::Failed(i));
+            }
+            if f.down && f.up_at <= t {
+                f.down = false;
+                self.churn.downtime += f.up_at - f.down_at;
+                self.churn.recoveries += 1;
+                f.roll();
+                return Some(PlaneEvent::Recovered(i));
+            }
+        }
+        None
+    }
+
+    /// Offer every instance's next outage boundary (window start if up,
+    /// window end if down) so the clock never jumps past one.
+    pub fn offer_boundaries(&self, ne: &mut NextEvent) {
+        for f in &self.insts {
+            ne.offer(if f.down { f.up_at } else { f.down_at });
+        }
+    }
+
+    /// Tally `k` KV-loss re-queues caused by one failure.
+    pub fn note_reprefills(&mut self, k: usize) {
+        self.churn.lost_kv_reprefills += k as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proc(mtbf: f64, mttr: f64) -> FailureProcess {
+        FailureProcess { mtbf, mttr }
+    }
+
+    /// Drain every transition up to `horizon`, returning the (time-ordered
+    /// per instance) event log.
+    fn drain(plane: &mut FailurePlane, horizon: f64) -> Vec<PlaneEvent> {
+        let mut log = Vec::new();
+        loop {
+            let mut ne = NextEvent::after(0.0);
+            plane.offer_boundaries(&mut ne);
+            let t = ne.get();
+            if t > horizon {
+                break;
+            }
+            while let Some(ev) = plane.poll(t) {
+                log.push(ev);
+            }
+        }
+        log
+    }
+
+    #[test]
+    fn windows_alternate_and_tally() {
+        let mut plane = FailurePlane::new(2, 7, proc(5.0, 1.0));
+        let log = drain(&mut plane, 200.0);
+        assert!(!log.is_empty());
+        // Per instance the log strictly alternates Failed / Recovered.
+        for i in 0..2 {
+            let mine: Vec<_> = log
+                .iter()
+                .filter(|e| matches!(e, PlaneEvent::Failed(j) | PlaneEvent::Recovered(j) if *j == i))
+                .collect();
+            for (k, ev) in mine.iter().enumerate() {
+                let failed = matches!(ev, PlaneEvent::Failed(_));
+                assert_eq!(failed, k % 2 == 0, "instance {i} event {k} out of order");
+            }
+        }
+        let c = plane.churn;
+        assert!(c.failures >= c.recoveries);
+        assert!(c.failures - c.recoveries <= 2);
+        assert!(c.downtime > 0.0 && c.downtime.is_finite());
+        // Mean downtime per completed window should be in the right ballpark
+        // (mttr = 1 s; allow a loose factor for the small sample).
+        let per_window = c.downtime / c.recoveries as f64;
+        assert!(per_window > 0.05 && per_window < 20.0, "{per_window}");
+    }
+
+    #[test]
+    fn poll_is_idempotent_when_nothing_due() {
+        let mut plane = FailurePlane::new(3, 42, proc(100.0, 1.0));
+        assert_eq!(plane.poll(0.0), None);
+        assert!(!plane.is_down(0));
+        assert_eq!(plane.churn, ChurnStats::default());
+    }
+
+    #[test]
+    fn down_flag_tracks_processed_windows() {
+        let mut plane = FailurePlane::new(1, 1, proc(2.0, 2.0));
+        // Advance to the first boundary and process it.
+        let mut ne = NextEvent::after(0.0);
+        plane.offer_boundaries(&mut ne);
+        let t_fail = ne.get();
+        assert!(t_fail.is_finite());
+        assert_eq!(plane.poll(t_fail), Some(PlaneEvent::Failed(0)));
+        assert!(plane.is_down(0));
+        assert_eq!(plane.poll(t_fail), None); // single transition per boundary
+        // The next boundary is the recovery.
+        let mut ne = NextEvent::after(t_fail);
+        plane.offer_boundaries(&mut ne);
+        let t_up = ne.get();
+        assert!(t_up > t_fail);
+        assert_eq!(plane.poll(t_up), Some(PlaneEvent::Recovered(0)));
+        assert!(!plane.is_down(0));
+        assert_eq!(plane.churn.failures, 1);
+        assert_eq!(plane.churn.recoveries, 1);
+        assert!((plane.churn.downtime - (t_up - t_fail)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn late_poll_processes_a_whole_window_retroactively() {
+        // If the clock lands past a whole outage window (possible for
+        // planes whose policies idle across it), poll still walks the
+        // window: failure first, then recovery, with exact downtime.
+        let mut plane = FailurePlane::new(1, 3, proc(1.0, 1.0));
+        let ev = plane.poll(1e6);
+        assert_eq!(ev, Some(PlaneEvent::Failed(0)));
+        let ev = plane.poll(1e6);
+        assert_eq!(ev, Some(PlaneEvent::Recovered(0)));
+        assert_eq!(plane.churn.failures, 1);
+        assert_eq!(plane.churn.recoveries, 1);
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_disjoint() {
+        let p = proc(10.0, 2.0);
+        let a = FailurePlane::new(4, 99, p);
+        let b = FailurePlane::new(4, 99, p);
+        for i in 0..4 {
+            assert_eq!(a.insts[i].down_at.to_bits(), b.insts[i].down_at.to_bits());
+            assert_eq!(a.insts[i].up_at.to_bits(), b.insts[i].up_at.to_bits());
+        }
+        // Different seeds, different instances, and offset planes all get
+        // distinct first boundaries.
+        let c = FailurePlane::new(4, 100, p);
+        assert_ne!(a.insts[0].down_at.to_bits(), c.insts[0].down_at.to_bits());
+        assert_ne!(a.insts[0].down_at.to_bits(), a.insts[1].down_at.to_bits());
+        let off = FailurePlane::with_streams(4, 4, 99, p);
+        for i in 0..4 {
+            assert_ne!(
+                a.insts[i].down_at.to_bits(),
+                off.insts[i].down_at.to_bits(),
+                "offset plane instance {i} collides with base plane"
+            );
+        }
+    }
+
+    #[test]
+    fn from_params_respects_the_gate() {
+        let off = SimParams::default();
+        assert!(FailurePlane::from_params(&off, 3).is_none());
+        let on = SimParams { failures: true, ..SimParams::default() };
+        let plane = FailurePlane::from_params(&on, 3).unwrap();
+        assert_eq!(plane.insts.len(), 3);
+        assert!(FailurePlane::from_params_with_streams(&on, 2, 3).is_some());
+    }
+}

@@ -86,6 +86,24 @@ impl RoleOccupancy {
     }
 }
 
+/// Churn tallies of a run with the failure plane enabled
+/// (`SimParams::failures` / `TestbedConfig` churn knobs): outage counts and
+/// the KV-loss re-queues they caused. Produced by
+/// `simulator::failure::FailurePlane`; `None` on [`SimReport::churn`] when
+/// the plane is off.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ChurnStats {
+    /// Instance failures processed (outage windows entered).
+    pub failures: u64,
+    /// Instance recoveries processed (outage windows exited).
+    pub recoveries: u64,
+    /// Decode requests evicted by a failure: their KV pages were lost and
+    /// they re-queued for re-prefill.
+    pub lost_kv_reprefills: u64,
+    /// Total instance-seconds spent down across completed outage windows.
+    pub downtime: f64,
+}
+
 /// TTFT/TPOT/E2E percentile summaries for one workload class — the
 /// per-class panels of a multi-class (mix) simulation report.
 #[derive(Debug, Clone)]
@@ -124,6 +142,10 @@ pub struct SimReport {
     /// Per-role occupancy of a dynamic (`Nf`) pool; `None` for the static
     /// architectures, whose roles are fixed by construction.
     pub role_occupancy: Option<RoleOccupancy>,
+    /// Churn tallies of the failure plane; `None` when the plane is off
+    /// (the default). Attached post-hoc by the simulators, like
+    /// `role_occupancy`.
+    pub churn: Option<ChurnStats>,
     // ---- finalized percentile caches -------------------------------------
     // The report is queried for percentiles far more often than it is
     // built: every `FEASIBLE(λ)` probe takes the aggregate TTFT/TPOT
@@ -213,6 +235,7 @@ impl SimReport {
             classes: class_tags,
             per_class,
             role_occupancy: None,
+            churn: None,
             ttfts_sorted,
             tpots_sorted,
             e2es_sorted,
@@ -417,6 +440,18 @@ mod tests {
         // Static-architecture reports carry no occupancy.
         let outs = vec![outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5];
         assert!(SimReport::from_outcomes(&outs).role_occupancy.is_none());
+    }
+
+    #[test]
+    fn churn_defaults_off() {
+        // Reports are churn-free unless a simulator attaches plane tallies.
+        let outs = vec![outcome(0, 0.0, 0.1, 0.1, 0.3, 10); 5];
+        assert!(SimReport::from_outcomes(&outs).churn.is_none());
+        let c = ChurnStats::default();
+        assert_eq!(c.failures, 0);
+        assert_eq!(c.recoveries, 0);
+        assert_eq!(c.lost_kv_reprefills, 0);
+        assert_eq!(c.downtime, 0.0);
     }
 
     #[test]

@@ -53,12 +53,23 @@
 //! bookkeeping code; [`dynamic`] is the worked example in ROADMAP.md. To
 //! add a new *arrival process*, extend `config::ArrivalProcess` instead —
 //! see the other recipe there.
+//!
+//! # The failure plane
+//!
+//! All engines also accept an optional per-instance MTBF/MTTR outage
+//! process ([`failure`], gated by [`SimParams::failures`]): a down
+//! instance leaves routing until it recovers, and its resident decodes
+//! lose their KV pages and re-queue behind a re-prefill. Churn tallies
+//! surface on [`SimReport::churn`]. With the gate off (the default) no
+//! plane exists and every report is bit-identical to the pre-churn code
+//! (`failure_process_off_preserves_reports_bit_for_bit` pins this).
 
 pub mod colloc;
 pub mod core;
 pub mod decode;
 pub mod disagg;
 pub mod dynamic;
+pub mod failure;
 pub mod metrics;
 pub mod params;
 pub mod prefill;
@@ -71,7 +82,8 @@ pub use colloc::CollocSimulator;
 pub use decode::{DecodeItem, DecodeOutcome, DecodeStage};
 pub use disagg::DisaggSimulator;
 pub use dynamic::DynamicSimulator;
-pub use metrics::{ClassStats, RequestOutcome, RoleOccupancy, SimReport};
+pub use failure::FailurePlane;
+pub use metrics::{ChurnStats, ClassStats, RequestOutcome, RoleOccupancy, SimReport};
 pub use params::{validate_switch_knobs, SimParams, SpanMode};
 pub use prefill::PrefillStage;
 pub use request::{generate_workload, MaterializedWorkload, Request};
@@ -109,6 +121,9 @@ pub fn simulate_requests(
     reqs: &[Request],
     params: SimParams,
 ) -> Result<SimReport> {
+    if params.failures {
+        params.failure.validate()?;
+    }
     match strategy.arch {
         Architecture::Collocation { .. } => {
             Ok(CollocSimulator::from_strategy(model, platform, strategy, params)?.run(reqs))
@@ -152,6 +167,9 @@ pub fn simulate_requests_traced(
     params: SimParams,
     sink: &TraceSink,
 ) -> Result<SimReport> {
+    if params.failures {
+        params.failure.validate()?;
+    }
     if !params.sim_trace {
         return simulate_requests(model, platform, strategy, reqs, params);
     }
@@ -272,6 +290,21 @@ mod tests {
     #[test]
     fn invariants_hold_for_dynamic() {
         crate::simulator::testutil::assert_architecture_invariants(&Strategy::dynamic(2, 1));
+    }
+
+    #[test]
+    fn churn_invariants_hold_for_collocation() {
+        crate::simulator::testutil::assert_churn_invariants(&Strategy::collocation(2, 1));
+    }
+
+    #[test]
+    fn churn_invariants_hold_for_disaggregation() {
+        crate::simulator::testutil::assert_churn_invariants(&Strategy::disaggregation(1, 1, 1));
+    }
+
+    #[test]
+    fn churn_invariants_hold_for_dynamic() {
+        crate::simulator::testutil::assert_churn_invariants(&Strategy::dynamic(2, 1));
     }
 
     #[test]
@@ -403,6 +436,90 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{st}");
             }
         }
+    }
+
+    #[test]
+    fn failure_process_off_preserves_reports_bit_for_bit() {
+        // The equivalence anchor for the `failures` gate: with the gate off
+        // no plane exists, no salted RNG stream is drawn, and the failure
+        // process values are inert — reports are bit-identical whatever
+        // they hold. With the gate on, churn tallies surface.
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 120));
+        for st in [
+            Strategy::collocation(2, 1),
+            Strategy::disaggregation(1, 1, 1),
+            Strategy::dynamic(2, 1),
+        ] {
+            let base = simulate(&m, &p, &st, &w, 2.0, SimParams::default()).unwrap();
+            let off = simulate(
+                &m,
+                &p,
+                &st,
+                &w,
+                2.0,
+                SimParams {
+                    failures: false,
+                    failure: crate::config::FailureProcess { mtbf: 2.0, mttr: 0.5 },
+                    ..SimParams::default()
+                },
+            )
+            .unwrap();
+            let bits = |r: &SimReport| {
+                (
+                    r.n,
+                    r.ttft.p90.to_bits(),
+                    r.tpot.p90.to_bits(),
+                    r.e2e.p90.to_bits(),
+                    r.throughput.to_bits(),
+                    r.makespan.to_bits(),
+                )
+            };
+            assert_eq!(bits(&base), bits(&off), "{st}");
+            assert!(off.churn.is_none(), "{st}: gate off must not report churn");
+            for ((x, y), (a, b)) in base
+                .ttfts
+                .iter()
+                .zip(off.ttfts.iter())
+                .zip(base.e2es.iter().zip(off.e2es.iter()))
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{st}");
+                assert_eq!(a.to_bits(), b.to_bits(), "{st}");
+            }
+            let on = simulate(
+                &m,
+                &p,
+                &st,
+                &w,
+                2.0,
+                SimParams {
+                    failures: true,
+                    failure: crate::config::FailureProcess { mtbf: 2.0, mttr: 0.5 },
+                    ..SimParams::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(on.n, base.n, "{st}: churn must not lose requests");
+            assert!(on.churn.is_some(), "{st}: gate on must report churn");
+        }
+    }
+
+    #[test]
+    fn degenerate_failure_process_is_rejected_upfront() {
+        let m = ConstModel { prefill: 0.1, step: 0.001 };
+        let p = Platform::paper_testbed();
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 16, 10));
+        let bad = SimParams {
+            failures: true,
+            failure: crate::config::FailureProcess { mtbf: 0.0, mttr: 1.0 },
+            ..SimParams::default()
+        };
+        let err = simulate(&m, &p, &Strategy::collocation(2, 1), &w, 1.0, bad);
+        assert!(err.is_err());
+        // The same degenerate values are fine while the gate is off.
+        let off = SimParams { failures: false, ..bad };
+        assert!(simulate(&m, &p, &Strategy::collocation(2, 1), &w, 1.0, off).is_ok());
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Simulation hyperparameters: the pseudo-batch balancing scalar τ (§3.4.2,
 //! eq. (9)), decode-span pricing mode, the disaggregation KV-transfer
-//! toggle, and the dynamic PD-reallocation policy knobs (role-switch
-//! latency + hysteresis thresholds — see `simulator::dynamic`).
+//! toggle, the dynamic PD-reallocation policy knobs (role-switch latency +
+//! hysteresis thresholds — see `simulator::dynamic`), and the failure-plane
+//! gate (per-instance MTBF/MTTR churn — see `simulator::failure`).
+
+use crate::config::FailureProcess;
 
 /// How the Simulator prices a request's whole decode phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +56,17 @@ pub struct SimParams {
     /// observational — reports are bit-identical either way (pinned by
     /// `sim_trace_preserves_reports_bit_for_bit`). CLI: `--sim-trace F`.
     pub sim_trace: bool,
+    /// Inject per-instance failure/recovery processes (the failure plane,
+    /// `simulator::failure`): a failed instance is excluded from routing
+    /// and role switching until recovery, and its resident decode requests
+    /// lose their KV pages and re-queue for re-prefill. Off by default —
+    /// every report stays bit-identical with the gate off (pinned by
+    /// `failure_process_off_preserves_reports_bit_for_bit`). CLI:
+    /// `--failures`.
+    pub failures: bool,
+    /// MTBF/MTTR of the failure process; consulted only when `failures` is
+    /// on. CLI: `--mtbf S` / `--mttr S`.
+    pub failure: FailureProcess,
 }
 
 impl Default for SimParams {
@@ -67,6 +81,8 @@ impl Default for SimParams {
             switch_down: 0.0,
             front_cache: true,
             sim_trace: false,
+            failures: false,
+            failure: FailureProcess::default(),
         }
     }
 }

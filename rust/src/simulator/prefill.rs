@@ -9,6 +9,7 @@ use crate::obs::trace::{EventKind, SimTracer, TraceSink};
 use crate::util::rng::Rng;
 
 use super::core::{drive, EventDriven, FifoArrivals, NextEvent, VisitOrder};
+use super::failure::{FailurePlane, PlaneEvent};
 use super::request::Request;
 
 /// Prefill stage over `n_instances` identical instances.
@@ -34,14 +35,35 @@ struct PrefillPolicy<'a, 'r> {
     /// Per-request departure (first-token) times, indexed like the workload.
     departures: Vec<f64>,
     tracer: SimTracer<'a>,
+    /// Failure plane threaded in by the disaggregation tandem (`None` when
+    /// churn is off). Prefill instances hold no KV state to lose at this
+    /// modeling level, so a failure only excludes the instance from new
+    /// batches until recovery.
+    plane: Option<&'r mut FailurePlane>,
 }
 
 impl EventDriven for PrefillPolicy<'_, '_> {
     fn step(&mut self, t: f64) -> bool {
-        let order = self.order.shuffled(self.rng);
         let mut progressed = false;
+        // Drain due outage boundaries first so the down flags are current
+        // for the batch scan at the same instant.
+        if let Some(plane) = self.plane.as_deref_mut() {
+            while let Some(ev) = plane.poll(t) {
+                let (i, kind) = match ev {
+                    PlaneEvent::Failed(i) => (i, EventKind::Failure),
+                    PlaneEvent::Recovered(i) => (i, EventKind::Recovery),
+                };
+                self.tracer.emit(t, 0.0, kind, Some(i as u32), None);
+                progressed = true;
+            }
+        }
+        let plane = &self.plane;
+        let order = self.order.shuffled(self.rng);
         for &i in order {
-            if self.when_idle[i] > t || self.arrivals.exhausted() {
+            if self.when_idle[i] > t
+                || self.arrivals.exhausted()
+                || matches!(plane, Some(p) if p.is_down(i))
+            {
                 continue;
             }
             let batch = self.arrivals.take_batch(t, self.bmax);
@@ -65,19 +87,32 @@ impl EventDriven for PrefillPolicy<'_, '_> {
     }
 
     fn next_event(&self, t: f64) -> f64 {
-        // Algorithm 2 line 20, fixed for the all-idle case: if an instance
-        // is idle we are waiting on the next arrival; otherwise wake when an
-        // instance frees, but not before work exists.
+        // Algorithm 2 line 20, fixed for the all-idle case: if an *up*
+        // instance is idle we are waiting on the next arrival; otherwise
+        // wake when an instance frees, but not before work exists. With a
+        // failure plane attached we also land on every outage boundary (a
+        // down-but-idle instance must not stall the clock), which reduces
+        // exactly to the original expression when the plane is `None`.
         let next_arrival = self.arrivals.head_arrival().unwrap_or(f64::INFINITY);
-        if self.when_idle.iter().any(|&w| w <= t) {
-            next_arrival
-        } else {
-            let mut ne = NextEvent::after(t);
-            for &w in &self.when_idle {
-                ne.offer(w);
-            }
-            ne.get().max(next_arrival)
+        let mut ne = NextEvent::after(t);
+        if let Some(p) = self.plane.as_deref() {
+            p.offer_boundaries(&mut ne);
         }
+        let any_up_idle = self
+            .when_idle
+            .iter()
+            .enumerate()
+            .any(|(i, &w)| w <= t && !matches!(&self.plane, Some(p) if p.is_down(i)));
+        if any_up_idle {
+            ne.offer(next_arrival);
+        } else {
+            let mut frees = NextEvent::after(t);
+            for &w in &self.when_idle {
+                frees.offer(w);
+            }
+            ne.offer(frees.get().max(next_arrival));
+        }
+        ne.get()
     }
 
     fn done(&self) -> bool {
@@ -89,23 +124,25 @@ impl<'a> PrefillStage<'a> {
     /// Simulate; returns per-request departure times (first-token times),
     /// indexed like `reqs`. `reqs` must be sorted by arrival (FIFO).
     pub fn run(&self, reqs: &[Request], rng: &mut Rng) -> Vec<f64> {
-        self.run_with(reqs, rng, SimTracer::off())
+        self.run_with(reqs, rng, SimTracer::off(), None)
     }
 
     /// [`PrefillStage::run`] with sim-time events recorded into `sink`
     /// (one track per prefill instance).
     pub fn run_traced(&self, reqs: &[Request], rng: &mut Rng, sink: &TraceSink) -> Vec<f64> {
-        self.run_with(reqs, rng, SimTracer::on(sink))
+        self.run_with(reqs, rng, SimTracer::on(sink), None)
     }
 
-    /// Tracer-threading entry used by the disaggregation tandem, which
-    /// offsets the decode stage's tracks past ours via
-    /// [`SimTracer::with_base`].
+    /// Tracer- and plane-threading entry used by the disaggregation tandem,
+    /// which offsets the decode stage's tracks past ours via
+    /// [`SimTracer::with_base`] and owns the stage failure planes so it can
+    /// collect both stages' churn tallies afterwards.
     pub(super) fn run_with(
         &self,
         reqs: &[Request],
         rng: &mut Rng,
         tracer: SimTracer<'_>,
+        plane: Option<&mut FailurePlane>,
     ) -> Vec<f64> {
         assert!(self.n_instances > 0 && self.bmax > 0);
         let mut policy = PrefillPolicy {
@@ -117,6 +154,7 @@ impl<'a> PrefillStage<'a> {
             rng,
             departures: vec![f64::INFINITY; reqs.len()],
             tracer,
+            plane,
         };
         drive(&mut policy, "prefill");
         policy.departures

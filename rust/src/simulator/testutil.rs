@@ -103,6 +103,43 @@ pub fn assert_testbed_invariants(strategy: &Strategy) {
     });
 }
 
+/// The churn variant of the suite: the same operating point with a harsh
+/// failure plane switched on (MTBF 3 s, MTTR 0.2 s over a ~150 s horizon).
+/// Conservation, causality, NaN-freedom and seed-determinism must all
+/// survive instance failures, and the churn tallies must be internally
+/// consistent and replay bit-identically.
+pub fn assert_churn_invariants(strategy: &Strategy) {
+    use crate::config::FailureProcess;
+    let label = format!("{strategy} under churn");
+    let make_report = |seed: u64| {
+        let model = ConstModel { prefill: INV_PREFILL, step: INV_STEP };
+        let platform = Platform::paper_testbed();
+        let workload = Workload::poisson(&Scenario::fixed("inv", 256, INV_GEN, INV_N));
+        simulate(
+            &model,
+            &platform,
+            strategy,
+            &workload,
+            4.0,
+            SimParams {
+                seed,
+                failures: true,
+                failure: FailureProcess { mtbf: 3.0, mttr: 0.2 },
+                ..SimParams::default()
+            },
+        )
+        .unwrap()
+    };
+    assert_report_invariants(&label, &make_report);
+    let rep = make_report(0xA5EED);
+    let churn = rep.churn.unwrap_or_else(|| panic!("{label}: churn stats missing"));
+    assert!(churn.failures >= churn.recoveries, "{label}: {churn:?}");
+    assert!(churn.failures >= 1, "{label}: no failures over the whole horizon");
+    assert!(churn.downtime >= 0.0 && churn.downtime.is_finite(), "{label}: {churn:?}");
+    let rep2 = make_report(0xA5EED);
+    assert_eq!(rep.churn, rep2.churn, "{label}: non-deterministic churn tallies");
+}
+
 /// The invariant suite proper, over any [`SimReport`] producer (simulator
 /// or testbed). For any architecture at moderate load:
 ///

@@ -11,10 +11,10 @@
 //! ground truth, driven by the same latency surface as the simulator but at
 //! token granularity.
 
-use crate::config::{Architecture, Platform, Strategy};
+use crate::config::{Architecture, FailureProcess, Platform, Strategy};
 use crate::error::{Error, Result};
 use crate::estimator::LatencyModel;
-use crate::simulator::{Request, RequestOutcome, SimReport};
+use crate::simulator::{ChurnStats, FailurePlane, Request, RequestOutcome, SimReport};
 
 use super::engine::{Engine, EngineStats, SeqInput, SeqOutcome};
 use super::kv::BlockManager;
@@ -47,6 +47,19 @@ pub struct TestbedConfig {
     /// Dynamic pool down-hysteresis (same units); must stay below
     /// `switch_up`. Mirrors `SimParams::switch_down`.
     pub switch_down: f64,
+    /// Enable the per-instance failure plane (`simulator::failure`): MTBF/
+    /// MTTR outage windows during which an instance serves nothing and its
+    /// resident sequences lose their KV pages. Mirrors
+    /// `SimParams::failures` — off by default, so existing runs are
+    /// untouched and no plane RNG is ever drawn.
+    pub failures: bool,
+    /// The outage process sampled when `failures` is on. Mirrors
+    /// `SimParams::failure`.
+    pub failure: FailureProcess,
+    /// Seed for the plane's salted per-instance streams (pass the workload
+    /// seed so churn replays with the run). Read only when `failures` is
+    /// on.
+    pub failure_seed: u64,
 }
 
 impl Default for TestbedConfig {
@@ -58,12 +71,17 @@ impl Default for TestbedConfig {
             switch_latency: 0.03,
             switch_up: 1.0,
             switch_down: 0.0,
+            failures: false,
+            failure: FailureProcess::default(),
+            failure_seed: 0,
         }
     }
 }
 
 /// Aggregated testbed run: the same report shape as the simulator plus
-/// engine statistics (for utilization analysis).
+/// engine statistics (for utilization analysis). When the failure plane is
+/// on, `report.churn` carries the run's outage/re-queue tallies, exactly
+/// like a simulator report.
 pub struct TestbedReport {
     pub report: SimReport,
     pub stats: Vec<EngineStats>,
@@ -115,10 +133,13 @@ fn finalize(
     outcomes: Vec<Option<RequestOutcome>>,
     stats: Vec<EngineStats>,
     kv_handoffs: u64,
+    churn: Option<ChurnStats>,
 ) -> Result<TestbedReport> {
     let outcomes: Vec<RequestOutcome> =
         outcomes.into_iter().map(|o| o.expect("request lost")).collect();
-    Ok(TestbedReport { report: SimReport::from_outcomes(&outcomes), stats, kv_handoffs })
+    let mut report = SimReport::from_outcomes(&outcomes);
+    report.churn = churn;
+    Ok(TestbedReport { report, stats, kv_handoffs })
 }
 
 impl<'a> Testbed<'a> {
@@ -166,19 +187,42 @@ impl<'a> Testbed<'a> {
         Engine { model: self.model, bmax_prefill, bmax_decode, kv: self.kv_manager() }
     }
 
-    /// Run one role group over its routed inputs, appending engine stats
-    /// and feeding every completion to `sink`.
+    /// Single-instance failure plane for the instance holding stream
+    /// `base_stream`. `with_streams(1, s, ..)` forks exactly the stream
+    /// instance `s` of an n-instance plane would get, so the per-engine
+    /// planes here and the flex pool's shared plane draw from one disjoint
+    /// stream family off the same seed.
+    pub(super) fn failure_plane(&self, base_stream: u64) -> Option<FailurePlane> {
+        self.config.failures.then(|| {
+            FailurePlane::with_streams(1, base_stream, self.config.failure_seed, self.config.failure)
+        })
+    }
+
+    /// Run one role group over its routed inputs, appending engine stats,
+    /// accumulating failure-plane churn, and feeding every completion to
+    /// `sink`. Instance `i` of the group owns plane stream
+    /// `base_stream + i`.
     fn run_role_group(
         &self,
         per_instance: &[Vec<SeqInput>],
         role: StaticRole,
+        base_stream: u64,
+        churn: &mut Option<ChurnStats>,
         stats: &mut Vec<EngineStats>,
         mut sink: impl FnMut(SeqOutcome),
     ) {
-        for inputs in per_instance {
+        for (i, inputs) in per_instance.iter().enumerate() {
             let mut engine = self.engine_for_role(role);
-            let (outs, st) = engine.run(inputs);
+            let mut plane = self.failure_plane(base_stream + i as u64);
+            let (outs, st) = engine.run_with_faults(inputs, plane.as_mut());
             stats.push(st);
+            if let Some(p) = plane {
+                let c = churn.get_or_insert_with(ChurnStats::default);
+                c.failures += p.churn.failures;
+                c.recoveries += p.churn.recoveries;
+                c.lost_kv_reprefills += p.churn.lost_kv_reprefills;
+                c.downtime += p.churn.downtime;
+            }
             for o in outs {
                 sink(o);
             }
@@ -189,6 +233,11 @@ impl<'a> Testbed<'a> {
     pub fn run(&self, reqs: &[Request]) -> Result<TestbedReport> {
         if reqs.is_empty() {
             return Err(Error::simulation("empty workload"));
+        }
+        if self.config.failures {
+            // Reject degenerate outage processes before any engine runs —
+            // the same upfront choke point as `simulate_requests`.
+            self.config.failure.validate()?;
         }
         match self.strategy.arch {
             Architecture::Collocation { m } => self.run_colloc(reqs, m as usize),
@@ -212,7 +261,8 @@ impl<'a> Testbed<'a> {
         );
         let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
         let mut stats = Vec::with_capacity(m);
-        self.run_role_group(&per_instance, StaticRole::Collocated, &mut stats, |o| {
+        let mut churn = None;
+        self.run_role_group(&per_instance, StaticRole::Collocated, 0, &mut churn, &mut stats, |o| {
             let r = &reqs[o.req];
             outcomes[o.req] = Some(RequestOutcome {
                 id: r.id,
@@ -224,7 +274,7 @@ impl<'a> Testbed<'a> {
                 class: r.class,
             });
         });
-        finalize(outcomes, stats, 0)
+        finalize(outcomes, stats, 0, churn)
     }
 
     fn run_disagg(&self, reqs: &[Request], p: usize, d: usize) -> Result<TestbedReport> {
@@ -242,7 +292,8 @@ impl<'a> Testbed<'a> {
         );
         let mut first_token = vec![f64::NAN; reqs.len()];
         let mut stats = Vec::with_capacity(p + d);
-        self.run_role_group(&per_prefill, StaticRole::PrefillOnly, &mut stats, |o| {
+        let mut churn = None;
+        self.run_role_group(&per_prefill, StaticRole::PrefillOnly, 0, &mut churn, &mut stats, |o| {
             first_token[o.req] = o.first_token;
         });
 
@@ -269,19 +320,30 @@ impl<'a> Testbed<'a> {
             d,
         );
         let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; reqs.len()];
-        self.run_role_group(&per_decode, StaticRole::DecodeOnly, &mut stats, |o| {
-            let r = &reqs[o.req];
-            outcomes[o.req] = Some(RequestOutcome {
-                id: r.id,
-                arrival: r.arrival,
-                first_token: first_token[o.req],
-                decode_start: decode_ready[o.req],
-                completion: o.completion,
-                gen_len: r.gen_len,
-                class: r.class,
-            });
-        });
-        finalize(outcomes, stats, reqs.len() as u64)
+        // Decode instances take plane streams `p..p + d`, after the prefill
+        // stage's `0..p` — the same offset discipline as the simulator's
+        // disaggregation tandem.
+        let decode_streams = p as u64;
+        self.run_role_group(
+            &per_decode,
+            StaticRole::DecodeOnly,
+            decode_streams,
+            &mut churn,
+            &mut stats,
+            |o| {
+                let r = &reqs[o.req];
+                outcomes[o.req] = Some(RequestOutcome {
+                    id: r.id,
+                    arrival: r.arrival,
+                    first_token: first_token[o.req],
+                    decode_start: decode_ready[o.req],
+                    completion: o.completion,
+                    gen_len: r.gen_len,
+                    class: r.class,
+                });
+            },
+        );
+        finalize(outcomes, stats, reqs.len() as u64, churn)
     }
 }
 
@@ -370,6 +432,83 @@ mod tests {
             TestbedConfig { kv_transfer: false, ..TestbedConfig::default() },
         );
         assert_eq!(off.kv_transfer_time(2048), 0.0);
+    }
+
+    #[test]
+    fn churn_conserves_requests_across_static_architectures() {
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let cfg = TestbedConfig {
+            failures: true,
+            failure: crate::config::FailureProcess { mtbf: 2.0, mttr: 0.2 },
+            failure_seed: 11,
+            ..TestbedConfig::default()
+        };
+        let reqs = generate_workload(
+            &Workload::poisson(&Scenario::fixed("t", 256, 64, 400)),
+            8.0,
+            11,
+        )
+        .unwrap();
+        for strategy in [Strategy::collocation(2, 1), Strategy::disaggregation(2, 2, 1)] {
+            let tb = Testbed::new(&m, &p, strategy.clone(), cfg);
+            let a = tb.run(&reqs).unwrap();
+            assert_eq!(a.report.n, 400, "{strategy}: lost requests under churn");
+            assert!(a.report.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+            assert!(a.report.e2es.iter().all(|x| x.is_finite() && *x > 0.0));
+            let churn = a.report.churn.expect("plane on ⇒ churn tallies");
+            // The run spans ~50 s over ≥ 2 instances with 2 s MTBF windows:
+            // at least one outage is a near-certainty at any seed.
+            assert!(churn.failures >= 1, "{strategy}: {churn:?}");
+            assert!(churn.failures >= churn.recoveries);
+            assert!(churn.downtime >= 0.0 && churn.downtime.is_finite());
+            // Same seed replays bit-for-bit, tallies included.
+            let b = tb.run(&reqs).unwrap();
+            assert_eq!(a.report.ttfts, b.report.ttfts);
+            assert_eq!(a.report.e2es, b.report.e2es);
+            assert_eq!(a.report.churn, b.report.churn);
+        }
+    }
+
+    #[test]
+    fn failure_gate_off_ignores_the_process_and_reports_no_churn() {
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let reqs = generate_workload(
+            &Workload::poisson(&Scenario::fixed("t", 256, 16, 300)),
+            8.0,
+            7,
+        )
+        .unwrap();
+        let base_cfg = TestbedConfig::default();
+        // Gate off: a harsh process and a hot seed must change nothing.
+        let off_cfg = TestbedConfig {
+            failures: false,
+            failure: crate::config::FailureProcess { mtbf: 1.0, mttr: 0.5 },
+            failure_seed: 99,
+            ..TestbedConfig::default()
+        };
+        let tb_base = Testbed::new(&m, &p, Strategy::collocation(2, 1), base_cfg);
+        let tb_off = Testbed::new(&m, &p, Strategy::collocation(2, 1), off_cfg);
+        let a = tb_base.run(&reqs).unwrap();
+        let b = tb_off.run(&reqs).unwrap();
+        assert_eq!(a.report.ttfts, b.report.ttfts);
+        assert_eq!(a.report.tpots, b.report.tpots);
+        assert_eq!(a.report.e2es, b.report.e2es);
+        assert!(a.report.churn.is_none() && b.report.churn.is_none());
+        // Gate on with a degenerate process: rejected before any engine
+        // runs, same as the simulator's choke point.
+        let bad = Testbed::new(
+            &m,
+            &p,
+            Strategy::collocation(2, 1),
+            TestbedConfig {
+                failures: true,
+                failure: crate::config::FailureProcess { mtbf: 0.0, mttr: 0.5 },
+                ..TestbedConfig::default()
+            },
+        );
+        assert!(bad.run(&reqs).is_err());
     }
 
     #[test]

@@ -8,6 +8,9 @@
 use std::collections::VecDeque;
 
 use crate::estimator::LatencyModel;
+use crate::simulator::core::NextEvent;
+use crate::simulator::failure::PlaneEvent;
+use crate::simulator::FailurePlane;
 
 use super::kv::BlockManager;
 
@@ -48,6 +51,25 @@ struct Running {
     first_token: f64,
 }
 
+/// An arrived-but-not-admitted sequence in the FIFO waiting queue.
+#[derive(Debug, Clone, Copy)]
+struct Waiting {
+    /// Input index.
+    idx: usize,
+    /// Prompt length, including any recomputed context (recompute
+    /// preemption and failure eviction re-enter with their full context as
+    /// the new prompt).
+    prompt: u32,
+    /// Tokens left to generate.
+    remaining: u32,
+    /// Earliest admission time. Arrival for fresh sequences and the
+    /// eviction instant for recompute victims; a sequence that lost its KV
+    /// on a decode-only instance (which cannot recompute locally) instead
+    /// carries eviction + the single-sequence re-prefill charge, mirroring
+    /// the simulator's timeline-priced re-prefill.
+    ready: f64,
+}
+
 /// Engine statistics, for the perf section and scheduler diagnostics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
@@ -69,25 +91,97 @@ impl<'a> Engine<'a> {
     /// Run the instance over its assigned sequences (sorted by `ready`).
     /// Returns outcomes in completion order plus engine statistics.
     pub fn run(&mut self, inputs: &[SeqInput]) -> (Vec<SeqOutcome>, EngineStats) {
+        self.run_with_faults(inputs, None)
+    }
+
+    /// Like [`run`](Engine::run) with an optional single-instance failure
+    /// plane: while the instance is down it serves nothing and time skips
+    /// to the recovery, and each failure evicts every resident sequence —
+    /// its KV pages are lost and it re-enters the waiting queue for
+    /// recompute. Prefill-capable instances recompute as a normal prefill
+    /// batch over the full context; decode-only instances (disaggregation
+    /// stage 2) cannot prefill locally, so the single-sequence re-prefill
+    /// is charged as a readiness delay instead. TTFT and decode-start are
+    /// set once per request, so an eviction inflates TPOT/E2E without
+    /// rewriting the already-served first token. Churn tallies accumulate
+    /// on the plane.
+    pub fn run_with_faults(
+        &mut self,
+        inputs: &[SeqInput],
+        mut faults: Option<&mut FailurePlane>,
+    ) -> (Vec<SeqOutcome>, EngineStats) {
         debug_assert!(inputs.windows(2).all(|w| w[0].ready <= w[1].ready));
         let mut stats = EngineStats::default();
         let mut out = Vec::with_capacity(inputs.len());
         let mut next = 0usize; // head of the not-yet-arrived inputs
-        // Arrived-but-not-admitted, FIFO: (input index, prompt length
-        // including any recomputed tokens, remaining tokens to generate).
-        let mut waiting: VecDeque<(usize, u32, u32)> = VecDeque::new();
+        let mut waiting: VecDeque<Waiting> = VecDeque::new();
         let mut running: Vec<Running> = Vec::new();
+        // First-pass timestamps, set once per input: a sequence that loses
+        // its KV (recompute preemption or failure eviction) keeps the TTFT
+        // and decode start of its first admission — that first token was
+        // already served; only its tail stretches.
+        let mut first_seen = vec![f64::NAN; inputs.len()];
+        let mut decode_seen = vec![f64::NAN; inputs.len()];
+        fn set_once(slot: &mut f64, t: f64) -> f64 {
+            if slot.is_nan() {
+                *slot = t;
+            }
+            *slot
+        }
         let mut t = 0.0f64;
 
         loop {
             // Pull arrivals into the waiting queue.
             while next < inputs.len() && inputs[next].ready <= t {
-                waiting.push_back((next, inputs[next].input_len, inputs[next].gen_len));
+                waiting.push_back(Waiting {
+                    idx: next,
+                    prompt: inputs[next].input_len,
+                    remaining: inputs[next].gen_len,
+                    ready: inputs[next].ready,
+                });
                 next += 1;
             }
             let work_left = next < inputs.len() || !waiting.is_empty() || !running.is_empty();
             if !work_left {
                 break;
+            }
+
+            // Failure plane: drain due boundaries (evicting residents on a
+            // failure), then skip downtime whole — a down instance takes no
+            // scheduling action until its recovery boundary.
+            if let Some(plane) = faults.as_deref_mut() {
+                while let Some(ev) = plane.poll(t) {
+                    if let PlaneEvent::Failed(_) = ev {
+                        let evicted = running.len();
+                        // Drain in reverse so the oldest victim heads the
+                        // FIFO after the push_fronts.
+                        for victim in running.drain(..).rev() {
+                            self.kv.release(victim.ctx);
+                            let idx = inputs
+                                .iter()
+                                .position(|s| s.req == victim.req)
+                                .expect("victim must exist");
+                            let penalty = if inputs[idx].needs_prefill {
+                                0.0 // the recompute prefill batch pays it
+                            } else {
+                                self.model.prefill_time(1, victim.ctx)
+                            };
+                            waiting.push_front(Waiting {
+                                idx,
+                                prompt: victim.ctx,
+                                remaining: victim.remaining,
+                                ready: t + penalty,
+                            });
+                        }
+                        plane.note_reprefills(evicted);
+                    }
+                }
+                if plane.is_down(0) {
+                    let mut ne = NextEvent::after(t);
+                    plane.offer_boundaries(&mut ne);
+                    t = ne.get();
+                    continue;
+                }
             }
 
             // --- schedule one iteration (vLLM: prefill first) -------------
@@ -96,7 +190,12 @@ impl<'a> Engine<'a> {
             let mut batch: Vec<(usize, u32, u32)> = Vec::new();
             let mut slots = (self.bmax_decode as usize).saturating_sub(running.len());
             while batch.len() < self.bmax_prefill as usize && slots > 0 {
-                let Some(&(idx, prompt, remaining)) = waiting.front() else { break };
+                let Some(&Waiting { idx, prompt, remaining, ready }) = waiting.front() else {
+                    break;
+                };
+                if ready > t {
+                    break; // a re-prefill charge holds the head (FIFO holds)
+                }
                 // Admission watermark (vLLM's reserved-blocks rule): beyond
                 // the prompt itself, keep one growth block per runner-to-be
                 // free, or preempted sequences thrash in an admit/evict
@@ -138,8 +237,8 @@ impl<'a> Engine<'a> {
                         req: inputs[idx].req,
                         ctx: prompt,
                         remaining,
-                        decode_start: t,
-                        first_token: t,
+                        decode_start: set_once(&mut decode_seen[idx], t),
+                        first_token: set_once(&mut first_seen[idx], t),
                     });
                 }
                 continue;
@@ -151,7 +250,7 @@ impl<'a> Engine<'a> {
                         req: inputs[idx].req,
                         ctx: prompt,
                         remaining,
-                        decode_start: t,
+                        decode_start: set_once(&mut decode_seen[idx], t),
                         first_token: f64::NAN,
                     });
                 }
@@ -182,7 +281,12 @@ impl<'a> Engine<'a> {
                     // Recompute: it re-enters waiting with its full context
                     // as the new prompt and only the unfinished tail left
                     // to generate.
-                    waiting.push_front((idx, victim.ctx, victim.remaining));
+                    waiting.push_front(Waiting {
+                        idx,
+                        prompt: victim.ctx,
+                        remaining: victim.remaining,
+                        ready: t,
+                    });
                     stats.preemptions += 1;
                     preempted = true;
                 }
@@ -226,16 +330,24 @@ impl<'a> Engine<'a> {
                 continue;
             }
 
-            // Idle: advance to the next arrival.
-            if next < inputs.len() {
-                t = t.max(inputs[next].ready);
+            // Idle: advance to the next actionable instant. Without a
+            // failure plane the head's `ready` is never in the future here
+            // (arrivals were pulled, preemption victims are ready at their
+            // eviction), so the first arm is fault-only.
+            let head_ready = waiting.front().map_or(f64::INFINITY, |w| w.ready);
+            let next_arrival = inputs.get(next).map_or(f64::INFINITY, |s| s.ready);
+            if head_ready > t && head_ready < next_arrival {
+                t = head_ready; // a re-prefill charge comes due first
+            } else if next < inputs.len() {
+                t = t.max(next_arrival);
             } else if waiting.is_empty() {
                 break;
+            } else if head_ready > t {
+                t = head_ready;
             } else {
                 // Waiting sequences blocked on memory with nothing running:
                 // unrecoverable only if even an empty cache cannot fit them.
-                let (idx, prompt, _) = *waiting.front().unwrap();
-                let _ = idx;
+                let prompt = waiting.front().unwrap().prompt;
                 assert!(
                     self.kv.blocks_for(prompt + 1) <= self.kv.total_blocks,
                     "sequence of {prompt} tokens can never fit in KV capacity"
@@ -373,6 +485,64 @@ mod tests {
         let (out, stats) = e.run(&seqs(&[0.0, 0.0], 48, 64, true));
         assert_eq!(out.len(), 2, "both must eventually complete");
         assert!(stats.preemptions > 0, "expected preemption under KV pressure");
+    }
+
+    #[test]
+    fn failures_evict_requeue_and_complete() {
+        use crate::config::FailureProcess;
+        // Four long decode tails keep the instance busy essentially the
+        // whole run (tens of seconds) while outage windows recur every ~2 s:
+        // failures land mid-decode with near-certainty, so evictions,
+        // re-prefills, and the downtime skip all exercise.
+        let m = ConstModel { prefill: 0.1, step: 0.01 };
+        let inputs = seqs(&[0.0, 0.0, 0.0, 0.0], 128, 400, true);
+        let proc = FailureProcess { mtbf: 2.0, mttr: 0.2 };
+        let run = |seed: u64| {
+            let mut e = Engine {
+                model: &m,
+                bmax_prefill: 4,
+                bmax_decode: 8,
+                kv: BlockManager::unbounded(16),
+            };
+            let mut plane = FailurePlane::new(1, seed, proc);
+            let (out, stats) = e.run_with_faults(&inputs, Some(&mut plane));
+            (out, stats, plane.churn)
+        };
+        let (out, _, churn) = run(5);
+        assert_eq!(out.len(), 4, "every request survives churn");
+        for o in &out {
+            assert!(o.first_token.is_finite() && o.first_token <= o.completion);
+        }
+        assert!(churn.failures >= 1, "{churn:?}");
+        assert!(churn.failures >= churn.recoveries);
+        assert!(churn.downtime > 0.0 && churn.downtime.is_finite());
+        assert!(churn.lost_kv_reprefills >= 1, "{churn:?}");
+        // Same seed replays bit-for-bit.
+        let (out2, _, churn2) = run(5);
+        for (a, b) in out.iter().zip(&out2) {
+            assert_eq!(a.req, b.req);
+            assert_eq!(a.completion.to_bits(), b.completion.to_bits());
+            assert_eq!(a.first_token.to_bits(), b.first_token.to_bits());
+        }
+        assert_eq!(churn, churn2);
+        // TTFT is set once: evictions stretch the tail, not the first
+        // token, so the faulty run's first tokens match the clean run's.
+        let mut clean = Engine {
+            model: &m,
+            bmax_prefill: 4,
+            bmax_decode: 8,
+            kv: BlockManager::unbounded(16),
+        };
+        let (base, _) = clean.run(&inputs);
+        let ft = |outs: &[SeqOutcome], req: usize| {
+            outs.iter().find(|o| o.req == req).unwrap().first_token
+        };
+        for req in 0..4 {
+            // All four admit in the one opening batch at t=0 in both runs
+            // (the batch is atomic, so no outage can split it), pinning
+            // every first token at the same 0.1 s prefill completion.
+            assert_eq!(ft(&out, req).to_bits(), ft(&base, req).to_bits());
+        }
     }
 
     #[test]

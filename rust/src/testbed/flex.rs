@@ -42,7 +42,8 @@ use std::collections::VecDeque;
 use crate::error::Result;
 use crate::estimator::LatencyModel;
 use crate::simulator::core::{drive, EventDriven, NextEvent, ReadyQueue};
-use crate::simulator::{Request, RequestOutcome, RoleOccupancy, SimReport};
+use crate::simulator::failure::PlaneEvent;
+use crate::simulator::{FailurePlane, Request, RequestOutcome, RoleOccupancy, SimReport};
 
 use super::cluster::{Testbed, TestbedConfig, TestbedReport};
 use super::engine::EngineStats;
@@ -186,9 +187,47 @@ struct FlexPolicy<'a> {
     completed: usize,
     /// Sequences whose decode KV arrived over the priced interconnect.
     kv_handoffs: u64,
+    /// Failure plane over the whole pool (streams `0..m` of the salted
+    /// seed); `None` when `TestbedConfig::failures` is off. Down instances
+    /// take no prefill batches, no decode admissions, and no role switches;
+    /// a failure evicts the instance's resident sequences into the global
+    /// backlog (their KV pages are lost) and advances its locality epoch so
+    /// ready-queue sequences homed there pay the hand-off on landing.
+    plane: Option<FailurePlane>,
 }
 
 impl FlexPolicy<'_> {
+    /// Is instance `i` inside an outage window?
+    fn down(&self, i: usize) -> bool {
+        matches!(&self.plane, Some(p) if p.is_down(i))
+    }
+
+    /// Instance `i` failed at `t`: every resident sequence loses its KV
+    /// pages and re-enters the global backlog for recompute (full context
+    /// as the new prompt — the same machinery as recompute preemption).
+    /// Committed iteration results stand (`busy_until`, tokens already
+    /// clocked) — the request-level approximation shared with the
+    /// simulator's plane.
+    fn on_failure(&mut self, i: usize, _t: f64) {
+        let victims: Vec<Seq> = self.instances[i].running.drain(..).collect();
+        for v in victims.iter().rev() {
+            self.instances[i].kv.release(v.ctx);
+            self.waiting.push_front(WaitEntry {
+                req: v.req,
+                prompt: v.ctx,
+                remaining: v.remaining,
+            });
+        }
+        // Invalidate KV locality: pages prefilled at epoch `e` are local
+        // only at `e + 1` (one surviving flip), so advancing by two puts
+        // every pre-failure sequence out of reach — they pay the priced
+        // hand-off wherever they land — while leaving the one-flip rule
+        // intact for sequences prefilled after the recovery.
+        self.instances[i].epoch += 2;
+        let plane = self.plane.as_mut().expect("failures only fire with a plane");
+        plane.note_reprefills(victims.len());
+    }
+
     /// Finish due switches; put drained draining instances into the switch
     /// dead time.
     fn bookkeeping(&mut self, t: f64) -> bool {
@@ -221,11 +260,12 @@ impl FlexPolicy<'_> {
         if self.waiting.is_empty() {
             return false;
         }
-        let Some(i) = self
-            .instances
-            .iter()
-            .position(|inst| matches!(inst.state, State::Prefill) && inst.busy_until <= t)
-        else {
+        let plane = self.plane.as_ref();
+        let Some(i) = self.instances.iter().enumerate().position(|(i, inst)| {
+            matches!(inst.state, State::Prefill)
+                && inst.busy_until <= t
+                && !matches!(plane, Some(p) if p.is_down(i))
+        }) else {
             return false;
         };
         let inst = &mut self.instances[i];
@@ -301,8 +341,10 @@ impl FlexPolicy<'_> {
         }
         let (ctx, remaining) = self.pending[r];
         let bmax_decode = self.bmax_decode;
-        let eligible = |inst: &FlexInstance| {
-            matches!(inst.state, State::Decode)
+        let plane = self.plane.as_ref();
+        let eligible = |i: usize, inst: &FlexInstance| {
+            !matches!(plane, Some(p) if p.is_down(i))
+                && matches!(inst.state, State::Decode)
                 && inst.busy_until <= t
                 && inst.running.len() < bmax_decode
                 // Admission watermark (vLLM's reserved-blocks rule): keep
@@ -312,10 +354,13 @@ impl FlexPolicy<'_> {
         };
         let (home, home_epoch) = self.kv_home[r];
         let local_possible = self.instances[home].epoch == home_epoch + 1;
-        let target = if local_possible && eligible(&self.instances[home]) {
+        let target = if local_possible && eligible(home, &self.instances[home]) {
             Some(home)
         } else {
-            self.instances.iter().position(&eligible)
+            self.instances
+                .iter()
+                .enumerate()
+                .position(|(i, inst)| eligible(i, inst))
         };
         let Some(i) = target else { return false };
         self.ready.pop();
@@ -435,19 +480,46 @@ impl FlexPolicy<'_> {
 
         // Up: decode -> prefill past the upper hysteresis edge. Prefer an
         // already-drained instance (switches immediately); otherwise put
-        // one into draining.
+        // one into draining. Down instances hold no switches until they
+        // recover — a dead instance must not soak up the pressure signal.
         if backlog > self.switch_up * n_pre * unit {
-            let drained = self.instances.iter().position(|i| {
-                matches!(i.state, State::Decode) && i.running.is_empty() && i.busy_until <= t
+            let drained = self.instances.iter().enumerate().position(|(i, inst)| {
+                !self.down(i)
+                    && matches!(inst.state, State::Decode)
+                    && inst.running.is_empty()
+                    && inst.busy_until <= t
             });
             if let Some(i) = drained {
                 let until = t + self.switch_latency;
                 self.instances[i].set_state(t, State::Switching { to: Role::Prefill, until });
                 return true;
             }
-            let occupied = self.instances.iter().position(|i| matches!(i.state, State::Decode));
+            let occupied = self
+                .instances
+                .iter()
+                .enumerate()
+                .position(|(i, inst)| !self.down(i) && matches!(inst.state, State::Decode));
             if let Some(i) = occupied {
                 self.instances[i].set_state(t, State::Draining);
+                return true;
+            }
+        }
+
+        // Reversal: the pressure signal dropped back to the lower edge
+        // while an instance was still draining towards prefill — return it
+        // straight to decode with no switch latency and no switch counted
+        // (its running sequences never stopped iterating, and its pages
+        // never moved, so the epoch stays put). Mirrors the simulator
+        // policy; evaluated against the pool as it looks after the
+        // reversal (`n_pre - 1`) so the up rule cannot re-trigger at the
+        // same instant and ping-pong the instance.
+        if self.ready.count_ready(t) > 0
+            && backlog <= self.switch_down * (n_pre - 1.0) * unit
+        {
+            if let Some(i) =
+                self.instances.iter().position(|i| matches!(i.state, State::Draining))
+            {
+                self.instances[i].set_state(t, State::Decode);
                 return true;
             }
         }
@@ -457,10 +529,9 @@ impl FlexPolicy<'_> {
         // slot right now (the admission rule ran before us, so waiting work
         // means decode is genuinely under-provisioned).
         if backlog <= self.switch_down * n_pre * unit && self.ready.count_ready(t) > 0 {
-            let idle = self
-                .instances
-                .iter()
-                .position(|i| matches!(i.state, State::Prefill) && i.busy_until <= t);
+            let idle = self.instances.iter().enumerate().position(|(i, inst)| {
+                !self.down(i) && matches!(inst.state, State::Prefill) && inst.busy_until <= t
+            });
             if let Some(i) = idle {
                 let until = t + self.switch_latency;
                 self.instances[i].set_state(t, State::Switching { to: Role::Decode, until });
@@ -484,6 +555,16 @@ impl EventDriven for FlexPolicy<'_> {
             });
             self.next_arrival += 1;
         }
+        // Outage boundaries are actions, processed before any scheduling at
+        // the same instant so the down flags are current.
+        if let Some(plane) = self.plane.as_mut() {
+            if let Some(ev) = plane.poll(t) {
+                if let PlaneEvent::Failed(i) = ev {
+                    self.on_failure(i, t);
+                }
+                return true;
+            }
+        }
         self.bookkeeping(t)
             || self.prefill_launch(t)
             || self.decode_admit(t)
@@ -493,6 +574,9 @@ impl EventDriven for FlexPolicy<'_> {
 
     fn next_event(&self, t: f64) -> f64 {
         let mut ne = NextEvent::after(t);
+        if let Some(p) = &self.plane {
+            p.offer_boundaries(&mut ne);
+        }
         if let Some(r) = self.reqs.get(self.next_arrival) {
             ne.offer(r.arrival);
         }
@@ -525,6 +609,9 @@ pub(super) fn run_dynamic(tb: &Testbed<'_>, reqs: &[Request], m: usize) -> Resul
     // one, not a drifting copy.
     crate::simulator::validate_switch_knobs(cfg.switch_latency, cfg.switch_up, cfg.switch_down)?;
     assert!(m > 0, "dynamic pool needs at least one instance");
+    if cfg.failures {
+        cfg.failure.validate()?;
+    }
     let n = reqs.len();
     let mut policy = FlexPolicy {
         tb,
@@ -545,6 +632,9 @@ pub(super) fn run_dynamic(tb: &Testbed<'_>, reqs: &[Request], m: usize) -> Resul
         instances: (0..m).map(|_| FlexInstance::new(tb.kv_manager())).collect(),
         completed: 0,
         kv_handoffs: 0,
+        plane: cfg
+            .failures
+            .then(|| FailurePlane::with_streams(m, 0, cfg.failure_seed, cfg.failure)),
     };
     let end = drive(&mut policy, "flex-testbed");
 
@@ -577,6 +667,7 @@ pub(super) fn run_dynamic(tb: &Testbed<'_>, reqs: &[Request], m: usize) -> Resul
         .collect();
     let mut report = SimReport::from_outcomes(&outcomes);
     report.role_occupancy = Some(occ);
+    report.churn = policy.plane.as_ref().map(|p| p.churn);
     Ok(TestbedReport { report, stats, kv_handoffs: policy.kv_handoffs })
 }
 
@@ -616,6 +707,57 @@ mod tests {
         let occ = rep.role_occupancy.expect("flex testbed reports occupancy");
         assert_eq!(occ.switches, 2);
         assert!(occ.prefill > 0.0 && occ.decode > 0.0 && occ.switching > 0.0);
+    }
+
+    #[test]
+    fn hysteresis_reversal_skips_double_switch() {
+        // Mirror of the simulator's reversal regression at token level.
+        // Instance 0 flips to prefill for the opening request; instance 1
+        // decodes its long 500-token tail. A 12-request burst then puts
+        // instance 1 into Draining; instance 0 clears the backlog while
+        // the drain is still running, so the pressure reverses inside the
+        // dead band and instance 1 must revert straight to decode and
+        // admit the waiting sequences. The half-second switch latency
+        // makes the broken path (keep draining for seconds, while the
+        // ready queue waits for instance 0 to finish a full down-switch)
+        // visible as a fat TPOT tail: ~0.085 per token for the first
+        // ready batch against ≲ 0.036 with the reversal.
+        let m = ConstModel { prefill: 0.5, step: 0.01 };
+        let p = platform();
+        let tb = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(2, 1),
+            TestbedConfig { switch_latency: 0.5, ..TestbedConfig::default() },
+        );
+        let mut reqs = vec![crate::simulator::Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 128,
+            gen_len: 500,
+            class: 0,
+        }];
+        for id in 1..13 {
+            reqs.push(crate::simulator::Request {
+                id,
+                arrival: 2.0,
+                input_len: 128,
+                gen_len: 20,
+                class: 0,
+            });
+        }
+        let out = tb.run(&reqs).unwrap();
+        let rep = &out.report;
+        assert_eq!(rep.n, 13);
+        assert!(rep.tpots.iter().all(|x| x.is_finite() && *x > 0.0));
+        // The burst admits onto the reverted instance within one decode
+        // iteration of the backlog clearing; the broken path parks it
+        // behind a full switch latency.
+        assert!(rep.tpot.p90 < 0.05, "burst decode stalled: {}", rep.tpot.p90);
+        // Instance 0's up-switch plus at most one later legitimate
+        // down-switch; the reversal itself pays and counts nothing.
+        let occ = rep.role_occupancy.unwrap();
+        assert!(occ.switches <= 2, "reversal must not add switches: {}", occ.switches);
     }
 
     #[test]
@@ -684,6 +826,49 @@ mod tests {
             occ.total(),
             3.0 * rep.makespan
         );
+    }
+
+    #[test]
+    fn pool_churn_evicts_requeues_and_replays() {
+        let m = ConstModel { prefill: 0.05, step: 0.001 };
+        let p = platform();
+        let cfg = TestbedConfig {
+            failures: true,
+            failure: crate::config::FailureProcess { mtbf: 2.0, mttr: 0.2 },
+            failure_seed: 7,
+            ..TestbedConfig::default()
+        };
+        let tb = Testbed::new(&m, &p, Strategy::dynamic(2, 1), cfg);
+        let w = Workload::poisson(&Scenario::fixed("t", 256, 64, 400));
+        let reqs = generate_workload(&w, 8.0, 7).unwrap();
+        let a = tb.run(&reqs).unwrap();
+        assert_eq!(a.report.n, 400, "requests lost under churn");
+        assert!(a.report.ttfts.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(a.report.e2es.iter().all(|x| x.is_finite() && *x > 0.0));
+        let churn = a.report.churn.expect("plane on ⇒ churn tallies");
+        // ~50 s over 2 instances with 2 s MTBF: outages are near-certain.
+        assert!(churn.failures >= 1, "{churn:?}");
+        assert!(churn.failures >= churn.recoveries);
+        assert!(churn.downtime >= 0.0 && churn.downtime.is_finite());
+        // Same seed replays bit-for-bit, occupancy and tallies included.
+        let b = tb.run(&reqs).unwrap();
+        assert_eq!(a.report.ttfts, b.report.ttfts);
+        assert_eq!(a.report.e2es, b.report.e2es);
+        assert_eq!(a.report.churn, b.report.churn);
+        assert_eq!(a.report.role_occupancy.unwrap(), b.report.role_occupancy.unwrap());
+        // Gate off: no churn surface, and the harsh process is ignored.
+        let off = Testbed::new(
+            &m,
+            &p,
+            Strategy::dynamic(2, 1),
+            TestbedConfig { failures: false, ..cfg },
+        );
+        let base = Testbed::new(&m, &p, Strategy::dynamic(2, 1), TestbedConfig::default());
+        let ro = off.run(&reqs).unwrap();
+        let rb = base.run(&reqs).unwrap();
+        assert!(ro.report.churn.is_none());
+        assert_eq!(ro.report.ttfts, rb.report.ttfts);
+        assert_eq!(ro.report.tpots, rb.report.tpots);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 
 /// Percentile with linear interpolation between order statistics
 /// (the "linear" / type-7 definition, matching numpy's default).
-/// `q` in [0, 100]. Returns NaN on empty input. NaN samples sort last
+/// `q` in [0, 100]; out-of-range `q` clamps to the edges and a NaN `q`
+/// returns NaN. Returns NaN on empty input. NaN samples sort last
 /// (total order), so a degenerate sample surfaces as a NaN high percentile
 /// instead of a sort panic.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
@@ -33,9 +34,14 @@ pub fn rank_desc(a: f64, b: f64) -> std::cmp::Ordering {
 }
 
 /// Percentile over an already-sorted slice. Prefer this in hot paths where
-/// several percentiles are taken from the same data.
+/// several percentiles are taken from the same data. [`percentile`] is the
+/// clone-and-sort wrapper over this, so the two agree bit for bit on the
+/// same data (pinned by `prop_percentile_agrees_sorted_and_unsorted`).
 pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
-    if v.is_empty() {
+    // A NaN q must surface as NaN, not silently alias some percentile: it
+    // fails both clamp comparisons, and `floor() as usize` would then
+    // saturate the NaN position to index 0 — returning v[0] for any input.
+    if v.is_empty() || q.is_nan() {
         return f64::NAN;
     }
     if v.len() == 1 {
@@ -44,7 +50,9 @@ pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
     let q = q.clamp(0.0, 100.0);
     let pos = q / 100.0 * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
+    // q clamps to 100 so pos <= len-1 already; the min() guards the index
+    // against any future change to the pos formula rounding up.
+    let hi = (pos.ceil() as usize).min(v.len() - 1);
     if lo == hi {
         v[lo]
     } else {
@@ -259,6 +267,27 @@ mod tests {
     fn percentile_single_and_empty() {
         assert_eq!(percentile(&[3.0], 90.0), 3.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_out_of_range_q_clamps_and_nan_q_is_nan() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        // q beyond the edges clamps to them instead of indexing out of
+        // bounds (or saturating to index 0).
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, 105.0), 10.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 10.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        // Regression: a NaN q used to slip through the clamp (NaN fails
+        // both comparisons), saturate `floor() as usize` to 0, and
+        // silently return the minimum sample. It must surface as NaN.
+        assert!(percentile(&xs, f64::NAN).is_nan());
+        assert!(percentile_sorted(&xs, f64::NAN).is_nan());
+        // Single-sample inputs included.
+        assert!(percentile(&[3.0], f64::NAN).is_nan());
+        assert!(percentile_sorted(&[3.0], f64::NAN).is_nan());
+        assert_eq!(percentile_sorted(&[3.0], -1.0), 3.0);
+        assert_eq!(percentile_sorted(&[3.0], 101.0), 3.0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use bestserve::simulator::{
 };
 use bestserve::testbed::{BlockManager, Engine, SeqInput, Testbed, TestbedConfig};
 use bestserve::util::quickcheck::{check, Gen};
+use bestserve::util::stats::{percentile, percentile_sorted};
 
 /// A random but valid LLaMa-shaped model.
 fn gen_model(g: &mut Gen) -> ModelConfig {
@@ -123,6 +124,49 @@ fn prop_decode_span_heuristic_upper_bounds_exact() {
         let e = o.decode_span_exact(b, s, s_plus);
         if h + 1e-12 < e {
             return Err(format!("heuristic {h} < exact {e} at b={b} s={s} s+={s_plus}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_percentile_agrees_sorted_and_unsorted() {
+    // `percentile` (clone + total_cmp sort) and `percentile_sorted` (the
+    // hot path) must agree BIT FOR BIT on the same data for every q —
+    // including out-of-range and NaN q, and single-sample inputs. Guards
+    // the index-clamping fix: a NaN q used to saturate the position to 0
+    // and silently return the minimum sample.
+    check("percentile sorted/unsorted bit-identity", 200, |g| {
+        let n = g.usize_in(1, 50);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-1e6, 1e6)).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        let q = match g.u64_below(8) {
+            0 => -5.0,
+            1 => 0.0,
+            2 => 50.0,
+            3 => 100.0,
+            4 => 105.0,
+            5 => f64::NAN,
+            6 => f64::INFINITY,
+            _ => g.f64_in(0.0, 100.0),
+        };
+        let a = percentile(&xs, q);
+        let b = percentile_sorted(&sorted, q);
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("percentile({q}) {a} != percentile_sorted {b} on n={n}"));
+        }
+        if q.is_nan() {
+            if !a.is_nan() {
+                return Err(format!("NaN q must yield NaN, got {a}"));
+            }
+        } else {
+            // In-range results interpolate order statistics, so they stay
+            // within the sample's min/max envelope.
+            let (lo, hi) = (sorted[0], sorted[n - 1]);
+            if !(a >= lo && a <= hi) {
+                return Err(format!("percentile({q}) = {a} outside [{lo}, {hi}]"));
+            }
         }
         Ok(())
     });

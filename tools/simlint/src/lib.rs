@@ -82,7 +82,8 @@ const D2_MODULES: &[&str] =
 /// The structs whose `bool` fields gate output-preserving cuts (rule D5).
 /// Extend this list when a new gate struct is introduced (see the
 /// add-a-lint-rule recipe in ROADMAP.md).
-const GATE_STRUCTS: &[&str] = &["PruneConfig", "GoodputConfig", "SimParams", "Profiler"];
+const GATE_STRUCTS: &[&str] =
+    &["PruneConfig", "GoodputConfig", "SimParams", "Profiler", "TestbedConfig"];
 
 /// The one file allowed to read the wall clock (rule D2).
 const WALLCLOCK_HOME: &str = "util/walltime.rs";

@@ -106,7 +106,10 @@ fn gate_fields_are_anchored_by_equivalence_tests() {
         ("SimParams", "kv_transfer"),
         ("SimParams", "front_cache"),
         ("SimParams", "sim_trace"),
+        ("SimParams", "failures"),
         ("Profiler", "enabled"),
+        ("TestbedConfig", "kv_transfer"),
+        ("TestbedConfig", "failures"),
     ];
     for (s, f) in expected {
         let gate = report
